@@ -1,0 +1,133 @@
+//! Database analytics scenario: `SELECT * WHERE value < threshold` as
+//! in-memory comparisons (the paper's §III.B comparison application).
+//!
+//! Stores a table of records in the FeFET array, broadcasts the query
+//! threshold into one row, and filters with single-access ADRA compares.
+//! The baseline runs the same query with two-read near-memory compares.
+//!
+//!     cargo run --release --example database_filter
+
+use adra::cim::aggregate::AggregateEngine;
+use adra::cim::{AdraEngine, BaselineEngine, CimOp, CimValue, Engine, WordAddr};
+use adra::config::{SensingScheme, SimConfig};
+use adra::energy::{Improvement, OpCost};
+use adra::logic::CompareResult;
+use adra::util::table::{fmt_pct, fmt_si, Table};
+use adra::workload::database_filter_trace;
+
+fn main() {
+    let mut cfg = SimConfig::square(512, SensingScheme::VoltageDischarged);
+    cfg.word_bits = 32;
+    let n_records = 2048;
+
+    println!("=== in-memory database filter ===");
+    println!(
+        "{} records of {} bits, 512x512 FeFET array, scheme: {}\n",
+        n_records,
+        cfg.word_bits,
+        cfg.scheme.name()
+    );
+
+    let trace = database_filter_trace(&cfg, n_records, 2026);
+    println!(
+        "query: SELECT * WHERE value < {} ({} ground-truth matches)",
+        trace.threshold,
+        trace.expected_matches.len()
+    );
+
+    // --- ADRA engine ---
+    let mut adra = AdraEngine::new(&cfg);
+    for op in &trace.setup {
+        adra.execute(op).unwrap();
+    }
+    let mut adra_cost = OpCost::default();
+    let mut matches = Vec::new();
+    for (i, op) in trace.query.iter().enumerate() {
+        let r = adra.execute(op).unwrap();
+        adra_cost = adra_cost.then(&r.cost);
+        if r.value == CimValue::Ordering(CompareResult::Less) {
+            matches.push(i);
+        }
+    }
+    assert_eq!(matches, trace.expected_matches, "ADRA filter diverged from ground truth");
+    let accesses = adra.array().stats().dual_activations;
+    println!("ADRA: {} matches, {} array accesses ({} per compare)",
+             matches.len(), accesses, accesses as f64 / n_records as f64);
+
+    // --- baseline engine ---
+    let mut base = BaselineEngine::new(&cfg);
+    for op in &trace.setup {
+        base.execute(op).unwrap();
+    }
+    let mut base_cost = OpCost::default();
+    let mut base_matches = Vec::new();
+    for (i, op) in trace.query.iter().enumerate() {
+        let r = base.execute(op).unwrap();
+        base_cost = base_cost.then(&r.cost);
+        if r.value == CimValue::Ordering(CompareResult::Less) {
+            base_matches.push(i);
+        }
+    }
+    assert_eq!(base_matches, trace.expected_matches);
+    let reads = base.array().stats().reads;
+    println!("baseline: {} matches, {} reads ({} per compare)",
+             base_matches.len(), reads, reads as f64 / n_records as f64);
+
+    // --- comparison ---
+    let imp = Improvement::of(&adra_cost, &base_cost);
+    let mut t = Table::new(&["metric", "ADRA", "baseline", "improvement"])
+        .with_title("query cost (modeled device energy/latency)");
+    t.row(&[
+        "energy".into(),
+        fmt_si(adra_cost.energy.total(), "J"),
+        fmt_si(base_cost.energy.total(), "J"),
+        fmt_pct(imp.energy_decrease),
+    ]);
+    t.row(&[
+        "latency".into(),
+        fmt_si(adra_cost.latency, "s"),
+        fmt_si(base_cost.latency, "s"),
+        format!("{:.2}x", imp.speedup),
+    ]);
+    t.row(&[
+        "EDP".into(),
+        format!("{:.3e}", adra_cost.edp()),
+        format!("{:.3e}", base_cost.edp()),
+        fmt_pct(imp.edp_decrease),
+    ]);
+    t.print();
+
+    // --- aggregate queries on top of the same table ---
+    println!("\n--- aggregate queries (cim::aggregate) ---");
+    let lo_row = trace.threshold_row; // reuse: lo = threshold
+    let hi_row = trace.threshold_row + 1;
+    let hi_val = trace.threshold + (trace.threshold / 2);
+    for w in 0..adra.cfg().words_per_row() {
+        adra.execute(&CimOp::Write { addr: WordAddr { row: hi_row, word: w }, value: hi_val })
+            .unwrap();
+    }
+    let mut agg = AggregateEngine::new(&mut adra);
+    let range = agg.range_filter(&trace.records, lo_row, hi_row).unwrap();
+    let want: Vec<usize> = trace
+        .values
+        .iter()
+        .enumerate()
+        .filter(|(_, &v)| v >= trace.threshold && v < hi_val)
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(range.result, want, "range filter diverged");
+    println!(
+        "range [k, 1.5k): {} matches, {} activations, {}",
+        range.result.len(),
+        range.activations,
+        fmt_si(range.cost.energy.total(), "J")
+    );
+    let min = agg.min_scan(&trace.records[..256]).unwrap();
+    let want_min = (0..256).min_by_key(|&i| trace.values[i]).unwrap();
+    assert_eq!(trace.values[min.result], trace.values[want_min]);
+    println!(
+        "min scan over 256 records: value {} ({} activations)",
+        trace.values[min.result], min.activations
+    );
+    println!("\nFILTER VALIDATION PASSED");
+}

@@ -1,0 +1,65 @@
+//! Quickstart: write two words, run ADRA's single-access CiM ops, and
+//! compare against the two-read near-memory baseline.
+//!
+//!     cargo run --release --example quickstart
+
+use adra::cim::{AdraEngine, BaselineEngine, BoolFn, CimOp, CimValue, Engine, WordAddr};
+use adra::config::{SensingScheme, SimConfig};
+use adra::energy::Improvement;
+use adra::util::table::{fmt_pct, fmt_si};
+
+fn main() {
+    // a 256x256 1T-FeFET array, 32-bit words, current-based sensing
+    let cfg = SimConfig::square(256, SensingScheme::Current);
+    let mut adra = AdraEngine::new(&cfg);
+    let mut base = BaselineEngine::new(&cfg);
+
+    let (a, b) = (1_000_000u64, 123_456u64);
+    for e in [&mut adra as &mut dyn Engine, &mut base as &mut dyn Engine] {
+        e.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: a }).unwrap();
+        e.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: b }).unwrap();
+    }
+
+    println!("stored A = {a}, B = {b} in rows 0/1 of a 256x256 FeFET array\n");
+
+    // --- the paper's headline op: single-access in-memory subtraction ---
+    let sub = adra.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+    println!("ADRA  A - B = {:?}   (ONE memory access)", sub.value.diff().unwrap());
+    let bsub = base.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+    println!("base  A - B = {:?}   (TWO reads + near-memory compute)", bsub.value.diff().unwrap());
+
+    let imp = Improvement::of(&sub.cost, &bsub.cost);
+    println!(
+        "      energy {} vs {}  (decrease {})",
+        fmt_si(sub.cost.energy.total(), "J"),
+        fmt_si(bsub.cost.energy.total(), "J"),
+        fmt_pct(imp.energy_decrease)
+    );
+    println!(
+        "      latency {} vs {}  (speedup {:.2}x), EDP decrease {}\n",
+        fmt_si(sub.cost.latency, "s"),
+        fmt_si(bsub.cost.latency, "s"),
+        imp.speedup,
+        fmt_pct(imp.edp_decrease)
+    );
+
+    // --- 2-bit read + every Boolean function from the same access type ---
+    let pair = adra.execute(&CimOp::Read2 { row_a: 0, row_b: 1, word: 0 }).unwrap();
+    if let CimValue::Pair(ra, rb) = pair.value {
+        println!("ADRA read2: A = {ra}, B = {rb} recovered from a single access");
+    }
+    for f in [BoolFn::And, BoolFn::Or, BoolFn::Xor, BoolFn::AndNot] {
+        let r = adra.execute(&CimOp::Bool { f, row_a: 0, row_b: 1, word: 0 }).unwrap();
+        println!("  {f:?}(A,B) = {:#x}", r.value.word().unwrap());
+    }
+
+    // --- comparison ---
+    let cmp = adra.execute(&CimOp::Compare { row_a: 0, row_b: 1, word: 0 }).unwrap();
+    println!("\nADRA compare(A,B) = {:?} (sign of the in-memory A-B)", cmp.value);
+
+    // --- and the reason the baseline can't do this in one access ---
+    match base.try_single_access_sub(0, 1, 0) {
+        Err(e) => println!("\nbaseline single-access subtraction: {e}"),
+        Ok(v) => println!("\nbaseline single-access subtraction (lucky data): {v}"),
+    }
+}

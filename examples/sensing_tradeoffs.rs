@@ -1,0 +1,59 @@
+//! Sensing-scheme trade-off explorer (the paper's Fig. 5 analysis as a
+//! tool): sweep CiM frequency and parallelism, print which voltage
+//! sensing scheme wins where, and report the crossovers.
+//!
+//!     cargo run --release --example sensing_tradeoffs
+
+use adra::config::{SensingScheme, SimConfig};
+use adra::energy::EnergyModel;
+use adra::figures::fig5_tradeoffs::{crossover_frequency, crossover_parallelism};
+use adra::util::table::{fmt_si, Table};
+
+fn main() {
+    println!("voltage-sensing scheme selection for ADRA CiM\n");
+    println!("scheme 1: RBL precharged during hold (fast, leaks, half-select cost)");
+    println!("scheme 2: RBL discharged during hold (charge per op, no leak)\n");
+
+    for size in [256usize, 512, 1024] {
+        let f_x = crossover_frequency(size);
+        let p_x = crossover_parallelism(size);
+        println!(
+            "{size}x{size}: scheme 2 wins below {} or parallelism < {:.0}%",
+            fmt_si(f_x, "Hz"),
+            p_x * 100.0
+        );
+    }
+
+    let size = 1024;
+    let m = EnergyModel::new(&SimConfig::square(size, SensingScheme::VoltagePrecharged));
+    let mut t = Table::new(&["frequency", "scheme 1", "scheme 2", "winner"])
+        .with_title(format!("energy per CiM word-op vs frequency ({size}x{size})"));
+    for f in [1e6, 2e6, 5e6, 7.53e6, 10e6, 50e6, 100e6] {
+        let e1 = m.cim_energy_at_frequency(SensingScheme::VoltagePrecharged, f);
+        let e2 = m.cim_energy_at_frequency(SensingScheme::VoltageDischarged, f);
+        t.row(&[
+            fmt_si(f, "Hz"),
+            fmt_si(e1, "J"),
+            fmt_si(e2, "J"),
+            if e1 < e2 { "scheme 1" } else { "scheme 2" }.to_string(),
+        ]);
+    }
+    t.print();
+
+    let mut t2 = Table::new(&["parallelism", "scheme 1", "scheme 2", "winner"])
+        .with_title(format!("energy per row activation vs parallelism ({size}x{size})"));
+    for i in [1usize, 4, 8, 13, 14, 20, 32] {
+        let p = i as f64 / 32.0;
+        let e1 = m.row_activation_energy(SensingScheme::VoltagePrecharged, p);
+        let e2 = m.row_activation_energy(SensingScheme::VoltageDischarged, p);
+        t2.row(&[
+            format!("{}/32 words", i),
+            fmt_si(e1, "J"),
+            fmt_si(e2, "J"),
+            if e1 < e2 { "scheme 1" } else { "scheme 2" }.to_string(),
+        ]);
+    }
+    t2.print();
+
+    println!("\npaper reference points: 7.53 MHz frequency crossover, ~42% parallelism crossover");
+}

@@ -1,0 +1,117 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//! An image-diff pipeline (the signal-processing scenario from the
+//! paper's introduction) runs through:
+//!   L3  the threaded coordinator (router -> batcher -> shard workers),
+//!   L3  the ADRA engine (sensing + Fig. 3(d) compute modules),
+//!   L1/L2  the AOT-compiled JAX/Pallas analog model executed over PJRT
+//!          on shard 0 (ground-truth senseline physics) with the Rust
+//!          behavioral mirror on the other shards,
+//! and every in-memory result is validated against the software ground
+//! truth.  Energy / latency / EDP vs the near-memory baseline are
+//! reported at the end.  Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//!     make artifacts && cargo run --release --example vector_engine
+
+use adra::cim::{AdraEngine, BaselineEngine, CimValue, Engine};
+use adra::config::{SensingScheme, SimConfig};
+use adra::coordinator::Coordinator;
+use adra::energy::{Improvement, OpCost};
+use adra::runtime::{AnalogRuntime, ArtifactManifest, PjrtBackend};
+use adra::util::table::{fmt_pct, fmt_si};
+use adra::workload::image_diff_trace;
+
+fn main() {
+    let mut cfg = SimConfig::square(256, SensingScheme::Current);
+    cfg.word_bits = 16;
+    let shards = 4usize;
+    let n_pixels_per_shard = 512usize;
+
+    println!("=== ADRA end-to-end: in-memory image diff ===");
+    println!(
+        "array 256x256, 16-bit words, {shards} shards, {} pixels total\n",
+        shards * n_pixels_per_shard
+    );
+
+    // L1/L2: PJRT runtime over the AOT artifacts for shard 0
+    let pjrt_available = ArtifactManifest::load_default().is_ok();
+    if !pjrt_available {
+        println!("NOTE: artifacts/ missing — run `make artifacts`; all shards use the behavioral mirror\n");
+    }
+    let cfg2 = cfg.clone();
+    let coord = Coordinator::new(&cfg, shards, move |shard| -> Box<dyn Engine> {
+        if shard == 0 && pjrt_available {
+            let rt = AnalogRuntime::from_default_artifacts()
+                .expect("PJRT runtime init");
+            println!("shard 0: analog backend = JAX/Pallas AOT over PJRT ({})", rt.platform());
+            Box::new(AdraEngine::with_backend(&cfg2, Box::new(PjrtBackend::new(rt))))
+        } else {
+            Box::new(AdraEngine::new(&cfg2))
+        }
+    });
+
+    // generate per-shard traces and drive them through the coordinator
+    let t0 = std::time::Instant::now();
+    let mut total_ops = 0usize;
+    let mut mismatches = 0usize;
+    let mut adra_cost = OpCost::default();
+    for shard in 0..shards {
+        let (setup, diffs, expected) =
+            image_diff_trace(&cfg, n_pixels_per_shard, 1000 + shard as u64);
+        for op in &setup {
+            coord.call(shard, *op).expect("setup write");
+        }
+        let results = coord.call_batch(shard, &diffs).expect("diff batch");
+        for (res, want) in results.iter().zip(&expected) {
+            let res = res.as_ref().expect("diff op");
+            adra_cost = adra_cost.then(&res.cost);
+            total_ops += 1;
+            if res.value != CimValue::Diff(*want) {
+                mismatches += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // the same workload on the near-memory baseline (single engine is
+    // fine — we only need modeled energy/latency + correctness)
+    let mut base = BaselineEngine::new(&cfg);
+    let mut base_cost = OpCost::default();
+    let (setup, diffs, expected) = image_diff_trace(&cfg, n_pixels_per_shard, 1000);
+    for op in &setup {
+        base.execute(op).expect("baseline setup");
+    }
+    for (op, want) in diffs.iter().zip(&expected) {
+        let r = base.execute(op).expect("baseline diff");
+        assert_eq!(r.value, CimValue::Diff(*want), "baseline mismatch");
+        base_cost = base_cost.then(&r.cost);
+    }
+    // scale the single-shard baseline cost to the full workload
+    let base_cost = OpCost {
+        energy: base_cost.energy.scale(shards as f64),
+        latency: base_cost.latency * shards as f64,
+    };
+
+    println!("\n--- results ---");
+    println!(
+        "{total_ops} in-memory subtractions, {mismatches} mismatches vs software ground truth"
+    );
+    assert_eq!(mismatches, 0, "END-TO-END VALIDATION FAILED");
+    let m = coord.metrics();
+    println!("{}", m.report("coordinator"));
+    println!("harness wall time {wall:.3} s ({:.1} kop/s through the full stack)",
+             total_ops as f64 / wall / 1e3);
+
+    let imp = Improvement::of(&adra_cost, &base_cost);
+    println!("\nADRA vs near-memory baseline on this workload (modeled):");
+    println!("  energy  {} vs {}  -> decrease {}",
+             fmt_si(adra_cost.energy.total(), "J"),
+             fmt_si(base_cost.energy.total(), "J"),
+             fmt_pct(imp.energy_decrease));
+    println!("  latency {} vs {}  -> speedup {:.2}x",
+             fmt_si(adra_cost.latency, "s"),
+             fmt_si(base_cost.latency, "s"),
+             imp.speedup);
+    println!("  EDP decrease {}", fmt_pct(imp.edp_decrease));
+    println!("\nEND-TO-END VALIDATION PASSED");
+}

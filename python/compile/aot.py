@@ -1,0 +1,93 @@
+"""AOT compiler: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text — not ``lowered.compile().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla_extension 0.5.1 backing the Rust ``xla`` crate rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile
+``artifacts`` target).  Emits one ``<name>.hlo.txt`` per entry point plus a
+``manifest.txt`` that the Rust runtime parses to locate and sanity-check
+the artifacts.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .params import N_COLS, N_SWEEP
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+#: entry point -> (callable, example args).  The shapes here are the
+#: runtime ABI; rust/src/runtime/artifact.rs carries the same table.
+ENTRY_POINTS = {
+    "dc_isl": (
+        model.dc_isl,
+        (_spec(N_COLS), _spec(N_COLS), _spec(N_COLS), _spec(N_COLS),
+         _spec(), _spec()),
+    ),
+    "transient_cim": (
+        model.transient_cim,
+        (_spec(N_COLS), _spec(N_COLS), _spec(N_COLS), _spec(N_COLS),
+         _spec(), _spec(), _spec(), _spec()),
+    ),
+    "iv_sweep": (model.iv_sweep, (_spec(N_SWEEP),)),
+    "write_transient": (model.write_transient, (_spec(N_COLS), _spec(N_SWEEP))),
+    "read_disturb": (model.read_disturb, (_spec(N_COLS),)),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str) -> str:
+    fn, specs = ENTRY_POINTS[name]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of entry points")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only or list(ENTRY_POINTS)
+    manifest_lines = []
+    for name in names:
+        fn, specs = ENTRY_POINTS[name]
+        text = lower_entry(name)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        sig_in = ",".join("x".join(map(str, s.shape)) or "scalar" for s in specs)
+        manifest_lines.append(f"{name}\t{fname}\tin={sig_in}")
+        print(f"  {name}: {len(text)} chars -> {fname}")
+
+    # manifest last: it is the Makefile's freshness stamp, so it must only
+    # exist once every artifact above has been written successfully.
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write(f"# ADRA AOT artifacts; N_COLS={N_COLS} N_SWEEP={N_SWEEP}\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(names)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

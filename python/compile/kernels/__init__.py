@@ -1,0 +1,18 @@
+"""L1: Pallas kernels for the ADRA analog hot-spot.
+
+Each kernel has a pure-jnp oracle in :mod:`ref` and a hypothesis-driven
+pytest comparing the two.  All kernels run with ``interpret=True`` — the CPU
+PJRT plugin cannot execute Mosaic custom-calls (see DESIGN.md §3).
+"""
+
+from .fefet import fefet_current_kernel
+from .senseline import senseline_kernel
+from .transient import rbl_step_kernel
+from .miller import miller_step_kernel
+
+__all__ = [
+    "fefet_current_kernel",
+    "senseline_kernel",
+    "rbl_step_kernel",
+    "miller_step_kernel",
+]

@@ -1,0 +1,57 @@
+"""Shared Pallas plumbing: block-size selection and 1-D elementwise grids.
+
+The ADRA analog evaluations are all column-parallel over a row pair (up to
+1024 columns), so every kernel uses the same 1-D HBM->VMEM schedule: the
+column axis is split into VMEM-resident blocks and the grid walks the
+blocks.  On a real TPU each block maps onto VPU lanes; ``interpret=True``
+reproduces the numerics on CPU.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default column-block width.  256 f32 columns x ~8 operand planes is
+#: 8 KiB of VMEM per step — far under the ~16 MiB VMEM budget, chosen so the
+#: grid still exposes parallelism at the 1024-column artifact width (see
+#: EXPERIMENTS.md §Perf L1 for the block sweep).
+DEFAULT_BLOCK = 256
+
+
+def pick_block(n: int, requested: int | None = None) -> int:
+    """Largest power-of-two block <= DEFAULT_BLOCK (or `requested`) dividing n."""
+    cap = requested or DEFAULT_BLOCK
+    b = 1
+    while b * 2 <= cap and n % (b * 2) == 0:
+        b *= 2
+    return b if n % b == 0 else n
+
+
+def elementwise_call(kernel_body, n_out: int, n: int, block_size: int | None,
+                     *arrays):
+    """Run ``kernel_body`` over 1-D arrays with a block/grid schedule.
+
+    ``kernel_body(*in_refs, *out_refs)`` sees VMEM blocks of shape
+    ``(block,)``.  All inputs must already be shape ``(n,)`` float32.
+    Returns the ``n_out`` outputs (a single array if ``n_out == 1``).
+    """
+    block = pick_block(n, block_size)
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = tuple(
+        jax.ShapeDtypeStruct((n,), jnp.float32) for _ in range(n_out)
+    )
+    out = pl.pallas_call(
+        kernel_body,
+        grid=grid,
+        in_specs=[spec] * len(arrays),
+        out_specs=tuple(spec for _ in range(n_out)),
+        out_shape=out_shape,
+        interpret=True,
+    )(*arrays)
+    return out[0] if n_out == 1 else out
+
+
+def as_cols(x, n: int):
+    """Broadcast a scalar or (n,) array to a float32 (n,) column vector."""
+    return jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n,))

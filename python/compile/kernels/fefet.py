@@ -1,0 +1,50 @@
+"""Pallas kernel: vectorized 1T-FeFET bitcell read current.
+
+The device math here is intentionally written *independently* of the oracle
+in :mod:`ref` (different but equivalent formulations, e.g. a hand-split
+stable softplus instead of ``logaddexp``) so the kernel-vs-ref pytest is a
+real cross-check and not a tautology.
+"""
+
+import jax.numpy as jnp
+
+from ..params import PARAMS as P
+from .common import as_cols, elementwise_call
+
+
+def _stable_softplus(x):
+    # split form of log(1 + e^x): avoids overflow for large +x and
+    # underflow for large -x; equivalent to jnp.logaddexp(x, 0).
+    return jnp.where(x > 0.0, x + jnp.log1p(jnp.exp(-x)), jnp.log1p(jnp.exp(x)))
+
+
+def _body(vg_ref, vds_ref, pol_ref, dvt_ref, i_ref):
+    """I_D of a FeFET: alpha-power FET with polarization-shifted V_T."""
+    vg = vg_ref[...]
+    vds = vds_ref[...]
+    pol = pol_ref[...]
+    dvt = dvt_ref[...]
+
+    # polarization -> threshold: +P (LRS) lowers V_T by half the memory window
+    vt = P.vt0 + dvt - (0.5 * P.dvt_mw / P.ps) * pol
+
+    # smooth overdrive with subthreshold blending
+    u = P.n_ss * P.phi_t
+    vov = u * _stable_softplus((vg - vt) / u)
+
+    # alpha-power saturation, smooth triode knee in V_DS
+    sat = jnp.tanh(jnp.maximum(vds, 0.0) * (1.0 / P.v_dsat))
+    i_ref[...] = P.k_fet * jnp.exp(P.alpha_sat * jnp.log(vov)) * sat
+
+
+def fefet_current_kernel(v_g, v_ds, pol, dvt=0.0, *, n=None, block_size=None):
+    """Bitcell read currents for ``n`` columns (A).
+
+    All arguments broadcast to ``(n,)`` float32.  ``n`` defaults to the
+    length of the first array argument.
+    """
+    if n is None:
+        n = max(jnp.shape(jnp.asarray(a))[0] if jnp.ndim(jnp.asarray(a)) else 1
+                for a in (v_g, v_ds, pol, dvt))
+    args = [as_cols(a, n) for a in (v_g, v_ds, pol, dvt)]
+    return elementwise_call(_body, 1, n, block_size, *args)

@@ -1,0 +1,38 @@
+"""Pallas kernel: monotone-branch Miller polarization update (eqs. (1)-(2)).
+
+Used by the write-transient and I-V hysteresis artifacts.  The branch
+rectification (ascending drive can only raise P, descending only lower it)
+is what yields retention at E = 0 and the hysteresis loop of Fig. 2(c).
+"""
+
+import math
+
+import jax.numpy as jnp
+
+from ..params import PARAMS as P
+from .common import as_cols, elementwise_call
+
+# eq. (2): domain-spread parameter; a compile-time constant.
+_SIGMA = P.ec / math.log((P.ps + P.pr) / (P.ps - P.pr))
+
+
+def _body(pol_ref, vg_ref, dt_ref, pout_ref):
+    pol = pol_ref[...]
+    e_fe = (P.kappa_fe / P.t_fe) * vg_ref[...]
+
+    inv_s2 = 1.0 / (2.0 * _SIGMA)
+    target_up = P.ps * jnp.tanh((e_fe - P.ec) * inv_s2)
+    target_dn = P.ps * jnp.tanh((e_fe + P.ec) * inv_s2)
+
+    rate = dt_ref[...] * (1.0 / P.tau_fe)
+    dp_up = jnp.maximum(target_up - pol, 0.0) * (e_fe > 0.0)
+    dp_dn = jnp.minimum(target_dn - pol, 0.0) * (e_fe < 0.0)
+    pout_ref[...] = jnp.clip(pol + (dp_up + dp_dn) * rate, -P.ps, P.ps)
+
+
+def miller_step_kernel(pol, v_g, dt, *, n=None, block_size=None):
+    """One lagged-Miller polarization step; returns the new P plane."""
+    if n is None:
+        n = jnp.shape(jnp.asarray(pol))[0]
+    args = [as_cols(a, n) for a in (pol, v_g, dt)]
+    return elementwise_call(_body, 1, n, block_size, *args)

@@ -1,0 +1,130 @@
+"""Pure-jnp reference oracle for every Pallas kernel.
+
+Everything here is straight-line jax.numpy with no pallas involvement; the
+pytest suite asserts each kernel in this package matches its reference to
+float32 allclose over randomized shapes and inputs (hypothesis sweeps).
+
+The same equations are mirrored in ``rust/src/device/`` — three independent
+implementations (ref-jnp, pallas, rust) pinned together by tests.
+"""
+
+import jax.numpy as jnp
+
+from ..params import PARAMS as P
+
+
+# ---------------------------------------------------------------------------
+# 45 nm FET: alpha-power law with smooth subthreshold blending.
+# ---------------------------------------------------------------------------
+
+def softplus(x):
+    """Numerically-stable softplus: log(1 + exp(x))."""
+    return jnp.logaddexp(x, 0.0)
+
+
+def overdrive(v_gs, v_t):
+    """Smooth effective overdrive voltage.
+
+    Above threshold this approaches (v_gs - v_t); below threshold it decays
+    exponentially with the subthreshold slope n_ss * phi_t, giving a single
+    smooth expression valid in both regions.
+    """
+    u = P.n_ss * P.phi_t
+    return u * softplus((v_gs - v_t) / u)
+
+
+def fet_current(v_gs, v_ds, v_t):
+    """Drain current of the 45 nm access FET (A).
+
+    I_D = K * Vov^alpha * tanh(V_DS / V_dsat): alpha-power saturation with a
+    smooth triode knee.  All arguments broadcast.
+    """
+    vov = overdrive(v_gs, v_t)
+    return P.k_fet * jnp.power(vov, P.alpha_sat) * jnp.tanh(
+        jnp.maximum(v_ds, 0.0) / P.v_dsat
+    )
+
+
+# ---------------------------------------------------------------------------
+# FeFET: polarization -> threshold map and senseline composition.
+# ---------------------------------------------------------------------------
+
+def vt_of_pol(pol, dvt=0.0):
+    """Threshold voltage of a FeFET storing polarization ``pol`` (C/m^2).
+
+    +P (LRS, logic '1') lowers V_T; -P (HRS, logic '0') raises it.  ``dvt``
+    is an optional per-cell V_T offset used for Monte-Carlo variation.
+    """
+    return P.vt0 - 0.5 * P.dvt_mw * (pol / P.ps) + dvt
+
+
+def fefet_current(v_g, v_ds, pol, dvt=0.0):
+    """Read current of a 1T FeFET bitcell (A)."""
+    return fet_current(v_g, v_ds, vt_of_pol(pol, dvt))
+
+
+def senseline_current(pol_a, pol_b, vg1, vg2, v_ds, dvt_a=0.0, dvt_b=0.0):
+    """ADRA dual-row senseline current.
+
+    Word A sits on the row asserted to ``vg1`` (= V_GREAD1, the *lower*
+    asymmetric bias) and word B on the row asserted to ``vg2`` (= V_GREAD2).
+    I_SL is the sum of the two bitcell currents — Fig. 3(a)/(c).
+    """
+    i_a = fefet_current(vg1, v_ds, pol_a, dvt_a)
+    i_b = fefet_current(vg2, v_ds, pol_b, dvt_b)
+    return i_a + i_b
+
+
+# ---------------------------------------------------------------------------
+# Miller / Preisach-lite polarization dynamics (paper eqs. (1)-(2)).
+# ---------------------------------------------------------------------------
+
+def sigma_e():
+    """Domain spread sigma = Ec / ln((Ps+Pr)/(Ps-Pr)) — eq. (2)."""
+    return P.ec / jnp.log((P.ps + P.pr) / (P.ps - P.pr))
+
+
+def miller_target(e_fe):
+    """Branch saturation polarization curves P+-(E) — eq. (1).
+
+    Returns (ascending, descending) branch targets.  The ascending branch
+    (E > 0 drive) is Ps*tanh((E-Ec)/(2*sigma)); descending is the mirror.
+    """
+    s2 = 2.0 * sigma_e()
+    up = P.ps * jnp.tanh((e_fe - P.ec) / s2)
+    dn = P.ps * jnp.tanh((e_fe + P.ec) / s2)
+    return up, dn
+
+
+def miller_step(pol, v_g, dt):
+    """One explicit-Euler step of the lagged Miller dynamics.
+
+    dP/dt = (P_branch(E) - P) / tau, rectified so that positive drive can
+    only raise P (ascending branch) and negative drive only lower it
+    (descending branch); at E = 0 polarization is retained.  This is the
+    standard monotone-branch Verilog-A realization of Miller's model and
+    gives retention + hysteresis without tracking dE/dt history.
+    """
+    e_fe = P.kappa_fe * v_g / P.t_fe
+    up, dn = miller_target(e_fe)
+    drive_up = jnp.maximum(up - pol, 0.0) * (e_fe > 0.0)
+    drive_dn = jnp.minimum(dn - pol, 0.0) * (e_fe < 0.0)
+    dp = (drive_up + drive_dn) * (dt / P.tau_fe)
+    return jnp.clip(pol + dp, -P.ps, P.ps)
+
+
+# ---------------------------------------------------------------------------
+# RBL discharge transient (voltage-based sensing).
+# ---------------------------------------------------------------------------
+
+def rbl_step(v_rbl, pol_a, pol_b, vg1, vg2, c_rbl, dt, dvt_a=0.0, dvt_b=0.0):
+    """One explicit-Euler step of the RBL discharge ODE.
+
+    C_RBL * dV/dt = -I_SL(V): both selected cells discharge the (pre-charged)
+    read bitline; the cell currents themselves depend on the instantaneous
+    RBL voltage through V_DS.  Returns (v_next, i_sl) so callers can
+    integrate energy alongside the trajectory.
+    """
+    i_sl = senseline_current(pol_a, pol_b, vg1, vg2, v_rbl, dvt_a, dvt_b)
+    v_next = jnp.maximum(v_rbl - i_sl * dt / c_rbl, 0.0)
+    return v_next, i_sl

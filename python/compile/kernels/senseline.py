@@ -1,0 +1,48 @@
+"""Pallas kernel: ADRA dual-row senseline current (the paper's Fig. 3(a)).
+
+One fused kernel evaluates both selected bitcells per column and their sum
+I_SL, so the HBM->VMEM traffic per column block is a single pass over the
+two polarization planes (instead of two separate device-model sweeps).
+This fusion is the L1 hot-path optimization recorded in EXPERIMENTS.md.
+"""
+
+import jax.numpy as jnp
+
+from ..params import PARAMS as P
+from .common import as_cols, elementwise_call
+
+
+def _cell_current(vg, vds, pol, dvt):
+    vt = P.vt0 + dvt - (0.5 * P.dvt_mw / P.ps) * pol
+    u = P.n_ss * P.phi_t
+    x = (vg - vt) / u
+    sp = jnp.where(x > 0.0, x + jnp.log1p(jnp.exp(-x)), jnp.log1p(jnp.exp(x)))
+    vov = u * sp
+    sat = jnp.tanh(jnp.maximum(vds, 0.0) * (1.0 / P.v_dsat))
+    return P.k_fet * jnp.exp(P.alpha_sat * jnp.log(vov)) * sat
+
+
+def _body(pol_a_ref, pol_b_ref, dvt_a_ref, dvt_b_ref, vg1_ref, vg2_ref,
+          vds_ref, isl_ref, ia_ref, ib_ref):
+    """I_SL = I(A at V_GREAD1) + I(B at V_GREAD2), per column."""
+    vds = vds_ref[...]
+    i_a = _cell_current(vg1_ref[...], vds, pol_a_ref[...], dvt_a_ref[...])
+    i_b = _cell_current(vg2_ref[...], vds, pol_b_ref[...], dvt_b_ref[...])
+    ia_ref[...] = i_a
+    ib_ref[...] = i_b
+    isl_ref[...] = i_a + i_b
+
+
+def senseline_kernel(pol_a, pol_b, vg1, vg2, v_ds, dvt_a=0.0, dvt_b=0.0,
+                     *, n=None, block_size=None):
+    """Per-column (I_SL, I_A, I_B) for an asymmetric dual-row activation.
+
+    ``vg1``/``vg2`` are the WL1/WL2 assertion voltages (V_GREAD1 < V_GREAD2
+    in ADRA; equal voltages reproduce the symmetric prior-work scheme of
+    Fig. 1 and its many-to-one mapping).
+    """
+    if n is None:
+        n = jnp.shape(jnp.asarray(pol_a))[0]
+    args = [as_cols(a, n)
+            for a in (pol_a, pol_b, dvt_a, dvt_b, vg1, vg2, v_ds)]
+    return elementwise_call(_body, 3, n, block_size, *args)

@@ -1,0 +1,44 @@
+"""Pallas kernel: fused RBL-discharge timestep for voltage-based sensing.
+
+One step of C_RBL * dV/dt = -I_SL(V).  The kernel keeps V_RBL, both
+polarization planes, and the energy accumulator in the same VMEM block, so
+an N-step ``lax.scan`` over this kernel streams no operand more than once
+per step.  The per-step senseline current is also emitted so the caller can
+integrate the RBL energy component alongside the trajectory.
+"""
+
+import jax.numpy as jnp
+
+from ..params import PARAMS as P
+from .common import as_cols, elementwise_call
+
+
+def _cell_current(vg, vds, pol, dvt):
+    vt = P.vt0 + dvt - (0.5 * P.dvt_mw / P.ps) * pol
+    u = P.n_ss * P.phi_t
+    x = (vg - vt) / u
+    sp = jnp.where(x > 0.0, x + jnp.log1p(jnp.exp(-x)), jnp.log1p(jnp.exp(x)))
+    vov = u * sp
+    sat = jnp.tanh(jnp.maximum(vds, 0.0) * (1.0 / P.v_dsat))
+    return P.k_fet * jnp.exp(P.alpha_sat * jnp.log(vov)) * sat
+
+
+def _body(v_ref, pol_a_ref, pol_b_ref, dvt_a_ref, dvt_b_ref, vg1_ref,
+          vg2_ref, c_ref, dt_ref, vout_ref, isl_ref):
+    """Explicit-Euler step: V <- max(V - I_SL(V) * dt / C, 0)."""
+    v = v_ref[...]
+    i_a = _cell_current(vg1_ref[...], v, pol_a_ref[...], dvt_a_ref[...])
+    i_b = _cell_current(vg2_ref[...], v, pol_b_ref[...], dvt_b_ref[...])
+    i_sl = i_a + i_b
+    isl_ref[...] = i_sl
+    vout_ref[...] = jnp.maximum(v - i_sl * dt_ref[...] / c_ref[...], 0.0)
+
+
+def rbl_step_kernel(v_rbl, pol_a, pol_b, vg1, vg2, c_rbl, dt,
+                    dvt_a=0.0, dvt_b=0.0, *, n=None, block_size=None):
+    """One discharge step; returns ``(v_next, i_sl)`` per column."""
+    if n is None:
+        n = jnp.shape(jnp.asarray(v_rbl))[0]
+    args = [as_cols(a, n)
+            for a in (v_rbl, pol_a, pol_b, dvt_a, dvt_b, vg1, vg2, c_rbl, dt)]
+    return elementwise_call(_body, 2, n, block_size, *args)

@@ -1,0 +1,162 @@
+"""L2: array-level analog model of the ADRA FeFET substrate.
+
+Each public function here is an AOT entry point: ``aot.py`` lowers it once
+to HLO text under ``artifacts/`` and the Rust runtime executes it over PJRT
+on the request path.  All functions are shape-static (N_COLS columns,
+N_SWEEP sweep points), return tuples, and call the L1 Pallas kernels — so
+the kernels lower into the same HLO module.
+
+Entry points
+------------
+``dc_isl``          DC senseline operating point (Fig. 1(c) / 3(c) tables,
+                    current-based sensing, Monte-Carlo variation).
+``transient_cim``   RBL discharge trajectory (voltage-based sensing,
+                    schemes 1 and 2) + charge/energy integrals.
+``iv_sweep``        quasi-static I_D-V_G hysteresis of one device
+                    (Fig. 2(c) calibration curve).
+``write_transient`` polarization dynamics under a write pulse train
+                    (V_SET / V_RESET), per column.
+``read_disturb``    polarization drift under a sustained read bias —
+                    the ablation for the V_GREAD < V_C design rule.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .params import PARAMS as P, N_COLS, N_SWEEP
+from .kernels import (
+    fefet_current_kernel,
+    miller_step_kernel,
+    rbl_step_kernel,
+    senseline_kernel,
+)
+
+
+def _cols(x):
+    return jnp.broadcast_to(jnp.asarray(x, jnp.float32), (N_COLS,))
+
+
+def dc_isl(pol_a, pol_b, dvt_a, dvt_b, vg1, vg2):
+    """DC senseline currents for a dual-row activation.
+
+    Args (all float32): ``pol_a``/``pol_b`` — stored polarization planes
+    ``(N_COLS,)``; ``dvt_a``/``dvt_b`` — per-cell V_T variation offsets
+    ``(N_COLS,)``; ``vg1``/``vg2`` — scalar WL assertion voltages.
+    Passing ``vg1 == vg2`` reproduces the symmetric prior-work scheme
+    (baseline, Fig. 1); ``vg1 < vg2`` is ADRA (Fig. 3).
+
+    Returns ``(i_sl, i_a, i_b)`` each ``(N_COLS,)`` in amperes, at the
+    full-rail operating point V_DS = V_READ.
+    """
+    isl, ia, ib = senseline_kernel(
+        pol_a, pol_b, _cols(vg1), _cols(vg2), _cols(P.v_read),
+        dvt_a, dvt_b, n=N_COLS,
+    )
+    return isl, ia, ib
+
+
+def transient_cim(pol_a, pol_b, dvt_a, dvt_b, vg1, vg2, v0, c_rbl):
+    """RBL discharge transient for voltage-based sensing.
+
+    The read bitline starts at ``v0`` (= V_READ for scheme 1/2 after
+    precharge) and discharges through both selected cells for
+    ``P.n_steps`` steps of ``P.t_step``.
+
+    Args: polarization/variation planes as in :func:`dc_isl`; ``vg1``,
+    ``vg2`` scalar WL voltages; ``v0`` scalar initial RBL voltage;
+    ``c_rbl`` scalar total RBL capacitance (farads — array-size dependent,
+    supplied by the Rust side).
+
+    Returns ``(v_trace, v_final, q_drawn, e_diss)``:
+      * ``v_trace``  — ``(n_steps, N_COLS)`` RBL voltage trajectory,
+      * ``v_final``  — ``(N_COLS,)`` voltage at the sense instant,
+      * ``q_drawn``  — ``(N_COLS,)`` integral of I_SL dt (coulombs),
+      * ``e_diss``   — ``(N_COLS,)`` integral of I_SL * V_RBL dt (joules).
+    """
+    c_cols = _cols(c_rbl)
+    dt_cols = _cols(P.t_step)
+    vg1_cols, vg2_cols = _cols(vg1), _cols(vg2)
+
+    def step(carry, _):
+        v, q, e = carry
+        v_next, i_sl = rbl_step_kernel(
+            v, pol_a, pol_b, vg1_cols, vg2_cols, c_cols, dt_cols,
+            dvt_a, dvt_b, n=N_COLS,
+        )
+        q = q + i_sl * P.t_step
+        e = e + i_sl * v * P.t_step
+        return (v_next, q, e), v_next
+
+    zeros = jnp.zeros((N_COLS,), jnp.float32)
+    init = (_cols(v0), zeros, zeros)
+    (v_final, q_drawn, e_diss), v_trace = jax.lax.scan(
+        step, init, None, length=P.n_steps
+    )
+    return v_trace, v_final, q_drawn, e_diss
+
+
+def iv_sweep(vg_trace):
+    """Quasi-static I_D-V_G hysteresis sweep of a single FeFET (Fig. 2(c)).
+
+    ``vg_trace`` — ``(N_SWEEP,)`` gate-voltage waveform (the Rust side
+    passes a triangular +-V sweep).  Each point applies the gate bias for
+    ``P.t_step * 50`` (long enough for the lagged Miller dynamics to act)
+    then samples I_D at a small V_DS = 50 mV, as in the measurement that
+    calibrated the original compact model.
+
+    Returns ``(i_d, pol)`` each ``(N_SWEEP,)``.
+    """
+    dwell = P.t_step * 50.0
+
+    def step(pol, vg):
+        vg1 = jnp.broadcast_to(vg, (1,)).astype(jnp.float32)
+        pol_next = miller_step_kernel(pol, vg1, jnp.full((1,), dwell), n=1)
+        i_d = fefet_current_kernel(
+            vg1, jnp.full((1,), 0.05, jnp.float32), pol_next,
+            jnp.zeros((1,)), n=1,
+        )
+        return pol_next, (i_d[0], pol_next[0])
+
+    pol0 = jnp.full((1,), -P.p_store * P.ps, jnp.float32)
+    _, (i_d, pol) = jax.lax.scan(step, pol0, vg_trace)
+    return i_d, pol
+
+
+def write_transient(pol0, vg_pulse):
+    """Polarization dynamics of a column under a shared write waveform.
+
+    ``pol0`` — ``(N_COLS,)`` initial polarizations; ``vg_pulse`` —
+    ``(N_SWEEP,)`` gate waveform applied to the whole row (e.g. a V_SET
+    or V_RESET pulse with rise/fall).  Returns ``(pol_final, pol_trace)``
+    with ``pol_trace`` of shape ``(N_SWEEP, N_COLS)``.  Each waveform point
+    dwells for ``t_step * 50`` (same quasi-static cadence as
+    :func:`iv_sweep`), so a half-N_SWEEP pulse is ~256 ns >> tau_fe.
+    """
+    dt = jnp.full((N_COLS,), P.t_step * 50.0, jnp.float32)
+
+    def step(pol, vg):
+        pol_next = miller_step_kernel(pol, _cols(vg), dt, n=N_COLS)
+        return pol_next, pol_next
+
+    pol_final, pol_trace = jax.lax.scan(step, pol0, vg_pulse)
+    return pol_final, pol_trace
+
+
+def read_disturb(pol0):
+    """Polarization drift under a sustained read bias (V_GREAD2, worst case).
+
+    Applies the stronger read wordline voltage for N_SWEEP dwell steps and
+    reports the polarization trajectory — quantifies the read-disturb
+    margin implied by the V_GREAD < V_C design rule (paper §II.B).
+
+    Returns ``(pol_final, pol_trace)``.
+    """
+    dt = jnp.full((N_COLS,), P.t_step * 50.0, jnp.float32)
+    vg = _cols(P.v_gread2)
+
+    def step(pol, _):
+        pol_next = miller_step_kernel(pol, vg, dt, n=N_COLS)
+        return pol_next, pol_next
+
+    pol_final, pol_trace = jax.lax.scan(step, pol0, None, length=N_SWEEP)
+    return pol_final, pol_trace

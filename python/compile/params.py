@@ -1,0 +1,71 @@
+"""Device and bias parameters for the ADRA FeFET substrate.
+
+These constants are the single source of truth on the Python (build-time)
+side and are mirrored *exactly* by ``rust/src/config/defaults.rs``.  The
+integration test ``rust/tests/hlo_cross_validation.rs`` executes the AOT
+artifacts and checks the Rust behavioral model against them to 1e-5, which
+is what keeps the two copies honest.
+
+Values correspond to the paper's Fig. 2(b) simulation setup: an
+experimentally-calibrated Hf0.5Zr0.5O2 (HZO) FeFET on a 45 nm PTM FET, and
+the Section IV bias conditions (V_READ = 1 V, V_GREAD1 = 0.83 V,
+V_GREAD2 = 1 V, V_SET = 3.7 V, V_RESET = -5 V).  Where the paper text does
+not give a number (e.g. per-cell bitline capacitance) we use
+technology-typical values and record the choice in DESIGN.md section 2.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FeFETParams:
+    # ---- 45 nm FET (alpha-power law + smooth subthreshold) ----
+    vdd: float = 1.0          # V, supply
+    phi_t: float = 0.0259     # V, thermal voltage at 300 K
+    n_ss: float = 1.5         # subthreshold slope factor
+    alpha_sat: float = 1.3    # alpha-power exponent (velocity saturation)
+    k_fet: float = 6.0e-5     # A / V^alpha, per-cell drive strength
+    v_dsat: float = 0.3       # V, triode->saturation knee
+
+    # ---- HZO ferroelectric layer (Miller / Preisach-lite) ----
+    t_fe: float = 8e-9        # m, ferroelectric thickness
+    ps: float = 0.25          # C/m^2  (25 uC/cm^2), saturation polarization
+    pr: float = 0.20          # C/m^2  (20 uC/cm^2), remanent polarization
+    ec: float = 1.2e8         # V/m    (1.2 MV/cm), coercive field
+    eps_fe: float = 30.0      # background relative permittivity
+    tau_fe: float = 5e-9      # s, polarization response lag (R_FE = tau/C_FE)
+    kappa_fe: float = 0.5     # gate divider: V_FE = kappa_fe * V_G
+
+    # ---- FeFET threshold map ----
+    vt0: float = 0.65         # V, mid polarization threshold
+    dvt_mw: float = 0.8       # V, memory window (VT swing for P = -Ps..+Ps)
+    p_store: float = 0.8      # stored state = +-p_store * Ps after write relax
+
+    # ---- Section IV bias conditions ----
+    v_read: float = 1.0       # V, RBL read voltage
+    v_gread1: float = 0.83    # V, WL1 (word A) assertion — the *asymmetric* bias
+    v_gread2: float = 1.0     # V, WL2 (word B) assertion
+    v_set: float = 3.7        # V, write +P (LRS)
+    v_reset: float = -5.0     # V, write -P (HRS)
+
+    # ---- Array electricals (per cell) ----
+    c_rbl_cell: float = 0.2e-15   # F, RBL capacitance contributed per row
+    c_wl_cell: float = 0.15e-15   # F, WL capacitance contributed per column
+    t_step: float = 0.02e-9       # s, transient integration step
+    n_steps: int = 128            # transient steps (t_sense = 2.56 ns window)
+
+    @property
+    def sigma_e(self) -> float:
+        """Miller domain-spread parameter, eq. (2) of the paper."""
+        import math
+
+        return self.ec / math.log((self.ps + self.pr) / (self.ps - self.pr))
+
+
+PARAMS = FeFETParams()
+
+# Static column count for the AOT artifacts.  HLO is shape-static; the Rust
+# runtime pads narrower operations up to this width (rust/src/runtime/).
+N_COLS = 1024
+# Static time-trace length for the I-V hysteresis sweep artifact.
+N_SWEEP = 512

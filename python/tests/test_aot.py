@@ -1,0 +1,73 @@
+"""AOT lowering tests: every entry point lowers to parseable HLO text with
+the shape signature the Rust runtime (rust/src/runtime/artifact.rs) expects.
+"""
+
+import re
+
+import pytest
+
+from compile import aot
+from compile.params import N_COLS, N_SWEEP
+
+
+@pytest.fixture(scope="module")
+def hlo_texts():
+    # Lower everything once; module-scoped because lowering is not free.
+    return {name: aot.lower_entry(name) for name in aot.ENTRY_POINTS}
+
+
+def test_all_entry_points_lower(hlo_texts):
+    assert set(hlo_texts) == {
+        "dc_isl", "transient_cim", "iv_sweep", "write_transient",
+        "read_disturb",
+    }
+    for name, text in hlo_texts.items():
+        assert "HloModule" in text, name
+        assert "ENTRY" in text, name
+
+
+def test_no_custom_calls(hlo_texts):
+    """interpret=True must have eliminated Mosaic custom-calls; otherwise
+    the CPU PJRT client cannot execute the artifact."""
+    for name, text in hlo_texts.items():
+        assert "custom-call" not in text, name
+
+
+def _entry_block(text):
+    """Lines of the ENTRY computation (the HLO text parser format puts
+    parameters and ROOT inside an `ENTRY name { ... }` block)."""
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    block = []
+    for l in lines[start + 1:]:
+        if l.strip() == "}":
+            break
+        block.append(l)
+    return block
+
+
+def test_entry_signatures(hlo_texts):
+    """Parameter arity in the ENTRY block matches the manifest ABI."""
+    expected_params = {
+        "dc_isl": 6,
+        "transient_cim": 8,
+        "iv_sweep": 1,
+        "write_transient": 2,
+        "read_disturb": 1,
+    }
+    for name, n_params in expected_params.items():
+        block = _entry_block(hlo_texts[name])
+        n_found = sum(1 for l in block if re.search(r"= f32\[[0-9]*\]\S* parameter\(", l))
+        assert n_found == n_params, (name, n_found)
+
+
+def test_root_is_tuple(hlo_texts):
+    """Lowered with return_tuple=True — the Rust side unwraps a tuple."""
+    for name, text in hlo_texts.items():
+        root = next(l for l in _entry_block(text) if "ROOT" in l)
+        assert "tuple(" in root or re.search(r"\) tuple", root) or "(f32" in root, (name, root)
+
+
+def test_static_shapes_match_params(hlo_texts):
+    assert f"f32[{N_COLS}]" in hlo_texts["dc_isl"]
+    assert f"f32[{N_SWEEP}]" in hlo_texts["iv_sweep"]

@@ -1,0 +1,145 @@
+"""Block-schedule invariance and numerical edge cases.
+
+The BlockSpec schedule (block size / grid) must never change results —
+only performance.  These tests pin that, plus the stability of the
+device-model math at extreme inputs (where naive softplus/log formulations
+overflow) and the symmetric-bias special case the baseline engine relies
+on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import (
+    fefet_current_kernel,
+    miller_step_kernel,
+    rbl_step_kernel,
+    senseline_kernel,
+)
+from compile.kernels import ref
+from compile.params import PARAMS as P
+
+
+def rand(n, lo, hi, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, n), jnp.float32)
+
+
+@pytest.mark.parametrize("n,blocks", [
+    (1024, [32, 64, 128, 256, 1024]),
+    (256, [16, 256]),
+    (96, [32, 96]),
+])
+def test_fefet_kernel_block_invariance(n, blocks):
+    vg = rand(n, 0.0, 1.2, 1)
+    vds = rand(n, 0.0, 1.0, 2)
+    pol = rand(n, -P.ps, P.ps, 3)
+    dvt = rand(n, -0.05, 0.05, 4)
+    results = [
+        np.asarray(fefet_current_kernel(vg, vds, pol, dvt, n=n, block_size=b))
+        for b in blocks
+    ]
+    # schedule changes may re-associate fusions: identical to ~1 ulp
+    for r in results[1:]:
+        np.testing.assert_allclose(results[0], r, rtol=2e-6, atol=1e-30)
+
+
+@pytest.mark.parametrize("n", [64, 1024])
+def test_senseline_kernel_block_invariance(n):
+    pol_a = rand(n, -P.ps, P.ps, 5)
+    pol_b = rand(n, -P.ps, P.ps, 6)
+    vg1 = jnp.full((n,), P.v_gread1, jnp.float32)
+    vg2 = jnp.full((n,), P.v_gread2, jnp.float32)
+    vds = jnp.full((n,), P.v_read, jnp.float32)
+    outs = [
+        senseline_kernel(pol_a, pol_b, vg1, vg2, vds, n=n, block_size=b)
+        for b in [16, n]
+    ]
+    for got, want in zip(outs[0], outs[1]):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-6, atol=1e-30)
+
+
+def test_symmetric_bias_collapses_in_kernel():
+    """The baseline (Fig. 1) many-to-one mapping, from the Pallas kernel:
+    swapping the operands must not change I_SL when vg1 == vg2."""
+    n = 128
+    pol_a = rand(n, -P.ps, P.ps, 7)
+    pol_b = rand(n, -P.ps, P.ps, 8)
+    vg = jnp.full((n,), P.v_gread2, jnp.float32)
+    vds = jnp.full((n,), P.v_read, jnp.float32)
+    isl_ab, _, _ = senseline_kernel(pol_a, pol_b, vg, vg, vds, n=n)
+    isl_ba, _, _ = senseline_kernel(pol_b, pol_a, vg, vg, vds, n=n)
+    np.testing.assert_allclose(isl_ab, isl_ba, rtol=1e-6)
+
+
+def test_asymmetric_bias_separates_in_kernel():
+    """...and the ADRA asymmetric bias must separate the swap."""
+    n = 4
+    lrs = jnp.full((n,), P.p_store * P.ps, jnp.float32)
+    hrs = jnp.full((n,), -P.p_store * P.ps, jnp.float32)
+    vg1 = jnp.full((n,), P.v_gread1, jnp.float32)
+    vg2 = jnp.full((n,), P.v_gread2, jnp.float32)
+    vds = jnp.full((n,), P.v_read, jnp.float32)
+    i10, _, _ = senseline_kernel(lrs, hrs, vg1, vg2, vds, n=n)
+    i01, _, _ = senseline_kernel(hrs, lrs, vg1, vg2, vds, n=n)
+    assert float(jnp.abs(i01[0] - i10[0])) > 1e-6
+
+
+def test_extreme_gate_voltages_are_finite():
+    """Deep subthreshold and strong inversion must not produce NaN/Inf
+    (the stable-softplus split is what guarantees this)."""
+    n = 8
+    for vg in [-20.0, -5.0, 0.0, 5.0, 20.0]:
+        out = fefet_current_kernel(
+            jnp.full((n,), vg, jnp.float32), 1.0, 0.0, 0.0, n=n
+        )
+        assert np.all(np.isfinite(np.asarray(out))), f"vg={vg}"
+        assert np.all(np.asarray(out) >= 0.0)
+
+
+def test_zero_capacitance_guarded_by_caller():
+    """rbl_step with a tiny C must clamp at 0 V, not go negative."""
+    n = 4
+    v, _ = rbl_step_kernel(
+        jnp.full((n,), 0.01, jnp.float32),
+        jnp.full((n,), P.p_store * P.ps, jnp.float32),
+        jnp.full((n,), P.p_store * P.ps, jnp.float32),
+        jnp.full((n,), P.v_gread1, jnp.float32),
+        jnp.full((n,), P.v_gread2, jnp.float32),
+        jnp.full((n,), 1e-18, jnp.float32),
+        jnp.full((n,), P.t_step, jnp.float32),
+        n=n,
+    )
+    assert np.all(np.asarray(v) >= 0.0)
+
+
+def test_miller_extreme_fields_clip():
+    n = 4
+    for vg in [50.0, -50.0]:
+        out = miller_step_kernel(
+            jnp.zeros((n,), jnp.float32),
+            jnp.full((n,), vg, jnp.float32),
+            jnp.full((n,), 1.0, jnp.float32),  # huge dt
+            n=n,
+        )
+        arr = np.asarray(out)
+        assert np.all(np.abs(arr) <= P.ps + 1e-7)
+        assert np.all(np.isfinite(arr))
+
+
+def test_ref_and_kernel_agree_at_the_operating_point():
+    """Spot-check the exact Section IV bias point (the numbers the rest
+    of the stack is calibrated around)."""
+    lrs = P.p_store * P.ps
+    i_lrs2 = float(ref.fefet_current(P.v_gread2, P.v_read, lrs))
+    i_lrs1 = float(ref.fefet_current(P.v_gread1, P.v_read, lrs))
+    got2 = float(fefet_current_kernel(
+        jnp.full((1,), P.v_gread2, jnp.float32), P.v_read, lrs, 0.0, n=1)[0])
+    got1 = float(fefet_current_kernel(
+        jnp.full((1,), P.v_gread1, jnp.float32), P.v_read, lrs, 0.0, n=1)[0])
+    np.testing.assert_allclose(got2, i_lrs2, rtol=1e-5)
+    np.testing.assert_allclose(got1, i_lrs1, rtol=1e-5)
+    # the asymmetry itself: lower wordline voltage -> lower LRS current
+    assert got1 < got2

@@ -1,0 +1,142 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against the pure-jnp
+reference in ``compile.kernels.ref``, across hypothesis-driven sweeps of
+shapes, biases, and stored states.  This is the CORE L1 correctness signal.
+"""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import (
+    fefet_current_kernel,
+    miller_step_kernel,
+    rbl_step_kernel,
+    senseline_kernel,
+)
+from compile.kernels import ref
+from compile.kernels.common import pick_block
+from compile.params import PARAMS as P
+
+# Column counts exercising block==n, block<n, odd sizes, power-of-two.
+SIZES = st.sampled_from([1, 2, 7, 16, 100, 128, 256, 300, 1024])
+
+finite = dict(allow_nan=False, allow_infinity=False)
+vg_st = st.floats(-1.0, 6.0, **finite)
+vds_st = st.floats(0.0, 1.2, **finite)
+pol_st = st.floats(-float(P.ps), float(P.ps), **finite)
+dvt_st = st.floats(-0.1, 0.1, **finite)
+
+
+def _arr(rng, n, lo, hi):
+    return jnp.asarray(rng.uniform(lo, hi, n), jnp.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=SIZES, vg=vg_st, vds=vds_st, pol=pol_st, dvt=dvt_st)
+def test_fefet_current_matches_ref_scalar_broadcast(n, vg, vds, pol, dvt):
+    got = fefet_current_kernel(
+        jnp.full((n,), vg, jnp.float32), vds, pol, dvt, n=n
+    )
+    want = ref.fefet_current(vg, vds, pol, dvt)
+    np.testing.assert_allclose(got, jnp.full((n,), want), rtol=1e-5, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=SIZES, seed=st.integers(0, 2**31 - 1))
+def test_fefet_current_matches_ref_random_planes(n, seed):
+    rng = np.random.default_rng(seed)
+    vg = _arr(rng, n, 0.0, 1.2)
+    vds = _arr(rng, n, 0.0, 1.0)
+    pol = _arr(rng, n, -P.ps, P.ps)
+    dvt = _arr(rng, n, -0.05, 0.05)
+    got = fefet_current_kernel(vg, vds, pol, dvt, n=n)
+    want = ref.fefet_current(vg, vds, pol, dvt)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=SIZES, seed=st.integers(0, 2**31 - 1),
+       vg1=st.floats(0.5, 1.0, **finite), vg2=st.floats(0.5, 1.2, **finite))
+def test_senseline_matches_ref(n, seed, vg1, vg2):
+    rng = np.random.default_rng(seed)
+    pol_a = _arr(rng, n, -P.ps, P.ps)
+    pol_b = _arr(rng, n, -P.ps, P.ps)
+    dvt_a = _arr(rng, n, -0.05, 0.05)
+    dvt_b = _arr(rng, n, -0.05, 0.05)
+    isl, ia, ib = senseline_kernel(
+        pol_a, pol_b, jnp.full((n,), vg1, jnp.float32),
+        jnp.full((n,), vg2, jnp.float32), jnp.full((n,), P.v_read, jnp.float32),
+        dvt_a, dvt_b, n=n,
+    )
+    want = ref.senseline_current(pol_a, pol_b, vg1, vg2, P.v_read, dvt_a, dvt_b)
+    np.testing.assert_allclose(isl, want, rtol=1e-5, atol=1e-12)
+    np.testing.assert_allclose(
+        ia, ref.fefet_current(vg1, P.v_read, pol_a, dvt_a), rtol=1e-5, atol=1e-12)
+    np.testing.assert_allclose(
+        ib, ref.fefet_current(vg2, P.v_read, pol_b, dvt_b), rtol=1e-5, atol=1e-12)
+    np.testing.assert_allclose(isl, ia + ib, rtol=1e-6, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=SIZES, seed=st.integers(0, 2**31 - 1),
+       v0=st.floats(0.1, 1.0, **finite))
+def test_rbl_step_matches_ref(n, seed, v0):
+    rng = np.random.default_rng(seed)
+    pol_a = _arr(rng, n, -P.ps, P.ps)
+    pol_b = _arr(rng, n, -P.ps, P.ps)
+    v = jnp.full((n,), v0, jnp.float32)
+    c = 1024 * P.c_rbl_cell
+    got_v, got_i = rbl_step_kernel(
+        v, pol_a, pol_b,
+        jnp.full((n,), P.v_gread1, jnp.float32),
+        jnp.full((n,), P.v_gread2, jnp.float32),
+        jnp.full((n,), c, jnp.float32), jnp.full((n,), P.t_step, jnp.float32),
+        n=n,
+    )
+    want_v, want_i = ref.rbl_step(
+        v, pol_a, pol_b, P.v_gread1, P.v_gread2, c, P.t_step
+    )
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-5, atol=1e-9)
+    np.testing.assert_allclose(got_i, want_i, rtol=1e-5, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=SIZES, seed=st.integers(0, 2**31 - 1),
+       vg=st.floats(-6.0, 6.0, **finite),
+       dt_mult=st.floats(0.1, 100.0, **finite))
+def test_miller_step_matches_ref(n, seed, vg, dt_mult):
+    rng = np.random.default_rng(seed)
+    pol = _arr(rng, n, -P.ps, P.ps)
+    # compare at the f32 ABI: the branch gate (e_fe > 0) is discontinuous,
+    # so a subnormal f64 vg that underflows in f32 would legitimately
+    # diverge between a f64 oracle and the f32 kernel.
+    vg = float(np.float32(vg))
+    dt = float(np.float32(P.t_step * dt_mult))
+    got = miller_step_kernel(
+        pol, jnp.full((n,), vg, jnp.float32), jnp.full((n,), dt, jnp.float32),
+        n=n,
+    )
+    want = ref.miller_step(pol, vg, dt)
+    # atol covers catastrophic cancellation when P crosses ~0 toward the
+    # branch target (values of order 1e-5 with ~1 ulp f32 error)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-8)
+
+
+@pytest.mark.parametrize("n,req,expect_divides", [
+    (1024, None, True), (1024, 128, True), (100, None, True),
+    (7, None, True), (300, None, True), (1, None, True),
+])
+def test_pick_block_divides(n, req, expect_divides):
+    b = pick_block(n, req)
+    assert n % b == 0
+    assert 1 <= b <= max(n, 1)
+
+
+def test_pick_block_prefers_large_power_of_two():
+    assert pick_block(1024) == 256
+    assert pick_block(512) == 256
+    assert pick_block(256) == 256
+    assert pick_block(128) == 128
+    assert pick_block(96) == 32

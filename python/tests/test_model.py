@@ -1,0 +1,121 @@
+"""L2 entry-point tests: shapes, trajectories, and the voltage-sensing
+margins the Rust side depends on (the artifact ABI contract)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.params import PARAMS as P, N_COLS, N_SWEEP
+
+POL_LRS = P.p_store * P.ps
+POL_HRS = -P.p_store * P.ps
+Z = jnp.zeros((N_COLS,), jnp.float32)
+
+
+def plane(bit):
+    return jnp.full((N_COLS,), POL_LRS if bit else POL_HRS, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def transients():
+    c_rbl = 1024 * P.c_rbl_cell
+    out = {}
+    for a in (0, 1):
+        for b in (0, 1):
+            out[(a, b)] = model.transient_cim(
+                plane(a), plane(b), Z, Z,
+                P.v_gread1, P.v_gread2, P.v_read, c_rbl,
+            )
+    return out
+
+
+def test_dc_isl_shapes_and_consistency():
+    isl, ia, ib = model.dc_isl(plane(1), plane(0), Z, Z,
+                               P.v_gread1, P.v_gread2)
+    assert isl.shape == ia.shape == ib.shape == (N_COLS,)
+    np.testing.assert_allclose(isl, ia + ib, rtol=1e-6)
+
+
+def test_transient_shapes(transients):
+    v_trace, v_final, q, e = transients[(1, 1)]
+    assert v_trace.shape == (P.n_steps, N_COLS)
+    assert v_final.shape == q.shape == e.shape == (N_COLS,)
+
+
+def test_transient_voltage_monotone_nonincreasing(transients):
+    for key, (v_trace, *_rest) in transients.items():
+        v = np.asarray(v_trace[:, 0])
+        assert np.all(np.diff(v) <= 1e-9), key
+
+
+def test_transient_four_levels_ordered(transients):
+    """Discharge depth ordering mirrors the I_SL ordering: deeper discharge
+    for larger senseline current — v11 < v01 < v10 < v00."""
+    vf = {k: float(v[1][0]) for k, v in transients.items()}
+    assert vf[(1, 1)] < vf[(0, 1)] < vf[(1, 0)] < vf[(0, 0)]
+
+
+def test_transient_voltage_margins_exceed_50mv(transients):
+    """Section IV: > 50 mV sense margin for voltage-based sensing."""
+    vf = sorted(float(v[1][0]) for v in transients.values())
+    margins = np.diff(vf)
+    assert margins.min() > 0.050, f"margins (V): {margins}"
+
+
+def test_transient_energy_and_charge_positive(transients):
+    for key, (_vt, _vf, q, e) in transients.items():
+        assert float(q[0]) >= 0.0
+        assert float(e[0]) >= 0.0
+        # dissipated energy can't exceed q * V_READ
+        assert float(e[0]) <= float(q[0]) * P.v_read * (1 + 1e-6)
+
+
+def test_transient_charge_conservation(transients):
+    """Charge drawn from the RBL equals C * dV (explicit Euler identity)."""
+    c_rbl = 1024 * P.c_rbl_cell
+    for key, (_vt, v_final, q, _e) in transients.items():
+        dv = P.v_read - float(v_final[0])
+        np.testing.assert_allclose(float(q[0]), c_rbl * dv, rtol=1e-3,
+                                   err_msg=str(key))
+
+
+def test_iv_sweep_hysteresis():
+    vg = jnp.concatenate([
+        jnp.linspace(-5, 5, N_SWEEP // 2),
+        jnp.linspace(5, -5, N_SWEEP - N_SWEEP // 2),
+    ]).astype(jnp.float32)
+    i_d, pol = model.iv_sweep(vg)
+    assert i_d.shape == pol.shape == (N_SWEEP,)
+    # polarization reaches both remanent states
+    assert float(pol.max()) > 0.5 * P.pr
+    assert float(pol.min()) < -0.5 * P.pr
+    assert np.all(np.asarray(i_d) >= 0.0)
+
+
+def test_write_transient_sets_and_resets():
+    t = jnp.arange(N_SWEEP, dtype=jnp.float32)
+    set_pulse = jnp.where(t < N_SWEEP / 2, P.v_set, 0.0)
+    pol0 = jnp.full((N_COLS,), POL_HRS, jnp.float32)
+    pol_set, trace = model.write_transient(pol0, set_pulse)
+    assert trace.shape == (N_SWEEP, N_COLS)
+    assert float(pol_set[0]) > 0.5 * P.pr
+
+    reset_pulse = jnp.where(t < N_SWEEP / 2, P.v_reset, 0.0)
+    pol_reset, _ = model.write_transient(pol_set, reset_pulse)
+    assert float(pol_reset[0]) < -0.5 * P.pr
+
+
+def test_read_disturb_bounded():
+    """Sustained read keeps a stored '1' healthy (V_GREAD < V_C rule) and
+    never drives a stored '0' past the B-reference decision point."""
+    pol_final, trace = model.read_disturb(
+        jnp.full((N_COLS,), POL_LRS, jnp.float32))
+    assert trace.shape == (N_SWEEP, N_COLS)
+    assert float(pol_final[0]) > 0.5 * P.ps
+
+    pol_final0, _ = model.read_disturb(
+        jnp.full((N_COLS,), POL_HRS, jnp.float32))
+    # HRS may creep toward the ascending branch target but must stay
+    # clearly negative (still reads as '0').
+    assert float(pol_final0[0]) < -0.1 * P.ps

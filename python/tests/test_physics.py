@@ -1,0 +1,182 @@
+"""Physics invariants of the device model — the properties the paper's
+argument rests on, independent of any particular numerical value:
+
+* the ADRA one-to-one mapping (four distinct, ordered I_SL levels),
+* the baseline many-to-one mapping ((0,1) == (1,0) when biases are equal),
+* sense margins above the paper's Section IV targets,
+* monotonicity / retention / hysteresis of the FeFET model.
+"""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.params import PARAMS as P
+
+finite = dict(allow_nan=False, allow_infinity=False)
+
+POL_LRS = P.p_store * P.ps   # logic '1'
+POL_HRS = -P.p_store * P.ps  # logic '0'
+
+
+def isl(a_bit, b_bit, vg1=P.v_gread1, vg2=P.v_gread2):
+    pa = POL_LRS if a_bit else POL_HRS
+    pb = POL_LRS if b_bit else POL_HRS
+    return float(ref.senseline_current(pa, pb, vg1, vg2, P.v_read))
+
+
+# ---------------------------------------------------------------------------
+# The paper's core claim: asymmetric biasing -> one-to-one mapping.
+# ---------------------------------------------------------------------------
+
+def test_adra_four_distinct_ordered_levels():
+    i00, i01, i10, i11 = isl(0, 0), isl(0, 1), isl(1, 0), isl(1, 1)
+    # B sits on the stronger wordline (V_GREAD2), so (0,1) > (1,0).
+    assert i00 < i10 < i01 < i11
+
+
+def test_adra_sense_margin_exceeds_1ua():
+    """Section IV: > 1 uA margin for current-based sensing."""
+    levels = sorted([isl(0, 0), isl(0, 1), isl(1, 0), isl(1, 1)])
+    margins = np.diff(levels)
+    assert margins.min() > 1e-6, f"margins (A): {margins}"
+
+
+def test_baseline_symmetric_is_many_to_one():
+    """With V_GREAD1 == V_GREAD2 (prior work, Fig. 1), (0,1) and (1,0)
+    collapse to the same senseline current — subtraction is impossible."""
+    vg = P.v_gread2
+    i01 = isl(0, 1, vg, vg)
+    i10 = isl(1, 0, vg, vg)
+    np.testing.assert_allclose(i01, i10, rtol=1e-6)
+    assert isl(0, 0, vg, vg) < i01 < isl(1, 1, vg, vg)
+
+
+def test_adra_reference_placement_recovers_b():
+    """I_REF-B between (I_LRS1+I_HRS2) and (I_HRS1+I_LRS2) outputs bit B."""
+    i_ref_b = 0.5 * (isl(1, 0) + isl(0, 1))
+    for a in (0, 1):
+        for b in (0, 1):
+            assert (isl(a, b) > i_ref_b) == bool(b), (a, b)
+
+
+def test_adra_reference_placement_recovers_or_and():
+    i_ref_or = 0.5 * (isl(0, 0) + isl(1, 0))
+    i_ref_and = 0.5 * (isl(0, 1) + isl(1, 1))
+    for a in (0, 1):
+        for b in (0, 1):
+            assert (isl(a, b) > i_ref_or) == bool(a or b)
+            assert (isl(a, b) > i_ref_and) == bool(a and b)
+
+
+def test_oai_gate_recovers_a():
+    """A = NOT[(B + NOR(A,B)) * NAND(A,B)] — the paper's OAI recovery."""
+    for a in (0, 1):
+        for b in (0, 1):
+            nand = 1 - (a & b)
+            nor = 1 - (a | b)
+            got = 1 - ((b | nor) & nand)
+            assert got == a, (a, b)
+
+
+# ---------------------------------------------------------------------------
+# Device-model sanity: monotonicity, retention, hysteresis.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(vg=st.floats(0.0, 1.1, **finite), dv=st.floats(0.01, 0.4, **finite),
+       pol=st.floats(-float(P.ps), float(P.ps), **finite))
+def test_current_monotone_in_vg(vg, dv, pol):
+    lo = float(ref.fefet_current(vg, P.v_read, pol))
+    hi = float(ref.fefet_current(vg + dv, P.v_read, pol))
+    assert hi > lo
+
+
+@settings(max_examples=30, deadline=None)
+@given(vg=st.floats(0.5, 1.1, **finite),
+       p1=st.floats(-float(P.ps), float(P.ps), **finite),
+       dp=st.floats(0.01, 0.2, **finite))
+def test_current_monotone_in_polarization(vg, p1, dp):
+    p2 = min(p1 + dp, float(P.ps))
+    lo = float(ref.fefet_current(vg, P.v_read, p1))
+    hi = float(ref.fefet_current(vg, P.v_read, p2))
+    assert hi >= lo
+
+
+@settings(max_examples=30, deadline=None)
+@given(vds=st.floats(0.05, 1.0, **finite), dv=st.floats(0.01, 0.2, **finite))
+def test_current_monotone_in_vds(vds, dv):
+    lo = float(ref.fefet_current(P.v_gread2, vds, POL_LRS))
+    hi = float(ref.fefet_current(P.v_gread2, vds + dv, POL_LRS))
+    assert hi >= lo
+
+
+def test_lrs_hrs_distinguishability():
+    """Single-cell read window: LRS/HRS current ratio >> 1 at V_GREAD2."""
+    i_lrs = float(ref.fefet_current(P.v_gread2, P.v_read, POL_LRS))
+    i_hrs = float(ref.fefet_current(P.v_gread2, P.v_read, POL_HRS))
+    assert i_lrs / i_hrs > 10.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(pol=st.floats(-float(P.ps), float(P.ps), **finite),
+       steps=st.integers(1, 50))
+def test_retention_at_zero_field(pol, steps):
+    p = jnp.float32(pol)
+    for _ in range(steps):
+        p = ref.miller_step(p, 0.0, P.t_step * 1000)
+    np.testing.assert_allclose(float(p), pol, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(vg=st.floats(3.5, 6.0, **finite))
+def test_set_pulse_switches_to_positive_p(vg):
+    p = jnp.float32(-P.p_store * P.ps)
+    for _ in range(200):
+        p = ref.miller_step(p, vg, P.t_step * 50)
+    assert float(p) > 0.5 * P.pr
+
+
+@settings(max_examples=20, deadline=None)
+@given(vg=st.floats(-6.0, -4.0, **finite))
+def test_reset_pulse_switches_to_negative_p(vg):
+    p = jnp.float32(P.p_store * P.ps)
+    for _ in range(200):
+        p = ref.miller_step(p, vg, P.t_step * 50)
+    assert float(p) < -0.5 * P.pr
+
+
+def test_polarization_always_bounded():
+    p = jnp.float32(0.0)
+    for vg in [6.0, -6.0, 6.0, -6.0]:
+        for _ in range(100):
+            p = ref.miller_step(p, vg, P.t_step * 100)
+            assert -P.ps <= float(p) <= P.ps
+
+
+def test_read_bias_does_not_switch_lrs():
+    """V_GREAD < V_C design rule: read never flips a stored '1'."""
+    p = jnp.float32(POL_LRS)
+    for _ in range(500):
+        p = ref.miller_step(p, P.v_gread2, P.t_step * 50)
+    assert float(p) > 0.5 * P.ps
+
+
+def test_hysteresis_loop_has_area():
+    """Up-sweep and down-sweep polarizations differ (Fig. 2(c) loop)."""
+    n = 100
+    up = np.linspace(-5, 5, n)
+    p = jnp.float32(-P.p_store * P.ps)
+    p_up = []
+    for vg in up:
+        p = ref.miller_step(p, float(vg), P.t_step * 50)
+        p_up.append(float(p))
+    p_dn = []
+    for vg in up[::-1]:
+        p = ref.miller_step(p, float(vg), P.t_step * 50)
+        p_dn.append(float(p))
+    p_dn = p_dn[::-1]
+    area = np.trapezoid(np.array(p_up) - np.array(p_dn), up)
+    assert abs(area) > 0.01 * P.ps  # a real loop, not a line

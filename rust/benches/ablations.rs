@@ -1,0 +1,205 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   1. wordline asymmetry (V_GREAD1 sweep) -> margins + MC yield;
+//!   2. compute-module variant (muxed vs duplicated) -> throughput when a
+//!      workload wants add AND sub of the same operands;
+//!   3. coordinator batching (max_batch sweep) -> ops/s;
+//!   4. bulk-write scheme (two-phase vs FLASH-like) -> pulses + latency.
+
+use std::time::Instant;
+
+use adra::analysis::{bias_ablation, MonteCarlo};
+use adra::array::{bulk_write, FefetArray, WriteScheme};
+use adra::cim::{AdraEngine, CimOp, Engine, WordAddr};
+use adra::config::{DeviceParams, SensingScheme, SimConfig};
+use adra::coordinator::Coordinator;
+use adra::logic::{AdraComputeModule, ComputeModuleVariant};
+use adra::sensing::SenseOut;
+use adra::util::bench::{black_box, Bench};
+use adra::util::rng::Rng;
+use adra::workload::{OpMix, WorkloadGen};
+
+fn main() {
+    ablation_bias();
+    ablation_module_variant();
+    ablation_batching();
+    ablation_write_scheme();
+    ablation_fusion();
+}
+
+fn ablation_fusion() {
+    println!("=== ablation 5: activation fusion (coordinator::fuse) ===");
+    // query pattern: each operand pair asked for sub AND compare (the
+    // database-filter inner loop)
+    let mut cfg = SimConfig::square(128, SensingScheme::Current);
+    cfg.word_bits = 16;
+    let mut ops = Vec::new();
+    let mut rng2 = Rng::new(12);
+    for _ in 0..64 {
+        ops.push(CimOp::Write {
+            addr: WordAddr { row: rng2.below(64) as usize, word: 0 },
+            value: rng2.below(30_000),
+        });
+    }
+    for i in 0..2000usize {
+        let row_a = i % 64;
+        let row_b = 64 + (i % 32);
+        ops.push(CimOp::Sub { row_a, row_b, word: 0 });
+        ops.push(CimOp::Compare { row_a, row_b, word: 0 });
+    }
+    let mut e1 = AdraEngine::new(&cfg);
+    let t0 = Instant::now();
+    let mut plain_energy = 0.0;
+    for op in &ops {
+        if let Ok(r) = e1.execute(op) {
+            plain_energy += r.cost.energy.total();
+        }
+    }
+    let t_plain = t0.elapsed().as_secs_f64();
+    let plain_act = e1.array().stats().dual_activations;
+
+    let mut e2 = AdraEngine::new(&cfg);
+    let t0 = Instant::now();
+    let fused = adra::coordinator::fuse::execute_fused(&mut e2, &ops);
+    let t_fused = t0.elapsed().as_secs_f64();
+    let fused_energy: f64 = fused
+        .iter()
+        .filter_map(|r| r.as_ref().ok())
+        .map(|r| r.cost.energy.total())
+        .sum();
+    let fused_act = e2.array().stats().dual_activations;
+
+    println!(
+        "  unfused: {plain_act} activations, {:.2} nJ, {:.1} ms wall",
+        plain_energy * 1e9,
+        t_plain * 1e3
+    );
+    println!(
+        "  fused:   {fused_act} activations, {:.2} nJ, {:.1} ms wall",
+        fused_energy * 1e9,
+        t_fused * 1e3
+    );
+    println!(
+        "  -> {:.2}x fewer activations, {:.1}% modeled energy saved, {:.2}x sim speedup\n",
+        plain_act as f64 / fused_act as f64,
+        (1.0 - fused_energy / plain_energy) * 100.0,
+        t_plain / t_fused
+    );
+}
+
+fn ablation_bias() {
+    println!("=== ablation 1: wordline asymmetry (V_GREAD1) ===");
+    let p = DeviceParams::default();
+    for b in bias_ablation(&p, 9, 0.02, 1500) {
+        println!(
+            "  V_GREAD1 {:.3} V | one-to-one {:5} | margin {:8.3} uA | BER {:.2e}",
+            b.vg1,
+            b.margins.one_to_one,
+            b.margins.current_margin * 1e6,
+            b.ber
+        );
+    }
+    let mc = MonteCarlo::new(&p);
+    println!(
+        "  max sigma(V_T) @ BER<=1e-3: {:.1} mV\n",
+        mc.max_tolerable_sigma(1e-3, 2000, 1) * 1e3
+    );
+}
+
+fn ablation_module_variant() {
+    println!("=== ablation 2: compute-module variant (Fig 3(d)) ===");
+    let muxed = AdraComputeModule::new(ComputeModuleVariant::Muxed);
+    let dup = AdraComputeModule::new(ComputeModuleVariant::Duplicated);
+    println!(
+        "  transistors/module: muxed {} vs duplicated {} (paper: +4T)",
+        muxed.gate_counts().total_transistors(),
+        dup.gate_counts().total_transistors()
+    );
+    // workload: need BOTH a+b and a-b per operand pair.  muxed variant
+    // must evaluate twice (SELECT flip); duplicated gets both per cycle.
+    let sense: Vec<SenseOut> = (0..32)
+        .map(|i| {
+            let a = i % 3 == 0;
+            let b = i % 2 == 0;
+            SenseOut { or: a || b, b, and: a && b }
+        })
+        .collect();
+    let bench = Bench::default();
+    bench.run("module/muxed add+sub (2 passes)", || {
+        let mut cin_a = false;
+        let mut cin_s = true;
+        for s in &sense {
+            let add = muxed.eval(s, cin_a, false);
+            cin_a = add.carry;
+            let sub = muxed.eval(s, cin_s, true);
+            cin_s = sub.carry;
+        }
+        (cin_a, cin_s)
+    });
+    bench.run("module/duplicated add+sub (1 pass)", || {
+        let mut cin_a = false;
+        let mut cin_s = true;
+        for s in &sense {
+            let (add, sub) = dup.eval_both(s, cin_a, cin_s);
+            cin_a = add.carry;
+            cin_s = sub.carry;
+        }
+        (cin_a, cin_s)
+    });
+    println!();
+}
+
+fn ablation_batching() {
+    println!("=== ablation 3: coordinator max_batch ===");
+    let n_ops = 40_000;
+    for max_batch in [1usize, 4, 16, 64, 256] {
+        let mut cfg = SimConfig::square(128, SensingScheme::Current);
+        cfg.word_bits = 16;
+        cfg.max_batch = max_batch;
+        let coord = Coordinator::adra(&cfg, 1);
+        let mut gen = WorkloadGen::new(&cfg, OpMix::subtraction_heavy(), 3);
+        let ops = gen.batch(n_ops);
+        let t0 = Instant::now();
+        for chunk in ops.chunks(512) {
+            black_box(coord.call_batch(0, chunk).unwrap());
+        }
+        let rate = n_ops as f64 / t0.elapsed().as_secs_f64();
+        println!("  max_batch {max_batch:>4}: {rate:>12.0} op/s");
+    }
+    println!();
+}
+
+fn ablation_write_scheme() {
+    println!("=== ablation 4: bulk-write scheme ===");
+    let mut cfg = SimConfig::square(256, SensingScheme::Current);
+    cfg.word_bits = 32;
+    let mut rng = Rng::new(9);
+    let rows = 64;
+    let words = cfg.cols / cfg.word_bits;
+    let old: Vec<Vec<u64>> = (0..rows)
+        .map(|_| (0..words).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+        .collect();
+    let img: Vec<Vec<u64>> = (0..rows)
+        .map(|_| (0..words).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+        .collect();
+    for scheme in [WriteScheme::TwoPhase, WriteScheme::FlashLike] {
+        let mut arr = FefetArray::new(&cfg);
+        bulk_write(&mut arr, 0, &old, WriteScheme::TwoPhase);
+        let t0 = Instant::now();
+        let rep = bulk_write(&mut arr, 0, &img, scheme);
+        println!(
+            "  {scheme:?}: {} row pulses, {} cells switched, modeled {:.2} us, sim wall {:.1} ms",
+            rep.row_pulses,
+            rep.cells_switched,
+            rep.latency * 1e6,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    println!();
+
+    // sanity workload: engine still answers correctly after bulk loads
+    let mut e = AdraEngine::new(&cfg);
+    e.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 5 }).unwrap();
+    e.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 3 }).unwrap();
+    let r = e.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+    assert_eq!(r.value, adra::cim::CimValue::Diff(2));
+}

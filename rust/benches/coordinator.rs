@@ -1,0 +1,75 @@
+//! Bench: coordinator overhead — raw engine throughput vs the same ops
+//! through the router/batcher/worker pipeline, and scaling across shards.
+//! §Perf target: the coordinator adds <10% over raw engine throughput at
+//! batch granularity.
+
+use std::time::Instant;
+
+use adra::cim::{AdraEngine, CimOp, Engine, WordAddr};
+use adra::config::{SensingScheme, SimConfig};
+use adra::coordinator::Coordinator;
+use adra::util::bench::black_box;
+use adra::workload::{OpMix, WorkloadGen};
+
+fn ops_per_sec(label: &str, n: usize, f: impl FnOnce()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed().as_secs_f64();
+    let rate = n as f64 / dt;
+    println!("bench {label:<46} {rate:>14.0} op/s  ({n} ops in {dt:.3}s)");
+    rate
+}
+
+fn main() {
+    let mut cfg = SimConfig::square(256, SensingScheme::Current);
+    cfg.word_bits = 32;
+    cfg.max_batch = 64;
+    let n_ops = 60_000;
+
+    // populate + generate one shared op stream
+    let mut gen = WorkloadGen::new(&cfg, OpMix::subtraction_heavy(), 7);
+    let ops = gen.batch(n_ops);
+
+    // raw engine
+    let mut engine = AdraEngine::new(&cfg);
+    for row in 0..cfg.rows.min(64) {
+        engine
+            .execute(&CimOp::Write { addr: WordAddr { row, word: 0 }, value: row as u64 })
+            .unwrap();
+    }
+    let raw = ops_per_sec("engine/raw (no coordinator)", n_ops, || {
+        for op in &ops {
+            black_box(engine.execute(op).ok());
+        }
+    });
+
+    // through the coordinator, 1 shard (pure overhead measurement)
+    let coord1 = Coordinator::adra(&cfg, 1);
+    let one = ops_per_sec("coordinator/1-shard batched", n_ops, || {
+        for chunk in ops.chunks(512) {
+            black_box(coord1.call_batch(0, chunk).unwrap());
+        }
+    });
+
+    // through the coordinator, 4 shards (scaling)
+    let coord4 = std::sync::Arc::new(Coordinator::adra(&cfg, 4));
+    let four = ops_per_sec("coordinator/4-shard parallel", n_ops * 4, || {
+        let mut handles = Vec::new();
+        for shard in 0..4usize {
+            let c = coord4.clone();
+            let ops = ops.clone();
+            handles.push(std::thread::spawn(move || {
+                for chunk in ops.chunks(512) {
+                    black_box(c.call_batch(shard, chunk).unwrap());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let overhead = (raw - one) / raw * 100.0;
+    println!("\ncoordinator overhead vs raw engine: {overhead:.1}%  (target < 10%)");
+    println!("4-shard scaling: {:.2}x over 1-shard", four / one);
+}

@@ -1,0 +1,50 @@
+//! Bench: Fig. 4 — current-based sensing, ADRA vs two-read baseline.
+//!
+//! Regenerates the paper's series (energy decrease / speedup / EDP vs
+//! array size) from the calibrated model, then measures the *simulator's*
+//! wall-clock throughput executing real subtraction ops end-to-end on
+//! both engines at each size.
+
+use adra::cim::{AdraEngine, BaselineEngine, CimOp, Engine, WordAddr};
+use adra::config::{SensingScheme, SimConfig};
+use adra::figures::fig4_current::fig4_sweep;
+use adra::util::bench::Bench;
+use adra::util::rng::Rng;
+
+fn main() {
+    println!("=== Fig 4: current-based sensing ===");
+    println!("{:>10} {:>16} {:>10} {:>14}", "array", "energy decrease", "speedup", "EDP decrease");
+    for row in fig4_sweep(SensingScheme::Current) {
+        println!(
+            "{:>7}^2 {:>15.2}% {:>9.3}x {:>13.2}%",
+            row.size,
+            row.improvement.energy_decrease * 100.0,
+            row.improvement.speedup,
+            row.improvement.edp_decrease * 100.0
+        );
+    }
+
+    println!("\nsimulator throughput (behavioral analog backend):");
+    let b = Bench::default();
+    for size in [256usize, 1024] {
+        let mut cfg = SimConfig::square(size, SensingScheme::Current);
+        cfg.word_bits = 32;
+        let mut rng = Rng::new(4);
+
+        let mut adra = AdraEngine::new(&cfg);
+        adra.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 77 }).unwrap();
+        adra.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 33 }).unwrap();
+        b.run(&format!("adra/sub/current/{size}"), || {
+            let w = rng.below(4) as usize;
+            adra.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: w }).unwrap()
+        });
+
+        let mut base = BaselineEngine::new(&cfg);
+        base.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 77 }).unwrap();
+        base.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 33 }).unwrap();
+        b.run(&format!("baseline/sub/current/{size}"), || {
+            let w = rng.below(4) as usize;
+            base.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: w }).unwrap()
+        });
+    }
+}

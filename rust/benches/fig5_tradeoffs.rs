@@ -1,0 +1,56 @@
+//! Bench: Fig. 5 — scheme1/scheme2 frequency and parallelism trade-offs
+//! with the crossover points, plus evaluation-throughput measurements of
+//! the energy model itself (it sits on the coordinator's metrics path).
+
+use adra::figures::fig5_tradeoffs::{
+    crossover_frequency, crossover_parallelism, fig5a_sweep, fig5b_sweep,
+};
+use adra::config::{SensingScheme, SimConfig};
+use adra::energy::EnergyModel;
+use adra::util::bench::Bench;
+
+fn main() {
+    println!("=== Fig 5: voltage-sensing trade-offs ===");
+    println!("fig 5(a): energy per word-op vs CiM frequency (1024^2)");
+    for (f, e1, e2) in fig5a_sweep(1024) {
+        println!(
+            "  {:>9.2} MHz   scheme1 {:>9.3} pJ   scheme2 {:>9.3} pJ   winner: {}",
+            f / 1e6,
+            e1 * 1e12,
+            e2 * 1e12,
+            if e1 < e2 { "scheme1" } else { "scheme2" }
+        );
+    }
+    println!(
+        "  crossover {:.2} MHz (paper 7.53 MHz)\n",
+        crossover_frequency(1024) / 1e6
+    );
+
+    println!("fig 5(b): energy per row activation vs parallelism (1024^2)");
+    for (p, e1, e2) in fig5b_sweep(1024) {
+        println!(
+            "  P={:>5.3}   scheme1 {:>9.3} pJ   scheme2 {:>9.3} pJ   winner: {}",
+            p,
+            e1 * 1e12,
+            e2 * 1e12,
+            if e1 < e2 { "scheme1" } else { "scheme2" }
+        );
+    }
+    println!(
+        "  crossover P = {:.3} (paper ~0.42)\n",
+        crossover_parallelism(1024)
+    );
+
+    let m = EnergyModel::new(&SimConfig::square(1024, SensingScheme::VoltagePrecharged));
+    let b = Bench::default();
+    let mut f = 1e6;
+    b.run("energy-model/cim_energy_at_frequency", || {
+        f = if f > 100e6 { 1e6 } else { f * 1.01 };
+        m.cim_energy_at_frequency(SensingScheme::VoltagePrecharged, f)
+    });
+    let mut p = 0.03125;
+    b.run("energy-model/row_activation_energy", || {
+        p = if p >= 1.0 { 0.03125 } else { p + 0.01 };
+        m.row_activation_energy(SensingScheme::VoltagePrecharged, p)
+    });
+}

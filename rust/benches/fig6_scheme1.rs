@@ -1,0 +1,36 @@
+//! Bench: Fig. 6 — voltage sensing, scheme 1 (precharged RBL).
+
+use adra::cim::{AdraEngine, CimOp, Engine, WordAddr};
+use adra::config::{SensingScheme, SimConfig};
+use adra::figures::fig67_voltage::fig67_sweep;
+use adra::util::bench::Bench;
+
+fn main() {
+    println!("=== Fig 6: voltage sensing, scheme 1 (precharged) ===");
+    println!("{:>10} {:>16} {:>10} {:>14}", "array", "energy overhead", "speedup", "EDP decrease");
+    for row in fig67_sweep(SensingScheme::VoltagePrecharged) {
+        println!(
+            "{:>7}^2 {:>15.2}% {:>9.3}x {:>13.2}%",
+            row.size,
+            -row.improvement.energy_decrease * 100.0,
+            row.improvement.speedup,
+            row.improvement.edp_decrease * 100.0
+        );
+    }
+    println!("(paper: +20-23% energy, 1.57-1.73x, EDP -23.26..-28.81%)\n");
+
+    // throughput of the full voltage-sensing simulation path (the RBL
+    // discharge transient integration dominates — this is the L3 hot path
+    // for voltage schemes)
+    let b = Bench::coarse();
+    for size in [256usize, 1024] {
+        let mut cfg = SimConfig::square(size, SensingScheme::VoltagePrecharged);
+        cfg.word_bits = 32;
+        let mut e = AdraEngine::new(&cfg);
+        e.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 123 }).unwrap();
+        e.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 77 }).unwrap();
+        b.run(&format!("adra/sub/scheme1/{size} (transient)"), || {
+            e.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap()
+        });
+    }
+}

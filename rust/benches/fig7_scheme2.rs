@@ -1,0 +1,37 @@
+//! Bench: Fig. 7 — voltage sensing, scheme 2 (discharged RBL).
+
+use adra::cim::{AdraEngine, BaselineEngine, CimOp, Engine, WordAddr};
+use adra::config::{SensingScheme, SimConfig};
+use adra::figures::fig67_voltage::fig67_sweep;
+use adra::util::bench::Bench;
+
+fn main() {
+    println!("=== Fig 7: voltage sensing, scheme 2 (discharged) ===");
+    println!("{:>10} {:>16} {:>10} {:>14}", "array", "energy decrease", "speedup", "EDP decrease");
+    for row in fig67_sweep(SensingScheme::VoltageDischarged) {
+        println!(
+            "{:>7}^2 {:>15.2}% {:>9.3}x {:>13.2}%",
+            row.size,
+            row.improvement.energy_decrease * 100.0,
+            row.improvement.speedup,
+            row.improvement.edp_decrease * 100.0
+        );
+    }
+    println!("(paper: -35.5..-45.8% energy, 1.945-1.983x, EDP -66.83..-72.6%)\n");
+
+    let b = Bench::coarse();
+    let mut cfg = SimConfig::square(1024, SensingScheme::VoltageDischarged);
+    cfg.word_bits = 32;
+    let mut adra = AdraEngine::new(&cfg);
+    let mut base = BaselineEngine::new(&cfg);
+    for e in [&mut adra as &mut dyn Engine, &mut base as &mut dyn Engine] {
+        e.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 99 }).unwrap();
+        e.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 31 }).unwrap();
+    }
+    b.run("adra/compare/scheme2/1024", || {
+        adra.execute(&CimOp::Compare { row_a: 0, row_b: 1, word: 0 }).unwrap()
+    });
+    b.run("baseline/compare/scheme2/1024", || {
+        base.execute(&CimOp::Compare { row_a: 0, row_b: 1, word: 0 }).unwrap()
+    });
+}

@@ -1,0 +1,89 @@
+//! Bench: the L3 hot path, layer by layer — device-model evaluation,
+//! sensing, compute-module ripple, and the whole engine op.  This is the
+//! bench the §Perf optimization loop iterates against.
+
+use adra::cim::{AdraEngine, BoolFn, CimOp, Engine, WordAddr};
+use adra::config::{DeviceParams, SensingScheme, SimConfig};
+use adra::device;
+use adra::logic::{ripple_add_sub, sense_from_bits};
+use adra::sensing::{CurrentRefs, CurrentSenseBank};
+use adra::util::bench::{black_box, Bench};
+use adra::util::rng::Rng;
+
+fn main() {
+    let p = DeviceParams::default();
+    let b = Bench::default();
+
+    // L0: one device-model evaluation (the innermost function)
+    let mut vg = 0.5f64;
+    b.run("device/cell_current", || {
+        vg = if vg > 1.0 { 0.5 } else { vg + 1e-6 };
+        device::cell_current(&p, vg, 1.0, 0.2, 0.0)
+    });
+
+    // a full 32-column senseline evaluation
+    let pol_a: Vec<f64> = (0..32).map(|i| if i % 3 == 0 { 0.2 } else { -0.2 }).collect();
+    let pol_b: Vec<f64> = (0..32).map(|i| if i % 2 == 0 { 0.2 } else { -0.2 }).collect();
+    b.run("device/senseline x32", || {
+        let mut acc = 0.0;
+        for i in 0..32 {
+            acc += device::senseline_current(
+                &p, pol_a[i], pol_b[i], p.v_gread1, p.v_gread2, p.v_read, 0.0, 0.0,
+            );
+        }
+        acc
+    });
+
+    // one RBL discharge transient (the voltage-sensing inner loop):
+    // exact closed-form path vs the separable LUT fast path (§Perf)
+    b.run("device/rbl_transient exact (128 steps)", || {
+        device::rbl_transient(&p, 0.2, -0.2, p.v_gread1, p.v_gread2, 1.0,
+                              204.8e-15, 0.0, 0.0)
+    });
+    let lut = device::CellLut::new(&p);
+    b.run("device/rbl_transient LUT (128 steps)", || {
+        lut.rbl_transient(&p, 0.2, -0.2, p.v_gread1, p.v_gread2, 1.0,
+                          204.8e-15, 0.0, 0.0)
+    });
+    let mut u = -0.5f64;
+    b.run("device/cell_current LUT", || {
+        u = if u > 0.5 { -0.5 } else { u + 1e-6 };
+        lut.cell_current(1.0 + u, 1.0, 0.2, 0.0)
+    });
+
+    // sensing bank over 32 columns
+    let bank = CurrentSenseBank::new(CurrentRefs::derive(&p, p.v_gread1, p.v_gread2));
+    let isl: Vec<f64> = (0..32).map(|i| 1e-6 + i as f64 * 2e-6).collect();
+    b.run("sensing/bank x32", || bank.sense_all(black_box(&isl)));
+
+    // the ripple carry chain (33 compute modules)
+    let sense = sense_from_bits(0xDEADBEEF, 0x12345678, 32);
+    b.run("logic/ripple_add_sub 32b", || ripple_add_sub(black_box(&sense), true));
+
+    // whole-engine ops at 1024^2, current sensing
+    let mut cfg = SimConfig::square(1024, SensingScheme::Current);
+    cfg.word_bits = 32;
+    let mut e = AdraEngine::new(&cfg);
+    let mut rng = Rng::new(1);
+    for row in 0..8 {
+        for word in 0..4 {
+            let v = rng.next_u64() & 0xFFFF_FFFF;
+            e.execute(&CimOp::Write { addr: WordAddr { row, word }, value: v }).unwrap();
+        }
+    }
+    b.run("engine/read", || {
+        e.execute(&CimOp::Read(WordAddr { row: 1, word: 1 })).unwrap()
+    });
+    b.run("engine/read2", || {
+        e.execute(&CimOp::Read2 { row_a: 0, row_b: 1, word: 2 }).unwrap()
+    });
+    b.run("engine/bool-xor", || {
+        e.execute(&CimOp::Bool { f: BoolFn::Xor, row_a: 2, row_b: 3, word: 0 }).unwrap()
+    });
+    b.run("engine/sub", || {
+        e.execute(&CimOp::Sub { row_a: 4, row_b: 5, word: 3 }).unwrap()
+    });
+    b.run("engine/compare", || {
+        e.execute(&CimOp::Compare { row_a: 6, row_b: 7, word: 1 }).unwrap()
+    });
+}

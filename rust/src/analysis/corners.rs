@@ -1,0 +1,116 @@
+//! Temperature-corner analysis (Rust-side; the AOT artifacts stay at the
+//! 300 K calibration point, so cross-validation is unaffected).
+//!
+//! Temperature enters the sensing problem through two first-order effects:
+//! the thermal voltage phi_t = kT/q flattens the subthreshold slope (HRS
+//! leakage grows fast with T), and the threshold voltage drops roughly
+//! linearly (~ -1 mV/K around 300 K for a 45 nm-class stack).  Both
+//! squeeze the I00 <-> I10 margin from below.  This module derives corner
+//! device parameters and re-evaluates the Fig. 3 margins and Monte-Carlo
+//! yield across the industrial temperature range.
+
+use crate::config::DeviceParams;
+use crate::sensing::MarginReport;
+
+use super::montecarlo::MonteCarlo;
+
+/// Boltzmann/charge ratio in V/K.
+const K_OVER_Q: f64 = 8.617_333e-5;
+/// Threshold temperature coefficient (V/K), magnitude typical of 45 nm.
+const DVT_DT: f64 = -1.0e-3;
+/// Reference temperature of the calibration (K).
+const T_REF: f64 = 300.0;
+
+/// Industrial temperature range endpoints + room temperature.
+pub const INDUSTRIAL_TEMPS: [f64; 5] = [233.0, 273.0, 300.0, 358.0, 398.0];
+
+/// Derive device parameters at temperature `t_kelvin`.
+pub fn params_at(p: &DeviceParams, t_kelvin: f64) -> DeviceParams {
+    let mut out = p.clone();
+    out.phi_t = K_OVER_Q * t_kelvin;
+    out.vt0 = p.vt0 + DVT_DT * (t_kelvin - T_REF);
+    out
+}
+
+/// One temperature corner's evaluation.
+#[derive(Clone, Debug)]
+pub struct CornerReport {
+    pub t_kelvin: f64,
+    pub margins: MarginReport,
+    /// Monte-Carlo BER at the probe sigma.
+    pub ber: f64,
+}
+
+/// Evaluate margins + MC yield at each temperature.
+pub fn temperature_sweep(
+    p: &DeviceParams,
+    temps: &[f64],
+    sigma_vt: f64,
+    samples: usize,
+) -> Vec<CornerReport> {
+    temps
+        .iter()
+        .map(|&t| {
+            let pt = params_at(p, t);
+            let mc = MonteCarlo::new(&pt);
+            CornerReport {
+                t_kelvin: t,
+                margins: MarginReport::evaluate(
+                    &pt,
+                    pt.v_gread1,
+                    pt.v_gread2,
+                    1024.0 * pt.c_rbl_cell,
+                ),
+                ber: mc.run(sigma_vt, samples, 0x7E39).ber(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_point_is_identity() {
+        let p = DeviceParams::default();
+        let p300 = params_at(&p, T_REF);
+        assert!((p300.phi_t - 0.025852).abs() < 1e-4);
+        assert_eq!(p300.vt0, p.vt0);
+    }
+
+    #[test]
+    fn margins_degrade_with_temperature() {
+        let p = DeviceParams::default();
+        let sweep = temperature_sweep(&p, &INDUSTRIAL_TEMPS, 0.0, 1);
+        // the worst current margin shrinks monotonically with T: hotter
+        // subthreshold leaks more, pushing I00 up toward I10
+        let margins: Vec<f64> = sweep.iter().map(|c| c.margins.current_margin).collect();
+        for w in margins.windows(2) {
+            assert!(w[1] <= w[0] * 1.02, "margin grew with T: {margins:?}");
+        }
+    }
+
+    #[test]
+    fn sensing_works_across_the_industrial_range() {
+        let p = DeviceParams::default();
+        for c in temperature_sweep(&p, &INDUSTRIAL_TEMPS, 0.0, 200) {
+            assert!(c.margins.one_to_one, "one-to-one lost at {} K", c.t_kelvin);
+            assert!(
+                c.margins.meets_paper_targets(),
+                "margins lost at {} K: {:?}",
+                c.t_kelvin,
+                c.margins
+            );
+            assert_eq!(c.ber, 0.0, "sigma=0 decode errors at {} K", c.t_kelvin);
+        }
+    }
+
+    #[test]
+    fn hot_corner_is_more_variation_sensitive() {
+        let p = DeviceParams::default();
+        let cold = temperature_sweep(&p, &[233.0], 0.06, 3000)[0].ber;
+        let hot = temperature_sweep(&p, &[398.0], 0.06, 3000)[0].ber;
+        assert!(hot >= cold, "hot {hot} vs cold {cold}");
+    }
+}

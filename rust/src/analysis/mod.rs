@@ -1,0 +1,11 @@
+//! Analysis tools beyond the paper's headline figures: Monte-Carlo
+//! variability / yield (the FeFET variability challenge of §II.B), and
+//! the bias-point ablation behind the V_GREAD1 choice.
+
+pub mod ablation;
+pub mod corners;
+pub mod montecarlo;
+
+pub use ablation::{bias_ablation, BiasPoint};
+pub use corners::{params_at, temperature_sweep, CornerReport};
+pub use montecarlo::{McReport, MonteCarlo};

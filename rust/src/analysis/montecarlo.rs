@@ -1,0 +1,274 @@
+//! Monte-Carlo variability analysis.
+//!
+//! The paper (§II.B) flags device variability as the key FeFET challenge.
+//! ADRA is *more* exposed than a plain read: four I_SL levels share the
+//! window that a read splits in two, so the same sigma(V_T) eats 3x the
+//! margin.  This module quantifies that: sample per-cell V_T offsets,
+//! push each input vector through the full sensing path, and report the
+//! bit-error rate per vector, the total yield, and the maximum sigma that
+//! keeps BER below a target.
+
+use crate::config::DeviceParams;
+use crate::device;
+use crate::sensing::{CurrentRefs, CurrentSenseBank, SenseOut};
+use crate::util::rng::Rng;
+
+/// Result of one Monte-Carlo campaign at a fixed sigma.
+#[derive(Clone, Debug)]
+pub struct McReport {
+    pub sigma_vt: f64,
+    pub samples: usize,
+    /// decode errors per input vector (A,B) indexed by (a<<1)|b.
+    pub errors: [usize; 4],
+    /// single-row read errors (for comparison: ADRA vs plain read).
+    pub read_errors: usize,
+}
+
+impl McReport {
+    /// Overall CiM bit-error rate across the four vectors.
+    pub fn ber(&self) -> f64 {
+        self.errors.iter().sum::<usize>() as f64 / (4 * self.samples) as f64
+    }
+
+    pub fn read_ber(&self) -> f64 {
+        self.read_errors as f64 / (2 * self.samples) as f64
+    }
+}
+
+/// Monte-Carlo engine over the behavioral device model.
+pub struct MonteCarlo {
+    params: DeviceParams,
+    bank: CurrentSenseBank,
+}
+
+impl MonteCarlo {
+    pub fn new(params: &DeviceParams) -> Self {
+        Self {
+            params: params.clone(),
+            bank: CurrentSenseBank::new(CurrentRefs::derive(
+                params,
+                params.v_gread1,
+                params.v_gread2,
+            )),
+        }
+    }
+
+    /// Run a campaign: `samples` random cell pairs per input vector.
+    pub fn run(&self, sigma_vt: f64, samples: usize, seed: u64) -> McReport {
+        self.run_with_sa_offset(sigma_vt, 0.0, samples, seed)
+    }
+
+    /// Campaign including input-referred sense-amplifier offset: each SA's
+    /// reference is displaced by a normal current offset (expressed as a
+    /// fraction of the worst-case level margin).  SA offset and cell V_T
+    /// variation are the two dominant mismatch sources in a real macro.
+    pub fn run_with_sa_offset(
+        &self,
+        sigma_vt: f64,
+        sa_offset_frac: f64,
+        samples: usize,
+        seed: u64,
+    ) -> McReport {
+        let mut rng = Rng::new(seed);
+        let mut errors = [0usize; 4];
+        let mut read_errors = 0usize;
+        let p = &self.params;
+        // offset scale: fraction of the smallest inter-level gap
+        let levels = {
+            let mut l = crate::device::isl_levels(p, p.v_gread1, p.v_gread2).to_vec();
+            l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            l
+        };
+        let min_gap = levels.windows(2).map(|w| w[1] - w[0]).fold(f64::MAX, f64::min);
+        let sa_sigma = sa_offset_frac * min_gap;
+        for _ in 0..samples {
+            let dvt_a = rng.normal() * sigma_vt;
+            let dvt_b = rng.normal() * sigma_vt;
+            let bank = if sa_sigma > 0.0 {
+                let mut refs = self.bank.refs;
+                refs.i_ref_or += rng.normal() * sa_sigma;
+                refs.i_ref_b += rng.normal() * sa_sigma;
+                refs.i_ref_and += rng.normal() * sa_sigma;
+                CurrentSenseBank::new(refs)
+            } else {
+                self.bank
+            };
+            for a in [false, true] {
+                for b in [false, true] {
+                    let isl = device::senseline_current(
+                        p,
+                        p.pol_of_bit(a),
+                        p.pol_of_bit(b),
+                        p.v_gread1,
+                        p.v_gread2,
+                        p.v_read,
+                        dvt_a,
+                        dvt_b,
+                    );
+                    let out = bank.sense(isl);
+                    if out != (SenseOut { or: a || b, b, and: a && b }) {
+                        errors[((a as usize) << 1) | b as usize] += 1;
+                    }
+                }
+            }
+            // plain single-row read of each state with the same offset
+            for bit in [false, true] {
+                let i = device::cell_current(p, p.v_gread2, p.v_read, p.pol_of_bit(bit), dvt_a);
+                if self.bank.sense_read(i) != bit {
+                    read_errors += 1;
+                }
+            }
+        }
+        McReport { sigma_vt, samples, errors, read_errors }
+    }
+
+    /// Vectorized campaign through the AOT `dc_isl` artifact over PJRT:
+    /// the per-cell V_T variation planes go straight into the JAX/Pallas
+    /// device model, 1024 sampled columns per executable call.  This is
+    /// the Monte-Carlo path a real sign-off flow would use (analog ground
+    /// truth), and it must agree with the behavioral campaign.
+    pub fn run_pjrt(
+        &self,
+        rt: &crate::runtime::AnalogRuntime,
+        sigma_vt: f64,
+        samples: usize,
+        seed: u64,
+    ) -> anyhow::Result<McReport> {
+        use crate::config::N_COLS;
+        let p = &self.params;
+        let mut rng = Rng::new(seed);
+        let mut errors = [0usize; 4];
+        let mut done = 0usize;
+        while done < samples {
+            let n = (samples - done).min(N_COLS);
+            let dvt_a: Vec<f32> =
+                (0..N_COLS).map(|_| (rng.normal() * sigma_vt) as f32).collect();
+            let dvt_b: Vec<f32> =
+                (0..N_COLS).map(|_| (rng.normal() * sigma_vt) as f32).collect();
+            for a in [false, true] {
+                for b in [false, true] {
+                    let pol_a = vec![p.pol_of_bit(a) as f32; N_COLS];
+                    let pol_b = vec![p.pol_of_bit(b) as f32; N_COLS];
+                    let (isl, _, _) = rt.dc_isl(
+                        &pol_a, &pol_b, &dvt_a, &dvt_b,
+                        p.v_gread1 as f32, p.v_gread2 as f32,
+                    )?;
+                    let want = SenseOut { or: a || b, b, and: a && b };
+                    for &i in isl.iter().take(n) {
+                        if self.bank.sense(i as f64) != want {
+                            errors[((a as usize) << 1) | b as usize] += 1;
+                        }
+                    }
+                }
+            }
+            done += n;
+        }
+        Ok(McReport { sigma_vt, samples: done, errors, read_errors: 0 })
+    }
+
+    /// Largest sigma (by bisection over `steps` halvings, granularity-
+    /// limited) with campaign BER <= `target_ber`.
+    pub fn max_tolerable_sigma(
+        &self,
+        target_ber: f64,
+        samples: usize,
+        seed: u64,
+    ) -> f64 {
+        let (mut lo, mut hi) = (0.0f64, 0.3f64);
+        for _ in 0..12 {
+            let mid = 0.5 * (lo + hi);
+            let rep = self.run(mid, samples, seed);
+            if rep.ber() <= target_ber {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mc() -> MonteCarlo {
+        MonteCarlo::new(&DeviceParams::default())
+    }
+
+    #[test]
+    fn zero_sigma_is_error_free() {
+        let rep = mc().run(0.0, 500, 1);
+        assert_eq!(rep.errors, [0, 0, 0, 0]);
+        assert_eq!(rep.read_errors, 0);
+        assert_eq!(rep.ber(), 0.0);
+    }
+
+    #[test]
+    fn small_sigma_stays_clean_huge_sigma_fails() {
+        let rep_small = mc().run(0.01, 500, 2);
+        assert_eq!(rep_small.ber(), 0.0, "10 mV sigma must be safe");
+        let rep_big = mc().run(0.25, 500, 3);
+        assert!(rep_big.ber() > 0.01, "250 mV sigma must break sensing");
+    }
+
+    #[test]
+    fn ber_monotone_in_sigma() {
+        let m = mc();
+        let b1 = m.run(0.03, 2000, 4).ber();
+        let b2 = m.run(0.08, 2000, 4).ber();
+        let b3 = m.run(0.15, 2000, 4).ber();
+        assert!(b1 <= b2 && b2 <= b3, "{b1} {b2} {b3}");
+    }
+
+    #[test]
+    fn adra_more_sensitive_than_plain_read() {
+        // the 4-level window is tighter than the 2-level read window, so
+        // at a sigma where CiM starts failing, plain reads should be
+        // no worse
+        let m = mc();
+        let rep = m.run(0.08, 4000, 5);
+        assert!(rep.ber() >= rep.read_ber(), "CiM {} vs read {}", rep.ber(), rep.read_ber());
+    }
+
+    #[test]
+    fn sa_offset_adds_to_the_error_budget() {
+        let m = mc();
+        let without = m.run_with_sa_offset(0.05, 0.0, 3000, 9).ber();
+        let with = m.run_with_sa_offset(0.05, 0.25, 3000, 9).ber();
+        assert!(with >= without, "SA offset must not reduce BER: {with} vs {without}");
+        // a quarter-gap SA sigma alone must start producing errors
+        let only_sa = m.run_with_sa_offset(0.0, 0.35, 3000, 10).ber();
+        assert!(only_sa > 0.0, "35%-gap SA offset must cause errors");
+    }
+
+    #[test]
+    fn zero_sa_offset_is_identical_to_plain_run() {
+        let m = mc();
+        let a = m.run(0.04, 1500, 11);
+        let b = m.run_with_sa_offset(0.04, 0.0, 1500, 11);
+        assert_eq!(a.errors, b.errors);
+    }
+
+    #[test]
+    fn tolerable_sigma_is_reasonable() {
+        let m = mc();
+        let s = m.max_tolerable_sigma(1e-3, 800, 6);
+        // tens of millivolts: enough for a real HZO process corner, far
+        // below the half-window
+        assert!(s > 0.01, "sigma {s} too pessimistic");
+        assert!(s < 0.15, "sigma {s} implausibly robust");
+    }
+
+    #[test]
+    fn middle_levels_fail_first() {
+        // (1,0) and (0,1) sit between two references; (0,0)/(1,1) have a
+        // reference on only one side, so the middle vectors dominate the
+        // error budget at moderate sigma
+        let m = mc();
+        let rep = m.run(0.1, 6000, 7);
+        let mid = rep.errors[0b01] + rep.errors[0b10];
+        let edge = rep.errors[0b00] + rep.errors[0b11];
+        assert!(mid >= edge, "mid {mid} edge {edge}");
+    }
+}

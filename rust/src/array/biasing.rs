@@ -1,0 +1,83 @@
+//! Wordline biasing schemes: the single-row read, the symmetric dual-row
+//! activation of prior CiM work (Fig. 1), and ADRA's asymmetric dual-row
+//! activation (Fig. 3).
+
+use crate::config::DeviceParams;
+
+/// Voltage assignment to the selected wordline(s) for one operation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RowBias {
+    /// WL voltage of the row holding word A (or the only row for reads).
+    pub vg_row_a: f64,
+    /// WL voltage of the row holding word B (dual-row ops only).
+    pub vg_row_b: Option<f64>,
+}
+
+/// How wordlines are asserted for an access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BiasMode {
+    /// Standard single-row read at V_GREAD.
+    SingleRead,
+    /// Prior-work CiM: both rows at the same V_GREAD (many-to-one mapping;
+    /// only commutative functions computable).
+    SymmetricDual,
+    /// ADRA: WL_A at V_GREAD1 < WL_B at V_GREAD2 (one-to-one mapping).
+    AsymmetricDual,
+}
+
+impl BiasMode {
+    pub fn bias(&self, p: &DeviceParams) -> RowBias {
+        match self {
+            BiasMode::SingleRead => RowBias {
+                vg_row_a: p.v_gread2,
+                vg_row_b: None,
+            },
+            BiasMode::SymmetricDual => RowBias {
+                vg_row_a: p.v_gread2,
+                vg_row_b: Some(p.v_gread2),
+            },
+            BiasMode::AsymmetricDual => RowBias {
+                vg_row_a: p.v_gread1,
+                vg_row_b: Some(p.v_gread2),
+            },
+        }
+    }
+
+    /// Number of wordlines asserted.
+    pub fn rows_active(&self) -> usize {
+        match self {
+            BiasMode::SingleRead => 1,
+            _ => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adra_is_asymmetric() {
+        let p = DeviceParams::default();
+        let b = BiasMode::AsymmetricDual.bias(&p);
+        assert_eq!(b.vg_row_a, p.v_gread1);
+        assert_eq!(b.vg_row_b, Some(p.v_gread2));
+        assert!(b.vg_row_a < b.vg_row_b.unwrap());
+    }
+
+    #[test]
+    fn symmetric_matches_prior_work() {
+        let p = DeviceParams::default();
+        let b = BiasMode::SymmetricDual.bias(&p);
+        assert_eq!(b.vg_row_a, b.vg_row_b.unwrap());
+    }
+
+    #[test]
+    fn single_read_asserts_one_row() {
+        let p = DeviceParams::default();
+        let b = BiasMode::SingleRead.bias(&p);
+        assert!(b.vg_row_b.is_none());
+        assert_eq!(BiasMode::SingleRead.rows_active(), 1);
+        assert_eq!(BiasMode::AsymmetricDual.rows_active(), 2);
+    }
+}

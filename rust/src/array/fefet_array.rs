@@ -1,0 +1,353 @@
+//! The 1T-FeFET array: rows x cols of polarization state with a digital
+//! bit view, per-cell V_T variation, word-level accessors, and access
+//! statistics (including half-select counts for the Fig. 5(b) analysis).
+
+use crate::config::{DeviceParams, SimConfig};
+use crate::device;
+use crate::util::rng::Rng;
+
+/// Access/energy-relevant event counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArrayStats {
+    pub writes: u64,
+    pub reads: u64,
+    pub dual_activations: u64,
+    /// Column accesses on words NOT selected by the operation but sharing
+    /// the asserted wordline(s) — the pseudo-CiM columns of scheme 1.
+    pub half_selected_cols: u64,
+}
+
+/// Bit-accurate FeFET array with analog polarization state.
+pub struct FefetArray {
+    params: DeviceParams,
+    rows: usize,
+    cols: usize,
+    word_bits: usize,
+    /// Row-major polarization (C/m^2).
+    pol: Vec<f64>,
+    /// Per-cell V_T variation offsets (volts); zeros unless vt_sigma > 0.
+    dvt: Vec<f64>,
+    stats: ArrayStats,
+}
+
+impl FefetArray {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let n = cfg.rows * cfg.cols;
+        let dvt = if cfg.vt_sigma > 0.0 {
+            let mut rng = Rng::new(cfg.seed ^ 0x5eed_d117);
+            (0..n).map(|_| rng.normal() * cfg.vt_sigma).collect()
+        } else {
+            vec![0.0; n]
+        };
+        Self {
+            params: cfg.device.clone(),
+            rows: cfg.rows,
+            cols: cfg.cols,
+            word_bits: cfg.word_bits,
+            // unwritten cells hold -P (HRS, '0') after a FLASH-like global
+            // reset (paper §II.B)
+            pol: vec![cfg.device.pol_of_bit(false); n],
+            dvt,
+            stats: ArrayStats::default(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn word_bits(&self) -> usize {
+        self.word_bits
+    }
+
+    pub fn words_per_row(&self) -> usize {
+        self.cols / self.word_bits
+    }
+
+    pub fn params(&self) -> &DeviceParams {
+        &self.params
+    }
+
+    pub fn stats(&self) -> ArrayStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = ArrayStats::default();
+    }
+
+    /// Mutable stats access — used by engines that evaluate the analog
+    /// path through an external backend (PJRT) and account the array
+    /// activation themselves.
+    pub fn stats_mut(&mut self) -> &mut ArrayStats {
+        &mut self.stats
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.rows && col < self.cols);
+        row * self.cols + col
+    }
+
+    /// Stored polarization of a cell.
+    pub fn pol(&self, row: usize, col: usize) -> f64 {
+        self.pol[self.idx(row, col)]
+    }
+
+    /// V_T variation offset of a cell.
+    pub fn dvt(&self, row: usize, col: usize) -> f64 {
+        self.dvt[self.idx(row, col)]
+    }
+
+    /// Digital view: does the cell store '1' (positive polarization)?
+    pub fn bit(&self, row: usize, col: usize) -> bool {
+        self.pol[self.idx(row, col)] > 0.0
+    }
+
+    /// Write one bit (behavioral SET/RESET; counts one write access).
+    pub fn write_bit(&mut self, row: usize, col: usize, bit: bool) {
+        let i = self.idx(row, col);
+        self.pol[i] = device::write_bit(&self.params, bit);
+        self.stats.writes += 1;
+    }
+
+    /// Write an n-bit word at `word_idx` within `row`, LSB at the lowest
+    /// column (column = word_idx * word_bits + bit_position).
+    pub fn write_word(&mut self, row: usize, word_idx: usize, value: u64) {
+        assert!(word_idx < self.words_per_row(), "word index out of range");
+        let base = word_idx * self.word_bits;
+        for b in 0..self.word_bits {
+            self.write_bit(row, base + b, (value >> b) & 1 == 1);
+        }
+        // word write is one array access regardless of width
+        self.stats.writes = self.stats.writes - self.word_bits as u64 + 1;
+    }
+
+    /// Digital word view (no analog access, no stats).
+    pub fn peek_word(&self, row: usize, word_idx: usize) -> u64 {
+        let base = word_idx * self.word_bits;
+        let mut v = 0u64;
+        for b in 0..self.word_bits {
+            if self.bit(row, base + b) {
+                v |= 1 << b;
+            }
+        }
+        v
+    }
+
+    /// Single-row read of the column range `[col_lo, col_hi)`: per-column
+    /// cell currents at the read operating point.  Counts a read access.
+    pub fn read_currents(&mut self, row: usize, col_lo: usize, col_hi: usize, vg: f64) -> Vec<f64> {
+        assert!(col_lo < col_hi && col_hi <= self.cols);
+        self.stats.reads += 1;
+        (col_lo..col_hi)
+            .map(|c| {
+                let i = self.idx(row, c);
+                device::cell_current(&self.params, vg, self.params.v_read, self.pol[i], self.dvt[i])
+            })
+            .collect()
+    }
+
+    /// ADRA dual-row activation over `[col_lo, col_hi)`: per-column
+    /// senseline currents with row_a at `vg1` and row_b at `vg2`.
+    ///
+    /// Because the wordlines span the whole row, all other columns are
+    /// half-selected; the count is recorded for the scheme-1 pseudo-CiM
+    /// energy accounting (Fig. 5(b)).
+    pub fn dual_row_currents(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        col_lo: usize,
+        col_hi: usize,
+        vg1: f64,
+        vg2: f64,
+    ) -> Vec<f64> {
+        assert!(row_a != row_b, "dual activation needs distinct rows");
+        assert!(col_lo < col_hi && col_hi <= self.cols);
+        self.stats.dual_activations += 1;
+        self.stats.half_selected_cols += (self.cols - (col_hi - col_lo)) as u64;
+        (col_lo..col_hi)
+            .map(|c| {
+                let ia = self.idx(row_a, c);
+                let ib = self.idx(row_b, c);
+                device::senseline_current(
+                    &self.params,
+                    self.pol[ia],
+                    self.pol[ib],
+                    vg1,
+                    vg2,
+                    self.params.v_read,
+                    self.dvt[ia],
+                    self.dvt[ib],
+                )
+            })
+            .collect()
+    }
+
+    /// Dual-row discharge transients (voltage sensing) over the column
+    /// range; `c_rbl` is the per-column bitline capacitance.
+    pub fn dual_row_transients(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        col_lo: usize,
+        col_hi: usize,
+        vg1: f64,
+        vg2: f64,
+        c_rbl: f64,
+    ) -> Vec<device::RblTransient> {
+        assert!(row_a != row_b);
+        assert!(col_lo < col_hi && col_hi <= self.cols);
+        self.stats.dual_activations += 1;
+        self.stats.half_selected_cols += (self.cols - (col_hi - col_lo)) as u64;
+        (col_lo..col_hi)
+            .map(|c| {
+                let ia = self.idx(row_a, c);
+                let ib = self.idx(row_b, c);
+                device::rbl_transient(
+                    &self.params,
+                    self.pol[ia],
+                    self.pol[ib],
+                    vg1,
+                    vg2,
+                    self.params.v_read,
+                    c_rbl,
+                    self.dvt[ia],
+                    self.dvt[ib],
+                )
+            })
+            .collect()
+    }
+
+    /// Raw planes for a row pair + column range, in the layout the AOT
+    /// `dc_isl` / `transient_cim` artifacts take (used by the PJRT path).
+    pub fn planes(
+        &self,
+        row_a: usize,
+        row_b: usize,
+        col_lo: usize,
+        col_hi: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let take = |row: usize, f: &dyn Fn(usize) -> f64| -> Vec<f32> {
+            (col_lo..col_hi)
+                .map(|c| f(self.idx(row, c)) as f32)
+                .collect()
+        };
+        (
+            take(row_a, &|i| self.pol[i]),
+            take(row_b, &|i| self.pol[i]),
+            take(row_a, &|i| self.dvt[i]),
+            take(row_b, &|i| self.dvt[i]),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SensingScheme;
+
+    fn small_cfg() -> SimConfig {
+        let mut cfg = SimConfig::square(64, SensingScheme::Current);
+        cfg.word_bits = 8;
+        cfg
+    }
+
+    #[test]
+    fn fresh_array_is_all_zeros() {
+        let arr = FefetArray::new(&small_cfg());
+        for r in 0..4 {
+            for c in 0..8 {
+                assert!(!arr.bit(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn word_write_read_roundtrip() {
+        let mut arr = FefetArray::new(&small_cfg());
+        arr.write_word(3, 2, 0xA5);
+        assert_eq!(arr.peek_word(3, 2), 0xA5);
+        assert_eq!(arr.peek_word(3, 1), 0); // neighbors untouched
+        assert_eq!(arr.peek_word(3, 3), 0);
+    }
+
+    #[test]
+    fn word_write_masks_to_width() {
+        let mut arr = FefetArray::new(&small_cfg());
+        arr.write_word(0, 0, 0x1FF); // 9 bits into an 8-bit word
+        assert_eq!(arr.peek_word(0, 0), 0xFF);
+    }
+
+    #[test]
+    fn dual_row_currents_reflect_bits() {
+        let p = DeviceParams::default();
+        let mut arr = FefetArray::new(&small_cfg());
+        arr.write_word(0, 0, 0b01); // A: bit0=1
+        arr.write_word(1, 0, 0b10); // B: bit1=1
+        let isl = arr.dual_row_currents(0, 1, 0, 8, p.v_gread1, p.v_gread2);
+        let levels = device::isl_levels(&p, p.v_gread1, p.v_gread2);
+        let tol = 1e-9;
+        assert!((isl[0] - levels[0b10]).abs() < tol); // A=1,B=0
+        assert!((isl[1] - levels[0b01]).abs() < tol); // A=0,B=1
+        assert!((isl[2] - levels[0b00]).abs() < tol); // A=0,B=0
+    }
+
+    #[test]
+    fn half_select_accounting() {
+        let mut arr = FefetArray::new(&small_cfg());
+        let p = DeviceParams::default();
+        arr.dual_row_currents(0, 1, 0, 8, p.v_gread1, p.v_gread2);
+        assert_eq!(arr.stats().half_selected_cols, (64 - 8) as u64);
+        arr.dual_row_currents(0, 1, 0, 64, p.v_gread1, p.v_gread2);
+        assert_eq!(arr.stats().half_selected_cols, (64 - 8) as u64); // full row adds 0
+    }
+
+    #[test]
+    fn variation_plane_statistics() {
+        let mut cfg = small_cfg();
+        cfg.vt_sigma = 0.03;
+        let arr = FefetArray::new(&cfg);
+        let n = (cfg.rows * cfg.cols) as f64;
+        let mean: f64 = (0..cfg.rows)
+            .flat_map(|r| (0..cfg.cols).map(move |c| (r, c)))
+            .map(|(r, c)| arr.dvt(r, c))
+            .sum::<f64>()
+            / n;
+        assert!(mean.abs() < 0.005, "mean {mean}");
+        assert!(arr.dvt(0, 0) != arr.dvt(0, 1) || arr.dvt(1, 0) != arr.dvt(1, 1));
+    }
+
+    #[test]
+    fn deterministic_variation_given_seed() {
+        let mut cfg = small_cfg();
+        cfg.vt_sigma = 0.03;
+        let a = FefetArray::new(&cfg);
+        let b = FefetArray::new(&cfg);
+        assert_eq!(a.dvt(5, 5), b.dvt(5, 5));
+    }
+
+    #[test]
+    fn planes_layout_matches_state() {
+        let mut arr = FefetArray::new(&small_cfg());
+        arr.write_word(2, 0, 0xFF);
+        let (pa, pb, da, _db) = arr.planes(2, 3, 0, 8);
+        assert_eq!(pa.len(), 8);
+        assert!(pa.iter().all(|&x| x > 0.0)); // row 2 all ones
+        assert!(pb.iter().all(|&x| x < 0.0)); // row 3 all zeros
+        assert!(da.iter().all(|&x| x == 0.0)); // no variation configured
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct rows")]
+    fn same_row_dual_activation_panics() {
+        let mut arr = FefetArray::new(&small_cfg());
+        let p = DeviceParams::default();
+        arr.dual_row_currents(1, 1, 0, 8, p.v_gread1, p.v_gread2);
+    }
+}

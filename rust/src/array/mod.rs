@@ -1,0 +1,12 @@
+//! 1T-FeFET memory array: bit-accurate state, polarization planes,
+//! per-cell V_T variation, write/read biasing, and half-select accounting.
+
+pub mod biasing;
+pub mod endurance;
+pub mod fefet_array;
+pub mod write_scheme;
+
+pub use biasing::{BiasMode, RowBias};
+pub use endurance::{WearLeveler, WearTracker};
+pub use fefet_array::{ArrayStats, FefetArray};
+pub use write_scheme::{bulk_write, WriteReport, WriteScheme};

@@ -1,0 +1,326 @@
+//! The near-memory baseline engine (the paper's comparison point).
+//!
+//! Commutative Boolean functions use prior-work symmetric dual-row CiM
+//! (Fig. 1) — those were already single-access before ADRA.  Everything
+//! that needs A and B *separately* (read2, subtraction, comparison,
+//! non-commutative Booleans) requires **two full reads** followed by
+//! near-memory compute, because the symmetric activation maps (0,1) and
+//! (1,0) to the same senseline current.
+//!
+//! `try_single_access_sub` demonstrates the mapping problem explicitly:
+//! it attempts the subtraction from one symmetric access and returns the
+//! ambiguity error — this is the paper's Section II.A argument as code.
+
+use crate::array::FefetArray;
+use crate::config::SimConfig;
+use crate::energy::EnergyModel;
+use crate::logic::{and_tree_equal, ripple_add_sub, sense_from_bits, CompareResult};
+use crate::sensing::{CurrentRefs, CurrentSenseBank};
+
+use super::ops::{BoolFn, CimOp, CimResult, CimValue, Engine, EngineError};
+
+/// Prior-work near-memory engine over the same array substrate.
+pub struct BaselineEngine {
+    cfg: SimConfig,
+    array: FefetArray,
+    energy: EnergyModel,
+    bank: CurrentSenseBank,
+    /// Symmetric-activation references (both rows at V_GREAD2): only
+    /// three distinguishable levels.
+    sym_refs: CurrentRefs,
+}
+
+impl BaselineEngine {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let p = &cfg.device;
+        Self {
+            cfg: cfg.clone(),
+            array: FefetArray::new(cfg),
+            energy: EnergyModel::new(cfg),
+            bank: CurrentSenseBank::new(CurrentRefs::derive(p, p.v_gread1, p.v_gread2)),
+            sym_refs: CurrentRefs::derive(p, p.v_gread2, p.v_gread2),
+        }
+    }
+
+    pub fn cfg(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    pub fn array(&self) -> &FefetArray {
+        &self.array
+    }
+
+    pub fn array_mut(&mut self) -> &mut FefetArray {
+        &mut self.array
+    }
+
+    fn check_word(&self, row: usize, word: usize) -> Result<(), EngineError> {
+        if row >= self.cfg.rows || word >= self.cfg.words_per_row() {
+            return Err(EngineError::OutOfRange(format!("row {row} word {word}")));
+        }
+        Ok(())
+    }
+
+    fn word_cols(&self, word: usize) -> (usize, usize) {
+        let lo = word * self.cfg.word_bits;
+        (lo, lo + self.cfg.word_bits)
+    }
+
+    /// One full read through the sensing path.
+    fn read_word(&mut self, row: usize, word: usize) -> Result<u64, EngineError> {
+        self.check_word(row, word)?;
+        let vg = self.cfg.device.v_gread2;
+        let (lo, hi) = self.word_cols(word);
+        let currents = self.array.read_currents(row, lo, hi, vg);
+        let mut v = 0u64;
+        for (i, &c) in currents.iter().enumerate() {
+            if self.bank.sense_read(c) {
+                v |= 1 << i;
+            }
+        }
+        Ok(v)
+    }
+
+    fn mask(&self) -> u64 {
+        if self.cfg.word_bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.cfg.word_bits) - 1
+        }
+    }
+
+    /// Symmetric dual-row activation (prior-work CiM): per-column OR and
+    /// AND decisions — the only information three levels can carry.
+    fn symmetric_or_and(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        word: usize,
+    ) -> Result<Vec<(bool, bool)>, EngineError> {
+        let vg = self.cfg.device.v_gread2;
+        let (lo, hi) = self.word_cols(word);
+        let isl = self.array.dual_row_currents(row_a, row_b, lo, hi, vg, vg);
+        Ok(isl
+            .iter()
+            .map(|&i| (i > self.sym_refs.i_ref_or, i > self.sym_refs.i_ref_and))
+            .collect())
+    }
+
+    /// The Section II.A demonstration: a symmetric single access cannot
+    /// produce A-B because (0,1) and (1,0) are indistinguishable.  Returns
+    /// `EngineError::Unsupported` whenever any column senses the ambiguous
+    /// middle level (OR=1, AND=0), and the correct difference only in the
+    /// lucky data-dependent cases where no column is ambiguous.
+    pub fn try_single_access_sub(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        word: usize,
+    ) -> Result<i128, EngineError> {
+        self.check_word(row_a, word)?;
+        self.check_word(row_b, word)?;
+        let or_and = self.symmetric_or_and(row_a, row_b, word)?;
+        if or_and.iter().any(|&(or, and)| or && !and) {
+            return Err(EngineError::Unsupported(
+                "symmetric activation: (0,1) and (1,0) map to the same \
+                 I_SL — cannot form A-B in one access"
+                    .into(),
+            ));
+        }
+        // unambiguous columns are (0,0) or (1,1): A == B, difference 0
+        Ok(0)
+    }
+
+    /// Two reads + near-memory digital compute (the paper's baseline).
+    fn two_read_compute<F: FnOnce(u64, u64) -> CimValue>(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        word: usize,
+        f: F,
+    ) -> Result<CimResult, EngineError> {
+        let a = self.read_word(row_a, word)?;
+        let b = self.read_word(row_b, word)?;
+        Ok(CimResult { value: f(a, b), cost: self.energy.baseline_cost() })
+    }
+}
+
+impl Engine for BaselineEngine {
+    fn execute(&mut self, op: &CimOp) -> Result<CimResult, EngineError> {
+        let nbits = self.cfg.word_bits;
+        match *op {
+            CimOp::Write { addr, value } => {
+                self.check_word(addr.row, addr.word)?;
+                self.array.write_word(addr.row, addr.word, value);
+                Ok(CimResult { value: CimValue::None, cost: self.energy.write_cost() })
+            }
+            CimOp::Read(addr) => {
+                let v = self.read_word(addr.row, addr.word)?;
+                Ok(CimResult { value: CimValue::Word(v), cost: self.energy.read_cost() })
+            }
+            // two separate words need two accesses on the baseline
+            CimOp::Read2 { row_a, row_b, word } => {
+                self.two_read_compute(row_a, row_b, word, |a, b| CimValue::Pair(a, b))
+            }
+            CimOp::Bool { f, row_a, row_b, word } => {
+                self.check_word(row_a, word)?;
+                self.check_word(row_b, word)?;
+                if f.commutative() {
+                    // prior-work single-access CiM: symmetric activation
+                    let or_and = self.symmetric_or_and(row_a, row_b, word)?;
+                    let mut v = 0u64;
+                    for (i, &(or, and)) in or_and.iter().enumerate() {
+                        let bit = match f {
+                            BoolFn::And => and,
+                            BoolFn::Or => or,
+                            BoolFn::Nand => !and,
+                            BoolFn::Nor => !or,
+                            BoolFn::Xor => or && !and,
+                            BoolFn::Xnor => !(or && !and),
+                            _ => unreachable!("non-commutative handled below"),
+                        };
+                        if bit {
+                            v |= 1 << i;
+                        }
+                    }
+                    Ok(CimResult { value: CimValue::Word(v), cost: self.energy.cim_cost() })
+                } else {
+                    let mask = self.mask();
+                    self.two_read_compute(row_a, row_b, word, |a, b| {
+                        CimValue::Word(f.apply(a, b, mask))
+                    })
+                }
+            }
+            CimOp::Add { row_a, row_b, word } => {
+                // commutative: prior-work CiM adds from OR/AND in one access
+                self.check_word(row_a, word)?;
+                self.check_word(row_b, word)?;
+                let or_and = self.symmetric_or_and(row_a, row_b, word)?;
+                let sense: Vec<_> = or_and
+                    .iter()
+                    .map(|&(or, and)| crate::sensing::SenseOut { or, and, b: false })
+                    .collect();
+                let r = ripple_add_sub(&sense, false);
+                Ok(CimResult {
+                    value: CimValue::Sum(r.as_unsigned()),
+                    cost: self.energy.cim_cost(),
+                })
+            }
+            CimOp::Sub { row_a, row_b, word } => {
+                // non-commutative: two reads + near-memory subtract
+                self.two_read_compute(row_a, row_b, word, |a, b| {
+                    let r = ripple_add_sub(&sense_from_bits(a, b, nbits), true);
+                    CimValue::Diff(r.as_signed())
+                })
+            }
+            CimOp::Compare { row_a, row_b, word } => {
+                self.two_read_compute(row_a, row_b, word, |a, b| {
+                    let r = ripple_add_sub(&sense_from_bits(a, b, nbits), true);
+                    let res = if and_tree_equal(&r.bits) {
+                        CompareResult::Equal
+                    } else if r.sign() {
+                        CompareResult::Less
+                    } else {
+                        CompareResult::Greater
+                    };
+                    CimValue::Ordering(res)
+                })
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::WordAddr;
+    use crate::config::SensingScheme;
+    use crate::util::rng::Rng;
+
+    fn engine() -> BaselineEngine {
+        let mut cfg = SimConfig::square(256, SensingScheme::Current);
+        cfg.word_bits = 8;
+        BaselineEngine::new(&cfg)
+    }
+
+    fn setup(e: &mut BaselineEngine, a: u64, b: u64) {
+        e.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: a }).unwrap();
+        e.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: b }).unwrap();
+    }
+
+    #[test]
+    fn subtraction_needs_two_reads() {
+        let mut e = engine();
+        setup(&mut e, 44, 17);
+        e.array_mut().reset_stats();
+        let r = e.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert_eq!(r.value, CimValue::Diff(27));
+        let s = e.array().stats();
+        assert_eq!(s.reads, 2, "baseline subtraction must take TWO reads");
+        assert_eq!(s.dual_activations, 0);
+    }
+
+    #[test]
+    fn commutative_bool_single_access() {
+        let mut e = engine();
+        setup(&mut e, 0b1100, 0b1010);
+        e.array_mut().reset_stats();
+        let r = e
+            .execute(&CimOp::Bool { f: BoolFn::Xor, row_a: 0, row_b: 1, word: 0 })
+            .unwrap();
+        assert_eq!(r.value, CimValue::Word(0b0110));
+        assert_eq!(e.array().stats().dual_activations, 1);
+        assert_eq!(e.array().stats().reads, 0);
+    }
+
+    #[test]
+    fn add_is_single_access_prior_work() {
+        let mut e = engine();
+        let mut rng = Rng::new(5);
+        for _ in 0..16 {
+            let (a, b) = (rng.below(256), rng.below(256));
+            setup(&mut e, a, b);
+            let r = e.execute(&CimOp::Add { row_a: 0, row_b: 1, word: 0 }).unwrap();
+            assert_eq!(r.value, CimValue::Sum((a + b) as u128), "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn many_to_one_mapping_blocks_single_access_sub() {
+        let mut e = engine();
+        setup(&mut e, 0b0001, 0b0010); // columns 0,1 hit the ambiguous level
+        let err = e.try_single_access_sub(0, 1, 0).unwrap_err();
+        assert!(matches!(err, EngineError::Unsupported(_)), "{err}");
+        // equal words have no ambiguous column -> trivially 0
+        setup(&mut e, 0b1111, 0b1111);
+        assert_eq!(e.try_single_access_sub(0, 1, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn sub_and_compare_values_match_integers() {
+        let mut e = engine();
+        let mut rng = Rng::new(7);
+        for _ in 0..16 {
+            let (a, b) = (rng.below(256), rng.below(256));
+            setup(&mut e, a, b);
+            let sub = e.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+            let sa = (a as i128) - if a >= 128 { 256 } else { 0 };
+            let sb = (b as i128) - if b >= 128 { 256 } else { 0 };
+            assert_eq!(sub.value, CimValue::Diff(sa - sb));
+        }
+    }
+
+    #[test]
+    fn baseline_sub_cost_exceeds_cim_cost() {
+        let mut e = engine();
+        setup(&mut e, 9, 4);
+        let sub = e.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        let add = e.execute(&CimOp::Add { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert!(sub.cost.energy.total() > add.cost.energy.total());
+        assert!(sub.cost.latency > add.cost.latency);
+    }
+}

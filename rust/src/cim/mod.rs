@@ -1,0 +1,13 @@
+//! CiM engines: the ADRA engine (the paper's contribution) and the
+//! two-read near-memory baseline it is evaluated against.
+
+pub mod adra;
+pub mod aggregate;
+pub mod baseline;
+pub mod ops;
+pub mod vector;
+
+pub use adra::{AdraEngine, AnalogBackend, BehavioralBackend};
+pub use baseline::BaselineEngine;
+pub use ops::{BoolFn, CimOp, CimResult, CimValue, Engine, EngineError, WordAddr};
+pub use vector::{VectorEngine, VectorResult};

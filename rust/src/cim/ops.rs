@@ -1,0 +1,209 @@
+//! CiM operation and result types shared by the ADRA and baseline engines
+//! and by the coordinator's request protocol.
+
+use crate::energy::OpCost;
+use crate::logic::CompareResult;
+
+/// Two-operand Boolean functions computable in-memory.  With ADRA all of
+/// them are single-access; prior-work symmetric activation covers only
+/// the commutative ones that don't need A and B separately.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BoolFn {
+    And,
+    Or,
+    Nand,
+    Nor,
+    Xor,
+    Xnor,
+    /// A AND NOT B — non-commutative; requires the one-to-one mapping.
+    AndNot,
+    /// A OR NOT B — non-commutative.
+    OrNot,
+}
+
+impl BoolFn {
+    pub const ALL: [BoolFn; 8] = [
+        BoolFn::And,
+        BoolFn::Or,
+        BoolFn::Nand,
+        BoolFn::Nor,
+        BoolFn::Xor,
+        BoolFn::Xnor,
+        BoolFn::AndNot,
+        BoolFn::OrNot,
+    ];
+
+    /// Reference semantics on words.
+    pub fn apply(&self, a: u64, b: u64, mask: u64) -> u64 {
+        let v = match self {
+            BoolFn::And => a & b,
+            BoolFn::Or => a | b,
+            BoolFn::Nand => !(a & b),
+            BoolFn::Nor => !(a | b),
+            BoolFn::Xor => a ^ b,
+            BoolFn::Xnor => !(a ^ b),
+            BoolFn::AndNot => a & !b,
+            BoolFn::OrNot => a | !b,
+        };
+        v & mask
+    }
+
+    /// Is the function symmetric in (A, B)?  Non-commutative functions are
+    /// exactly the ones prior-work CiM cannot compute in a single access.
+    pub fn commutative(&self) -> bool {
+        !matches!(self, BoolFn::AndNot | BoolFn::OrNot)
+    }
+}
+
+/// A word address: row + word index within the row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WordAddr {
+    pub row: usize,
+    pub word: usize,
+}
+
+/// One CiM operation.  Dual-operand ops address the same word index in
+/// two different rows — the two cells of each column pair share a
+/// senseline, which is what dual-row activation exploits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CimOp {
+    /// Standard single-word read.
+    Read(WordAddr),
+    /// ADRA 2-words-in-one-access read (same word index, rows a/b).
+    Read2 { row_a: usize, row_b: usize, word: usize },
+    /// Bitwise Boolean function of two in-memory words.
+    Bool { f: BoolFn, row_a: usize, row_b: usize, word: usize },
+    /// word(row_a) + word(row_b), (n+1)-bit unsigned result.
+    Add { row_a: usize, row_b: usize, word: usize },
+    /// word(row_a) - word(row_b), two's complement, (n+1)-bit signed.
+    Sub { row_a: usize, row_b: usize, word: usize },
+    /// Three-way compare of the two words (two's-complement semantics).
+    Compare { row_a: usize, row_b: usize, word: usize },
+    /// Write an immediate to a word.
+    Write { addr: WordAddr, value: u64 },
+}
+
+impl CimOp {
+    /// Rows this op activates (for batching conflict detection).
+    pub fn rows(&self) -> (usize, Option<usize>) {
+        match *self {
+            CimOp::Read(a) => (a.row, None),
+            CimOp::Write { addr, .. } => (addr.row, None),
+            CimOp::Read2 { row_a, row_b, .. }
+            | CimOp::Bool { row_a, row_b, .. }
+            | CimOp::Add { row_a, row_b, .. }
+            | CimOp::Sub { row_a, row_b, .. }
+            | CimOp::Compare { row_a, row_b, .. } => (row_a, Some(row_b)),
+        }
+    }
+
+    pub fn is_write(&self) -> bool {
+        matches!(self, CimOp::Write { .. })
+    }
+}
+
+/// Values produced by an operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CimValue {
+    Word(u64),
+    /// Read2: both words from one access.
+    Pair(u64, u64),
+    /// Add: (n+1)-bit unsigned sum.
+    Sum(u128),
+    /// Sub: signed difference.
+    Diff(i128),
+    Ordering(CompareResult),
+    /// Writes return nothing.
+    None,
+}
+
+impl CimValue {
+    pub fn word(&self) -> Option<u64> {
+        match self {
+            CimValue::Word(w) => Some(*w),
+            _ => None,
+        }
+    }
+
+    pub fn diff(&self) -> Option<i128> {
+        match self {
+            CimValue::Diff(d) => Some(*d),
+            _ => None,
+        }
+    }
+}
+
+/// Result: value + attributed energy/latency cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CimResult {
+    pub value: CimValue,
+    pub cost: OpCost,
+}
+
+/// The engine interface the coordinator drives.
+pub trait Engine: Send {
+    /// Execute one operation against the engine's array state.
+    fn execute(&mut self, op: &CimOp) -> Result<CimResult, EngineError>;
+
+    /// Engine label for metrics/reporting.
+    fn name(&self) -> &'static str;
+}
+
+/// Engine failure modes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// Address outside the array.
+    OutOfRange(String),
+    /// The operation is not expressible on this engine in a single
+    /// access (e.g. single-access subtraction on the symmetric baseline —
+    /// the many-to-one mapping problem).
+    Unsupported(String),
+    /// Sensing failed (margin collapse — e.g. mis-biased wordlines).
+    SenseFailure(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::OutOfRange(s) => write!(f, "address out of range: {s}"),
+            EngineError::Unsupported(s) => write!(f, "unsupported operation: {s}"),
+            EngineError::SenseFailure(s) => write!(f, "sense failure: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boolfn_semantics() {
+        let mask = 0xFF;
+        assert_eq!(BoolFn::And.apply(0b1100, 0b1010, mask), 0b1000);
+        assert_eq!(BoolFn::Or.apply(0b1100, 0b1010, mask), 0b1110);
+        assert_eq!(BoolFn::Xor.apply(0b1100, 0b1010, mask), 0b0110);
+        assert_eq!(BoolFn::Nand.apply(0b1100, 0b1010, mask), 0xF7);
+        assert_eq!(BoolFn::AndNot.apply(0b1100, 0b1010, mask), 0b0100);
+        assert_eq!(BoolFn::OrNot.apply(0b1100, 0b1010, mask), 0xFD);
+    }
+
+    #[test]
+    fn commutativity_classification() {
+        assert!(BoolFn::And.commutative());
+        assert!(BoolFn::Xor.commutative());
+        assert!(!BoolFn::AndNot.commutative());
+        assert!(!BoolFn::OrNot.commutative());
+    }
+
+    #[test]
+    fn op_rows_extraction() {
+        let op = CimOp::Sub { row_a: 3, row_b: 9, word: 1 };
+        assert_eq!(op.rows(), (3, Some(9)));
+        let r = CimOp::Read(WordAddr { row: 5, word: 0 });
+        assert_eq!(r.rows(), (5, None));
+        assert!(!r.is_write());
+        assert!(CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 1 }.is_write());
+    }
+}

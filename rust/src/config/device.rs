@@ -1,0 +1,197 @@
+//! Device parameters — the exact mirror of `python/compile/params.py`.
+//!
+//! KEEP IN SYNC: these constants are the single source of truth on the
+//! Rust side; the cross-validation integration test executes the AOT
+//! artifacts and checks the Rust behavioral model against the JAX/Pallas
+//! numerics, which is what pins the two copies together.
+
+/// FeFET + array electrical parameters (paper Fig. 2(b) + Section IV).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceParams {
+    // ---- 45 nm FET (alpha-power law + smooth subthreshold) ----
+    pub vdd: f64,
+    pub phi_t: f64,
+    pub n_ss: f64,
+    pub alpha_sat: f64,
+    pub k_fet: f64,
+    pub v_dsat: f64,
+
+    // ---- HZO ferroelectric layer (Miller / Preisach-lite) ----
+    pub t_fe: f64,
+    pub ps: f64,
+    pub pr: f64,
+    pub ec: f64,
+    pub eps_fe: f64,
+    pub tau_fe: f64,
+    pub kappa_fe: f64,
+
+    // ---- FeFET threshold map ----
+    pub vt0: f64,
+    pub dvt_mw: f64,
+    pub p_store: f64,
+
+    // ---- Section IV bias conditions ----
+    pub v_read: f64,
+    pub v_gread1: f64,
+    pub v_gread2: f64,
+    pub v_set: f64,
+    pub v_reset: f64,
+
+    // ---- Array electricals (per cell) ----
+    pub c_rbl_cell: f64,
+    pub c_wl_cell: f64,
+    pub t_step: f64,
+    pub n_steps: usize,
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        Self {
+            vdd: 1.0,
+            phi_t: 0.0259,
+            n_ss: 1.5,
+            alpha_sat: 1.3,
+            k_fet: 6.0e-5,
+            v_dsat: 0.3,
+
+            t_fe: 8e-9,
+            ps: 0.25,
+            pr: 0.20,
+            ec: 1.2e8,
+            eps_fe: 30.0,
+            tau_fe: 5e-9,
+            kappa_fe: 0.5,
+
+            vt0: 0.65,
+            dvt_mw: 0.8,
+            p_store: 0.8,
+
+            v_read: 1.0,
+            v_gread1: 0.83,
+            v_gread2: 1.0,
+            v_set: 3.7,
+            v_reset: -5.0,
+
+            c_rbl_cell: 0.2e-15,
+            c_wl_cell: 0.15e-15,
+            t_step: 0.02e-9,
+            n_steps: 128,
+        }
+    }
+}
+
+impl DeviceParams {
+    /// Miller domain-spread parameter, eq. (2): Ec / ln((Ps+Pr)/(Ps-Pr)).
+    pub fn sigma_e(&self) -> f64 {
+        self.ec / ((self.ps + self.pr) / (self.ps - self.pr)).ln()
+    }
+
+    /// Stored polarization for a logic bit (+-p_store * Ps).
+    pub fn pol_of_bit(&self, bit: bool) -> f64 {
+        if bit {
+            self.p_store * self.ps
+        } else {
+            -self.p_store * self.ps
+        }
+    }
+
+    /// Gate-referred coercive voltage: the WL voltage whose divided-down
+    /// FE field equals Ec.  The read-disturb design rule is
+    /// `v_gread2 < v_c_gate`.
+    pub fn v_c_gate(&self) -> f64 {
+        self.ec * self.t_fe / self.kappa_fe
+    }
+
+    /// Overlay values from a parsed config document (section `[device]`).
+    pub fn from_doc(doc: &super::toml::Doc) -> Result<Self, String> {
+        let d = Self::default();
+        Ok(Self {
+            vdd: doc.f64_or("device.vdd", d.vdd)?,
+            phi_t: doc.f64_or("device.phi_t", d.phi_t)?,
+            n_ss: doc.f64_or("device.n_ss", d.n_ss)?,
+            alpha_sat: doc.f64_or("device.alpha_sat", d.alpha_sat)?,
+            k_fet: doc.f64_or("device.k_fet", d.k_fet)?,
+            v_dsat: doc.f64_or("device.v_dsat", d.v_dsat)?,
+            t_fe: doc.f64_or("device.t_fe", d.t_fe)?,
+            ps: doc.f64_or("device.ps", d.ps)?,
+            pr: doc.f64_or("device.pr", d.pr)?,
+            ec: doc.f64_or("device.ec", d.ec)?,
+            eps_fe: doc.f64_or("device.eps_fe", d.eps_fe)?,
+            tau_fe: doc.f64_or("device.tau_fe", d.tau_fe)?,
+            kappa_fe: doc.f64_or("device.kappa_fe", d.kappa_fe)?,
+            vt0: doc.f64_or("device.vt0", d.vt0)?,
+            dvt_mw: doc.f64_or("device.dvt_mw", d.dvt_mw)?,
+            p_store: doc.f64_or("device.p_store", d.p_store)?,
+            v_read: doc.f64_or("device.v_read", d.v_read)?,
+            v_gread1: doc.f64_or("device.v_gread1", d.v_gread1)?,
+            v_gread2: doc.f64_or("device.v_gread2", d.v_gread2)?,
+            v_set: doc.f64_or("device.v_set", d.v_set)?,
+            v_reset: doc.f64_or("device.v_reset", d.v_reset)?,
+            c_rbl_cell: doc.f64_or("device.c_rbl_cell", d.c_rbl_cell)?,
+            c_wl_cell: doc.f64_or("device.c_wl_cell", d.c_wl_cell)?,
+            t_step: doc.f64_or("device.t_step", d.t_step)?,
+            n_steps: doc.usize_or("device.n_steps", d.n_steps)?,
+        })
+    }
+}
+
+/// Static column width of the AOT artifacts (mirror of params.N_COLS).
+pub const N_COLS: usize = 1024;
+/// Static sweep length of the AOT artifacts (mirror of params.N_SWEEP).
+pub const N_SWEEP: usize = 512;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_biases() {
+        let p = DeviceParams::default();
+        assert_eq!(p.v_read, 1.0);
+        assert_eq!(p.v_gread1, 0.83);
+        assert_eq!(p.v_gread2, 1.0);
+        assert_eq!(p.v_set, 3.7);
+        assert_eq!(p.v_reset, -5.0);
+    }
+
+    #[test]
+    fn asymmetry_is_present() {
+        let p = DeviceParams::default();
+        assert!(p.v_gread1 < p.v_gread2, "ADRA requires V_GREAD1 < V_GREAD2");
+    }
+
+    #[test]
+    fn read_disturb_design_rule() {
+        let p = DeviceParams::default();
+        assert!(
+            p.v_gread2 < p.v_c_gate(),
+            "V_GREAD ({}) must be below gate-referred V_C ({})",
+            p.v_gread2,
+            p.v_c_gate()
+        );
+        assert!(p.v_set > p.v_c_gate(), "V_SET must switch polarization");
+    }
+
+    #[test]
+    fn sigma_matches_eq2() {
+        let p = DeviceParams::default();
+        let expect = 1.2e8 / (0.45f64 / 0.05).ln();
+        assert!((p.sigma_e() - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn pol_of_bit_signs() {
+        let p = DeviceParams::default();
+        assert!(p.pol_of_bit(true) > 0.0);
+        assert!(p.pol_of_bit(false) < 0.0);
+        assert_eq!(p.pol_of_bit(true), -p.pol_of_bit(false));
+    }
+
+    #[test]
+    fn config_overlay() {
+        let doc = super::super::toml::Doc::parse("[device]\nvt0 = 0.7\n").unwrap();
+        let p = DeviceParams::from_doc(&doc).unwrap();
+        assert_eq!(p.vt0, 0.7);
+        assert_eq!(p.v_read, 1.0); // untouched default
+    }
+}

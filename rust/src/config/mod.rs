@@ -1,0 +1,9 @@
+//! Configuration system: device parameters (mirroring the Python build
+//! side), simulation/engine config, and a TOML-subset loader.
+
+pub mod device;
+pub mod sim;
+pub mod toml;
+
+pub use device::{DeviceParams, N_COLS, N_SWEEP};
+pub use sim::{SensingScheme, SimConfig};

@@ -1,0 +1,220 @@
+//! Simulation / engine configuration: array geometry, sensing scheme,
+//! word width, coordinator knobs.  Loadable from a TOML-subset file and
+//! overridable from the CLI.
+
+use super::device::DeviceParams;
+use super::toml::Doc;
+
+/// Which sensing periphery the array uses (paper Section IV).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SensingScheme {
+    /// Current sense amplifiers on the senseline (Section IV.A).
+    Current,
+    /// Voltage sensing, RBL kept precharged during hold (scheme 1).
+    VoltagePrecharged,
+    /// Voltage sensing, RBL discharged during hold, charged per op (scheme 2).
+    VoltageDischarged,
+}
+
+impl SensingScheme {
+    pub const ALL: [SensingScheme; 3] = [
+        SensingScheme::Current,
+        SensingScheme::VoltagePrecharged,
+        SensingScheme::VoltageDischarged,
+    ];
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "current" => Ok(Self::Current),
+            "v1" | "voltage1" | "precharged" => Ok(Self::VoltagePrecharged),
+            "v2" | "voltage2" | "discharged" => Ok(Self::VoltageDischarged),
+            other => Err(format!(
+                "unknown sensing scheme {other:?} (expected current|v1|v2)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Current => "current",
+            Self::VoltagePrecharged => "voltage-scheme1(precharged)",
+            Self::VoltageDischarged => "voltage-scheme2(discharged)",
+        }
+    }
+}
+
+/// Full engine configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub device: DeviceParams,
+    /// Array rows (= number of wordlines).
+    pub rows: usize,
+    /// Array columns (= number of bitlines / senselines).
+    pub cols: usize,
+    /// Word width in bits.
+    pub word_bits: usize,
+    pub scheme: SensingScheme,
+    /// sigma of per-cell V_T variation (volts); 0 disables Monte-Carlo.
+    pub vt_sigma: f64,
+    /// PRNG seed for variation and workloads.
+    pub seed: u64,
+    /// Coordinator: worker threads (one engine each).
+    pub workers: usize,
+    /// Coordinator: max ops per batch.
+    pub max_batch: usize,
+    /// Operating frequency of CiM issue, Hz (used for leakage accounting).
+    pub cim_frequency: f64,
+    /// Parallelism P = N_w,CiM / N_w,TOT per activation (Fig. 5(b)).
+    pub parallelism: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            device: DeviceParams::default(),
+            rows: 1024,
+            cols: 1024,
+            word_bits: 32,
+            scheme: SensingScheme::Current,
+            vt_sigma: 0.0,
+            seed: 0xADA_2022,
+            workers: 4,
+            max_batch: 64,
+            cim_frequency: 100e6,
+            parallelism: 1.0,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Words stored per row.
+    pub fn words_per_row(&self) -> usize {
+        self.cols / self.word_bits
+    }
+
+    /// Total RBL capacitance per column (scales with rows).
+    pub fn c_rbl(&self) -> f64 {
+        self.rows as f64 * self.device.c_rbl_cell
+    }
+
+    /// Total WL capacitance per row (scales with cols).
+    pub fn c_wl(&self) -> f64 {
+        self.cols as f64 * self.device.c_wl_cell
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rows == 0 || self.cols == 0 {
+            return Err("array dimensions must be non-zero".into());
+        }
+        if self.word_bits == 0 || self.word_bits > 64 {
+            return Err(format!("word_bits {} out of range 1..=64", self.word_bits));
+        }
+        if self.cols % self.word_bits != 0 {
+            return Err(format!(
+                "cols {} not a multiple of word_bits {}",
+                self.cols, self.word_bits
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.parallelism) || self.parallelism <= 0.0 {
+            return Err(format!("parallelism {} not in (0, 1]", self.parallelism));
+        }
+        if self.workers == 0 || self.max_batch == 0 {
+            return Err("workers and max_batch must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file content; missing keys take defaults.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = Doc::parse(text)?;
+        let d = Self::default();
+        let cfg = Self {
+            device: DeviceParams::from_doc(&doc)?,
+            rows: doc.usize_or("array.rows", d.rows)?,
+            cols: doc.usize_or("array.cols", d.cols)?,
+            word_bits: doc.usize_or("array.word_bits", d.word_bits)?,
+            scheme: SensingScheme::parse(doc.str_or("array.scheme", "current")?)?,
+            vt_sigma: doc.f64_or("array.vt_sigma", d.vt_sigma)?,
+            seed: doc.usize_or("sim.seed", d.seed as usize)? as u64,
+            workers: doc.usize_or("coordinator.workers", d.workers)?,
+            max_batch: doc.usize_or("coordinator.max_batch", d.max_batch)?,
+            cim_frequency: doc.f64_or("sim.cim_frequency", d.cim_frequency)?,
+            parallelism: doc.f64_or("sim.parallelism", d.parallelism)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Convenience: square array of a given size with a scheme.
+    pub fn square(n: usize, scheme: SensingScheme) -> Self {
+        let cfg = Self {
+            rows: n,
+            cols: n,
+            scheme,
+            ..Self::default()
+        };
+        cfg.validate().expect("square config");
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(SensingScheme::parse("current").unwrap(), SensingScheme::Current);
+        assert_eq!(
+            SensingScheme::parse("v1").unwrap(),
+            SensingScheme::VoltagePrecharged
+        );
+        assert_eq!(
+            SensingScheme::parse("discharged").unwrap(),
+            SensingScheme::VoltageDischarged
+        );
+        assert!(SensingScheme::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn geometry_helpers() {
+        let cfg = SimConfig::square(1024, SensingScheme::Current);
+        assert_eq!(cfg.words_per_row(), 32);
+        assert!((cfg.c_rbl() - 204.8e-15).abs() < 1e-20);
+        assert!((cfg.c_wl() - 153.6e-15).abs() < 1e-20);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = SimConfig::default();
+        cfg.word_bits = 33; // cols 1024 % 33 != 0
+        assert!(cfg.validate().is_err());
+        cfg.word_bits = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg2 = SimConfig::default();
+        cfg2.parallelism = 0.0;
+        assert!(cfg2.validate().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = SimConfig::from_toml(
+            "[array]\nrows = 512\ncols = 512\nscheme = \"v2\"\n[device]\nvt0 = 0.7\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.rows, 512);
+        assert_eq!(cfg.scheme, SensingScheme::VoltageDischarged);
+        assert_eq!(cfg.device.vt0, 0.7);
+        assert_eq!(cfg.word_bits, 32);
+    }
+
+    #[test]
+    fn toml_bad_scheme_fails() {
+        assert!(SimConfig::from_toml("[array]\nscheme = \"nope\"\n").is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! TOML-subset parser for configuration files (no `serde`/`toml` crates).
+//!
+//! Supports the subset the config system uses: `[section]` headers,
+//! `key = value` with string / integer / float / boolean values, comments
+//! (`#`), and blank lines.  Unknown syntax is a hard error — configs should
+//! fail loudly, not half-parse.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key -> value`; keys before any section header
+/// live in the "" (root) section.
+#[derive(Debug, Default)]
+pub struct Doc {
+    values: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            if doc.values.insert(full_key.clone(), value).is_some() {
+                return Err(format!("line {}: duplicate key {full_key}", lineno + 1));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| format!("{key}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| format!("{key}: expected non-negative int, got {v:?}")),
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str, String> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| format!("{key}: expected string, got {v:?}")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s:?}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("unparseable value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+# top comment
+root_key = 1
+[device]
+vt0 = 0.65          # volts
+name = "hzo"
+enabled = true
+count = 42
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("root_key"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("device.vt0"), Some(&Value::Float(0.65)));
+        assert_eq!(doc.get("device.name"), Some(&Value::Str("hzo".into())));
+        assert_eq!(doc.get("device.enabled"), Some(&Value::Bool(true)));
+        assert_eq!(doc.f64_or("device.count", 0.0).unwrap(), 42.0);
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.f64_or("nope", 3.5).unwrap(), 3.5);
+        assert_eq!(doc.usize_or("nope", 7).unwrap(), 7);
+        assert_eq!(doc.str_or("nope", "d").unwrap(), "d");
+    }
+
+    #[test]
+    fn duplicate_key_is_error() {
+        assert!(Doc::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn bad_syntax_is_error() {
+        assert!(Doc::parse("just a line").is_err());
+        assert!(Doc::parse("[unterminated").is_err());
+        assert!(Doc::parse("k = ").is_err());
+        assert!(Doc::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("k"), Some(&Value::Str("a#b".into())));
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = Doc::parse("a = -5\nb = 1.2e8\nc = -5.0").unwrap();
+        assert_eq!(doc.get("a"), Some(&Value::Int(-5)));
+        assert_eq!(doc.f64_or("b", 0.0).unwrap(), 1.2e8);
+        assert_eq!(doc.f64_or("c", 0.0).unwrap(), -5.0);
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let doc = Doc::parse("k = \"str\"").unwrap();
+        assert!(doc.f64_or("k", 0.0).is_err());
+        assert!(doc.usize_or("k", 0).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator: request router, per-shard batcher, and the worker pool
+//! that owns the array engines.  Built on OS threads + channels (the
+//! offline environment has no tokio); one engine per thread means the hot
+//! path takes no locks.
+
+pub mod fuse;
+pub mod pool;
+pub mod repl;
+pub mod request;
+
+pub use pool::{CallError, Coordinator, PendingResponse};
+pub use request::{Request, RequestId, Response, RouteError};

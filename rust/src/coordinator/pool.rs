@@ -1,0 +1,405 @@
+//! The worker pool: one OS thread per array shard, each owning its engine
+//! exclusively (no locks on the hot path).  The router validates and
+//! forwards requests; each worker drains its queue in batches
+//! (`max_batch`) to amortize wakeups, executes in arrival order — which
+//! serializes all ops touching a shard and makes writes linearizable —
+//! and replies through per-request channels.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::request::{Request, RequestId, Response, RouteError};
+use crate::cim::{CimOp, CimResult, Engine, EngineError};
+use crate::config::SimConfig;
+use crate::metrics::RunMetrics;
+
+enum WorkerMsg {
+    Work(Request, Sender<Response>),
+    /// A pre-batched request group with a single group reply (§Perf: one
+    /// channel round-trip amortized over the whole group).
+    Batch(Vec<Request>, Sender<Vec<Response>>),
+    /// Collect a metrics snapshot.
+    Stats(Sender<RunMetrics>),
+}
+
+struct Worker {
+    tx: Sender<WorkerMsg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The coordinator: router + batcher + worker pool.
+pub struct Coordinator {
+    workers: Vec<Worker>,
+    next_id: AtomicU64,
+    cfg: SimConfig,
+}
+
+impl Coordinator {
+    /// Build with `shards` independent array shards, each served by one
+    /// worker thread running `make_engine(shard_idx)`.
+    pub fn new<F>(cfg: &SimConfig, shards: usize, mut make_engine: F) -> Self
+    where
+        F: FnMut(usize) -> Box<dyn Engine>,
+    {
+        assert!(shards > 0);
+        let max_batch = cfg.max_batch;
+        let mut workers = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = channel::<WorkerMsg>();
+            let engine = make_engine(shard);
+            let handle = std::thread::Builder::new()
+                .name(format!("adra-worker-{shard}"))
+                .spawn(move || worker_loop(engine, rx, max_batch))
+                .expect("spawn worker");
+            workers.push(Worker { tx, handle: Some(handle) });
+        }
+        Self { workers, next_id: AtomicU64::new(0), cfg: cfg.clone() }
+    }
+
+    /// Coordinator over ADRA engines (the default deployment).
+    pub fn adra(cfg: &SimConfig, shards: usize) -> Self {
+        let cfg2 = cfg.clone();
+        Self::new(cfg, shards, move |_| {
+            Box::new(crate::cim::AdraEngine::new(&cfg2))
+        })
+    }
+
+    pub fn cfg(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit asynchronously; the receiver yields the response.
+    pub fn submit(&self, array_id: usize, op: CimOp) -> Result<PendingResponse, RouteError> {
+        let worker = self
+            .workers
+            .get(array_id)
+            .ok_or(RouteError::UnknownArray(array_id))?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        worker
+            .tx
+            .send(WorkerMsg::Work(Request { id, array_id, op }, tx))
+            .map_err(|_| RouteError::ShuttingDown)?;
+        Ok(PendingResponse { id, rx })
+    }
+
+    /// Synchronous convenience call.
+    pub fn call(&self, array_id: usize, op: CimOp) -> Result<CimResult, CallError> {
+        let pending = self.submit(array_id, op).map_err(CallError::Route)?;
+        pending.wait().map_err(CallError::Engine)
+    }
+
+    /// Submit a whole batch to one shard, then await all responses in
+    /// submission order.
+    ///
+    /// §Perf: one shared reply channel serves the whole batch (the worker
+    /// executes and replies in arrival order, so responses come back FIFO)
+    /// instead of allocating a channel per request — see EXPERIMENTS.md.
+    pub fn call_batch(
+        &self,
+        array_id: usize,
+        ops: &[CimOp],
+    ) -> Result<Vec<Result<CimResult, EngineError>>, RouteError> {
+        let worker = self
+            .workers
+            .get(array_id)
+            .ok_or(RouteError::UnknownArray(array_id))?;
+        let max = self.cfg.max_batch.max(1);
+        let mut out = Vec::with_capacity(ops.len());
+        for chunk in ops.chunks(max) {
+            let reqs: Vec<Request> = chunk
+                .iter()
+                .map(|op| Request {
+                    id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                    array_id,
+                    op: *op,
+                })
+                .collect();
+            let ids: Vec<RequestId> = reqs.iter().map(|r| r.id).collect();
+            let (tx, rx) = channel();
+            worker
+                .tx
+                .send(WorkerMsg::Batch(reqs, tx))
+                .map_err(|_| RouteError::ShuttingDown)?;
+            let resps = rx.recv().expect("worker died");
+            debug_assert_eq!(resps.len(), ids.len());
+            for (resp, id) in resps.into_iter().zip(ids) {
+                debug_assert_eq!(resp.id, id, "response/request id mismatch");
+                out.push(resp.result);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Aggregate metrics across all workers.
+    pub fn metrics(&self) -> RunMetrics {
+        let mut total = RunMetrics::default();
+        for w in &self.workers {
+            let (tx, rx) = channel();
+            if w.tx.send(WorkerMsg::Stats(tx)).is_ok() {
+                if let Ok(m) = rx.recv() {
+                    total.merge(&m);
+                }
+            }
+        }
+        total
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            // close the channel; the worker loop exits on disconnect
+            let (dummy_tx, _) = channel::<WorkerMsg>();
+            let tx = std::mem::replace(&mut w.tx, dummy_tx);
+            drop(tx);
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Handle to an in-flight request.
+pub struct PendingResponse {
+    pub id: RequestId,
+    rx: Receiver<Response>,
+}
+
+impl PendingResponse {
+    pub fn wait(self) -> Result<CimResult, EngineError> {
+        let resp = self.rx.recv().expect("worker died");
+        debug_assert_eq!(resp.id, self.id);
+        resp.result
+    }
+}
+
+/// Errors from the synchronous call path.
+#[derive(Debug)]
+pub enum CallError {
+    Route(RouteError),
+    Engine(EngineError),
+}
+
+impl std::fmt::Display for CallError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CallError::Route(e) => write!(f, "routing: {e}"),
+            CallError::Engine(e) => write!(f, "engine: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CallError {}
+
+fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: usize) {
+    let mut metrics = RunMetrics::default();
+    let mut batch: Vec<(Request, Sender<Response>)> = Vec::with_capacity(max_batch);
+    loop {
+        // block for the first message
+        let mut group_reply: Option<(Vec<Request>, Sender<Vec<Response>>)> = None;
+        match rx.recv() {
+            Err(_) => return, // disconnected: shutdown
+            Ok(WorkerMsg::Stats(tx)) => {
+                let _ = tx.send(metrics.clone());
+                continue;
+            }
+            Ok(WorkerMsg::Work(req, tx)) => batch.push((req, tx)),
+            Ok(WorkerMsg::Batch(reqs, tx)) => group_reply = Some((reqs, tx)),
+        }
+        // grouped fast path: execute the whole group, one reply message
+        if let Some((reqs, tx)) = group_reply {
+            let mut resps = Vec::with_capacity(reqs.len());
+            for req in reqs {
+                let result = engine.execute(&req.op);
+                match &result {
+                    Ok(r) => metrics.record(&r.cost),
+                    Err(_) => metrics.record_error(),
+                }
+                resps.push(Response { id: req.id, result });
+            }
+            let _ = tx.send(resps);
+            continue;
+        }
+        // opportunistically drain up to max_batch single requests
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(WorkerMsg::Work(req, tx)) => batch.push((req, tx)),
+                Ok(WorkerMsg::Stats(tx)) => {
+                    let _ = tx.send(metrics.clone());
+                }
+                Ok(WorkerMsg::Batch(reqs, tx)) => {
+                    // execute inline to preserve arrival order
+                    let mut resps = Vec::with_capacity(reqs.len());
+                    // first flush the singles gathered so far
+                    for (req, rtx) in batch.drain(..) {
+                        let result = engine.execute(&req.op);
+                        match &result {
+                            Ok(r) => metrics.record(&r.cost),
+                            Err(_) => metrics.record_error(),
+                        }
+                        let _ = rtx.send(Response { id: req.id, result });
+                    }
+                    for req in reqs {
+                        let result = engine.execute(&req.op);
+                        match &result {
+                            Ok(r) => metrics.record(&r.cost),
+                            Err(_) => metrics.record_error(),
+                        }
+                        resps.push(Response { id: req.id, result });
+                    }
+                    let _ = tx.send(resps);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        // execute in arrival order (linearizes the shard)
+        for (req, tx) in batch.drain(..) {
+            let result = engine.execute(&req.op);
+            match &result {
+                Ok(r) => metrics.record(&r.cost),
+                Err(_) => metrics.record_error(),
+            }
+            let _ = tx.send(Response { id: req.id, result });
+        }
+    }
+}
+
+/// Helpers shared by stress tests and benches.
+pub fn mirror_engine(cfg: &SimConfig) -> Arc<Mutex<crate::cim::AdraEngine>> {
+    Arc::new(Mutex::new(crate::cim::AdraEngine::new(cfg)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::{AdraEngine, CimValue, WordAddr};
+    use crate::config::SensingScheme;
+    use crate::workload::{OpMix, WorkloadGen};
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::square(64, SensingScheme::Current);
+        c.word_bits = 8;
+        c.max_batch = 8;
+        c
+    }
+
+    #[test]
+    fn basic_write_then_sub() {
+        let cfg = cfg();
+        let coord = Coordinator::adra(&cfg, 2);
+        coord
+            .call(0, CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 40 })
+            .unwrap();
+        coord
+            .call(0, CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 15 })
+            .unwrap();
+        let r = coord.call(0, CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert_eq!(r.value, CimValue::Diff(25));
+    }
+
+    #[test]
+    fn shards_are_independent() {
+        let cfg = cfg();
+        let coord = Coordinator::adra(&cfg, 2);
+        coord
+            .call(0, CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 7 })
+            .unwrap();
+        // shard 1 never saw the write
+        let r = coord.call(1, CimOp::Read(WordAddr { row: 0, word: 0 })).unwrap();
+        assert_eq!(r.value, CimValue::Word(0));
+        let r0 = coord.call(0, CimOp::Read(WordAddr { row: 0, word: 0 })).unwrap();
+        assert_eq!(r0.value, CimValue::Word(7));
+    }
+
+    #[test]
+    fn unknown_shard_rejected() {
+        let coord = Coordinator::adra(&cfg(), 1);
+        assert!(matches!(
+            coord.submit(5, CimOp::Read(WordAddr { row: 0, word: 0 })),
+            Err(RouteError::UnknownArray(5))
+        ));
+    }
+
+    #[test]
+    fn batched_equals_unbatched() {
+        let cfg = cfg();
+        let coord = Coordinator::adra(&cfg, 1);
+        let mut mirror = AdraEngine::new(&cfg);
+        let mut gen = WorkloadGen::new(&cfg, OpMix::balanced(), 77);
+        let ops = gen.batch(300);
+        let batched = coord.call_batch(0, &ops).unwrap();
+        for (op, got) in ops.iter().zip(batched) {
+            let want = mirror.execute(op);
+            match (got, want) {
+                (Ok(g), Ok(w)) => assert_eq!(g.value, w.value, "op {op:?}"),
+                (Err(ge), Err(we)) => assert_eq!(
+                    std::mem::discriminant(&ge),
+                    std::mem::discriminant(&we)
+                ),
+                (g, w) => panic!("divergence on {op:?}: {g:?} vs {w:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn responses_match_request_ids_under_concurrency() {
+        let cfg = cfg();
+        let coord = std::sync::Arc::new(Coordinator::adra(&cfg, 4));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let c = coord.clone();
+            let cfg2 = cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut gen = WorkloadGen::new(&cfg2, OpMix::balanced(), 1000 + t);
+                let ops = gen.batch(200);
+                let shard = (t % 4) as usize;
+                let res = c.call_batch(shard, &ops).unwrap();
+                assert_eq!(res.len(), ops.len(), "1:1 request/response");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = coord.metrics();
+        assert_eq!(m.ops + m.errors, 4 * 200);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let cfg = cfg();
+        let coord = Coordinator::adra(&cfg, 1);
+        for i in 0..10 {
+            coord
+                .call(0, CimOp::Write { addr: WordAddr { row: i, word: 0 }, value: i as u64 })
+                .unwrap();
+        }
+        let m = coord.metrics();
+        assert_eq!(m.ops, 10);
+        assert!(m.energy.total() > 0.0);
+    }
+
+    #[test]
+    fn write_read_ordering_is_linearized() {
+        let cfg = cfg();
+        let coord = Coordinator::adra(&cfg, 1);
+        // interleave writes and reads to the same word in one batch;
+        // arrival order must be preserved
+        let ops = vec![
+            CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 1 },
+            CimOp::Read(WordAddr { row: 0, word: 0 }),
+            CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 2 },
+            CimOp::Read(WordAddr { row: 0, word: 0 }),
+        ];
+        let res = coord.call_batch(0, &ops).unwrap();
+        assert_eq!(res[1].as_ref().unwrap().value, CimValue::Word(1));
+        assert_eq!(res[3].as_ref().unwrap().value, CimValue::Word(2));
+    }
+}

@@ -1,0 +1,226 @@
+//! Line-protocol front-end for the coordinator ("serve" mode).
+//!
+//! A tiny text protocol over any `BufRead`/`Write` pair (the CLI wires it
+//! to stdin/stdout), so the engine can be driven interactively or by
+//! scripts without linking against the crate:
+//!
+//! ```text
+//! write <shard> <row> <word> <value>
+//! read  <shard> <row> <word>
+//! read2 <shard> <rowA> <rowB> <word>
+//! bool  <shard> <fn> <rowA> <rowB> <word>     fn: and|or|nand|nor|xor|xnor|andnot|ornot
+//! add   <shard> <rowA> <rowB> <word>
+//! sub   <shard> <rowA> <rowB> <word>
+//! cmp   <shard> <rowA> <rowB> <word>
+//! stats
+//! quit
+//! ```
+//!
+//! Responses are single lines: `ok <value...>` / `err <message>`.
+
+use std::io::{BufRead, Write};
+
+use super::pool::Coordinator;
+use crate::cim::{BoolFn, CimOp, CimValue, WordAddr};
+use crate::logic::CompareResult;
+
+/// Parse one protocol line into a (shard, op) pair, `Ok(None)` for quit.
+pub fn parse_line(line: &str) -> Result<Option<(usize, CimOp)>, String> {
+    let mut it = line.split_whitespace();
+    let cmd = match it.next() {
+        None => return Err("empty command".into()),
+        Some(c) => c,
+    };
+    let mut num = |name: &str| -> Result<usize, String> {
+        it.next()
+            .ok_or_else(|| format!("{cmd}: missing <{name}>"))?
+            .parse::<usize>()
+            .map_err(|e| format!("{cmd}: bad <{name}>: {e}"))
+    };
+    match cmd {
+        "quit" | "exit" => Ok(None),
+        "write" => {
+            let shard = num("shard")?;
+            let row = num("row")?;
+            let word = num("word")?;
+            let value = num("value")? as u64;
+            Ok(Some((shard, CimOp::Write { addr: WordAddr { row, word }, value })))
+        }
+        "read" => {
+            let shard = num("shard")?;
+            let row = num("row")?;
+            let word = num("word")?;
+            Ok(Some((shard, CimOp::Read(WordAddr { row, word }))))
+        }
+        "bool" => {
+            let shard = num("shard")?;
+            let f = match it.next().ok_or("bool: missing <fn>")? {
+                "and" => BoolFn::And,
+                "or" => BoolFn::Or,
+                "nand" => BoolFn::Nand,
+                "nor" => BoolFn::Nor,
+                "xor" => BoolFn::Xor,
+                "xnor" => BoolFn::Xnor,
+                "andnot" => BoolFn::AndNot,
+                "ornot" => BoolFn::OrNot,
+                other => return Err(format!("bool: unknown fn {other:?}")),
+            };
+            let mut num2 = |name: &str| -> Result<usize, String> {
+                it.next()
+                    .ok_or_else(|| format!("bool: missing <{name}>"))?
+                    .parse::<usize>()
+                    .map_err(|e| format!("bool: bad <{name}>: {e}"))
+            };
+            let row_a = num2("rowA")?;
+            let row_b = num2("rowB")?;
+            let word = num2("word")?;
+            Ok(Some((shard, CimOp::Bool { f, row_a, row_b, word })))
+        }
+        "read2" | "add" | "sub" | "cmp" => {
+            let shard = num("shard")?;
+            let row_a = num("rowA")?;
+            let row_b = num("rowB")?;
+            let word = num("word")?;
+            let op = match cmd {
+                "read2" => CimOp::Read2 { row_a, row_b, word },
+                "add" => CimOp::Add { row_a, row_b, word },
+                "sub" => CimOp::Sub { row_a, row_b, word },
+                _ => CimOp::Compare { row_a, row_b, word },
+            };
+            Ok(Some((shard, op)))
+        }
+        other => Err(format!("unknown command {other:?}")),
+    }
+}
+
+/// Render a CimValue as a protocol response payload.
+pub fn render_value(v: &CimValue) -> String {
+    match v {
+        CimValue::None => "ok".into(),
+        CimValue::Word(w) => format!("ok {w}"),
+        CimValue::Pair(a, b) => format!("ok {a} {b}"),
+        CimValue::Sum(s) => format!("ok {s}"),
+        CimValue::Diff(d) => format!("ok {d}"),
+        CimValue::Ordering(o) => format!(
+            "ok {}",
+            match o {
+                CompareResult::Less => "lt",
+                CompareResult::Equal => "eq",
+                CompareResult::Greater => "gt",
+            }
+        ),
+    }
+}
+
+/// Serve the protocol until EOF or `quit`.  Returns ops served.
+pub fn serve<R: BufRead, W: Write>(
+    coord: &Coordinator,
+    input: R,
+    mut output: W,
+) -> std::io::Result<u64> {
+    let mut served = 0;
+    for line in input.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        if trimmed == "stats" {
+            writeln!(output, "ok {}", coord.metrics().report("serve"))?;
+            continue;
+        }
+        match parse_line(trimmed) {
+            Ok(None) => break,
+            Ok(Some((shard, op))) => {
+                match coord.call(shard, op) {
+                    Ok(r) => writeln!(output, "{}", render_value(&r.value))?,
+                    Err(e) => writeln!(output, "err {e}")?,
+                }
+                served += 1;
+            }
+            Err(e) => writeln!(output, "err {e}")?,
+        }
+    }
+    Ok(served)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SensingScheme, SimConfig};
+
+    fn coord() -> Coordinator {
+        let mut cfg = SimConfig::square(64, SensingScheme::Current);
+        cfg.word_bits = 8;
+        Coordinator::adra(&cfg, 2)
+    }
+
+    #[test]
+    fn parse_all_commands() {
+        assert!(matches!(
+            parse_line("write 0 1 2 200").unwrap(),
+            Some((0, CimOp::Write { .. }))
+        ));
+        assert!(matches!(
+            parse_line("read 1 3 0").unwrap(),
+            Some((1, CimOp::Read(_)))
+        ));
+        assert!(matches!(
+            parse_line("bool 0 xor 1 2 0").unwrap(),
+            Some((0, CimOp::Bool { f: BoolFn::Xor, .. }))
+        ));
+        assert!(matches!(
+            parse_line("sub 0 1 2 3").unwrap(),
+            Some((0, CimOp::Sub { .. }))
+        ));
+        assert!(parse_line("quit").unwrap().is_none());
+    }
+
+    #[test]
+    fn parse_errors_are_informative() {
+        assert!(parse_line("write 0 1").unwrap_err().contains("missing"));
+        assert!(parse_line("bool 0 frob 1 2 0").unwrap_err().contains("unknown fn"));
+        assert!(parse_line("dance").unwrap_err().contains("unknown command"));
+        assert!(parse_line("read 0 x 0").unwrap_err().contains("bad"));
+    }
+
+    #[test]
+    fn end_to_end_session() {
+        let c = coord();
+        let script = "\
+# comment lines are skipped
+write 0 0 0 77
+write 0 1 0 33
+sub 0 0 1 0
+cmp 0 0 1 0
+read2 0 0 1 0
+bool 0 andnot 0 1 0
+read 5 0 0
+stats
+quit
+";
+        let mut out = Vec::new();
+        let served = serve(&c, script.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "ok");
+        assert_eq!(lines[1], "ok");
+        assert_eq!(lines[2], "ok 44");
+        assert_eq!(lines[3], "ok gt");
+        assert_eq!(lines[4], "ok 77 33");
+        assert_eq!(lines[5], "ok 76"); // 77 & !33 = 0b01001100
+        assert!(lines[6].starts_with("err"), "bad shard must error: {}", lines[6]);
+        assert!(lines[7].starts_with("ok serve:"));
+        assert_eq!(served, 7);
+    }
+
+    #[test]
+    fn render_values() {
+        assert_eq!(render_value(&CimValue::Diff(-5)), "ok -5");
+        assert_eq!(render_value(&CimValue::Pair(1, 2)), "ok 1 2");
+        assert_eq!(
+            render_value(&CimValue::Ordering(CompareResult::Equal)),
+            "ok eq"
+        );
+    }
+}

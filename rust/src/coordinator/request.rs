@@ -1,0 +1,39 @@
+//! Request/response protocol between clients and the coordinator.
+
+use crate::cim::{CimOp, CimResult, EngineError};
+
+/// Monotonic request identifier (unique per coordinator).
+pub type RequestId = u64;
+
+/// A routed CiM request: which array shard, which operation.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub array_id: usize,
+    pub op: CimOp,
+}
+
+/// The response paired to a request id.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub result: Result<CimResult, EngineError>,
+}
+
+/// Routing / submission failures (before an engine ever sees the op).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RouteError {
+    UnknownArray(usize),
+    ShuttingDown,
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownArray(id) => write!(f, "unknown array shard {id}"),
+            RouteError::ShuttingDown => write!(f, "coordinator is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}

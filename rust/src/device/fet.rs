@@ -1,0 +1,93 @@
+//! 45 nm access-FET I-V model: alpha-power law with smooth subthreshold
+//! blending.  Mirrors `python/compile/kernels/ref.py::fet_current`; the
+//! cross-validation test pins this against the AOT artifacts.
+
+use crate::config::DeviceParams;
+
+/// Numerically-stable softplus log(1 + e^x).
+#[inline]
+pub fn softplus(x: f64) -> f64 {
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Smooth effective overdrive: ~(v_gs - v_t) above threshold, exponential
+/// decay below, blended by the subthreshold slope n_ss * phi_t.
+#[inline]
+pub fn overdrive(p: &DeviceParams, v_gs: f64, v_t: f64) -> f64 {
+    let u = p.n_ss * p.phi_t;
+    u * softplus((v_gs - v_t) / u)
+}
+
+/// Drain current (A): I_D = K * Vov^alpha * tanh(V_DS / V_dsat).
+#[inline]
+pub fn drain_current(p: &DeviceParams, v_gs: f64, v_ds: f64, v_t: f64) -> f64 {
+    let vov = overdrive(p, v_gs, v_t);
+    let sat = (v_ds.max(0.0) / p.v_dsat).tanh();
+    p.k_fet * vov.powf(p.alpha_sat) * sat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> DeviceParams {
+        DeviceParams::default()
+    }
+
+    #[test]
+    fn softplus_limits() {
+        assert!((softplus(0.0) - std::f64::consts::LN_2).abs() < 1e-12);
+        assert!((softplus(50.0) - 50.0).abs() < 1e-9);
+        assert!(softplus(-50.0) < 1e-20);
+        assert!(softplus(-50.0) > 0.0);
+    }
+
+    #[test]
+    fn overdrive_above_threshold_is_linear() {
+        let p = p();
+        let vov = overdrive(&p, 1.0, 0.3);
+        assert!((vov - 0.7).abs() < 1e-6, "vov={vov}");
+    }
+
+    #[test]
+    fn current_monotone_in_vgs() {
+        let p = p();
+        let mut last = -1.0;
+        for i in 0..100 {
+            let vg = i as f64 * 0.02;
+            let i_d = drain_current(&p, vg, 1.0, 0.45);
+            assert!(i_d > last, "non-monotone at vg={vg}");
+            last = i_d;
+        }
+    }
+
+    #[test]
+    fn current_monotone_in_vds_and_saturates() {
+        let p = p();
+        let lo = drain_current(&p, 1.0, 0.1, 0.45);
+        let mid = drain_current(&p, 1.0, 0.5, 0.45);
+        let hi = drain_current(&p, 1.0, 1.0, 0.45);
+        assert!(lo < mid && mid < hi);
+        // tanh saturation: doubling V_DS deep in saturation changes little
+        let deep = drain_current(&p, 1.0, 2.0, 0.45);
+        assert!((deep - hi) / hi < 0.1);
+    }
+
+    #[test]
+    fn negative_vds_clamps_to_zero_current() {
+        let p = p();
+        assert_eq!(drain_current(&p, 1.0, -0.5, 0.45), 0.0);
+    }
+
+    #[test]
+    fn subthreshold_current_is_tiny_but_positive() {
+        let p = p();
+        let i = drain_current(&p, 0.2, 1.0, 0.9);
+        assert!(i > 0.0);
+        assert!(i < 1e-8);
+    }
+}

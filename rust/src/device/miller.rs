@@ -1,0 +1,125 @@
+//! Monotone-branch Miller polarization dynamics (paper eqs. (1)-(2)).
+//!
+//! Mirrors `python/compile/kernels/ref.py::miller_step`.  The branch
+//! rectification — ascending drive can only raise P, descending only lower
+//! it, nothing moves at E = 0 — gives retention and the Fig. 2(c)
+//! hysteresis loop without tracking dE/dt history.
+
+use crate::config::DeviceParams;
+
+/// Branch saturation targets P+-(E), eq. (1): (ascending, descending).
+#[inline]
+pub fn branch_targets(p: &DeviceParams, e_fe: f64) -> (f64, f64) {
+    let s2 = 2.0 * p.sigma_e();
+    let up = p.ps * ((e_fe - p.ec) / s2).tanh();
+    let dn = p.ps * ((e_fe + p.ec) / s2).tanh();
+    (up, dn)
+}
+
+/// One explicit-Euler step of the lagged dynamics:
+/// dP/dt = rectified (P_branch(E) - P) / tau.
+#[inline]
+pub fn step(p: &DeviceParams, pol: f64, v_g: f64, dt: f64) -> f64 {
+    let e_fe = p.kappa_fe * v_g / p.t_fe;
+    let (up, dn) = branch_targets(p, e_fe);
+    let drive_up = if e_fe > 0.0 { (up - pol).max(0.0) } else { 0.0 };
+    let drive_dn = if e_fe < 0.0 { (dn - pol).min(0.0) } else { 0.0 };
+    let next = pol + (drive_up + drive_dn) * (dt / p.tau_fe);
+    next.clamp(-p.ps, p.ps)
+}
+
+/// Relax polarization under a constant gate bias for `steps` x `dt`.
+pub fn relax(p: &DeviceParams, mut pol: f64, v_g: f64, dt: f64, steps: usize) -> f64 {
+    for _ in 0..steps {
+        pol = step(p, pol, v_g, dt);
+    }
+    pol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> DeviceParams {
+        DeviceParams::default()
+    }
+
+    #[test]
+    fn retention_at_zero_bias() {
+        let p = p();
+        let pol = relax(&p, 0.13, 0.0, 1e-6, 1000);
+        assert_eq!(pol, 0.13);
+    }
+
+    #[test]
+    fn set_pulse_switches_up() {
+        let p = p();
+        let pol = relax(&p, -p.p_store * p.ps, p.v_set, 1e-9, 500);
+        assert!(pol > 0.5 * p.pr, "pol={pol}");
+    }
+
+    #[test]
+    fn reset_pulse_switches_down() {
+        let p = p();
+        let pol = relax(&p, p.p_store * p.ps, p.v_reset, 1e-9, 500);
+        assert!(pol < -0.5 * p.pr, "pol={pol}");
+    }
+
+    #[test]
+    fn read_bias_never_flips_lrs() {
+        let p = p();
+        let pol = relax(&p, p.p_store * p.ps, p.v_gread2, 1e-9, 5000);
+        assert!(pol > 0.5 * p.ps, "read disturb flipped LRS: pol={pol}");
+    }
+
+    #[test]
+    fn polarization_bounded() {
+        let p = p();
+        let mut pol = 0.0;
+        for &vg in &[8.0, -8.0, 8.0, -8.0] {
+            pol = relax(&p, pol, vg, 1e-8, 200);
+            assert!(pol.abs() <= p.ps + 1e-12);
+        }
+    }
+
+    #[test]
+    fn hysteresis_loop_area_positive() {
+        let p = p();
+        let n = 200;
+        let mut pol = -p.p_store * p.ps;
+        let sweep: Vec<f64> = (0..n)
+            .map(|i| -5.0 + 10.0 * i as f64 / (n - 1) as f64)
+            .collect();
+        let mut up_curve = Vec::new();
+        for &vg in &sweep {
+            pol = step(&p, pol, vg, 1e-9);
+            up_curve.push(pol);
+        }
+        let mut dn_curve = Vec::new();
+        for &vg in sweep.iter().rev() {
+            pol = step(&p, pol, vg, 1e-9);
+            dn_curve.push(pol);
+        }
+        dn_curve.reverse();
+        let area: f64 = up_curve
+            .iter()
+            .zip(&dn_curve)
+            .map(|(u, d)| u - d)
+            .sum::<f64>()
+            .abs()
+            * 10.0
+            / n as f64;
+        assert!(area > 0.001 * p.ps, "no hysteresis: area={area}");
+    }
+
+    #[test]
+    fn branch_ordering() {
+        // descending branch target >= ascending at any field
+        let p = p();
+        for i in -50..=50 {
+            let e = i as f64 * 1e7;
+            let (up, dn) = branch_targets(&p, e);
+            assert!(dn >= up, "branches crossed at E={e}");
+        }
+    }
+}

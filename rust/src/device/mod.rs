@@ -1,0 +1,17 @@
+//! Behavioral FeFET device model — the Rust mirror of the JAX/Pallas
+//! device physics (`python/compile/kernels/ref.py`).
+//!
+//! The digital fast path (millions of column ops) uses this model directly;
+//! the AOT artifacts executed over PJRT provide the analog ground truth,
+//! and `rust/tests/hlo_cross_validation.rs` pins the two together.
+
+pub mod fefet;
+pub mod fet;
+pub mod lut;
+pub mod miller;
+
+pub use fefet::{
+    cell_current, isl_levels, rbl_step, rbl_transient, senseline_current, vt_of_pol,
+    write_bit, RblTransient,
+};
+pub use lut::CellLut;

@@ -1,0 +1,146 @@
+//! Energy/latency accounting types: the per-component breakdown the paper
+//! plots in Fig. 4(a) / 6(a) / 7(a), and the OpCost (energy x latency)
+//! that every engine result carries.
+
+/// Energy components of one array access, in joules (per word unless
+/// stated otherwise).  Component names follow Fig. 4(a).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Read-bitline charging / recharging.
+    pub rbl: f64,
+    /// Wordline charging/discharging.
+    pub wl: f64,
+    /// Read-current flow + sensing current.
+    pub flow: f64,
+    /// Peripheral circuitry: sense amplifiers + compute module + decoder.
+    pub peripheral: f64,
+    /// Standby leakage attributed to this op (scheme 1 precharged RBLs).
+    pub leakage: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.rbl + self.wl + self.flow + self.peripheral + self.leakage
+    }
+
+    /// RBL share of the total — the "dominant component" statistic.
+    pub fn rbl_fraction(&self) -> f64 {
+        self.rbl / self.total()
+    }
+
+    pub fn add(&self, other: &EnergyBreakdown) -> EnergyBreakdown {
+        EnergyBreakdown {
+            rbl: self.rbl + other.rbl,
+            wl: self.wl + other.wl,
+            flow: self.flow + other.flow,
+            peripheral: self.peripheral + other.peripheral,
+            leakage: self.leakage + other.leakage,
+        }
+    }
+
+    pub fn scale(&self, k: f64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            rbl: self.rbl * k,
+            wl: self.wl * k,
+            flow: self.flow * k,
+            peripheral: self.peripheral * k,
+            leakage: self.leakage * k,
+        }
+    }
+}
+
+/// Energy + latency of one operation; EDP is the figure of merit the
+/// paper's headline claim (23.2%-72.6% decrease) is stated in.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCost {
+    pub energy: EnergyBreakdown,
+    /// Latency in seconds.
+    pub latency: f64,
+}
+
+impl OpCost {
+    pub fn edp(&self) -> f64 {
+        self.energy.total() * self.latency
+    }
+
+    /// Serial composition: energies add, latencies add.
+    pub fn then(&self, next: &OpCost) -> OpCost {
+        OpCost {
+            energy: self.energy.add(&next.energy),
+            latency: self.latency + next.latency,
+        }
+    }
+}
+
+/// Relative improvement metrics of `ours` vs `baseline`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Improvement {
+    /// 1 - E_ours / E_base (positive = we use less energy).
+    pub energy_decrease: f64,
+    /// t_base / t_ours.
+    pub speedup: f64,
+    /// 1 - EDP_ours / EDP_base.
+    pub edp_decrease: f64,
+}
+
+impl Improvement {
+    pub fn of(ours: &OpCost, baseline: &OpCost) -> Self {
+        Self {
+            energy_decrease: 1.0 - ours.energy.total() / baseline.energy.total(),
+            speedup: baseline.latency / ours.latency,
+            edp_decrease: 1.0 - ours.edp() / baseline.edp(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bd(rbl: f64) -> EnergyBreakdown {
+        EnergyBreakdown { rbl, wl: 1.0, flow: 2.0, peripheral: 3.0, leakage: 0.0 }
+    }
+
+    #[test]
+    fn total_and_fraction() {
+        let b = bd(94.0);
+        assert_eq!(b.total(), 100.0);
+        assert_eq!(b.rbl_fraction(), 0.94);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let b = bd(4.0).add(&bd(4.0));
+        assert_eq!(b.total(), 20.0);
+        assert_eq!(b.scale(0.5).total(), 10.0);
+    }
+
+    #[test]
+    fn edp_and_composition() {
+        let a = OpCost { energy: bd(4.0), latency: 2.0 };
+        let b = OpCost { energy: bd(14.0), latency: 3.0 };
+        assert_eq!(a.edp(), 20.0);
+        let c = a.then(&b);
+        assert_eq!(c.latency, 5.0);
+        assert_eq!(c.energy.total(), 30.0);
+    }
+
+    #[test]
+    fn improvement_identity() {
+        let a = OpCost { energy: bd(4.0), latency: 2.0 };
+        let imp = Improvement::of(&a, &a);
+        assert!(imp.energy_decrease.abs() < 1e-12);
+        assert!((imp.speedup - 1.0).abs() < 1e-12);
+        assert!(imp.edp_decrease.abs() < 1e-12);
+    }
+
+    #[test]
+    fn improvement_math() {
+        let ours = OpCost { energy: bd(4.0), latency: 1.0 };
+        let base = OpCost { energy: bd(14.0), latency: 2.0 };
+        let imp = Improvement::of(&ours, &base);
+        assert!((imp.energy_decrease - 0.5).abs() < 1e-12);
+        assert!((imp.speedup - 2.0).abs() < 1e-12);
+        assert!((imp.edp_decrease - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! Calibrated energy / latency / EDP model (paper Figs. 4-7).
+//!
+//! See `constants.rs` for the calibration derivation and DESIGN.md §6 for
+//! the methodology: physical C·V² terms where the paper gives physics,
+//! paper-pinned constants where it gives only relative numbers.
+
+pub mod breakdown;
+pub mod constants;
+pub mod model;
+
+pub use breakdown::{EnergyBreakdown, Improvement, OpCost};
+pub use model::EnergyModel;

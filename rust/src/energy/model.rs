@@ -1,0 +1,404 @@
+//! The calibrated energy/latency model.
+//!
+//! All public costs are **per word** (word_bits columns).  The RBL and WL
+//! terms are physical (C V^2 with the configured per-cell capacitances);
+//! the flow / periphery / near-memory terms carry the calibration
+//! constants documented in `constants.rs`.
+
+use super::breakdown::{EnergyBreakdown, OpCost};
+use super::constants as k;
+use crate::config::{SensingScheme, SimConfig};
+
+/// Energy/latency model bound to one array configuration.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    cfg: SimConfig,
+}
+
+impl EnergyModel {
+    pub fn new(cfg: &SimConfig) -> Self {
+        Self { cfg: cfg.clone() }
+    }
+
+    pub fn cfg(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    #[inline]
+    fn nscale(&self) -> f64 {
+        self.cfg.rows as f64 / k::REF_ROWS
+    }
+
+    /// Per-column RBL capacitance (F).
+    #[inline]
+    fn c_rbl(&self) -> f64 {
+        self.cfg.c_rbl()
+    }
+
+    /// Wordline charge energy per column share for `n_wl` asserted rows.
+    #[inline]
+    fn e_wl_col(&self, n_wl: f64, vg: f64) -> f64 {
+        n_wl * self.cfg.device.c_wl_cell * vg * vg
+    }
+
+    fn w(&self) -> f64 {
+        self.cfg.word_bits as f64
+    }
+
+    // ---- latency primitives ------------------------------------------------
+
+    /// Standard read latency at this array size.
+    pub fn t_read(&self) -> f64 {
+        k::T_FIX + k::T_VAR_1024 * self.nscale()
+    }
+
+    /// Near-memory transfer+compute latency (baseline path).
+    pub fn t_near(&self) -> f64 {
+        k::T_NEAR_1024 * self.nscale()
+    }
+
+    /// ADRA CiM latency for the configured scheme.
+    pub fn t_cim(&self) -> f64 {
+        let ns = self.nscale();
+        match self.cfg.scheme {
+            SensingScheme::Current => self.t_read() + k::T_CIM_EXTRA_CUR,
+            SensingScheme::VoltagePrecharged => {
+                k::T_FIX + k::T_CIM_EXTRA_V1 + k::K_DISCHARGE_V1 * k::T_VAR_1024 * ns
+            }
+            SensingScheme::VoltageDischarged => {
+                self.t_read() + k::T_CIM_EXTRA_V2_FIX + k::T_CIM_EXTRA_V2_VAR_1024 * ns
+            }
+        }
+    }
+
+    // ---- per-word energy costs ---------------------------------------------
+
+    /// One standard memory read (single row, word_bits columns).
+    pub fn read_cost(&self) -> OpCost {
+        let d = &self.cfg.device;
+        let ns = self.nscale();
+        let w = self.w();
+        let (rbl_col, flow_col, periph_col) = match self.cfg.scheme {
+            SensingScheme::Current => (
+                self.c_rbl() * d.v_read * d.v_read,
+                k::FLOW_READ_1024 * ns,
+                k::E_SA_CUR + k::E_DECODE,
+            ),
+            SensingScheme::VoltagePrecharged => (
+                self.c_rbl() * d.vdd * k::SWING_READ_V1,
+                0.0, // discharge-limited; flow folded into the swing
+                k::F_READ_V1,
+            ),
+            SensingScheme::VoltageDischarged => (
+                self.c_rbl() * d.vdd * d.vdd,
+                0.0,
+                k::F_READ_V2,
+            ),
+        };
+        OpCost {
+            energy: EnergyBreakdown {
+                rbl: rbl_col * w,
+                wl: self.e_wl_col(1.0, d.v_gread2) * w,
+                flow: flow_col * w,
+                peripheral: periph_col * w,
+                leakage: 0.0,
+            },
+            latency: self.t_read(),
+        }
+    }
+
+    /// One ADRA CiM access (asymmetric dual-row activation + 3 SAs +
+    /// compute module), per word.  This covers read2 / any Boolean fn /
+    /// one add-or-subtract stage — they share the access; only the
+    /// near-zero compute-module select differs.
+    pub fn cim_cost(&self) -> OpCost {
+        let d = &self.cfg.device;
+        let ns = self.nscale();
+        let w = self.w();
+        let (rbl_col, flow_col, periph_col) = match self.cfg.scheme {
+            SensingScheme::Current => (
+                self.c_rbl() * d.v_read * d.v_read,
+                k::FLOW_CIM_1024 * ns,
+                3.0 * k::E_SA_CUR + k::E_CM_CUR + k::E_DECODE,
+            ),
+            SensingScheme::VoltagePrecharged => (
+                self.c_rbl() * d.vdd * k::SWING_CIM_V1,
+                0.0,
+                k::F_CIM_V1,
+            ),
+            SensingScheme::VoltageDischarged => (
+                self.c_rbl() * d.vdd * d.vdd,
+                0.0,
+                k::F_CIM_V2,
+            ),
+        };
+        let wl = (self.e_wl_col(1.0, d.v_gread1) + self.e_wl_col(1.0, d.v_gread2)) * w;
+        OpCost {
+            energy: EnergyBreakdown {
+                rbl: rbl_col * w,
+                wl,
+                flow: flow_col * w,
+                peripheral: periph_col * w,
+                leakage: 0.0,
+            },
+            latency: self.t_cim(),
+        }
+    }
+
+    /// Baseline non-commutative op (paper's comparison point): two full
+    /// reads + near-memory compute, per word.
+    pub fn baseline_cost(&self) -> OpCost {
+        let ns = self.nscale();
+        let w = self.w();
+        let near_col = match self.cfg.scheme {
+            SensingScheme::Current => k::E_NEAR_CUR_1024,
+            SensingScheme::VoltagePrecharged => k::E_NEAR_V1_1024,
+            SensingScheme::VoltageDischarged => k::E_NEAR_V2_1024,
+        } * ns;
+        let read = self.read_cost();
+        let two_reads = OpCost {
+            energy: read.energy.scale(2.0),
+            latency: 2.0 * read.latency,
+        };
+        let near = OpCost {
+            energy: EnergyBreakdown {
+                peripheral: near_col * w,
+                ..EnergyBreakdown::default()
+            },
+            latency: self.t_near(),
+        };
+        two_reads.then(&near)
+    }
+
+    /// One behavioral write (word).
+    pub fn write_cost(&self) -> OpCost {
+        let d = &self.cfg.device;
+        let w = self.w();
+        // write drives the WL to V_SET / |V_RESET| and the write path
+        OpCost {
+            energy: EnergyBreakdown {
+                rbl: self.c_rbl() * d.vdd * d.vdd * w,
+                wl: self.e_wl_col(1.0, d.v_set.abs().max(d.v_reset.abs())) * w,
+                flow: 0.0,
+                peripheral: (k::E_DECODE + 2.0e-15) * w,
+                leakage: 0.0,
+            },
+            latency: k::T_WRITE,
+        }
+    }
+
+    // ---- Fig. 5 analyses ---------------------------------------------------
+
+    /// Standby leakage power (W) of one precharged column (scheme 1 only).
+    pub fn leak_power_col(&self) -> f64 {
+        self.cfg.rows as f64 * k::I_LEAK_CELL * self.cfg.device.vdd
+    }
+
+    /// Per-op energy at a given CiM issue frequency, charging scheme-1 ops
+    /// with the standby leakage of the whole row's RBLs between ops
+    /// (Fig. 5(a)).  `scheme` selects which policy to evaluate.
+    pub fn cim_energy_at_frequency(&self, scheme: SensingScheme, freq: f64) -> f64 {
+        let mut m = self.clone();
+        m.cfg.scheme = scheme;
+        let e_op = m.cim_cost().energy.total();
+        match scheme {
+            SensingScheme::VoltagePrecharged => {
+                e_op + self.w() * self.leak_power_col() / freq
+            }
+            _ => e_op,
+        }
+    }
+
+    /// Half-selected (pseudo-CiM) recharge energy per column, scheme 1.
+    pub fn e_halfselect_col(&self) -> f64 {
+        self.c_rbl() * self.cfg.device.vdd * k::V_PSEUDO_AVG
+    }
+
+    /// Total energy of one row activation computing on a fraction
+    /// `parallelism` of the row's words (Fig. 5(b)).
+    pub fn row_activation_energy(&self, scheme: SensingScheme, parallelism: f64) -> f64 {
+        let mut m = self.clone();
+        m.cfg.scheme = scheme;
+        let words = self.cfg.words_per_row() as f64;
+        let n_cim = (words * parallelism).max(1.0);
+        let e_cim_word = m.cim_cost().energy.total();
+        match scheme {
+            SensingScheme::VoltagePrecharged => {
+                // every word shares the asserted WLs; unselected words
+                // pseudo-discharge and must be recharged
+                let n_half = words - n_cim;
+                n_cim * e_cim_word + n_half * self.w() * self.e_halfselect_col()
+            }
+            _ => n_cim * e_cim_word,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::energy::breakdown::Improvement;
+
+    fn model(n: usize, s: SensingScheme) -> EnergyModel {
+        EnergyModel::new(&SimConfig::square(n, s))
+    }
+
+    // ---- Fig. 4: current sensing -------------------------------------------
+
+    #[test]
+    fn fig4_read_rbl_share_91pct() {
+        let m = model(1024, SensingScheme::Current);
+        let frac = m.read_cost().energy.rbl_fraction();
+        assert!((frac - 0.91).abs() < 0.01, "RBL share {frac}");
+    }
+
+    #[test]
+    fn fig4_cim_is_1_24x_read() {
+        let m = model(1024, SensingScheme::Current);
+        let ratio = m.cim_cost().energy.total() / m.read_cost().energy.total();
+        assert!((ratio - 1.24).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig4_cim_rbl_share_74pct() {
+        let m = model(1024, SensingScheme::Current);
+        let frac = m.cim_cost().energy.rbl_fraction();
+        assert!((frac - 0.74).abs() < 0.02, "CiM RBL share {frac}");
+    }
+
+    #[test]
+    fn fig4_headline_at_1024() {
+        let m = model(1024, SensingScheme::Current);
+        let imp = Improvement::of(&m.cim_cost(), &m.baseline_cost());
+        assert!((imp.energy_decrease - 0.4118).abs() < 0.005, "{imp:?}");
+        assert!((imp.speedup - 1.94).abs() < 0.02, "{imp:?}");
+        assert!((imp.edp_decrease - 0.6904).abs() < 0.015, "{imp:?}");
+    }
+
+    #[test]
+    fn fig4_benefits_increase_with_array_size() {
+        let mut last_e = 0.0;
+        let mut last_s = 0.0;
+        for n in [256usize, 512, 1024] {
+            let m = model(n, SensingScheme::Current);
+            let imp = Improvement::of(&m.cim_cost(), &m.baseline_cost());
+            assert!(imp.energy_decrease > last_e, "n={n}");
+            assert!(imp.speedup > last_s, "n={n}");
+            last_e = imp.energy_decrease;
+            last_s = imp.speedup;
+        }
+    }
+
+    // ---- Fig. 6: voltage scheme 1 ------------------------------------------
+
+    #[test]
+    fn fig6_cim_rbl_is_3x_read_rbl() {
+        let m = model(1024, SensingScheme::VoltagePrecharged);
+        let ratio = m.cim_cost().energy.rbl / m.read_cost().energy.rbl;
+        assert!((ratio - 3.0).abs() < 1e-9, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig6_energy_overhead_20_to_23pct() {
+        for (n, lo, hi) in [(256usize, 0.18, 0.22), (1024, 0.21, 0.25)] {
+            let m = model(n, SensingScheme::VoltagePrecharged);
+            let imp = Improvement::of(&m.cim_cost(), &m.baseline_cost());
+            let overhead = -imp.energy_decrease;
+            assert!(overhead > lo && overhead < hi, "n={n} overhead {overhead}");
+        }
+    }
+
+    #[test]
+    fn fig6_speedup_and_edp_band() {
+        let m256 = model(256, SensingScheme::VoltagePrecharged);
+        let m1024 = model(1024, SensingScheme::VoltagePrecharged);
+        let i256 = Improvement::of(&m256.cim_cost(), &m256.baseline_cost());
+        let i1024 = Improvement::of(&m1024.cim_cost(), &m1024.baseline_cost());
+        assert!((i256.speedup - 1.57).abs() < 0.03, "{i256:?}");
+        assert!((i1024.speedup - 1.73).abs() < 0.03, "{i1024:?}");
+        assert!((i256.edp_decrease - 0.2326).abs() < 0.02, "{i256:?}");
+        assert!((i1024.edp_decrease - 0.2881).abs() < 0.02, "{i1024:?}");
+    }
+
+    // ---- Fig. 7: voltage scheme 2 ------------------------------------------
+
+    #[test]
+    fn fig7_bands() {
+        let m256 = model(256, SensingScheme::VoltageDischarged);
+        let m1024 = model(1024, SensingScheme::VoltageDischarged);
+        let i256 = Improvement::of(&m256.cim_cost(), &m256.baseline_cost());
+        let i1024 = Improvement::of(&m1024.cim_cost(), &m1024.baseline_cost());
+        assert!((i256.energy_decrease - 0.355).abs() < 0.02, "{i256:?}");
+        assert!((i1024.energy_decrease - 0.458).abs() < 0.02, "{i1024:?}");
+        assert!((i256.speedup - 1.945).abs() < 0.02, "{i256:?}");
+        assert!((i1024.speedup - 1.983).abs() < 0.02, "{i1024:?}");
+        assert!((i256.edp_decrease - 0.6683).abs() < 0.02, "{i256:?}");
+        assert!((i1024.edp_decrease - 0.726).abs() < 0.02, "{i1024:?}");
+    }
+
+    #[test]
+    fn fig7_rbl_dominates_both_read_and_cim() {
+        let m = model(1024, SensingScheme::VoltageDischarged);
+        assert!(m.read_cost().energy.rbl_fraction() > 0.8);
+        assert!(m.cim_cost().energy.rbl_fraction() > 0.8);
+    }
+
+    // ---- Fig. 5 crossovers --------------------------------------------------
+
+    #[test]
+    fn fig5a_frequency_crossover_near_7_53mhz() {
+        let m = model(1024, SensingScheme::VoltagePrecharged);
+        // binary search the crossover frequency
+        let (mut lo, mut hi): (f64, f64) = (1e5, 1e9);
+        for _ in 0..60 {
+            let mid = (lo * hi).sqrt();
+            let e1 = m.cim_energy_at_frequency(SensingScheme::VoltagePrecharged, mid);
+            let e2 = m.cim_energy_at_frequency(SensingScheme::VoltageDischarged, mid);
+            if e1 > e2 {
+                lo = mid; // scheme 1 still worse -> crossover above
+            } else {
+                hi = mid;
+            }
+        }
+        let f = (lo * hi).sqrt();
+        assert!((f - 7.53e6).abs() / 7.53e6 < 0.05, "crossover {f}");
+    }
+
+    #[test]
+    fn fig5b_parallelism_crossover_near_42pct() {
+        let m = model(1024, SensingScheme::VoltagePrecharged);
+        let (mut lo, mut hi) = (1.0 / 32.0, 1.0);
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            let e1 = m.row_activation_energy(SensingScheme::VoltagePrecharged, mid);
+            let e2 = m.row_activation_energy(SensingScheme::VoltageDischarged, mid);
+            if e1 > e2 {
+                lo = mid; // scheme 1 still worse (half-select dominated)
+            } else {
+                hi = mid;
+            }
+        }
+        let p = 0.5 * (lo + hi);
+        assert!((p - 0.42).abs() < 0.04, "crossover P {p}");
+    }
+
+    #[test]
+    fn leakage_only_charged_to_scheme1() {
+        let m = model(1024, SensingScheme::Current);
+        let e_hi = m.cim_energy_at_frequency(SensingScheme::VoltageDischarged, 1e6);
+        let e_lo = m.cim_energy_at_frequency(SensingScheme::VoltageDischarged, 1e9);
+        assert_eq!(e_hi, e_lo);
+        let s1_hi = m.cim_energy_at_frequency(SensingScheme::VoltagePrecharged, 1e9);
+        let s1_lo = m.cim_energy_at_frequency(SensingScheme::VoltagePrecharged, 1e6);
+        assert!(s1_lo > s1_hi);
+    }
+
+    #[test]
+    fn write_cost_is_positive_and_slow() {
+        let m = model(1024, SensingScheme::Current);
+        let w = m.write_cost();
+        assert!(w.energy.total() > 0.0);
+        assert!(w.latency > m.read_cost().latency);
+    }
+}

@@ -1,0 +1,67 @@
+//! Fig. 1(b)/(c): the prior-work *symmetric* activation — reference
+//! currents and the I_SL table showing the many-to-one mapping
+//! ((0,1) and (1,0) indistinguishable).
+
+use crate::config::DeviceParams;
+use crate::device;
+use crate::sensing::CurrentRefs;
+use crate::util::table::{fmt_si, Table};
+
+/// (label, I_SL) rows of Fig. 1(c) plus the two references of Fig. 1(b).
+pub struct Fig1Data {
+    pub rows: Vec<(&'static str, f64)>,
+    pub i_ref_or: f64,
+    pub i_ref_and: f64,
+    /// |I_SL(0,1) - I_SL(1,0)| — zero is the mapping problem.
+    pub ambiguity_gap: f64,
+}
+
+pub fn fig1_table(p: &DeviceParams) -> Fig1Data {
+    let vg = p.v_gread2; // both wordlines at the same V_GREAD
+    let l = device::isl_levels(p, vg, vg);
+    let refs = CurrentRefs::derive(p, vg, vg);
+    Fig1Data {
+        rows: vec![
+            ("(A,B)=(0,0)", l[0b00]),
+            ("(A,B)=(0,1)", l[0b01]),
+            ("(A,B)=(1,0)", l[0b10]),
+            ("(A,B)=(1,1)", l[0b11]),
+        ],
+        i_ref_or: refs.i_ref_or,
+        i_ref_and: refs.i_ref_and,
+        ambiguity_gap: (l[0b01] - l[0b10]).abs(),
+    }
+}
+
+pub fn print_fig1(p: &DeviceParams) {
+    let d = fig1_table(p);
+    let mut t = Table::new(&["input vector", "I_SL"])
+        .with_title("Fig 1(c): symmetric dual-row activation (prior work)");
+    for (label, isl) in &d.rows {
+        t.row(&[label.to_string(), fmt_si(*isl, "A")]);
+    }
+    t.print();
+    println!("Fig 1(b) references: I_REF-OR = {}, I_REF-AND = {}",
+             fmt_si(d.i_ref_or, "A"), fmt_si(d.i_ref_and, "A"));
+    println!(
+        "many-to-one mapping: |I(0,1) - I(1,0)| = {} -> single-cycle \
+         subtraction impossible\n",
+        fmt_si(d.ambiguity_gap, "A")
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_mapping_is_ambiguous() {
+        let d = fig1_table(&DeviceParams::default());
+        let i01 = d.rows[1].1;
+        let i10 = d.rows[2].1;
+        assert!(d.ambiguity_gap / i01.max(i10) < 1e-9);
+        // but three levels still separate OR and AND
+        assert!(d.rows[0].1 < d.i_ref_or && d.i_ref_or < i01);
+        assert!(i01 < d.i_ref_and && d.i_ref_and < d.rows[3].1);
+    }
+}

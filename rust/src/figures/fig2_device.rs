@@ -1,0 +1,112 @@
+//! Fig. 2(b)/(c): the FeFET simulation parameters and the calibrated
+//! I_D-V_G hysteresis curve.  The curve comes from the behavioral model;
+//! `adra validate` additionally regenerates it through the `iv_sweep`
+//! AOT artifact over PJRT and cross-checks the two.
+
+use crate::config::DeviceParams;
+use crate::device;
+use crate::util::table::{fmt_si, Table};
+
+/// One point of the I-V sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct IvPoint {
+    pub v_g: f64,
+    pub i_d: f64,
+    pub pol: f64,
+}
+
+/// Triangular +-5 V sweep of `n` points; returns up + down branches.
+pub fn fig2_iv_curve(p: &DeviceParams, n: usize) -> Vec<IvPoint> {
+    let vg_at = |i: usize| -> f64 {
+        let half = n / 2;
+        if i < half {
+            -5.0 + 10.0 * i as f64 / (half - 1) as f64
+        } else {
+            5.0 - 10.0 * (i - half) as f64 / (n - half - 1) as f64
+        }
+    };
+    let dwell = p.t_step * 50.0;
+    let mut pol = -p.p_store * p.ps;
+    (0..n)
+        .map(|i| {
+            let v_g = vg_at(i);
+            pol = device::miller::step(p, pol, v_g, dwell);
+            let i_d = device::cell_current(p, v_g, 0.05, pol, 0.0);
+            IvPoint { v_g, i_d, pol }
+        })
+        .collect()
+}
+
+pub fn print_fig2(p: &DeviceParams) {
+    let mut t = Table::new(&["parameter", "value"])
+        .with_title("Fig 2(b): FeFET simulation parameters");
+    let rows: Vec<(&str, String)> = vec![
+        ("T_FE", fmt_si(p.t_fe, "m")),
+        ("P_S", format!("{:.0} uC/cm^2", p.ps * 100.0)),
+        ("P_R", format!("{:.0} uC/cm^2", p.pr * 100.0)),
+        ("E_C", format!("{:.1} MV/cm", p.ec / 1e8)),
+        ("eps_FE", format!("{:.0}", p.eps_fe)),
+        ("tau_FE", fmt_si(p.tau_fe, "s")),
+        ("VT0 (mid)", format!("{:.2} V", p.vt0)),
+        ("memory window", format!("{:.2} V", p.dvt_mw)),
+        ("V_READ", format!("{:.2} V", p.v_read)),
+        ("V_GREAD1", format!("{:.2} V", p.v_gread1)),
+        ("V_GREAD2", format!("{:.2} V", p.v_gread2)),
+        ("V_SET", format!("{:.2} V", p.v_set)),
+        ("V_RESET", format!("{:.2} V", p.v_reset)),
+    ];
+    for (k, v) in rows {
+        t.row(&[k.to_string(), v]);
+    }
+    t.print();
+
+    let curve = fig2_iv_curve(p, 64);
+    let mut t2 = Table::new(&["V_G", "I_D (up/down)", "P"])
+        .with_title("Fig 2(c): I_D-V_G hysteresis (16-point summary)");
+    for pt in curve.iter().step_by(4) {
+        t2.row(&[
+            format!("{:+.2} V", pt.v_g),
+            fmt_si(pt.i_d, "A"),
+            format!("{:+.3} C/m^2", pt.pol),
+        ]);
+    }
+    t2.print();
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hysteresis_branches_differ_at_zero_crossing() {
+        let p = DeviceParams::default();
+        let curve = fig2_iv_curve(&p, 256);
+        // find the up-branch and down-branch polarization near V_G = 0.5
+        let up = curve[..128].iter().min_by(|a, b| {
+            (a.v_g - 0.5).abs().partial_cmp(&(b.v_g - 0.5).abs()).unwrap()
+        });
+        let dn = curve[128..].iter().min_by(|a, b| {
+            (a.v_g - 0.5).abs().partial_cmp(&(b.v_g - 0.5).abs()).unwrap()
+        });
+        let (up, dn) = (up.unwrap(), dn.unwrap());
+        assert!(
+            (dn.pol - up.pol) > 0.2 * p.pr,
+            "no loop: up {} dn {}",
+            up.pol,
+            dn.pol
+        );
+        // the current window follows the polarization window
+        assert!(dn.i_d > up.i_d);
+    }
+
+    #[test]
+    fn currents_nonnegative_and_bounded() {
+        let p = DeviceParams::default();
+        for pt in fig2_iv_curve(&p, 128) {
+            assert!(pt.i_d >= 0.0);
+            assert!(pt.i_d < 1e-3);
+            assert!(pt.pol.abs() <= p.ps + 1e-12);
+        }
+    }
+}

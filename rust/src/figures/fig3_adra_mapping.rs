@@ -1,0 +1,73 @@
+//! Fig. 3(b)/(c): ADRA's asymmetric activation — the four distinct I_SL
+//! levels, the three sense-amplifier references, and the sense margins.
+
+use crate::config::DeviceParams;
+use crate::device;
+use crate::sensing::{CurrentRefs, MarginReport};
+use crate::util::table::{fmt_si, Table};
+
+pub struct Fig3Data {
+    pub rows: Vec<(&'static str, f64)>,
+    pub refs: CurrentRefs,
+    pub margins: MarginReport,
+}
+
+pub fn fig3_table(p: &DeviceParams) -> Fig3Data {
+    let l = device::isl_levels(p, p.v_gread1, p.v_gread2);
+    Fig3Data {
+        rows: vec![
+            ("(A,B)=(0,0)", l[0b00]),
+            ("(A,B)=(1,0)", l[0b10]),
+            ("(A,B)=(0,1)", l[0b01]),
+            ("(A,B)=(1,1)", l[0b11]),
+        ],
+        refs: CurrentRefs::derive(p, p.v_gread1, p.v_gread2),
+        margins: MarginReport::evaluate(p, p.v_gread1, p.v_gread2, 1024.0 * p.c_rbl_cell),
+    }
+}
+
+pub fn print_fig3(p: &DeviceParams) {
+    let d = fig3_table(p);
+    let mut t = Table::new(&["input vector", "I_SL"]).with_title(format!(
+        "Fig 3(c): ADRA asymmetric activation (V_GREAD1={} V, V_GREAD2={} V)",
+        p.v_gread1, p.v_gread2
+    ));
+    for (label, isl) in &d.rows {
+        t.row(&[label.to_string(), fmt_si(*isl, "A")]);
+    }
+    t.print();
+    println!(
+        "Fig 3(b) references: I_REF-OR = {}, I_REF-B = {}, I_REF-AND = {}",
+        fmt_si(d.refs.i_ref_or, "A"),
+        fmt_si(d.refs.i_ref_b, "A"),
+        fmt_si(d.refs.i_ref_and, "A")
+    );
+    println!(
+        "one-to-one mapping: {} | current margin {} (>1 uA: {}) | voltage \
+         margin {} (>50 mV: {})\n",
+        d.margins.one_to_one,
+        fmt_si(d.margins.current_margin, "A"),
+        d.margins.current_margin > 1e-6,
+        fmt_si(d.margins.voltage_margin, "V"),
+        d.margins.voltage_margin > 0.050
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_levels_ascending_with_references_between() {
+        let d = fig3_table(&DeviceParams::default());
+        let vals: Vec<f64> = d.rows.iter().map(|r| r.1).collect();
+        // table rows are printed in ascending I_SL order: 00, 10, 01, 11
+        for w in vals.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(vals[0] < d.refs.i_ref_or && d.refs.i_ref_or < vals[1]);
+        assert!(vals[1] < d.refs.i_ref_b && d.refs.i_ref_b < vals[2]);
+        assert!(vals[2] < d.refs.i_ref_and && d.refs.i_ref_and < vals[3]);
+        assert!(d.margins.meets_paper_targets());
+    }
+}

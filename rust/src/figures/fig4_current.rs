@@ -1,0 +1,115 @@
+//! Fig. 4: current-based sensing — (a) the per-word energy decomposition
+//! at 1024x1024, (b) energy decrease and (c) speedup vs array size,
+//! ADRA CiM against the two-read near-memory baseline.
+
+use crate::config::{SensingScheme, SimConfig};
+use crate::energy::{EnergyModel, Improvement};
+use crate::util::table::{fmt_pct, fmt_si, Table};
+
+use super::ARRAY_SIZES;
+
+/// One array-size point of the Fig. 4(b)/(c) sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig4Row {
+    pub size: usize,
+    pub improvement: Improvement,
+    pub cim_over_read: f64,
+}
+
+/// Sweep for the configured scheme (Fig. 4 uses Current; Figs. 6/7 reuse
+/// this shape through `fig67_voltage`).
+pub fn fig4_sweep(scheme: SensingScheme) -> Vec<Fig4Row> {
+    ARRAY_SIZES
+        .iter()
+        .map(|&size| {
+            let m = EnergyModel::new(&SimConfig::square(size, scheme));
+            Fig4Row {
+                size,
+                improvement: Improvement::of(&m.cim_cost(), &m.baseline_cost()),
+                cim_over_read: m.cim_cost().energy.total() / m.read_cost().energy.total(),
+            }
+        })
+        .collect()
+}
+
+pub(crate) fn print_components(scheme: SensingScheme, title: &str) {
+    let m = EnergyModel::new(&SimConfig::square(1024, scheme));
+    let read = m.read_cost();
+    let cim = m.cim_cost();
+    let base = m.baseline_cost();
+    let mut t = Table::new(&["component", "read", "ADRA CiM", "baseline (2R+NM)"])
+        .with_title(title.to_string());
+    let rows: Vec<(&str, f64, f64, f64)> = vec![
+        ("RBL charge", read.energy.rbl, cim.energy.rbl, base.energy.rbl),
+        ("WL charge", read.energy.wl, cim.energy.wl, base.energy.wl),
+        ("current flow+sense", read.energy.flow, cim.energy.flow, base.energy.flow),
+        ("peripheral", read.energy.peripheral, cim.energy.peripheral, base.energy.peripheral),
+        (
+            "TOTAL",
+            read.energy.total(),
+            cim.energy.total(),
+            base.energy.total(),
+        ),
+    ];
+    for (k, r, c, b) in rows {
+        t.row(&[k.to_string(), fmt_si(r, "J"), fmt_si(c, "J"), fmt_si(b, "J")]);
+    }
+    t.print();
+    println!(
+        "read RBL share {} | CiM RBL share {} | CiM/read = {:.3}x\n",
+        fmt_pct(read.energy.rbl_fraction()),
+        fmt_pct(cim.energy.rbl_fraction()),
+        cim.energy.total() / read.energy.total()
+    );
+}
+
+pub(crate) fn print_sweep(scheme: SensingScheme, title: &str) {
+    let mut t = Table::new(&["array size", "energy decrease", "speedup", "EDP decrease"])
+        .with_title(title.to_string());
+    for row in fig4_sweep(scheme) {
+        t.row(&[
+            format!("{0}x{0}", row.size),
+            fmt_pct(row.improvement.energy_decrease),
+            format!("{:.3}x", row.improvement.speedup),
+            fmt_pct(row.improvement.edp_decrease),
+        ]);
+    }
+    t.print();
+    println!();
+}
+
+pub fn print_fig4() {
+    print_components(
+        SensingScheme::Current,
+        "Fig 4(a): energy components per 32-bit word, 1024x1024, current sensing",
+    );
+    print_sweep(
+        SensingScheme::Current,
+        "Fig 4(b)/(c): ADRA vs near-memory baseline, current sensing",
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_matches_paper_at_1024() {
+        let rows = fig4_sweep(SensingScheme::Current);
+        let last = rows.last().unwrap();
+        assert_eq!(last.size, 1024);
+        assert!((last.improvement.energy_decrease - 0.4118).abs() < 0.005);
+        assert!((last.improvement.speedup - 1.94).abs() < 0.02);
+        assert!((last.cim_over_read - 1.24).abs() < 0.01);
+    }
+
+    #[test]
+    fn benefits_monotone_in_size() {
+        let rows = fig4_sweep(SensingScheme::Current);
+        for w in rows.windows(2) {
+            assert!(w[1].improvement.energy_decrease > w[0].improvement.energy_decrease);
+            assert!(w[1].improvement.speedup > w[0].improvement.speedup);
+            assert!(w[1].improvement.edp_decrease > w[0].improvement.edp_decrease);
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Fig. 5: voltage-sensing scheme 1 vs scheme 2 — (a) energy per CiM op
+//! vs operation frequency (leakage trade-off) and (b) vs parallelism P
+//! (half-select trade-off), with the crossover points.
+
+use crate::config::{SensingScheme, SimConfig};
+use crate::energy::EnergyModel;
+use crate::util::table::{fmt_si, Table};
+
+/// One frequency point: (freq, E_scheme1, E_scheme2) per word op.
+pub fn fig5a_sweep(size: usize) -> Vec<(f64, f64, f64)> {
+    let m = EnergyModel::new(&SimConfig::square(size, SensingScheme::VoltagePrecharged));
+    let freqs = [0.5e6, 1e6, 2e6, 4e6, 7.53e6, 16e6, 32e6, 64e6, 128e6];
+    freqs
+        .iter()
+        .map(|&f| {
+            (
+                f,
+                m.cim_energy_at_frequency(SensingScheme::VoltagePrecharged, f),
+                m.cim_energy_at_frequency(SensingScheme::VoltageDischarged, f),
+            )
+        })
+        .collect()
+}
+
+/// One parallelism point: (P, E_scheme1, E_scheme2) per row activation.
+pub fn fig5b_sweep(size: usize) -> Vec<(f64, f64, f64)> {
+    let m = EnergyModel::new(&SimConfig::square(size, SensingScheme::VoltagePrecharged));
+    (1..=16)
+        .map(|i| {
+            let p = i as f64 / 16.0;
+            (
+                p,
+                m.row_activation_energy(SensingScheme::VoltagePrecharged, p),
+                m.row_activation_energy(SensingScheme::VoltageDischarged, p),
+            )
+        })
+        .collect()
+}
+
+/// Find the scheme1/scheme2 crossover frequency by bisection.
+pub fn crossover_frequency(size: usize) -> f64 {
+    let m = EnergyModel::new(&SimConfig::square(size, SensingScheme::VoltagePrecharged));
+    let (mut lo, mut hi): (f64, f64) = (1e5, 1e9);
+    for _ in 0..60 {
+        let mid = (lo * hi).sqrt();
+        let e1 = m.cim_energy_at_frequency(SensingScheme::VoltagePrecharged, mid);
+        let e2 = m.cim_energy_at_frequency(SensingScheme::VoltageDischarged, mid);
+        if e1 > e2 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    (lo * hi).sqrt()
+}
+
+/// Find the parallelism crossover by bisection.
+pub fn crossover_parallelism(size: usize) -> f64 {
+    let m = EnergyModel::new(&SimConfig::square(size, SensingScheme::VoltagePrecharged));
+    let (mut lo, mut hi): (f64, f64) = (1.0 / 64.0, 1.0);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        let e1 = m.row_activation_energy(SensingScheme::VoltagePrecharged, mid);
+        let e2 = m.row_activation_energy(SensingScheme::VoltageDischarged, mid);
+        if e1 > e2 {
+            lo = mid; // scheme 1 still worse (half-select dominated)
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+pub fn print_fig5() {
+    let mut t = Table::new(&["CiM frequency", "scheme 1 (precharged)", "scheme 2 (discharged)"])
+        .with_title("Fig 5(a): energy per CiM op vs frequency, 1024x1024");
+    for (f, e1, e2) in fig5a_sweep(1024) {
+        t.row(&[fmt_si(f, "Hz"), fmt_si(e1, "J"), fmt_si(e2, "J")]);
+    }
+    t.print();
+    println!(
+        "crossover: {} (paper: 7.53 MHz)\n",
+        fmt_si(crossover_frequency(1024), "Hz")
+    );
+
+    let mut t2 = Table::new(&["parallelism P", "scheme 1", "scheme 2"])
+        .with_title("Fig 5(b): energy per row activation vs parallelism, 1024x1024");
+    for (p, e1, e2) in fig5b_sweep(1024) {
+        t2.row(&[format!("{:.3}", p), fmt_si(e1, "J"), fmt_si(e2, "J")]);
+    }
+    t2.print();
+    println!(
+        "crossover: P = {:.3} (paper: ~0.42)\n",
+        crossover_parallelism(1024)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme2_flat_scheme1_falls_with_frequency() {
+        let sweep = fig5a_sweep(1024);
+        for w in sweep.windows(2) {
+            let (_, e1a, e2a) = w[0];
+            let (_, e1b, e2b) = w[1];
+            assert!(e1b < e1a, "scheme1 per-op energy falls with frequency");
+            assert!((e2a - e2b).abs() < 1e-20, "scheme2 frequency-independent");
+        }
+    }
+
+    #[test]
+    fn crossovers_match_paper() {
+        let f = crossover_frequency(1024);
+        assert!((f - 7.53e6).abs() / 7.53e6 < 0.05, "freq crossover {f}");
+        let p = crossover_parallelism(1024);
+        assert!((p - 0.42).abs() < 0.04, "parallelism crossover {p}");
+    }
+
+    #[test]
+    fn scheme2_wins_at_low_parallelism() {
+        let sweep = fig5b_sweep(1024);
+        let (p_lo, e1_lo, e2_lo) = sweep[0];
+        assert!(p_lo < 0.1);
+        assert!(e2_lo < e1_lo, "scheme 2 must win at low P");
+        let (_, e1_hi, e2_hi) = sweep.last().copied().unwrap();
+        assert!(e1_hi < e2_hi, "scheme 1 must win at P = 1");
+    }
+}

@@ -1,0 +1,90 @@
+//! Figs. 6 & 7: the voltage-sensing evaluations — same layout as Fig. 4
+//! (components at 1024 + improvement sweep), for scheme 1 (precharged)
+//! and scheme 2 (discharged).
+
+use crate::config::SensingScheme;
+
+use super::fig4_current::{fig4_sweep, print_components, print_sweep, Fig4Row};
+
+pub fn fig67_sweep(scheme: SensingScheme) -> Vec<Fig4Row> {
+    fig4_sweep(scheme)
+}
+
+pub fn print_fig6() {
+    print_components(
+        SensingScheme::VoltagePrecharged,
+        "Fig 6(a): energy components per word, 1024x1024, voltage scheme 1 (precharged)",
+    );
+    print_sweep(
+        SensingScheme::VoltagePrecharged,
+        "Fig 6(b)/(c): ADRA vs baseline, voltage scheme 1",
+    );
+}
+
+pub fn print_fig7() {
+    print_components(
+        SensingScheme::VoltageDischarged,
+        "Fig 7(a): energy components per word, 1024x1024, voltage scheme 2 (discharged)",
+    );
+    print_sweep(
+        SensingScheme::VoltageDischarged,
+        "Fig 7(b)/(c): ADRA vs baseline, voltage scheme 2",
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_scheme1_bands() {
+        let rows = fig67_sweep(SensingScheme::VoltagePrecharged);
+        // paper range quoted over the sweep's 256..1024 portion
+        let in_range: Vec<_> = rows.iter().filter(|r| r.size >= 256).collect();
+        let first = in_range.first().unwrap();
+        let last = in_range.last().unwrap();
+        assert!((first.improvement.speedup - 1.57).abs() < 0.03, "{first:?}");
+        assert!((last.improvement.speedup - 1.73).abs() < 0.03, "{last:?}");
+        for r in &in_range {
+            let overhead = -r.improvement.energy_decrease;
+            assert!(
+                (0.17..0.26).contains(&overhead),
+                "scheme1 energy overhead out of band at {}: {overhead}",
+                r.size
+            );
+        }
+        assert!((first.improvement.edp_decrease - 0.2326).abs() < 0.02);
+        assert!((last.improvement.edp_decrease - 0.2881).abs() < 0.02);
+    }
+
+    #[test]
+    fn fig7_scheme2_bands() {
+        let rows = fig67_sweep(SensingScheme::VoltageDischarged);
+        let in_range: Vec<_> = rows.iter().filter(|r| r.size >= 256).collect();
+        let first = in_range.first().unwrap();
+        let last = in_range.last().unwrap();
+        assert!((first.improvement.energy_decrease - 0.355).abs() < 0.02);
+        assert!((last.improvement.energy_decrease - 0.458).abs() < 0.02);
+        assert!((first.improvement.speedup - 1.945).abs() < 0.02);
+        assert!((last.improvement.speedup - 1.983).abs() < 0.02);
+        assert!((first.improvement.edp_decrease - 0.6683).abs() < 0.02);
+        assert!((last.improvement.edp_decrease - 0.726).abs() < 0.02);
+    }
+
+    #[test]
+    fn headline_claim_23_to_72_pct_edp() {
+        // the abstract's 23.2% - 72.6% EDP decrease across all schemes
+        let mut lo = f64::MAX;
+        let mut hi = f64::MIN;
+        for scheme in SensingScheme::ALL {
+            for r in fig67_sweep(scheme) {
+                if r.size >= 256 {
+                    lo = lo.min(r.improvement.edp_decrease);
+                    hi = hi.max(r.improvement.edp_decrease);
+                }
+            }
+        }
+        assert!((lo - 0.232).abs() < 0.02, "low end {lo}");
+        assert!((hi - 0.726).abs() < 0.02, "high end {hi}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Figure harnesses: one function per paper figure/table regenerating the
+//! same rows/series.  Each harness returns structured data (asserted on by
+//! tests and benches) and has a `print_*` companion used by the
+//! `adra figures` CLI command.
+
+pub mod fig1_baseline_mapping;
+pub mod fig2_device;
+pub mod fig3_adra_mapping;
+pub mod fig4_current;
+pub mod fig5_tradeoffs;
+pub mod fig67_voltage;
+
+pub use fig1_baseline_mapping::{fig1_table, print_fig1};
+pub use fig2_device::{fig2_iv_curve, print_fig2};
+pub use fig3_adra_mapping::{fig3_table, print_fig3};
+pub use fig4_current::{fig4_sweep, print_fig4, Fig4Row};
+pub use fig5_tradeoffs::{fig5a_sweep, fig5b_sweep, print_fig5};
+pub use fig67_voltage::{fig67_sweep, print_fig6, print_fig7};
+
+/// Array sizes swept in Figs. 4, 6, 7 ("as a function of the array size").
+pub const ARRAY_SIZES: [usize; 4] = [128, 256, 512, 1024];

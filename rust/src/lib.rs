@@ -1,0 +1,30 @@
+//! # ADRA — Asymmetric Dual-Row-Activation computing-in-memory
+//!
+//! Full-stack reproduction of *"ADRA: Extending Digital Computing-in-Memory
+//! with Asymmetric Dual-Row-Activation"* (Malhotra, Saha, Wang, Gupta —
+//! Purdue, 2022).
+//!
+//! Architecture (see DESIGN.md):
+//! * **L1/L2 (build-time Python)** — JAX + Pallas analog model of the
+//!   1T-FeFET array, AOT-lowered to HLO text under `artifacts/`.
+//! * **L3 (this crate)** — everything digital and architectural: the
+//!   behavioral device mirror, array state, sensing periphery, gate-level
+//!   compute modules, the calibrated energy/latency model, the ADRA and
+//!   baseline CiM engines, and a threaded request coordinator.  The
+//!   `runtime` module executes the AOT artifacts over PJRT (CPU) — Python
+//!   is never on the request path.
+
+pub mod analysis;
+pub mod array;
+pub mod cim;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod energy;
+pub mod figures;
+pub mod logic;
+pub mod metrics;
+pub mod runtime;
+pub mod sensing;
+pub mod util;
+pub mod workload;

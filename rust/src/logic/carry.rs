@@ -1,0 +1,217 @@
+//! Ripple carry chain over the per-column compute modules.
+//!
+//! n+1 modules serve every n-bit add/subtract (paper §III.B): the extra
+//! module absorbs overflow; for subtraction its inputs are the
+//! sign-extended operands, i.e. the same sense outputs as bit n-1, and the
+//! result is an (n+1)-bit two's-complement value whose MSB is the sign.
+
+use super::modules::{AdraComputeModule, ComputeModuleVariant};
+use crate::sensing::SenseOut;
+
+/// Result of an n-bit ripple add/sub: (n+1)-bit value + raw carries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RippleResult {
+    /// sum bits, LSB first; length n+1.
+    pub bits: Vec<bool>,
+    /// carry out of each module; length n+1.
+    pub carries: Vec<bool>,
+}
+
+impl RippleResult {
+    /// Interpret as unsigned (addition result).
+    pub fn as_unsigned(&self) -> u128 {
+        self.bits
+            .iter()
+            .enumerate()
+            .fold(0u128, |acc, (i, &b)| acc | ((b as u128) << i))
+    }
+
+    /// Interpret as two's-complement signed (subtraction result).
+    pub fn as_signed(&self) -> i128 {
+        let n = self.bits.len();
+        let raw = self.as_unsigned() as i128;
+        if self.bits[n - 1] {
+            raw - (1i128 << n)
+        } else {
+            raw
+        }
+    }
+
+    /// The sign bit — MSB of the (n+1)-bit output.
+    pub fn sign(&self) -> bool {
+        *self.bits.last().expect("non-empty result")
+    }
+
+    /// All-zero output (equality detect input).
+    pub fn is_zero(&self) -> bool {
+        self.bits.iter().all(|&b| !b)
+    }
+}
+
+/// Ripple an n-bit word of sense outputs through n+1 ADRA compute modules.
+///
+/// `subtract = false` computes A + B (C_in = 0); `subtract = true`
+/// computes A - B (C_in = 1, inverted-B datapath inside the module).
+pub fn ripple_add_sub(sense_bits: &[SenseOut], subtract: bool) -> RippleResult {
+    assert!(!sense_bits.is_empty(), "empty operand");
+    let module = AdraComputeModule::new(ComputeModuleVariant::Muxed);
+    let n = sense_bits.len();
+    let mut bits = Vec::with_capacity(n + 1);
+    let mut carries = Vec::with_capacity(n + 1);
+    let mut cin = subtract; // C_in = 1 for subtraction (two's complement)
+    for s in sense_bits {
+        let out = module.eval(s, cin, subtract);
+        bits.push(out.sum);
+        carries.push(out.carry);
+        cin = out.carry;
+    }
+    // (n+1)-th module: sign-extended inputs = same sense outputs as bit n-1
+    // for subtraction; for addition the extension bit is 0 for both words.
+    let ext = if subtract {
+        sense_bits[n - 1]
+    } else {
+        SenseOut { or: false, b: false, and: false }
+    };
+    let out = module.eval(&ext, cin, subtract);
+    bits.push(out.sum);
+    carries.push(out.carry);
+    RippleResult { bits, carries }
+}
+
+/// Expand a word's bits into ideal sense outputs — used by tests and by
+/// the baseline engine, where A and B were read digitally.
+pub fn sense_from_bits(a: u64, b: u64, n_bits: usize) -> Vec<SenseOut> {
+    (0..n_bits)
+        .map(|i| {
+            let ab = (a >> i) & 1 == 1;
+            let bb = (b >> i) & 1 == 1;
+            SenseOut { or: ab || bb, b: bb, and: ab && bb }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::{Arbitrary, Quick};
+    use crate::util::rng::Rng;
+
+    fn sign_extend(v: u64, bits: usize) -> i128 {
+        let raw = (v & mask(bits)) as i128;
+        if bits < 64 && (v >> (bits - 1)) & 1 == 1 {
+            raw - (1i128 << bits)
+        } else if bits == 64 && (v >> 63) & 1 == 1 {
+            raw - (1i128 << 64)
+        } else {
+            raw
+        }
+    }
+
+    fn mask(bits: usize) -> u64 {
+        if bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << bits) - 1
+        }
+    }
+
+    #[test]
+    fn exhaustive_4bit_addition() {
+        for a in 0u64..16 {
+            for b in 0u64..16 {
+                let r = ripple_add_sub(&sense_from_bits(a, b, 4), false);
+                assert_eq!(r.as_unsigned(), (a + b) as u128, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_4bit_subtraction_signed() {
+        for a in 0u64..16 {
+            for b in 0u64..16 {
+                let r = ripple_add_sub(&sense_from_bits(a, b, 4), true);
+                // operands are two's-complement 4-bit; result is 5-bit signed
+                let expect = sign_extend(a, 4) - sign_extend(b, 4);
+                assert_eq!(r.as_signed(), expect, "a={a} b={b} bits={:?}", r.bits);
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_6bit_subtraction() {
+        for a in 0u64..64 {
+            for b in 0u64..64 {
+                let r = ripple_add_sub(&sense_from_bits(a, b, 6), true);
+                assert_eq!(r.as_signed(), sign_extend(a, 6) - sign_extend(b, 6));
+            }
+        }
+    }
+
+    /// Random word widths and operands for the property tests.
+    #[derive(Clone, Debug)]
+    struct WordPair {
+        a: u64,
+        b: u64,
+        bits: usize,
+    }
+
+    impl Arbitrary for WordPair {
+        fn generate(rng: &mut Rng) -> Self {
+            let bits = rng.range_u64(1, 63) as usize;
+            Self {
+                a: rng.next_u64() & mask(bits),
+                b: rng.next_u64() & mask(bits),
+                bits,
+            }
+        }
+
+        fn shrink(&self) -> Vec<Self> {
+            let mut v = Vec::new();
+            if self.bits > 1 {
+                v.push(Self {
+                    a: self.a & mask(self.bits - 1),
+                    b: self.b & mask(self.bits - 1),
+                    bits: self.bits - 1,
+                });
+            }
+            if self.a > 0 {
+                v.push(Self { a: self.a / 2, ..self.clone() });
+            }
+            if self.b > 0 {
+                v.push(Self { b: self.b / 2, ..self.clone() });
+            }
+            v
+        }
+    }
+
+    #[test]
+    fn prop_addition_matches_integer_add() {
+        Quick::with_cases(500).check::<WordPair, _>("ripple add == +", |w| {
+            let r = ripple_add_sub(&sense_from_bits(w.a, w.b, w.bits), false);
+            r.as_unsigned() == (w.a as u128) + (w.b as u128)
+        });
+    }
+
+    #[test]
+    fn prop_subtraction_matches_integer_sub() {
+        Quick::with_cases(500).check::<WordPair, _>("ripple sub == -", |w| {
+            let r = ripple_add_sub(&sense_from_bits(w.a, w.b, w.bits), true);
+            r.as_signed() == sign_extend(w.a, w.bits) - sign_extend(w.b, w.bits)
+        });
+    }
+
+    #[test]
+    fn prop_a_minus_a_is_zero() {
+        Quick::with_cases(300).check::<WordPair, _>("a - a == 0", |w| {
+            let r = ripple_add_sub(&sense_from_bits(w.a, w.a, w.bits), true);
+            r.is_zero() && !r.sign()
+        });
+    }
+
+    #[test]
+    fn result_width_is_n_plus_one() {
+        let r = ripple_add_sub(&sense_from_bits(5, 3, 8), false);
+        assert_eq!(r.bits.len(), 9);
+        assert_eq!(r.carries.len(), 9);
+    }
+}

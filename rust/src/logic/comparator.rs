@@ -1,0 +1,117 @@
+//! In-memory comparison via subtraction (paper §III.B): the sign bit of
+//! the (n+1)-bit A-B output orders the operands; an AND tree over the
+//! inverted sum bits detects equality with n-1 two-input AND gates.
+
+use super::carry::{ripple_add_sub, RippleResult};
+use crate::sensing::SenseOut;
+
+/// Three-way comparison outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompareResult {
+    Less,
+    Equal,
+    Greater,
+}
+
+/// AND-tree equality detect over the subtraction output bits: true iff
+/// every bit is zero.  Mirrors the gate tree (inverters assumed free from
+/// the module's complementary outputs; n-1 AND2 gates for n inputs).
+pub fn and_tree_equal(bits: &[bool]) -> bool {
+    // literal tree reduction, as the hardware would wire it
+    let mut level: Vec<bool> = bits.iter().map(|&b| !b).collect();
+    while level.len() > 1 {
+        level = level
+            .chunks(2)
+            .map(|c| if c.len() == 2 { c[0] && c[1] } else { c[0] })
+            .collect();
+    }
+    level[0]
+}
+
+/// Full comparison from per-bit sense outputs (two's-complement operands).
+pub fn compare(sense_bits: &[SenseOut]) -> (CompareResult, RippleResult) {
+    let diff = ripple_add_sub(sense_bits, true);
+    let res = if and_tree_equal(&diff.bits) {
+        CompareResult::Equal
+    } else if diff.sign() {
+        CompareResult::Less
+    } else {
+        CompareResult::Greater
+    };
+    (res, diff)
+}
+
+/// Number of AND2 gates in the equality tree for an n-bit comparison
+/// ("n-1 two-input AND gates ... just 1 gate per bit of comparison").
+pub fn and_tree_gate_count(n_bits: usize) -> usize {
+    n_bits.saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::carry::sense_from_bits;
+
+    fn signed(v: u64, bits: usize) -> i64 {
+        let m = if bits == 64 { u64::MAX } else { (1 << bits) - 1 };
+        let raw = (v & m) as i64;
+        if (v >> (bits - 1)) & 1 == 1 {
+            raw - (1i64 << bits)
+        } else {
+            raw
+        }
+    }
+
+    #[test]
+    fn exhaustive_5bit_compare() {
+        for a in 0u64..32 {
+            for b in 0u64..32 {
+                let (res, _) = compare(&sense_from_bits(a, b, 5));
+                let (sa, sb) = (signed(a, 5), signed(b, 5));
+                let expect = match sa.cmp(&sb) {
+                    std::cmp::Ordering::Less => CompareResult::Less,
+                    std::cmp::Ordering::Equal => CompareResult::Equal,
+                    std::cmp::Ordering::Greater => CompareResult::Greater,
+                };
+                assert_eq!(res, expect, "a={sa} b={sb}");
+            }
+        }
+    }
+
+    #[test]
+    fn and_tree_matches_all_zero() {
+        assert!(and_tree_equal(&[false; 7]));
+        assert!(and_tree_equal(&[false]));
+        assert!(!and_tree_equal(&[false, true, false]));
+        assert!(!and_tree_equal(&[true]));
+    }
+
+    #[test]
+    fn and_tree_odd_and_even_widths() {
+        for n in 1..=16 {
+            let mut v = vec![false; n];
+            assert!(and_tree_equal(&v), "width {n}");
+            v[n - 1] = true;
+            assert!(!and_tree_equal(&v), "width {n}");
+            v[n - 1] = false;
+            if n > 1 {
+                v[0] = true;
+                assert!(!and_tree_equal(&v), "width {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gate_count_is_n_minus_one() {
+        assert_eq!(and_tree_gate_count(32), 31);
+        assert_eq!(and_tree_gate_count(1), 0);
+    }
+
+    #[test]
+    fn equality_is_detected_not_inferred_from_sign() {
+        // A == B must report Equal even though sign would say "not less"
+        let (res, diff) = compare(&sense_from_bits(13, 13, 8));
+        assert_eq!(res, CompareResult::Equal);
+        assert!(diff.is_zero());
+    }
+}

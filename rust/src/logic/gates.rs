@@ -1,0 +1,143 @@
+//! Primitive gates with static-CMOS transistor counts.
+//!
+//! The counts drive the hardware-overhead accounting the paper reports
+//! ("two 2:1 muxes, one NOT and one NOR more than prior compute modules";
+//! "the duplicated-XOR variant costs 4 extra transistors").
+
+/// Primitive gate kinds used by the periphery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Gate {
+    Not,
+    Nand2,
+    Nor2,
+    And2,
+    Or2,
+    Xor2,
+    Xnor2,
+    Mux2,
+    Aoi21,
+    Oai21,
+}
+
+impl Gate {
+    /// Static-CMOS transistor count (standard-cell typical).
+    pub fn transistors(&self) -> usize {
+        match self {
+            Gate::Not => 2,
+            Gate::Nand2 | Gate::Nor2 => 4,
+            Gate::And2 | Gate::Or2 => 6,
+            Gate::Xor2 | Gate::Xnor2 => 8,   // transmission-gate XOR
+            Gate::Mux2 => 4,                 // TG pair; select inverter counted separately
+            Gate::Aoi21 | Gate::Oai21 => 6,
+        }
+    }
+
+    /// Evaluate the gate (3-input forms take c; 2-input forms ignore it).
+    pub fn eval(&self, a: bool, b: bool, c: bool) -> bool {
+        match self {
+            Gate::Not => !a,
+            Gate::Nand2 => !(a && b),
+            Gate::Nor2 => !(a || b),
+            Gate::And2 => a && b,
+            Gate::Or2 => a || b,
+            Gate::Xor2 => a ^ b,
+            Gate::Xnor2 => !(a ^ b),
+            Gate::Mux2 => if c { b } else { a }, // c = select
+            Gate::Aoi21 => !((a && b) || c),
+            Gate::Oai21 => !((a || b) && c),
+        }
+    }
+}
+
+/// A tally of gates, used to cost a module in transistors.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GateCounts {
+    counts: Vec<(Gate, usize)>,
+}
+
+impl GateCounts {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, gate: Gate, n: usize) -> &mut Self {
+        for entry in self.counts.iter_mut() {
+            if entry.0 == gate {
+                entry.1 += n;
+                return self;
+            }
+        }
+        self.counts.push((gate, n));
+        self
+    }
+
+    pub fn count(&self, gate: Gate) -> usize {
+        self.counts
+            .iter()
+            .find(|(g, _)| *g == gate)
+            .map(|(_, n)| *n)
+            .unwrap_or(0)
+    }
+
+    pub fn total_gates(&self) -> usize {
+        self.counts.iter().map(|(_, n)| n).sum()
+    }
+
+    pub fn total_transistors(&self) -> usize {
+        self.counts.iter().map(|(g, n)| g.transistors() * n).sum()
+    }
+
+    /// Transistor difference vs another tally (self - other).
+    pub fn transistor_delta(&self, other: &GateCounts) -> isize {
+        self.total_transistors() as isize - other.total_transistors() as isize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_truth_tables() {
+        for a in [false, true] {
+            for b in [false, true] {
+                assert_eq!(Gate::Nand2.eval(a, b, false), !(a && b));
+                assert_eq!(Gate::Nor2.eval(a, b, false), !(a || b));
+                assert_eq!(Gate::Xor2.eval(a, b, false), a ^ b);
+                assert_eq!(Gate::Xnor2.eval(a, b, false), !(a ^ b));
+                for c in [false, true] {
+                    assert_eq!(Gate::Mux2.eval(a, b, c), if c { b } else { a });
+                    assert_eq!(Gate::Aoi21.eval(a, b, c), !((a && b) || c));
+                    assert_eq!(Gate::Oai21.eval(a, b, c), !((a || b) && c));
+                }
+            }
+        }
+        assert!(Gate::Not.eval(false, false, false));
+    }
+
+    #[test]
+    fn transistor_counts_sane() {
+        assert_eq!(Gate::Not.transistors(), 2);
+        assert_eq!(Gate::Nand2.transistors(), 4);
+        assert_eq!(Gate::Xor2.transistors(), 8);
+    }
+
+    #[test]
+    fn tally_accumulates() {
+        let mut t = GateCounts::new();
+        t.add(Gate::Xor2, 2).add(Gate::Not, 1).add(Gate::Xor2, 1);
+        assert_eq!(t.count(Gate::Xor2), 3);
+        assert_eq!(t.total_gates(), 4);
+        assert_eq!(t.total_transistors(), 3 * 8 + 2);
+    }
+
+    #[test]
+    fn delta_computation() {
+        let mut a = GateCounts::new();
+        a.add(Gate::Xor2, 1);
+        let mut b = GateCounts::new();
+        b.add(Gate::Not, 1);
+        assert_eq!(a.transistor_delta(&b), 6);
+        assert_eq!(b.transistor_delta(&a), -6);
+    }
+}

@@ -1,0 +1,16 @@
+//! Gate-level digital periphery: primitive gates with transistor-count
+//! accounting, the baseline adder compute module (Fig. 1(d)), the ADRA
+//! add/subtract compute module (Fig. 3(d), both variants), the ripple
+//! carry chain with the (n+1)-th overflow module, and the AND-tree
+//! equality comparator.
+
+pub mod carry;
+pub mod comparator;
+pub mod gates;
+pub mod modules;
+pub mod netlist;
+
+pub use carry::{ripple_add_sub, sense_from_bits, RippleResult};
+pub use comparator::{and_tree_equal, compare, CompareResult};
+pub use gates::{Gate, GateCounts};
+pub use modules::{AdraComputeModule, BaselineAddModule, ComputeModuleVariant, ModuleOut};

@@ -1,0 +1,221 @@
+//! Per-column compute modules.
+//!
+//! * `BaselineAddModule` — Fig. 1(d): prior-work adder from the OR/AND
+//!   sense outputs (commutative functions only).
+//! * `AdraComputeModule` — Fig. 3(d): add/subtract module taking the third
+//!   (B) sense output.  Two variants, as in the paper:
+//!   - `Muxed`: two 2:1 muxes + NOT + NOR on top of the baseline module;
+//!     SELECT chooses addition or subtraction (one function per cycle).
+//!   - `Duplicated`: the muxes removed, one XOR + AOI21 duplicated so
+//!     addition AND subtraction are produced in the same cycle
+//!     (+4 transistors over `Muxed`).
+
+use super::gates::{Gate, GateCounts};
+use crate::sensing::SenseOut;
+
+/// One module's combinational outputs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ModuleOut {
+    pub sum: bool,
+    pub carry: bool,
+}
+
+/// Fig. 1(d): SUM/CARRY from OR, AND and carry-in.
+///
+/// A^B is reconstructed as OR & !AND; CARRY = AND | (Cin & (A^B)) via an
+/// AOI21 + inverter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BaselineAddModule;
+
+impl BaselineAddModule {
+    #[inline]
+    pub fn eval(&self, or: bool, and: bool, cin: bool) -> ModuleOut {
+        let x = Gate::And2.eval(or, !and, false); // A ^ B
+        let sum = Gate::Xor2.eval(x, cin, false);
+        let carry = !Gate::Aoi21.eval(cin, x, and); // AND | (Cin & X)
+        ModuleOut { sum, carry }
+    }
+
+    pub fn gate_counts(&self) -> GateCounts {
+        let mut g = GateCounts::new();
+        g.add(Gate::And2, 1) // X = OR . !AND (complement free from SA)
+            .add(Gate::Xor2, 1)
+            .add(Gate::Aoi21, 1)
+            .add(Gate::Not, 1);
+        g
+    }
+}
+
+/// Which Fig. 3(d) realization to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ComputeModuleVariant {
+    /// SELECT-muxed add/sub (one function per cycle).
+    Muxed,
+    /// Duplicated XOR/AOI21 datapath (add and sub same cycle, +4T).
+    Duplicated,
+}
+
+/// Fig. 3(d): the ADRA add/subtract compute module.
+#[derive(Clone, Copy, Debug)]
+pub struct AdraComputeModule {
+    pub variant: ComputeModuleVariant,
+}
+
+impl AdraComputeModule {
+    pub fn new(variant: ComputeModuleVariant) -> Self {
+        Self { variant }
+    }
+
+    /// Propagate/generate for addition: prop = A^B, gen = A.B.
+    #[inline]
+    fn add_pg(s: &SenseOut) -> (bool, bool) {
+        let x = Gate::And2.eval(s.or, !s.and, false);
+        (x, s.and)
+    }
+
+    /// Propagate/generate for subtraction (A + !B + cin): prop = XNOR(A,B),
+    /// gen = A.!B = NOR(!OR, B) — B and the complements come free from the
+    /// differential sense amps.
+    #[inline]
+    fn sub_pg(s: &SenseOut) -> (bool, bool) {
+        let x = Gate::And2.eval(s.or, !s.and, false);
+        let prop = Gate::Not.eval(x, false, false); // XNOR via NOT(X)
+        let gen = Gate::Nor2.eval(!s.or, s.b, false); // A . !B
+        (prop, gen)
+    }
+
+    /// Muxed evaluation: `select` = false -> addition, true -> subtraction.
+    #[inline]
+    pub fn eval(&self, s: &SenseOut, cin: bool, select: bool) -> ModuleOut {
+        let (pa, ga) = Self::add_pg(s);
+        let (ps, gs) = Self::sub_pg(s);
+        let prop = Gate::Mux2.eval(pa, ps, select);
+        let gen = Gate::Mux2.eval(ga, gs, select);
+        let sum = Gate::Xor2.eval(prop, cin, false);
+        let carry = !Gate::Aoi21.eval(cin, prop, gen);
+        ModuleOut { sum, carry }
+    }
+
+    /// Duplicated-datapath evaluation: both functions in the same cycle.
+    /// Returns `(add, sub)`.
+    #[inline]
+    pub fn eval_both(&self, s: &SenseOut, cin_add: bool, cin_sub: bool) -> (ModuleOut, ModuleOut) {
+        let (pa, ga) = Self::add_pg(s);
+        let (ps, gs) = Self::sub_pg(s);
+        let add = ModuleOut {
+            sum: Gate::Xor2.eval(pa, cin_add, false),
+            carry: !Gate::Aoi21.eval(cin_add, pa, ga),
+        };
+        let sub = ModuleOut {
+            sum: Gate::Xor2.eval(ps, cin_sub, false),
+            carry: !Gate::Aoi21.eval(cin_sub, ps, gs),
+        };
+        (add, sub)
+    }
+
+    /// Gate inventory (drives the overhead numbers reported in Fig. 3(d)'s
+    /// discussion).  Mux2 is a 4T transmission-gate pair; the two muxes
+    /// share one select inverter, counted as the extra `Not`.
+    pub fn gate_counts(&self) -> GateCounts {
+        let mut g = BaselineAddModule.gate_counts();
+        match self.variant {
+            ComputeModuleVariant::Muxed => {
+                g.add(Gate::Mux2, 2) // prop mux + gen mux (4T each)
+                    .add(Gate::Not, 2) // shared select inverter + XNOR inverter
+                    .add(Gate::Nor2, 1); // A.!B generate term
+            }
+            ComputeModuleVariant::Duplicated => {
+                g.add(Gate::Xor2, 1) // duplicated SUM xor
+                    .add(Gate::Aoi21, 1) // duplicated carry AOI
+                    .add(Gate::Not, 1) // XNOR inverter (carry inv shared)
+                    .add(Gate::Nor2, 1); // A.!B generate term
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sense(a: bool, b: bool) -> SenseOut {
+        SenseOut { or: a || b, b, and: a && b }
+    }
+
+    #[test]
+    fn baseline_is_a_full_adder() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for cin in [false, true] {
+                    let out = BaselineAddModule.eval(a || b, a && b, cin);
+                    let expect = a as u8 + b as u8 + cin as u8;
+                    assert_eq!(out.sum, expect & 1 == 1, "sum a={a} b={b} cin={cin}");
+                    assert_eq!(out.carry, expect >= 2, "carry a={a} b={b} cin={cin}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adra_addition_matches_full_adder() {
+        let m = AdraComputeModule::new(ComputeModuleVariant::Muxed);
+        for a in [false, true] {
+            for b in [false, true] {
+                for cin in [false, true] {
+                    let out = m.eval(&sense(a, b), cin, false);
+                    let expect = a as u8 + b as u8 + cin as u8;
+                    assert_eq!(out.sum, expect & 1 == 1);
+                    assert_eq!(out.carry, expect >= 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adra_subtraction_is_a_plus_notb() {
+        let m = AdraComputeModule::new(ComputeModuleVariant::Muxed);
+        for a in [false, true] {
+            for b in [false, true] {
+                for cin in [false, true] {
+                    let out = m.eval(&sense(a, b), cin, true);
+                    let expect = a as u8 + (!b) as u8 + cin as u8;
+                    assert_eq!(out.sum, expect & 1 == 1, "a={a} b={b} cin={cin}");
+                    assert_eq!(out.carry, expect >= 2, "a={a} b={b} cin={cin}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duplicated_variant_matches_muxed_on_both_functions() {
+        let muxed = AdraComputeModule::new(ComputeModuleVariant::Muxed);
+        let dup = AdraComputeModule::new(ComputeModuleVariant::Duplicated);
+        for a in [false, true] {
+            for b in [false, true] {
+                for ca in [false, true] {
+                    for cs in [false, true] {
+                        let s = sense(a, b);
+                        let (add, sub) = dup.eval_both(&s, ca, cs);
+                        assert_eq!(add, muxed.eval(&s, ca, false));
+                        assert_eq!(sub, muxed.eval(&s, cs, true));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_overhead_claims() {
+        let base = BaselineAddModule.gate_counts();
+        let muxed = AdraComputeModule::new(ComputeModuleVariant::Muxed).gate_counts();
+        let dup = AdraComputeModule::new(ComputeModuleVariant::Duplicated).gate_counts();
+        // "two 2:1 multiplexers, one NOT and one NOR gate" (+ the mux
+        // select inverter) over the prior compute module:
+        assert_eq!(muxed.count(Gate::Mux2) - base.count(Gate::Mux2), 2);
+        assert_eq!(muxed.count(Gate::Nor2) - base.count(Gate::Nor2), 1);
+        assert!(muxed.count(Gate::Not) > base.count(Gate::Not));
+        // "an overhead of 4 transistors (compared to the former design)":
+        assert_eq!(dup.transistor_delta(&muxed), 4);
+    }
+}

@@ -1,0 +1,225 @@
+//! Structural gate netlists: the Fig. 1(d) and Fig. 3(d) schematics as
+//! literal wired gates, evaluated combinationally.
+//!
+//! The behavioral modules in `modules.rs` are the fast path; these
+//! netlists are the schematic-level ground truth.  Tests prove the two
+//! agree on every input, and the netlist's critical-path depth feeds the
+//! latency model's compute-module term (a sanity anchor for
+//! `T_CIM_EXTRA_*` in `energy::constants`).
+
+use std::collections::BTreeMap;
+
+use super::gates::Gate;
+
+/// A net (wire) by name.
+pub type Net = &'static str;
+
+/// One gate instance: output net, gate kind, input nets (a, b, c).
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub out: Net,
+    pub gate: Gate,
+    pub ins: [Option<Net>; 3],
+}
+
+/// A combinational netlist over named nets.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    instances: Vec<Instance>,
+}
+
+impl Netlist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn gate(&mut self, out: Net, gate: Gate, ins: &[Net]) -> &mut Self {
+        assert!(ins.len() <= 3 && !ins.is_empty());
+        let mut arr = [None, None, None];
+        for (i, n) in ins.iter().enumerate() {
+            arr[i] = Some(*n);
+        }
+        self.instances.push(Instance { out, gate, ins: arr });
+        self
+    }
+
+    /// Evaluate with the given primary-input assignment.  Instances must
+    /// be in topological order (gates reference earlier nets) — asserted.
+    pub fn eval(&self, inputs: &BTreeMap<Net, bool>) -> BTreeMap<Net, bool> {
+        let mut nets = inputs.clone();
+        for inst in &self.instances {
+            let get = |n: Option<Net>| -> bool {
+                match n {
+                    None => false,
+                    Some(name) => *nets
+                        .get(name)
+                        .unwrap_or_else(|| panic!("net {name} not yet driven")),
+                }
+            };
+            let v = inst.gate.eval(get(inst.ins[0]), get(inst.ins[1]), get(inst.ins[2]));
+            nets.insert(inst.out, v);
+        }
+        nets
+    }
+
+    /// Logic depth (gate levels) from primary inputs to `out`.
+    pub fn depth_of(&self, out: Net) -> usize {
+        let mut depth: BTreeMap<Net, usize> = BTreeMap::new();
+        for inst in &self.instances {
+            let d = inst
+                .ins
+                .iter()
+                .flatten()
+                .map(|n| depth.get(n).copied().unwrap_or(0))
+                .max()
+                .unwrap_or(0);
+            depth.insert(inst.out, d + 1);
+        }
+        depth.get(out).copied().unwrap_or(0)
+    }
+
+    pub fn gate_count(&self) -> usize {
+        self.instances.len()
+    }
+}
+
+/// The Fig. 3(d) muxed ADRA compute module as a literal netlist.
+///
+/// Primary inputs: `or`, `or_n`, `and_n`, `b`, `sel`, `sel_n`, `cin`
+/// (complements come free from the differential SAs / select inverter).
+/// Outputs: `sum`, `carry`.
+pub fn adra_module_netlist() -> Netlist {
+    let mut n = Netlist::new();
+    // X = A^B = OR . !AND ; XNOR = !X
+    n.gate("x", Gate::And2, &["or", "and_n"]);
+    n.gate("x_n", Gate::Not, &["x"]);
+    // generate terms: add -> AND (primary), sub -> A.!B = NOR(!OR, B)
+    n.gate("and", Gate::Not, &["and_n"]);
+    n.gate("gen_sub", Gate::Nor2, &["or_n", "b"]);
+    // select muxes (sel=1 -> subtraction datapath)
+    n.gate("prop", Gate::Mux2, &["x", "x_n", "sel"]);
+    n.gate("gen", Gate::Mux2, &["and", "gen_sub", "sel"]);
+    // sum and carry
+    n.gate("sum", Gate::Xor2, &["prop", "cin"]);
+    n.gate("carry_n", Gate::Aoi21, &["cin", "prop", "gen"]);
+    n.gate("carry", Gate::Not, &["carry_n"]);
+    n
+}
+
+/// The Fig. 1(d) baseline adder module as a netlist.
+pub fn baseline_module_netlist() -> Netlist {
+    let mut n = Netlist::new();
+    n.gate("x", Gate::And2, &["or", "and_n"]);
+    n.gate("and", Gate::Not, &["and_n"]);
+    n.gate("sum", Gate::Xor2, &["x", "cin"]);
+    n.gate("carry_n", Gate::Aoi21, &["cin", "x", "and"]);
+    n.gate("carry", Gate::Not, &["carry_n"]);
+    n
+}
+
+/// The OAI21 A-recovery network (paper §III.A).
+/// Inputs: `or`, `or_n`, `and_n`, `b`.  Output: `a`.
+pub fn a_recovery_netlist() -> Netlist {
+    let mut n = Netlist::new();
+    n.gate("nor_ab", Gate::Not, &["or"]); // NOR(A,B) = !OR (complement free)
+    n.gate("a", Gate::Oai21, &["b", "nor_ab", "and_n"]);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::modules::{AdraComputeModule, BaselineAddModule, ComputeModuleVariant};
+    use crate::sensing::SenseOut;
+
+    fn inputs(a: bool, b: bool, cin: bool, sel: bool) -> BTreeMap<Net, bool> {
+        let or = a || b;
+        let and = a && b;
+        BTreeMap::from([
+            ("or", or),
+            ("or_n", !or),
+            ("and_n", !and),
+            ("b", b),
+            ("cin", cin),
+            ("sel", sel),
+            ("sel_n", !sel),
+        ])
+    }
+
+    #[test]
+    fn adra_netlist_matches_behavioral_module_exhaustively() {
+        let netlist = adra_module_netlist();
+        let module = AdraComputeModule::new(ComputeModuleVariant::Muxed);
+        for a in [false, true] {
+            for b in [false, true] {
+                for cin in [false, true] {
+                    for sel in [false, true] {
+                        let nets = netlist.eval(&inputs(a, b, cin, sel));
+                        let s = SenseOut { or: a || b, b, and: a && b };
+                        let want = module.eval(&s, cin, sel);
+                        assert_eq!(nets["sum"], want.sum, "sum a={a} b={b} cin={cin} sel={sel}");
+                        assert_eq!(
+                            nets["carry"], want.carry,
+                            "carry a={a} b={b} cin={cin} sel={sel}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_netlist_matches_behavioral_exhaustively() {
+        let netlist = baseline_module_netlist();
+        for a in [false, true] {
+            for b in [false, true] {
+                for cin in [false, true] {
+                    let nets = netlist.eval(&inputs(a, b, cin, false));
+                    let want = BaselineAddModule.eval(a || b, a && b, cin);
+                    assert_eq!(nets["sum"], want.sum);
+                    assert_eq!(nets["carry"], want.carry);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn a_recovery_netlist_truth_table() {
+        let netlist = a_recovery_netlist();
+        for a in [false, true] {
+            for b in [false, true] {
+                let nets = netlist.eval(&inputs(a, b, false, false));
+                assert_eq!(nets["a"], a, "recovery failed at a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn critical_path_depths_anchor_latency_model() {
+        // ADRA module is at most 2 gate levels deeper than the baseline
+        // module (mux stage + XNOR inverter off the critical path), which
+        // is what justifies the small fixed T_CIM_EXTRA terms.
+        let adra = adra_module_netlist();
+        let base = baseline_module_netlist();
+        let d_adra = adra.depth_of("carry").max(adra.depth_of("sum"));
+        let d_base = base.depth_of("carry").max(base.depth_of("sum"));
+        assert!(d_adra > d_base, "ADRA module must be deeper");
+        assert!(
+            d_adra - d_base <= 2,
+            "depth delta {} too large for the latency calibration",
+            d_adra - d_base
+        );
+        // ~100 ps/level at 45 nm x 32-bit ripple stays within the modeled
+        // extra CiM latency budget (T_CIM_EXTRA ~ 0.13 ns covers module
+        // entry; the ripple itself is shared with the baseline path)
+        assert!(adra.gate_count() <= 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet driven")]
+    fn undriven_net_panics() {
+        let mut n = Netlist::new();
+        n.gate("y", Gate::Not, &["ghost"]);
+        n.eval(&BTreeMap::new());
+    }
+}

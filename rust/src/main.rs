@@ -1,0 +1,438 @@
+//! `adra` — CLI for the ADRA computing-in-memory stack.
+//!
+//! Subcommands:
+//!   figures   regenerate the paper's figures/tables (Figs. 1-7)
+//!   run       drive a workload through the coordinator and report metrics
+//!   validate  cross-check the Rust behavioral model against the AOT
+//!             JAX/Pallas artifacts over PJRT
+//!   margins   sense-margin analysis / asymmetry ablation
+
+use adra::cim::{AdraEngine, BaselineEngine, Engine};
+use adra::config::{SensingScheme, SimConfig};
+use adra::coordinator::Coordinator;
+use adra::figures;
+use adra::metrics::RunMetrics;
+use adra::runtime::AnalogRuntime;
+use adra::sensing::MarginReport;
+use adra::util::args::ArgParser;
+use adra::util::table::{fmt_si, Table};
+use adra::workload::{OpMix, WorkloadGen};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("figures") => cmd_figures(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("validate") => cmd_validate(&args[1..]),
+        Some("margins") => cmd_margins(&args[1..]),
+        Some("mc") => cmd_mc(&args[1..]),
+        Some("corners") => cmd_corners(&args[1..]),
+        Some("ablation") => cmd_ablation(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "adra — ADRA computing-in-memory reproduction\n\n\
+         commands:\n\
+         \x20 figures   [--fig N|--all]        regenerate paper figures/tables\n\
+         \x20 run       [--scheme S --size N --ops K --shards W --mix M]\n\
+         \x20                                  drive a workload through the coordinator\n\
+         \x20 validate  [--artifacts DIR]      cross-check Rust model vs AOT artifacts (PJRT)\n\
+         \x20 margins   [--steps N]            sense-margin / asymmetry ablation\n\
+         \x20 mc        [--sigma V --samples N] Monte-Carlo variability / yield analysis\n\
+         \x20 corners   [--sigma V --samples N] temperature-corner margin/yield sweep\n\
+         \x20 ablation  [--steps N]            V_GREAD1 bias-point ablation sweep\n\
+         \x20 serve     [--shards W]           line-protocol server on stdin/stdout\n"
+    );
+}
+
+fn parse_or_exit(parser: &ArgParser, args: &[String]) -> adra::util::args::Parsed {
+    match parser.parse(args) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_figures(args: &[String]) -> i32 {
+    let parser = ArgParser::new("adra figures", "regenerate the paper's figures")
+        .opt("fig", None, "figure number (1-7); omit for all")
+        .flag("all", "print every figure");
+    let p = parse_or_exit(&parser, args);
+    let dev = SimConfig::default().device;
+    let which: Vec<usize> = match p.get_usize("fig").unwrap_or(None) {
+        Some(n) => vec![n],
+        None => vec![1, 2, 3, 4, 5, 6, 7],
+    };
+    for n in which {
+        match n {
+            1 => figures::print_fig1(&dev),
+            2 => figures::print_fig2(&dev),
+            3 => figures::print_fig3(&dev),
+            4 => figures::print_fig4(),
+            5 => figures::print_fig5(),
+            6 => figures::print_fig6(),
+            7 => figures::print_fig7(),
+            other => {
+                eprintln!("no figure {other} (paper has figures 1-7)");
+                return 2;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let parser = ArgParser::new("adra run", "drive a workload through the coordinator")
+        .opt("scheme", Some("current"), "sensing scheme: current|v1|v2")
+        .opt("size", Some("256"), "square array size")
+        .opt("word-bits", Some("32"), "word width")
+        .opt("ops", Some("20000"), "operations to issue")
+        .opt("shards", Some("4"), "array shards / worker threads")
+        .opt("mix", Some("sub"), "op mix: sub|balanced|subheavy")
+        .opt("seed", Some("42"), "workload seed")
+        .flag("baseline", "run the near-memory baseline engine instead");
+    let p = parse_or_exit(&parser, args);
+
+    let mut cfg = SimConfig::default();
+    cfg.scheme = match SensingScheme::parse(p.get_or("scheme", "current")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    cfg.rows = p.get_usize("size").unwrap().unwrap();
+    cfg.cols = cfg.rows;
+    cfg.word_bits = p.get_usize("word-bits").unwrap().unwrap();
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid config: {e}");
+        return 2;
+    }
+    let shards = p.get_usize("shards").unwrap().unwrap();
+    let n_ops = p.get_usize("ops").unwrap().unwrap();
+    let seed = p.get_usize("seed").unwrap().unwrap() as u64;
+    let mix = match p.get_or("mix", "sub") {
+        "sub" => OpMix::sub_only(),
+        "balanced" => OpMix::balanced(),
+        "subheavy" => OpMix::subtraction_heavy(),
+        other => {
+            eprintln!("unknown mix {other:?}");
+            return 2;
+        }
+    };
+    let baseline = p.flag("baseline");
+
+    let cfg2 = cfg.clone();
+    let coord = Coordinator::new(&cfg, shards, move |_| -> Box<dyn Engine> {
+        if baseline {
+            Box::new(BaselineEngine::new(&cfg2))
+        } else {
+            Box::new(AdraEngine::new(&cfg2))
+        }
+    });
+
+    // pre-populate every shard with deterministic data
+    let mut gen = WorkloadGen::new(&cfg, mix, seed);
+    let mut setup = WorkloadGen::new(&cfg, OpMix::balanced(), seed ^ 0xFACE);
+    for shard in 0..shards {
+        for row in 0..cfg.rows.min(64) {
+            for word in 0..cfg.words_per_row().min(8) {
+                let v = setup.word_value();
+                coord
+                    .call(shard, adra::cim::CimOp::Write {
+                        addr: adra::cim::WordAddr { row, word },
+                        value: v,
+                    })
+                    .expect("setup write");
+            }
+        }
+    }
+
+    let t0 = std::time::Instant::now();
+    let per_shard = n_ops / shards;
+    let mut handles = Vec::new();
+    let coord = std::sync::Arc::new(coord);
+    for shard in 0..shards {
+        let ops = gen.batch(per_shard);
+        let c = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let res = c.call_batch(shard, &ops).expect("batch");
+            res.iter().filter(|r| r.is_err()).count()
+        }));
+    }
+    let mut errs = 0;
+    for h in handles {
+        errs += h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut m: RunMetrics = coord.metrics();
+    m.wall_seconds = wall;
+    println!(
+        "{}",
+        m.report(if baseline { "baseline" } else { "adra" })
+    );
+    println!(
+        "harness: {} ops in {:.3} s wall = {:.1} kop/s (engine+coordinator), {errs} errors",
+        per_shard * shards,
+        wall,
+        (per_shard * shards) as f64 / wall / 1e3
+    );
+    0
+}
+
+fn cmd_validate(args: &[String]) -> i32 {
+    let parser = ArgParser::new(
+        "adra validate",
+        "cross-check the Rust behavioral device model against the AOT JAX/Pallas artifacts",
+    )
+    .opt("artifacts", Some("artifacts"), "artifact directory");
+    let p = parse_or_exit(&parser, args);
+    let dir = p.get_or("artifacts", "artifacts");
+
+    let manifest = match adra::runtime::ArtifactManifest::load(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let rt = match AnalogRuntime::new(manifest) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT init failed: {e:#}");
+            return 1;
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+
+    let dev = SimConfig::default().device;
+    let n = adra::config::N_COLS;
+    let mut worst = 0.0f64;
+    // all four stored-bit vectors across the whole artifact width
+    for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+        let pol_a = vec![dev.pol_of_bit(a) as f32; n];
+        let pol_b = vec![dev.pol_of_bit(b) as f32; n];
+        let z = vec![0.0f32; n];
+        let (isl, _, _) = rt
+            .dc_isl(&pol_a, &pol_b, &z, &z, dev.v_gread1 as f32, dev.v_gread2 as f32)
+            .expect("dc_isl");
+        let want = adra::device::senseline_current(
+            &dev,
+            dev.pol_of_bit(a),
+            dev.pol_of_bit(b),
+            dev.v_gread1,
+            dev.v_gread2,
+            dev.v_read,
+            0.0,
+            0.0,
+        );
+        let got = isl[0] as f64;
+        let rel = ((got - want) / want).abs();
+        worst = worst.max(rel);
+        println!(
+            "dc_isl ({},{}) -> PJRT {} vs rust {}  (rel err {:.2e})",
+            a as u8,
+            b as u8,
+            fmt_si(got, "A"),
+            fmt_si(want, "A"),
+            rel
+        );
+    }
+    let ok = worst < 5e-4;
+    println!(
+        "cross-validation {}: worst relative error {:.2e} (budget 5e-4)",
+        if ok { "PASSED" } else { "FAILED" },
+        worst
+    );
+    if ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_mc(args: &[String]) -> i32 {
+    let parser = ArgParser::new("adra mc", "Monte-Carlo variability / yield analysis")
+        .opt("samples", Some("5000"), "samples per sigma point")
+        .opt("target-ber", Some("0.001"), "yield target bit-error rate")
+        .opt("seed", Some("7"), "sampling seed");
+    let p = parse_or_exit(&parser, args);
+    let samples = p.get_usize("samples").unwrap().unwrap();
+    let target: f64 = p.get_f64("target-ber").unwrap().unwrap();
+    let seed = p.get_usize("seed").unwrap().unwrap() as u64;
+
+    let dev = SimConfig::default().device;
+    let mc = adra::analysis::MonteCarlo::new(&dev);
+    let mut t = Table::new(&["sigma(V_T)", "CiM BER", "read BER", "err 00/01/10/11"])
+        .with_title("Monte-Carlo sensing yield vs V_T variation");
+    for sigma in [0.0, 0.01, 0.02, 0.04, 0.06, 0.08, 0.12, 0.16] {
+        let rep = mc.run(sigma, samples, seed);
+        t.row(&[
+            format!("{:.0} mV", sigma * 1e3),
+            format!("{:.2e}", rep.ber()),
+            format!("{:.2e}", rep.read_ber()),
+            format!(
+                "{}/{}/{}/{}",
+                rep.errors[0], rep.errors[1], rep.errors[2], rep.errors[3]
+            ),
+        ]);
+    }
+    t.print();
+    let max_sigma = mc.max_tolerable_sigma(target, samples, seed);
+    println!(
+        "max tolerable sigma(V_T) for BER <= {target:.0e}: ~{:.0} mV \
+         (memory window {} mV)",
+        max_sigma * 1e3,
+        dev.dvt_mw * 1e3
+    );
+    0
+}
+
+fn cmd_corners(args: &[String]) -> i32 {
+    let parser = ArgParser::new("adra corners", "temperature-corner margin/yield sweep")
+        .opt("sigma", Some("0.02"), "probe sigma(V_T) for BER")
+        .opt("samples", Some("2000"), "MC samples per corner");
+    let p = parse_or_exit(&parser, args);
+    let sigma = p.get_f64("sigma").unwrap().unwrap();
+    let samples = p.get_usize("samples").unwrap().unwrap();
+    let dev = SimConfig::default().device;
+    let mut t = Table::new(&["T", "one-to-one", "I margin", "V margin", "BER"])
+        .with_title(format!(
+            "temperature corners at sigma(V_T) = {:.0} mV (artifacts calibrated at 300 K)",
+            sigma * 1e3
+        ));
+    for c in adra::analysis::temperature_sweep(
+        &dev,
+        &adra::analysis::corners::INDUSTRIAL_TEMPS,
+        sigma,
+        samples,
+    ) {
+        t.row(&[
+            format!("{:.0} K ({:+.0} C)", c.t_kelvin, c.t_kelvin - 273.0),
+            c.margins.one_to_one.to_string(),
+            fmt_si(c.margins.current_margin, "A"),
+            fmt_si(c.margins.voltage_margin, "V"),
+            format!("{:.2e}", c.ber),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_ablation(args: &[String]) -> i32 {
+    let parser = ArgParser::new("adra ablation", "V_GREAD1 bias-point ablation")
+        .opt("steps", Some("16"), "sweep points")
+        .opt("sigma", Some("0.02"), "probe sigma for BER")
+        .opt("samples", Some("1000"), "MC samples per point");
+    let p = parse_or_exit(&parser, args);
+    let steps = p.get_usize("steps").unwrap().unwrap();
+    let sigma = p.get_f64("sigma").unwrap().unwrap();
+    let samples = p.get_usize("samples").unwrap().unwrap();
+
+    let dev = SimConfig::default().device;
+    let pts = adra::analysis::bias_ablation(&dev, steps, sigma, samples);
+    let mut t = Table::new(&["V_GREAD1", "one-to-one", "I margin", "V margin", "BER"])
+        .with_title(format!(
+            "bias ablation at sigma(V_T) = {:.0} mV (paper choice: {} V)",
+            sigma * 1e3,
+            dev.v_gread1
+        ));
+    for b in &pts {
+        t.row(&[
+            format!("{:.3} V", b.vg1),
+            b.margins.one_to_one.to_string(),
+            fmt_si(b.margins.current_margin, "A"),
+            fmt_si(b.margins.voltage_margin, "V"),
+            format!("{:.2e}", b.ber),
+        ]);
+    }
+    t.print();
+    let best = adra::analysis::ablation::best_bias(&pts);
+    println!("best worst-case-margin bias: V_GREAD1 = {:.3} V", best.vg1);
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let parser = ArgParser::new("adra serve", "line-protocol server on stdin/stdout")
+        .opt("shards", Some("2"), "array shards")
+        .opt("size", Some("256"), "square array size")
+        .opt("word-bits", Some("32"), "word width");
+    let p = parse_or_exit(&parser, args);
+    let mut cfg = SimConfig::default();
+    cfg.rows = p.get_usize("size").unwrap().unwrap();
+    cfg.cols = cfg.rows;
+    cfg.word_bits = p.get_usize("word-bits").unwrap().unwrap();
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid config: {e}");
+        return 2;
+    }
+    let shards = p.get_usize("shards").unwrap().unwrap();
+    let coord = Coordinator::adra(&cfg, shards);
+    eprintln!(
+        "adra serve: {} shards of {}x{}, {}-bit words; commands on stdin",
+        shards, cfg.rows, cfg.cols, cfg.word_bits
+    );
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    match adra::coordinator::repl::serve(&coord, stdin.lock(), stdout.lock()) {
+        Ok(served) => {
+            eprintln!("served {served} ops");
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_margins(args: &[String]) -> i32 {
+    let parser = ArgParser::new("adra margins", "sense-margin / asymmetry ablation")
+        .opt("steps", Some("12"), "asymmetry sweep points");
+    let p = parse_or_exit(&parser, args);
+    let steps = p.get_usize("steps").unwrap().unwrap();
+    let dev = SimConfig::default().device;
+    let c_rbl = 1024.0 * dev.c_rbl_cell;
+
+    let mut t = Table::new(&[
+        "V_GREAD1",
+        "one-to-one",
+        "current margin",
+        "voltage margin",
+        "meets targets",
+    ])
+    .with_title("asymmetry ablation: shrinking V_GREAD2 - V_GREAD1");
+    for i in 0..=steps {
+        let vg1 = dev.v_gread2 - (i as f64 / steps as f64) * (dev.v_gread2 - 0.5);
+        let r = MarginReport::evaluate(&dev, vg1, dev.v_gread2, c_rbl);
+        t.row(&[
+            format!("{vg1:.3} V"),
+            r.one_to_one.to_string(),
+            fmt_si(r.current_margin, "A"),
+            fmt_si(r.voltage_margin, "V"),
+            r.meets_paper_targets().to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper operating point: V_GREAD1 = {} V, V_GREAD2 = {} V",
+        dev.v_gread1, dev.v_gread2
+    );
+    0
+}

@@ -1,0 +1,190 @@
+//! Run metrics: counters, latency histogram, and aggregated energy — what
+//! the coordinator and the end-to-end examples report.
+
+use crate::energy::{EnergyBreakdown, OpCost};
+
+/// Log-bucketed latency histogram (nanosecond ops up to seconds).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// bucket i covers [2^i, 2^(i+1)) nanoseconds.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: f64,
+    max_ns: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { buckets: vec![0; 40], count: 0, sum_ns: 0.0, max_ns: 0.0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, seconds: f64) {
+        let ns = seconds * 1e9;
+        let idx = if ns < 1.0 {
+            0
+        } else {
+            (ns.log2().floor() as usize).min(self.buckets.len() - 1)
+        };
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+        if ns > self.max_ns {
+            self.max_ns = ns;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns / self.count as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> f64 {
+        self.max_ns
+    }
+
+    /// Approximate percentile from the log buckets (upper bound of the
+    /// bucket containing the p-th sample).
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// Aggregated metrics for a stream of operations.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub ops: u64,
+    pub errors: u64,
+    pub energy: EnergyBreakdown,
+    pub model_latency: LatencyHistogram,
+    /// Wall-clock time of the run (set by the driver).
+    pub wall_seconds: f64,
+}
+
+impl RunMetrics {
+    pub fn record(&mut self, cost: &OpCost) {
+        self.ops += 1;
+        self.energy = self.energy.add(&cost.energy);
+        self.model_latency.record(cost.latency);
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    pub fn merge(&mut self, other: &RunMetrics) {
+        self.ops += other.ops;
+        self.errors += other.errors;
+        self.energy = self.energy.add(&other.energy);
+        self.model_latency.merge(&other.model_latency);
+        self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
+    }
+
+    /// Modeled ops/s implied by the summed device latency.
+    pub fn modeled_throughput(&self) -> f64 {
+        let total_s = self.model_latency.mean_ns() * 1e-9 * self.ops as f64;
+        if total_s > 0.0 {
+            self.ops as f64 / total_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self, label: &str) -> String {
+        format!(
+            "{label}: {} ops ({} errors), modeled energy {:.3} nJ, \
+             mean op latency {:.3} ns, modeled throughput {:.2} Mop/s, \
+             wall {:.3} s",
+            self.ops,
+            self.errors,
+            self.energy.total() * 1e9,
+            self.model_latency.mean_ns(),
+            self.modeled_throughput() / 1e6,
+            self.wall_seconds,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(ns: f64) -> OpCost {
+        OpCost {
+            energy: EnergyBreakdown { rbl: 1e-15, ..Default::default() },
+            latency: ns * 1e-9,
+        }
+    }
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let mut h = LatencyHistogram::default();
+        for ns in [1.0, 2.0, 4.0, 8.0] {
+            h.record(ns * 1e-9);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean_ns() - 3.75).abs() < 1e-9);
+        assert_eq!(h.max_ns(), 8.0);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-9);
+        }
+        assert!(h.percentile_ns(50.0) <= h.percentile_ns(99.0));
+        assert!(h.percentile_ns(99.0) >= 512.0);
+    }
+
+    #[test]
+    fn metrics_accumulate_and_merge() {
+        let mut m1 = RunMetrics::default();
+        m1.record(&cost(2.0));
+        m1.record(&cost(4.0));
+        let mut m2 = RunMetrics::default();
+        m2.record(&cost(8.0));
+        m2.record_error();
+        m1.merge(&m2);
+        assert_eq!(m1.ops, 3);
+        assert_eq!(m1.errors, 1);
+        assert!((m1.energy.total() - 3e-15).abs() < 1e-25);
+    }
+
+    #[test]
+    fn report_is_informative() {
+        let mut m = RunMetrics::default();
+        m.record(&cost(3.0));
+        let r = m.report("test");
+        assert!(r.contains("1 ops"));
+        assert!(r.contains("test"));
+    }
+}

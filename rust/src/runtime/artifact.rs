@@ -1,0 +1,154 @@
+//! Artifact manifest: the ABI contract between `python/compile/aot.py`
+//! and the Rust runtime.  The manifest lists every lowered entry point and
+//! its input signature; the static shapes here must match
+//! `config::{N_COLS, N_SWEEP}`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::{N_COLS, N_SWEEP};
+
+/// The five AOT entry points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EntryPoint {
+    DcIsl,
+    TransientCim,
+    IvSweep,
+    WriteTransient,
+    ReadDisturb,
+}
+
+impl EntryPoint {
+    pub const ALL: [EntryPoint; 5] = [
+        EntryPoint::DcIsl,
+        EntryPoint::TransientCim,
+        EntryPoint::IvSweep,
+        EntryPoint::WriteTransient,
+        EntryPoint::ReadDisturb,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EntryPoint::DcIsl => "dc_isl",
+            EntryPoint::TransientCim => "transient_cim",
+            EntryPoint::IvSweep => "iv_sweep",
+            EntryPoint::WriteTransient => "write_transient",
+            EntryPoint::ReadDisturb => "read_disturb",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|e| e.name() == s)
+    }
+
+    /// Expected input shapes (`None` = scalar), mirroring aot.ENTRY_POINTS.
+    pub fn input_shapes(&self) -> Vec<Option<usize>> {
+        let n = Some(N_COLS);
+        let t = Some(N_SWEEP);
+        match self {
+            EntryPoint::DcIsl => vec![n, n, n, n, None, None],
+            EntryPoint::TransientCim => vec![n, n, n, n, None, None, None, None],
+            EntryPoint::IvSweep => vec![t],
+            EntryPoint::WriteTransient => vec![n, t],
+            EntryPoint::ReadDisturb => vec![n],
+        }
+    }
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    dir: PathBuf,
+    entries: BTreeMap<String, PathBuf>,
+}
+
+impl ArtifactManifest {
+    /// Load and validate the manifest in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            )
+        })?;
+        let mut entries = BTreeMap::new();
+        for line in text.lines() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let name = parts.next().ok_or("manifest: missing name")?.to_string();
+            let file = parts.next().ok_or("manifest: missing file")?;
+            let fpath = dir.join(file);
+            if !fpath.exists() {
+                return Err(format!("manifest entry {name}: missing file {}", fpath.display()));
+            }
+            entries.insert(name, fpath);
+        }
+        let m = Self { dir, entries };
+        // every known entry point must be present
+        for ep in EntryPoint::ALL {
+            m.path_of(ep)?;
+        }
+        Ok(m)
+    }
+
+    /// Default artifact location: `$ADRA_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self, String> {
+        let dir = std::env::var("ADRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path_of(&self, ep: EntryPoint) -> Result<&Path, String> {
+        self.entries
+            .get(ep.name())
+            .map(|p| p.as_path())
+            .ok_or_else(|| format!("manifest missing entry point {}", ep.name()))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_point_names_roundtrip() {
+        for ep in EntryPoint::ALL {
+            assert_eq!(EntryPoint::from_name(ep.name()), Some(ep));
+        }
+        assert_eq!(EntryPoint::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn input_shapes_match_abi() {
+        assert_eq!(EntryPoint::DcIsl.input_shapes().len(), 6);
+        assert_eq!(EntryPoint::TransientCim.input_shapes().len(), 8);
+        assert_eq!(EntryPoint::IvSweep.input_shapes(), vec![Some(N_SWEEP)]);
+    }
+
+    #[test]
+    fn missing_dir_is_a_helpful_error() {
+        let err = ArtifactManifest::load("/nonexistent/nowhere").unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn loads_real_artifacts_when_present() {
+        // exercised properly by the integration tests; here only when the
+        // default dir exists (e.g. under `make test`)
+        if std::path::Path::new("artifacts/manifest.txt").exists() {
+            let m = ArtifactManifest::load("artifacts").unwrap();
+            assert!(m.names().count() >= 5);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! The PJRT execution layer: compile each HLO-text artifact once on the
+//! CPU client, cache the loaded executables, and expose typed wrappers
+//! for every entry point.  `PjrtBackend` adapts the runtime to the
+//! engine's `AnalogBackend` interface so the ADRA engine can run its
+//! analog evaluations through the real JAX/Pallas-lowered computation.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+use super::artifact::{ArtifactManifest, EntryPoint};
+use crate::cim::AnalogBackend;
+use crate::config::{N_COLS, N_SWEEP};
+
+/// Compiled-executable cache over the PJRT CPU client.
+pub struct AnalogRuntime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    executables: HashMap<EntryPoint, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the xla wrappers hold `Rc<PjRtClientInternal>` handles, which are
+// not `Send` by construction.  Every `Rc` clone in this runtime (the client
+// plus the per-executable back-references) lives inside this one struct and
+// is only ever used by the thread that currently owns the `AnalogRuntime`;
+// the struct is moved whole into a coordinator worker and never shared, so
+// the non-atomic refcounts are never touched from two threads.  The PJRT
+// CPU client itself is thread-confined under this ownership discipline.
+unsafe impl Send for AnalogRuntime {}
+
+impl AnalogRuntime {
+    /// Create a runtime over the given artifact directory, compiling
+    /// every entry point eagerly (compile once, execute many).
+    pub fn new(manifest: ArtifactManifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut rt = Self { client, manifest, executables: HashMap::new() };
+        for ep in EntryPoint::ALL {
+            rt.compile(ep)?;
+        }
+        Ok(rt)
+    }
+
+    /// Runtime from `$ADRA_ARTIFACTS` / `./artifacts`.
+    pub fn from_default_artifacts() -> Result<Self> {
+        let manifest = ArtifactManifest::load_default().map_err(|e| anyhow!(e))?;
+        Self::new(manifest)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&mut self, ep: EntryPoint) -> Result<()> {
+        let path = self.manifest.path_of(ep).map_err(|e| anyhow!(e))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text for {}", ep.name()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", ep.name()))?;
+        self.executables.insert(ep, exe);
+        Ok(())
+    }
+
+    /// Execute an entry point on literal inputs; returns the flattened
+    /// tuple outputs.
+    pub fn execute(&self, ep: EntryPoint, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(&ep)
+            .ok_or_else(|| anyhow!("entry point {} not compiled", ep.name()))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", ep.name()))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        out.to_tuple().map_err(|e| anyhow!("decomposing result tuple: {e}"))
+    }
+
+    // ---- typed entry-point wrappers ---------------------------------------
+
+    /// DC senseline currents: returns (i_sl, i_a, i_b), each `N_COLS` long.
+    pub fn dc_isl(
+        &self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f32,
+        vg2: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let inputs = vec![
+            cols_literal(pol_a)?,
+            cols_literal(pol_b)?,
+            cols_literal(dvt_a)?,
+            cols_literal(dvt_b)?,
+            xla::Literal::scalar(vg1),
+            xla::Literal::scalar(vg2),
+        ];
+        let out = self.execute(EntryPoint::DcIsl, &inputs)?;
+        if out.len() != 3 {
+            return Err(anyhow!("dc_isl: expected 3 outputs, got {}", out.len()));
+        }
+        Ok((
+            out[0].to_vec::<f32>()?,
+            out[1].to_vec::<f32>()?,
+            out[2].to_vec::<f32>()?,
+        ))
+    }
+
+    /// RBL discharge transient: returns (v_final, q_drawn, e_diss); the
+    /// full [n_steps, N_COLS] trace is also available as `.0`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn transient_cim(
+        &self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f32,
+        vg2: f32,
+        v0: f32,
+        c_rbl: f32,
+    ) -> Result<TransientOut> {
+        let inputs = vec![
+            cols_literal(pol_a)?,
+            cols_literal(pol_b)?,
+            cols_literal(dvt_a)?,
+            cols_literal(dvt_b)?,
+            xla::Literal::scalar(vg1),
+            xla::Literal::scalar(vg2),
+            xla::Literal::scalar(v0),
+            xla::Literal::scalar(c_rbl),
+        ];
+        let out = self.execute(EntryPoint::TransientCim, &inputs)?;
+        if out.len() != 4 {
+            return Err(anyhow!("transient_cim: expected 4 outputs, got {}", out.len()));
+        }
+        Ok(TransientOut {
+            v_trace: out[0].to_vec::<f32>()?,
+            v_final: out[1].to_vec::<f32>()?,
+            q_drawn: out[2].to_vec::<f32>()?,
+            e_diss: out[3].to_vec::<f32>()?,
+        })
+    }
+
+    /// I-V hysteresis sweep (Fig. 2(c)): returns (i_d, pol) per point.
+    pub fn iv_sweep(&self, vg_trace: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        if vg_trace.len() != N_SWEEP {
+            return Err(anyhow!("iv_sweep wants {N_SWEEP} points, got {}", vg_trace.len()));
+        }
+        let out = self.execute(EntryPoint::IvSweep, &[xla::Literal::vec1(vg_trace)])?;
+        Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<f32>()?))
+    }
+
+    /// Write transient: polarization planes under a shared gate waveform.
+    pub fn write_transient(&self, pol0: &[f32], vg_pulse: &[f32]) -> Result<Vec<f32>> {
+        if vg_pulse.len() != N_SWEEP {
+            return Err(anyhow!("write_transient wants {N_SWEEP} waveform points"));
+        }
+        let out = self.execute(
+            EntryPoint::WriteTransient,
+            &[cols_literal(pol0)?, xla::Literal::vec1(vg_pulse)],
+        )?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Read-disturb trajectory: final polarization after sustained read.
+    pub fn read_disturb(&self, pol0: &[f32]) -> Result<Vec<f32>> {
+        let out = self.execute(EntryPoint::ReadDisturb, &[cols_literal(pol0)?])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+/// Output bundle of the transient entry point.
+#[derive(Clone, Debug)]
+pub struct TransientOut {
+    /// Flattened [n_steps * N_COLS] voltage trajectory.
+    pub v_trace: Vec<f32>,
+    pub v_final: Vec<f32>,
+    pub q_drawn: Vec<f32>,
+    pub e_diss: Vec<f32>,
+}
+
+/// Pad/validate a column plane to the artifact's static width.
+fn cols_literal(data: &[f32]) -> Result<xla::Literal> {
+    if data.len() == N_COLS {
+        return Ok(xla::Literal::vec1(data));
+    }
+    if data.len() > N_COLS {
+        return Err(anyhow!("plane wider than artifact width {N_COLS}"));
+    }
+    let mut padded = data.to_vec();
+    padded.resize(N_COLS, 0.0);
+    Ok(xla::Literal::vec1(&padded))
+}
+
+/// `AnalogBackend` adapter: the ADRA engine's analog evaluations served
+/// by the compiled JAX/Pallas artifacts.  Narrow activations are padded
+/// to the artifact width and sliced back.
+pub struct PjrtBackend {
+    rt: AnalogRuntime,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: AnalogRuntime) -> Self {
+        Self { rt }
+    }
+
+    pub fn runtime(&self) -> &AnalogRuntime {
+        &self.rt
+    }
+}
+
+impl AnalogBackend for PjrtBackend {
+    fn dc_isl(
+        &mut self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f64,
+        vg2: f64,
+    ) -> Vec<f64> {
+        let n = pol_a.len();
+        let (isl, _, _) = self
+            .rt
+            .dc_isl(pol_a, pol_b, dvt_a, dvt_b, vg1 as f32, vg2 as f32)
+            .expect("PJRT dc_isl execution failed");
+        isl[..n].iter().map(|&x| x as f64).collect()
+    }
+
+    fn transient_vfinal(
+        &mut self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f64,
+        vg2: f64,
+        c_rbl: f64,
+    ) -> Vec<f64> {
+        let n = pol_a.len();
+        let out = self
+            .rt
+            .transient_cim(
+                pol_a,
+                pol_b,
+                dvt_a,
+                dvt_b,
+                vg1 as f32,
+                vg2 as f32,
+                1.0, // V_READ precharge; engines use the configured device value
+                c_rbl as f32,
+            )
+            .expect("PJRT transient execution failed");
+        out.v_final[..n].iter().map(|&x| x as f64).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//! Python never runs here — the artifacts are self-contained.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactManifest, EntryPoint};
+pub use client::{AnalogRuntime, PjrtBackend};

@@ -1,0 +1,129 @@
+//! Current-mode sense-amplifier bank (Section IV.A).
+//!
+//! Three SAs per column compare I_SL against the OR / B / AND references;
+//! their outputs (plus complements, free in a differential SA) feed the
+//! compute module.  The OAI21 recovery of A (paper §III.A) happens here.
+
+use super::refs::CurrentRefs;
+
+/// Per-column sense outputs of one ADRA activation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SenseOut {
+    /// A + B  (OR sense amp)
+    pub or: bool,
+    /// B      (the additional ADRA sense amp)
+    pub b: bool,
+    /// A . B  (AND sense amp)
+    pub and: bool,
+}
+
+impl SenseOut {
+    /// Recover A via the OAI21 gate: A = NOT[(B + NOR(A,B)) . NAND(A,B)].
+    #[inline]
+    pub fn a(&self) -> bool {
+        let nand = !self.and;
+        let nor = !self.or;
+        !((self.b || nor) && nand)
+    }
+
+    /// XOR comes free from OR and AND (used by Boolean CiM ops).
+    #[inline]
+    pub fn xor(&self) -> bool {
+        self.or && !self.and
+    }
+}
+
+/// The three-SA bank for current sensing.
+#[derive(Clone, Copy, Debug)]
+pub struct CurrentSenseBank {
+    pub refs: CurrentRefs,
+}
+
+impl CurrentSenseBank {
+    pub fn new(refs: CurrentRefs) -> Self {
+        Self { refs }
+    }
+
+    /// Sense one column's senseline current.
+    #[inline]
+    pub fn sense(&self, i_sl: f64) -> SenseOut {
+        SenseOut {
+            or: i_sl > self.refs.i_ref_or,
+            b: i_sl > self.refs.i_ref_b,
+            and: i_sl > self.refs.i_ref_and,
+        }
+    }
+
+    /// Sense a slice of columns.
+    pub fn sense_all(&self, i_sl: &[f64]) -> Vec<SenseOut> {
+        i_sl.iter().map(|&i| self.sense(i)).collect()
+    }
+
+    /// Single-row read decision (standard memory read).
+    #[inline]
+    pub fn sense_read(&self, i_cell: f64) -> bool {
+        i_cell > self.refs.i_ref_read
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceParams;
+    use crate::device;
+
+    fn bank() -> CurrentSenseBank {
+        let p = DeviceParams::default();
+        CurrentSenseBank::new(CurrentRefs::derive(&p, p.v_gread1, p.v_gread2))
+    }
+
+    #[test]
+    fn sense_decodes_all_four_vectors() {
+        let p = DeviceParams::default();
+        let bank = bank();
+        let levels = device::isl_levels(&p, p.v_gread1, p.v_gread2);
+        for a in [false, true] {
+            for b in [false, true] {
+                let idx = ((a as usize) << 1) | b as usize;
+                let out = bank.sense(levels[idx]);
+                assert_eq!(out.or, a || b, "OR at ({a},{b})");
+                assert_eq!(out.and, a && b, "AND at ({a},{b})");
+                assert_eq!(out.b, b, "B at ({a},{b})");
+                assert_eq!(out.a(), a, "recovered A at ({a},{b})");
+                assert_eq!(out.xor(), a ^ b, "XOR at ({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn single_read_decodes_both_states() {
+        let p = DeviceParams::default();
+        let bank = bank();
+        let i_lrs = device::cell_current(&p, p.v_gread2, p.v_read, p.pol_of_bit(true), 0.0);
+        let i_hrs = device::cell_current(&p, p.v_gread2, p.v_read, p.pol_of_bit(false), 0.0);
+        assert!(bank.sense_read(i_lrs));
+        assert!(!bank.sense_read(i_hrs));
+    }
+
+    #[test]
+    fn sense_all_matches_pointwise() {
+        let p = DeviceParams::default();
+        let bank = bank();
+        let levels = device::isl_levels(&p, p.v_gread1, p.v_gread2);
+        let outs = bank.sense_all(&levels);
+        assert_eq!(outs.len(), 4);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(*o, bank.sense(levels[i]));
+        }
+    }
+
+    #[test]
+    fn oai_truth_table_standalone() {
+        for a in [false, true] {
+            for b in [false, true] {
+                let s = SenseOut { or: a || b, b, and: a && b };
+                assert_eq!(s.a(), a);
+            }
+        }
+    }
+}

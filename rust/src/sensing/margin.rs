@@ -1,0 +1,109 @@
+//! Sense-margin analysis: the worst-case separation between adjacent
+//! levels and the sensing failure point as the wordline asymmetry shrinks
+//! (the ablation behind the V_GREAD1/V_GREAD2 design choice).
+
+use crate::config::DeviceParams;
+use crate::device;
+
+/// Margin summary for one operating point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MarginReport {
+    /// Worst-case current margin between adjacent I_SL levels (A).
+    pub current_margin: f64,
+    /// Worst-case voltage margin between adjacent discharge levels (V).
+    pub voltage_margin: f64,
+    /// Whether all four levels are strictly ordered the ADRA way
+    /// (I00 < I10 < I01 < I11).
+    pub one_to_one: bool,
+}
+
+impl MarginReport {
+    /// Evaluate margins at the given bias pair and RBL capacitance.
+    pub fn evaluate(p: &DeviceParams, vg1: f64, vg2: f64, c_rbl: f64) -> Self {
+        let l = device::isl_levels(p, vg1, vg2);
+        let one_to_one = l[0b00] < l[0b10] && l[0b10] < l[0b01] && l[0b01] < l[0b11];
+        let mut li = l.to_vec();
+        li.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let current_margin = li.windows(2).map(|w| w[1] - w[0]).fold(f64::MAX, f64::min);
+
+        let mut vf: Vec<f64> = [(false, false), (true, false), (false, true), (true, true)]
+            .iter()
+            .map(|&(a, b)| {
+                device::rbl_transient(
+                    p,
+                    p.pol_of_bit(a),
+                    p.pol_of_bit(b),
+                    vg1,
+                    vg2,
+                    p.v_read,
+                    c_rbl,
+                    0.0,
+                    0.0,
+                )
+                .v_final
+            })
+            .collect();
+        vf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let voltage_margin = vf.windows(2).map(|w| w[1] - w[0]).fold(f64::MAX, f64::min);
+
+        Self { current_margin, voltage_margin, one_to_one }
+    }
+
+    /// Does this operating point satisfy the paper's Section IV targets?
+    pub fn meets_paper_targets(&self) -> bool {
+        self.one_to_one && self.current_margin > 1e-6 && self.voltage_margin > 0.050
+    }
+}
+
+/// Sweep the asymmetry (vg1 from vg2 downward) and find the minimum
+/// wordline separation that still meets the paper's margin targets.
+pub fn min_viable_asymmetry(p: &DeviceParams, c_rbl: f64, steps: usize) -> Option<f64> {
+    let vg2 = p.v_gread2;
+    for i in 1..=steps {
+        let dv = i as f64 * (vg2 - 0.5) / steps as f64;
+        let vg1 = vg2 - dv;
+        if MarginReport::evaluate(p, vg1, vg2, c_rbl).meets_paper_targets() {
+            return Some(dv);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_bias_meets_targets() {
+        let p = DeviceParams::default();
+        let r = MarginReport::evaluate(&p, p.v_gread1, p.v_gread2, 1024.0 * p.c_rbl_cell);
+        assert!(r.meets_paper_targets(), "{r:?}");
+        assert!(r.current_margin > 1e-6);
+        assert!(r.voltage_margin > 0.050);
+    }
+
+    #[test]
+    fn symmetric_bias_fails_one_to_one() {
+        let p = DeviceParams::default();
+        let r = MarginReport::evaluate(&p, p.v_gread2, p.v_gread2, 1024.0 * p.c_rbl_cell);
+        assert!(!r.one_to_one);
+        assert!(!r.meets_paper_targets());
+    }
+
+    #[test]
+    fn tiny_asymmetry_fails_margins() {
+        let p = DeviceParams::default();
+        let r = MarginReport::evaluate(&p, p.v_gread2 - 0.005, p.v_gread2, 1024.0 * p.c_rbl_cell);
+        assert!(!r.meets_paper_targets(), "{r:?}");
+    }
+
+    #[test]
+    fn viable_asymmetry_exists_and_paper_choice_exceeds_it() {
+        let p = DeviceParams::default();
+        let dv = min_viable_asymmetry(&p, 1024.0 * p.c_rbl_cell, 50)
+            .expect("some asymmetry should work");
+        assert!(dv <= (p.v_gread2 - p.v_gread1) + 1e-9,
+                "paper separation {} below minimum viable {dv}",
+                p.v_gread2 - p.v_gread1);
+    }
+}

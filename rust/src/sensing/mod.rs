@@ -1,0 +1,13 @@
+//! Sensing periphery: reference generation from the device model, the
+//! three-sense-amplifier ADRA bank (OR / B / AND), voltage-mode sensing
+//! for schemes 1 and 2, and margin analysis.
+
+pub mod current;
+pub mod margin;
+pub mod refs;
+pub mod voltage;
+
+pub use current::{CurrentSenseBank, SenseOut};
+pub use margin::MarginReport;
+pub use refs::{CurrentRefs, VoltageRefs};
+pub use voltage::VoltageSenseBank;

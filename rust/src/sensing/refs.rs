@@ -1,0 +1,132 @@
+//! Sense-amplifier reference generation.
+//!
+//! References sit at the midpoints between adjacent I_SL levels (Fig. 3(b)):
+//!   * I_REF-OR  between I(0,0) and I(1,0)   -> output = A + B
+//!   * I_REF-B   between I(1,0) and I(0,1)   -> output = B
+//!   * I_REF-AND between I(0,1) and I(1,1)   -> output = A . B
+//! and similarly (reversed polarity) for the voltage-discharge levels.
+//! They are *derived from the device model*, not hard-coded, so a bias
+//! change that collapses the margin breaks sensing here exactly as it
+//! would in SPICE.
+
+use crate::config::DeviceParams;
+use crate::device;
+
+/// Current-sensing references (amperes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CurrentRefs {
+    pub i_ref_or: f64,
+    pub i_ref_b: f64,
+    pub i_ref_and: f64,
+    /// Single-row read reference (between I_HRS and I_LRS at V_GREAD).
+    pub i_ref_read: f64,
+}
+
+impl CurrentRefs {
+    /// Derive from the DC I_SL levels at the given biases.
+    pub fn derive(p: &DeviceParams, vg1: f64, vg2: f64) -> Self {
+        let l = device::isl_levels(p, vg1, vg2);
+        let i_lrs = device::cell_current(p, p.v_gread2, p.v_read, p.pol_of_bit(true), 0.0);
+        let i_hrs = device::cell_current(p, p.v_gread2, p.v_read, p.pol_of_bit(false), 0.0);
+        Self {
+            // level order with vg1 < vg2: I00 < I10 < I01 < I11
+            i_ref_or: 0.5 * (l[0b00] + l[0b10]),
+            i_ref_b: 0.5 * (l[0b10] + l[0b01]),
+            i_ref_and: 0.5 * (l[0b01] + l[0b11]),
+            i_ref_read: 0.5 * (i_hrs + i_lrs),
+        }
+    }
+}
+
+/// Voltage-sensing references (volts, on the discharged RBL).  Note the
+/// polarity flip: larger I_SL discharges *deeper*, so V references are
+/// ordered V11 < V01 < V10 < V00 and comparisons are `v < ref`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VoltageRefs {
+    pub v_ref_or: f64,
+    pub v_ref_b: f64,
+    pub v_ref_and: f64,
+    pub v_ref_read: f64,
+}
+
+impl VoltageRefs {
+    /// Derive from full discharge transients of the four input vectors.
+    pub fn derive(p: &DeviceParams, vg1: f64, vg2: f64, c_rbl: f64) -> Self {
+        let vf = |a: bool, b: bool| -> f64 {
+            device::rbl_transient(
+                p,
+                p.pol_of_bit(a),
+                p.pol_of_bit(b),
+                vg1,
+                vg2,
+                p.v_read,
+                c_rbl,
+                0.0,
+                0.0,
+            )
+            .v_final
+        };
+        let v00 = vf(false, false);
+        let v10 = vf(true, false);
+        let v01 = vf(false, true);
+        let v11 = vf(true, true);
+        // single-row read discharge levels (one cell on the stronger WL)
+        let single = |bit: bool| -> f64 {
+            let mut v = p.v_read;
+            for _ in 0..p.n_steps {
+                let i = device::cell_current(p, p.v_gread2, v, p.pol_of_bit(bit), 0.0);
+                v = (v - i * p.t_step / c_rbl).max(0.0);
+            }
+            v
+        };
+        Self {
+            v_ref_or: 0.5 * (v00 + v10),
+            v_ref_b: 0.5 * (v10 + v01),
+            v_ref_and: 0.5 * (v01 + v11),
+            v_ref_read: 0.5 * (single(true) + single(false)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn current_refs_strictly_ordered() {
+        let p = DeviceParams::default();
+        let r = CurrentRefs::derive(&p, p.v_gread1, p.v_gread2);
+        assert!(r.i_ref_or < r.i_ref_b);
+        assert!(r.i_ref_b < r.i_ref_and);
+        assert!(r.i_ref_or > 0.0);
+    }
+
+    #[test]
+    fn current_refs_separate_levels() {
+        let p = DeviceParams::default();
+        let r = CurrentRefs::derive(&p, p.v_gread1, p.v_gread2);
+        let l = device::isl_levels(&p, p.v_gread1, p.v_gread2);
+        assert!(l[0b00] < r.i_ref_or && r.i_ref_or < l[0b10]);
+        assert!(l[0b10] < r.i_ref_b && r.i_ref_b < l[0b01]);
+        assert!(l[0b01] < r.i_ref_and && r.i_ref_and < l[0b11]);
+    }
+
+    #[test]
+    fn voltage_refs_reverse_ordered() {
+        let p = DeviceParams::default();
+        let c = 1024.0 * p.c_rbl_cell;
+        let r = VoltageRefs::derive(&p, p.v_gread1, p.v_gread2, c);
+        assert!(r.v_ref_and < r.v_ref_b);
+        assert!(r.v_ref_b < r.v_ref_or);
+        assert!(r.v_ref_or < p.v_read);
+    }
+
+    #[test]
+    fn read_ref_between_states() {
+        let p = DeviceParams::default();
+        let r = CurrentRefs::derive(&p, p.v_gread1, p.v_gread2);
+        let i_lrs = device::cell_current(&p, p.v_gread2, p.v_read, p.pol_of_bit(true), 0.0);
+        let i_hrs = device::cell_current(&p, p.v_gread2, p.v_read, p.pol_of_bit(false), 0.0);
+        assert!(i_hrs < r.i_ref_read && r.i_ref_read < i_lrs);
+    }
+}

@@ -1,0 +1,100 @@
+//! Voltage-mode sensing (Section IV.B): compare the discharged RBL voltage
+//! against three references.  Polarity is flipped relative to current
+//! sensing — larger I_SL means a *lower* final voltage — so the OR/B/AND
+//! decisions are `v < ref`.
+//!
+//! Scheme 1 (precharged) and scheme 2 (discharged-at-hold) share the same
+//! comparator bank; they differ in hold-state policy, which is an energy
+//! question handled by `energy::model`, not a sensing one.
+
+use super::current::SenseOut;
+use super::refs::VoltageRefs;
+
+/// Three-comparator voltage sense bank.
+#[derive(Clone, Copy, Debug)]
+pub struct VoltageSenseBank {
+    pub refs: VoltageRefs,
+}
+
+impl VoltageSenseBank {
+    pub fn new(refs: VoltageRefs) -> Self {
+        Self { refs }
+    }
+
+    /// Sense one column's final RBL voltage after the discharge window.
+    #[inline]
+    pub fn sense(&self, v_final: f64) -> SenseOut {
+        SenseOut {
+            or: v_final < self.refs.v_ref_or,
+            b: v_final < self.refs.v_ref_b,
+            and: v_final < self.refs.v_ref_and,
+        }
+    }
+
+    pub fn sense_all(&self, v_final: &[f64]) -> Vec<SenseOut> {
+        v_final.iter().map(|&v| self.sense(v)).collect()
+    }
+
+    /// Single-row read decision: '1' discharges below the read reference.
+    #[inline]
+    pub fn sense_read(&self, v_final: f64) -> bool {
+        v_final < self.refs.v_ref_read
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceParams;
+    use crate::device;
+
+    #[test]
+    fn voltage_sense_decodes_all_four_vectors() {
+        let p = DeviceParams::default();
+        let c = 1024.0 * p.c_rbl_cell;
+        let bank = VoltageSenseBank::new(VoltageRefs::derive(&p, p.v_gread1, p.v_gread2, c));
+        for a in [false, true] {
+            for b in [false, true] {
+                let t = device::rbl_transient(
+                    &p,
+                    p.pol_of_bit(a),
+                    p.pol_of_bit(b),
+                    p.v_gread1,
+                    p.v_gread2,
+                    p.v_read,
+                    c,
+                    0.0,
+                    0.0,
+                );
+                let out = bank.sense(t.v_final);
+                assert_eq!(out.or, a || b, "OR at ({a},{b})");
+                assert_eq!(out.and, a && b, "AND at ({a},{b})");
+                assert_eq!(out.b, b, "B at ({a},{b})");
+                assert_eq!(out.a(), a, "A at ({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn works_across_array_sizes() {
+        let p = DeviceParams::default();
+        for rows in [256usize, 512, 1024] {
+            let c = rows as f64 * p.c_rbl_cell;
+            let bank =
+                VoltageSenseBank::new(VoltageRefs::derive(&p, p.v_gread1, p.v_gread2, c));
+            let t = device::rbl_transient(
+                &p,
+                p.pol_of_bit(true),
+                p.pol_of_bit(false),
+                p.v_gread1,
+                p.v_gread2,
+                p.v_read,
+                c,
+                0.0,
+                0.0,
+            );
+            let out = bank.sense(t.v_final);
+            assert!(out.a() && !out.b, "rows={rows}");
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Minimal CLI argument parser (the offline environment has no `clap`).
+//!
+//! Supports the subset the `adra` binary needs: subcommands, `--flag`,
+//! `--key value` / `--key=value`, repeated keys, and positional arguments,
+//! with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec for one flag/option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments: options by name, plus positionals.
+#[derive(Debug, Default)]
+pub struct Parsed {
+    opts: BTreeMap<String, Vec<String>>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.opts.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.opts.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|e| format!("--{name}: invalid integer {s:?}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|e| format!("--{name}: invalid number {s:?}: {e}")),
+        }
+    }
+}
+
+/// Parser for one (sub)command.
+pub struct ArgParser {
+    pub command: &'static str,
+    pub about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+impl ArgParser {
+    pub fn new(command: &'static str, about: &'static str) -> Self {
+        Self { command, about, specs: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, takes_value: false, default: None, help });
+        self
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        self.specs.push(OptSpec { name, takes_value: true, default, help });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\noptions:\n", self.command, self.about);
+        for s in &self.specs {
+            let val = if s.takes_value { " <value>" } else { "" };
+            let def = match s.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            out.push_str(&format!("  --{}{val}\n      {}{def}\n", s.name, s.help));
+        }
+        out
+    }
+
+    /// Parse a raw arg list (without argv[0] / the subcommand itself).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut parsed = Parsed::default();
+        // seed defaults
+        for s in &self.specs {
+            if let Some(d) = s.default {
+                parsed.opts.insert(s.name.to_string(), vec![d.to_string()]);
+            }
+        }
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                let value = if !spec.takes_value {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    it.next()
+                        .ok_or_else(|| format!("--{name} requires a value"))?
+                        .clone()
+                };
+                let entry = parsed.opts.entry(name.to_string()).or_default();
+                if spec.default.is_some() && entry.len() == 1 && entry[0] == spec.default.unwrap()
+                {
+                    entry.clear(); // replace default rather than append to it
+                }
+                entry.push(value);
+            } else {
+                parsed.positionals.push(arg.clone());
+            }
+        }
+        Ok(parsed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> ArgParser {
+        ArgParser::new("test", "test parser")
+            .flag("verbose", "enable verbosity")
+            .opt("size", Some("1024"), "array size")
+            .opt("name", None, "a name")
+    }
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = parser().parse(&argv(&[])).unwrap();
+        assert_eq!(p.get("size"), Some("1024"));
+        assert!(!p.flag("verbose"));
+        assert_eq!(p.get("name"), None);
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = parser().parse(&argv(&["--size", "256", "--name=foo"])).unwrap();
+        assert_eq!(p.get("size"), Some("256"));
+        assert_eq!(p.get("name"), Some("foo"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let p = parser().parse(&argv(&["--verbose", "pos1", "pos2"])).unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn repeated_option_overrides_default_then_appends() {
+        let p = parser()
+            .parse(&argv(&["--size", "128", "--size", "512"]))
+            .unwrap();
+        assert_eq!(p.get_all("size"), &["128".to_string(), "512".to_string()]);
+        assert_eq!(p.get("size"), Some("512")); // last wins
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parser().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parser().parse(&argv(&["--name"])).is_err());
+    }
+
+    #[test]
+    fn numeric_accessors() {
+        let p = parser().parse(&argv(&["--size", "42"])).unwrap();
+        assert_eq!(p.get_usize("size").unwrap(), Some(42));
+        let bad = parser().parse(&argv(&["--size", "x"])).unwrap();
+        assert!(bad.get_usize("size").is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = parser().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--size"));
+        assert!(err.contains("array size"));
+    }
+}

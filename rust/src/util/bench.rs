@@ -1,0 +1,170 @@
+//! Micro-benchmark harness (the offline environment has no `criterion`).
+//!
+//! Provides warmup, calibrated iteration counts, and robust statistics
+//! (median / p10 / p90 over sample batches), printed in a stable format
+//! the `cargo bench` targets under `rust/benches/` share.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics, in nanoseconds per iteration.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchStats {
+    fn sorted(&self) -> Vec<f64> {
+        let mut v = self.samples_ns.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        percentile(&self.sorted(), 50.0)
+    }
+
+    pub fn p10_ns(&self) -> f64 {
+        percentile(&self.sorted(), 10.0)
+    }
+
+    pub fn p90_ns(&self) -> f64 {
+        percentile(&self.sorted(), 90.0)
+    }
+
+    /// Iterations per second implied by the median.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.median_ns()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} {:>12.1} ns/iter (p10 {:>10.1}, p90 {:>10.1}) {:>14.0} it/s",
+            self.name,
+            self.median_ns(),
+            self.p10_ns(),
+            self.p90_ns(),
+            self.throughput()
+        )
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Harness: calibrates iteration count to the target sample duration, runs
+/// `samples` batches, reports statistics.
+pub struct Bench {
+    pub warmup: Duration,
+    pub target_sample: Duration,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(150),
+            target_sample: Duration::from_millis(60),
+            samples: 15,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn coarse() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            target_sample: Duration::from_millis(120),
+            samples: 7,
+        }
+    }
+
+    /// Run `f` repeatedly; `f` should perform ONE logical iteration and
+    /// return a value the harness black-boxes to defeat dead-code elim.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchStats {
+        // Warmup + calibration: find iters/sample such that a sample takes
+        // roughly target_sample.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.target_sample.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            let elapsed = t0.elapsed().as_nanos() as f64;
+            samples_ns.push(elapsed / iters as f64);
+        }
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            samples_ns,
+        };
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+/// Optimization barrier. `std::hint::black_box` is stable since 1.66.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_on_known_data() {
+        let s = BenchStats {
+            name: "t".into(),
+            iters_per_sample: 1,
+            samples_ns: vec![5.0, 1.0, 3.0, 2.0, 4.0],
+        };
+        assert_eq!(s.median_ns(), 3.0);
+        assert_eq!(s.p10_ns(), 1.0);
+        assert_eq!(s.p90_ns(), 5.0);
+    }
+
+    #[test]
+    fn runs_and_produces_positive_stats() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            target_sample: Duration::from_millis(2),
+            samples: 3,
+        };
+        let mut acc = 0u64;
+        let stats = b.run("noop-ish", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert!(stats.median_ns() > 0.0);
+        assert!(stats.throughput() > 0.0);
+        assert_eq!(stats.samples_ns.len(), 3);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let s = BenchStats {
+            name: "mybench".into(),
+            iters_per_sample: 10,
+            samples_ns: vec![10.0; 5],
+        };
+        assert!(s.report().contains("mybench"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Infrastructure substrates built in-tree (no clap/criterion/proptest/rand
+//! in the offline environment — see DESIGN.md §3).
+
+pub mod args;
+pub mod bench;
+pub mod quick;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,227 @@
+//! quickcheck-lite: property-based testing without the `proptest` crate.
+//!
+//! Generates random cases from a deterministic RNG, runs the property, and
+//! on failure performs greedy shrinking via the case's `shrink` candidates
+//! before reporting the minimal counterexample.  Used throughout the crate
+//! for coordinator invariants, arithmetic identities, and energy-model
+//! monotonicity properties.
+
+use super::rng::Rng;
+
+/// A generatable, shrinkable test case.
+pub trait Arbitrary: Sized + Clone + std::fmt::Debug {
+    fn generate(rng: &mut Rng) -> Self;
+
+    /// Candidate smaller versions of `self` (tried in order).
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+/// Configuration for a property run.
+pub struct Quick {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Quick {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0xAD2A_u64, max_shrink_steps: 500 }
+    }
+}
+
+impl Quick {
+    pub fn with_cases(cases: usize) -> Self {
+        Self { cases, ..Self::default() }
+    }
+
+    /// Check `prop` over `cases` generated inputs; panics with the shrunk
+    /// counterexample on failure.
+    pub fn check<T: Arbitrary, P: Fn(&T) -> bool>(&self, name: &str, prop: P) {
+        let mut rng = Rng::new(self.seed);
+        for case_idx in 0..self.cases {
+            let case = T::generate(&mut rng);
+            if !prop(&case) {
+                let minimal = self.shrink_failure(&case, &prop);
+                panic!(
+                    "property {name:?} failed on case {case_idx}\n\
+                     original: {case:?}\n\
+                     shrunk:   {minimal:?}"
+                );
+            }
+        }
+    }
+
+    fn shrink_failure<T: Arbitrary, P: Fn(&T) -> bool>(&self, case: &T, prop: &P) -> T {
+        let mut current = case.clone();
+        let mut steps = 0;
+        'outer: while steps < self.max_shrink_steps {
+            for candidate in current.shrink() {
+                steps += 1;
+                if !prop(&candidate) {
+                    current = candidate;
+                    continue 'outer;
+                }
+                if steps >= self.max_shrink_steps {
+                    break 'outer;
+                }
+            }
+            break; // no shrink candidate still fails -> minimal
+        }
+        current
+    }
+}
+
+// ---- Arbitrary instances for common shapes -------------------------------
+
+impl Arbitrary for u64 {
+    fn generate(rng: &mut Rng) -> Self {
+        // favor small and boundary values — arithmetic bugs live there
+        match rng.below(8) {
+            0 => 0,
+            1 => 1,
+            2 => u64::MAX,
+            3 => rng.below(256),
+            _ => rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut v = Vec::new();
+        if *self > 0 {
+            v.push(0);
+            v.push(self / 2);
+            v.push(self - 1);
+        }
+        v
+    }
+}
+
+impl Arbitrary for bool {
+    fn generate(rng: &mut Rng) -> Self {
+        rng.bool()
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        if *self { vec![false] } else { vec![] }
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn generate(rng: &mut Rng) -> Self {
+        (A::generate(rng), B::generate(rng))
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut v: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        v.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        v
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary, C: Arbitrary> Arbitrary for (A, B, C) {
+    fn generate(rng: &mut Rng) -> Self {
+        (A::generate(rng), B::generate(rng), C::generate(rng))
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut v: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        v.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        v.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        v
+    }
+}
+
+impl<T: Arbitrary> Arbitrary for Vec<T> {
+    fn generate(rng: &mut Rng) -> Self {
+        let len = rng.below(33) as usize;
+        (0..len).map(|_| T::generate(rng)).collect()
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut v = Vec::new();
+        if !self.is_empty() {
+            v.push(Vec::new());
+            v.push(self[..self.len() / 2].to_vec());
+            let mut tail = self.clone();
+            tail.remove(0);
+            v.push(tail);
+            // shrink one element
+            if let Some(shrunk_first) = self[0].shrink().into_iter().next() {
+                let mut c = self.clone();
+                c[0] = shrunk_first;
+                v.push(c);
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Quick::with_cases(200).check::<u64, _>("x == x", |x| *x == *x);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let caught = std::panic::catch_unwind(|| {
+            Quick::with_cases(500).check::<u64, _>("x < 100", |x| *x < 100);
+        });
+        let msg = match caught {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // greedy shrink should land on exactly 100 (smallest failing value)
+        assert!(msg.contains("shrunk:   100"), "message: {msg}");
+    }
+
+    #[test]
+    fn tuple_generation_and_shrinking() {
+        let caught = std::panic::catch_unwind(|| {
+            Quick::with_cases(500)
+                .check::<(u64, u64), _>("sum < 50", |(a, b)| a.wrapping_add(*b) < 50);
+        });
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn vec_shrink_candidates_are_smaller_or_equal() {
+        let v: Vec<u64> = vec![5, 6, 7, 8];
+        for c in v.shrink() {
+            assert!(c.len() <= v.len());
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // same seed -> same first generated case
+        let mut r1 = Rng::new(99);
+        let mut r2 = Rng::new(99);
+        assert_eq!(u64::generate(&mut r1), u64::generate(&mut r2));
+    }
+}

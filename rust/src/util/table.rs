@@ -1,0 +1,157 @@
+//! ASCII table rendering for figure harnesses and reports.
+//!
+//! The figure commands print the same rows/series the paper's plots show;
+//! this module keeps the formatting consistent everywhere.
+
+/// A simple right-aligned column table with a header row.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title(mut self, title: impl Into<String>) -> Self {
+        self.title = Some(title.into());
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row arity mismatch: {} vs {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("== {t} ==\n"));
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            (0..ncols)
+                .map(|i| format!(" {:>width$} ", cells[i], width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helpers used across the figure harnesses.
+pub fn fmt_si(value: f64, unit: &str) -> String {
+    let (scaled, prefix) = si_scale(value);
+    format!("{scaled:.3} {prefix}{unit}")
+}
+
+pub fn si_scale(value: f64) -> (f64, &'static str) {
+    let a = value.abs();
+    if a == 0.0 {
+        (0.0, "")
+    } else if a >= 1.0 {
+        if a >= 1e9 {
+            (value / 1e9, "G")
+        } else if a >= 1e6 {
+            (value / 1e6, "M")
+        } else if a >= 1e3 {
+            (value / 1e3, "k")
+        } else {
+            (value, "")
+        }
+    } else if a >= 1e-3 {
+        (value * 1e3, "m")
+    } else if a >= 1e-6 {
+        (value * 1e6, "u")
+    } else if a >= 1e-9 {
+        (value * 1e9, "n")
+    } else if a >= 1e-12 {
+        (value * 1e12, "p")
+    } else {
+        (value * 1e15, "f")
+    }
+}
+
+pub fn fmt_pct(frac: f64) -> String {
+    format!("{:.2}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_columns() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "12345".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert!(lines[0].contains("name") && lines[0].contains("value"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn si_scaling() {
+        assert_eq!(fmt_si(204.8e-15, "J"), "204.800 fJ");
+        assert_eq!(fmt_si(1.94e6, "Hz"), "1.940 MHz");
+        assert_eq!(fmt_si(35.5e-6, "A"), "35.500 uA");
+        assert_eq!(fmt_si(0.05, "V"), "50.000 mV");
+        assert_eq!(fmt_si(2.5e-9, "s"), "2.500 ns");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(fmt_pct(0.4118), "41.18%");
+    }
+
+    #[test]
+    fn title_appears() {
+        let t = Table::new(&["x"]).with_title("Fig 4(a)");
+        assert!(t.render().starts_with("== Fig 4(a) =="));
+    }
+}

@@ -1,0 +1,217 @@
+//! Randomized operation-stream generator with a configurable op mix and
+//! uniform or zipf-skewed row addressing.
+
+use crate::cim::{BoolFn, CimOp, WordAddr};
+use crate::config::SimConfig;
+use crate::util::rng::Rng;
+
+/// Relative weights of the operation classes.
+#[derive(Clone, Copy, Debug)]
+pub struct OpMix {
+    pub read: f64,
+    pub read2: f64,
+    pub boolean: f64,
+    pub add: f64,
+    pub sub: f64,
+    pub compare: f64,
+    pub write: f64,
+}
+
+impl OpMix {
+    /// The paper's motivating mix: subtraction/comparison-heavy.
+    pub fn subtraction_heavy() -> Self {
+        Self { read: 0.1, read2: 0.1, boolean: 0.1, add: 0.1, sub: 0.4, compare: 0.15, write: 0.05 }
+    }
+
+    /// Balanced mix across everything.
+    pub fn balanced() -> Self {
+        Self { read: 1.0, read2: 1.0, boolean: 1.0, add: 1.0, sub: 1.0, compare: 1.0, write: 1.0 }
+    }
+
+    /// Pure in-memory subtraction (the headline benchmark op).
+    pub fn sub_only() -> Self {
+        Self { read: 0.0, read2: 0.0, boolean: 0.0, add: 0.0, sub: 1.0, compare: 0.0, write: 0.0 }
+    }
+
+    fn total(&self) -> f64 {
+        self.read + self.read2 + self.boolean + self.add + self.sub + self.compare + self.write
+    }
+}
+
+/// Deterministic op-stream generator.
+pub struct WorkloadGen {
+    rng: Rng,
+    rows: usize,
+    words: usize,
+    word_mask: u64,
+    mix: OpMix,
+    /// zipf skew on rows; 0 = uniform.
+    skew: f64,
+}
+
+impl WorkloadGen {
+    pub fn new(cfg: &SimConfig, mix: OpMix, seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            rows: cfg.rows,
+            words: cfg.words_per_row(),
+            word_mask: if cfg.word_bits == 64 { u64::MAX } else { (1 << cfg.word_bits) - 1 },
+            mix,
+            skew: 0.0,
+        }
+    }
+
+    pub fn with_skew(mut self, skew: f64) -> Self {
+        self.skew = skew;
+        self
+    }
+
+    fn row(&mut self) -> usize {
+        if self.skew > 0.0 {
+            // zipf over a window of 64 hot rows + uniform tail
+            if self.rng.next_f64() < 0.8 {
+                self.rng.zipf(64.min(self.rows as u64), self.skew) as usize
+            } else {
+                self.rng.below(self.rows as u64) as usize
+            }
+        } else {
+            self.rng.below(self.rows as u64) as usize
+        }
+    }
+
+    fn row_pair(&mut self) -> (usize, usize) {
+        let a = self.row();
+        let mut b = self.row();
+        while b == a {
+            b = (b + 1) % self.rows;
+        }
+        (a, b)
+    }
+
+    /// Generate the next operation.
+    #[allow(unused_assignments)] // the final macro arm's decrement is dead by design
+    pub fn next_op(&mut self) -> CimOp {
+        let mut pick = self.rng.next_f64() * self.mix.total();
+        let word = self.rng.below(self.words as u64) as usize;
+        macro_rules! take {
+            ($w:expr, $body:expr) => {
+                if pick < $w {
+                    return $body;
+                }
+                pick -= $w;
+            };
+        }
+        take!(self.mix.read, {
+            CimOp::Read(WordAddr { row: self.row(), word })
+        });
+        take!(self.mix.read2, {
+            let (row_a, row_b) = self.row_pair();
+            CimOp::Read2 { row_a, row_b, word }
+        });
+        take!(self.mix.boolean, {
+            let (row_a, row_b) = self.row_pair();
+            let f = BoolFn::ALL[self.rng.below(BoolFn::ALL.len() as u64) as usize];
+            CimOp::Bool { f, row_a, row_b, word }
+        });
+        take!(self.mix.add, {
+            let (row_a, row_b) = self.row_pair();
+            CimOp::Add { row_a, row_b, word }
+        });
+        take!(self.mix.sub, {
+            let (row_a, row_b) = self.row_pair();
+            CimOp::Sub { row_a, row_b, word }
+        });
+        take!(self.mix.compare, {
+            let (row_a, row_b) = self.row_pair();
+            CimOp::Compare { row_a, row_b, word }
+        });
+        CimOp::Write {
+            addr: WordAddr { row: self.row(), word },
+            value: self.rng.next_u64() & self.word_mask,
+        }
+    }
+
+    /// Generate a batch of ops.
+    pub fn batch(&mut self, n: usize) -> Vec<CimOp> {
+        (0..n).map(|_| self.next_op()).collect()
+    }
+
+    /// Random word value within the configured width.
+    pub fn word_value(&mut self) -> u64 {
+        self.rng.next_u64() & self.word_mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SensingScheme, SimConfig};
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::square(256, SensingScheme::Current);
+        c.word_bits = 16;
+        c
+    }
+
+    #[test]
+    fn ops_respect_address_bounds() {
+        let cfg = cfg();
+        let mut g = WorkloadGen::new(&cfg, OpMix::balanced(), 42);
+        for _ in 0..2000 {
+            let op = g.next_op();
+            let (ra, rb) = op.rows();
+            assert!(ra < cfg.rows);
+            if let Some(rb) = rb {
+                assert!(rb < cfg.rows);
+                assert_ne!(ra, rb, "dual op must use distinct rows");
+            }
+        }
+    }
+
+    #[test]
+    fn sub_only_mix_generates_only_sub() {
+        let cfg = cfg();
+        let mut g = WorkloadGen::new(&cfg, OpMix::sub_only(), 1);
+        for _ in 0..100 {
+            assert!(matches!(g.next_op(), CimOp::Sub { .. }));
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let cfg = cfg();
+        let mut g1 = WorkloadGen::new(&cfg, OpMix::balanced(), 7);
+        let mut g2 = WorkloadGen::new(&cfg, OpMix::balanced(), 7);
+        assert_eq!(g1.batch(100), g2.batch(100));
+    }
+
+    #[test]
+    fn mix_produces_all_classes() {
+        let cfg = cfg();
+        let mut g = WorkloadGen::new(&cfg, OpMix::balanced(), 3);
+        let ops = g.batch(2000);
+        let has = |f: &dyn Fn(&CimOp) -> bool| ops.iter().any(|o| f(o));
+        assert!(has(&|o| matches!(o, CimOp::Read(_))));
+        assert!(has(&|o| matches!(o, CimOp::Read2 { .. })));
+        assert!(has(&|o| matches!(o, CimOp::Bool { .. })));
+        assert!(has(&|o| matches!(o, CimOp::Add { .. })));
+        assert!(has(&|o| matches!(o, CimOp::Sub { .. })));
+        assert!(has(&|o| matches!(o, CimOp::Compare { .. })));
+        assert!(has(&|o| matches!(o, CimOp::Write { .. })));
+    }
+
+    #[test]
+    fn skewed_rows_are_skewed() {
+        let cfg = cfg();
+        let mut g = WorkloadGen::new(&cfg, OpMix::sub_only(), 9).with_skew(1.2);
+        let mut low = 0;
+        for _ in 0..2000 {
+            let (ra, _) = g.next_op().rows();
+            if ra < 8 {
+                low += 1;
+            }
+        }
+        // 8/256 rows would get ~60 hits if uniform; skew should 5x that
+        assert!(low > 300, "low-row hits {low}");
+    }
+}

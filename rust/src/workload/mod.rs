@@ -1,0 +1,8 @@
+//! Workload generators: the op streams the examples, benches, and the
+//! coordinator's end-to-end driver feed through the engines.
+
+pub mod generators;
+pub mod traces;
+
+pub use generators::{OpMix, WorkloadGen};
+pub use traces::{database_filter_trace, image_diff_trace, DatabaseTrace};

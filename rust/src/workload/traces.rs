@@ -1,0 +1,171 @@
+//! Domain workload traces — the scenarios the paper's introduction
+//! motivates (database analytics, signal/image processing): realistic op
+//! sequences with known ground-truth answers for end-to-end validation.
+
+use crate::cim::{CimOp, WordAddr};
+use crate::config::SimConfig;
+use crate::util::rng::Rng;
+
+/// A database-filter workload: N records stored in one row region, a
+/// query threshold in another; the filter `SELECT * WHERE value < k`
+/// runs as in-memory comparisons.
+#[derive(Clone, Debug)]
+pub struct DatabaseTrace {
+    /// (row, word) of each stored record.
+    pub records: Vec<WordAddr>,
+    /// value of each record (ground truth).
+    pub values: Vec<u64>,
+    /// row holding the broadcast threshold.
+    pub threshold_row: usize,
+    pub threshold: u64,
+    /// setup ops (writes), then the query ops (compares).
+    pub setup: Vec<CimOp>,
+    pub query: Vec<CimOp>,
+    /// ground-truth record indices matching value < threshold (signed).
+    pub expected_matches: Vec<usize>,
+}
+
+/// Build a database-filter trace: records in rows `0..rows_used`, the
+/// threshold replicated across one extra row so every compare is a
+/// same-column dual-row activation.
+pub fn database_filter_trace(cfg: &SimConfig, n_records: usize, seed: u64) -> DatabaseTrace {
+    let words = cfg.words_per_row();
+    let rows_needed = n_records.div_ceil(words);
+    assert!(
+        rows_needed + 1 <= cfg.rows,
+        "trace needs {} rows, array has {}",
+        rows_needed + 1,
+        cfg.rows
+    );
+    let mask = if cfg.word_bits == 64 { u64::MAX } else { (1 << cfg.word_bits) - 1 };
+    // keep values in the positive signed range so two's-complement
+    // comparison semantics match plain unsigned intuition in the example
+    let pos_max = mask >> 1;
+    let mut rng = Rng::new(seed);
+    let threshold = pos_max / 2;
+    let threshold_row = rows_needed;
+
+    let mut records = Vec::with_capacity(n_records);
+    let mut values = Vec::with_capacity(n_records);
+    let mut setup = Vec::new();
+    let mut query = Vec::new();
+    let mut expected_matches = Vec::new();
+
+    for i in 0..n_records {
+        let addr = WordAddr { row: i / words, word: i % words };
+        let value = rng.below(pos_max + 1);
+        records.push(addr);
+        values.push(value);
+        setup.push(CimOp::Write { addr, value });
+        if value < threshold {
+            expected_matches.push(i);
+        }
+    }
+    // threshold broadcast into every word of the threshold row
+    for w in 0..words {
+        setup.push(CimOp::Write {
+            addr: WordAddr { row: threshold_row, word: w },
+            value: threshold,
+        });
+    }
+    for addr in &records {
+        query.push(CimOp::Compare { row_a: addr.row, row_b: threshold_row, word: addr.word });
+    }
+
+    DatabaseTrace { records, values, threshold_row, threshold, setup, query, expected_matches }
+}
+
+/// An image-diff workload: two frames stored row-interleaved; the diff
+/// (frame1 - frame2, per pixel-word) runs as in-memory subtractions.
+/// Returns (setup ops, diff ops, expected signed diffs).
+pub fn image_diff_trace(
+    cfg: &SimConfig,
+    n_pixels: usize,
+    seed: u64,
+) -> (Vec<CimOp>, Vec<CimOp>, Vec<i128>) {
+    let words = cfg.words_per_row();
+    let rows_per_frame = n_pixels.div_ceil(words);
+    assert!(2 * rows_per_frame <= cfg.rows, "frames don't fit");
+    let mask = if cfg.word_bits == 64 { u64::MAX } else { (1 << cfg.word_bits) - 1 };
+    let bits = cfg.word_bits;
+    let signed = |v: u64| -> i128 {
+        let raw = (v & mask) as i128;
+        if bits < 64 && (v >> (bits - 1)) & 1 == 1 {
+            raw - (1i128 << bits)
+        } else {
+            raw
+        }
+    };
+    let mut rng = Rng::new(seed);
+    let mut setup = Vec::new();
+    let mut diffs = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..n_pixels {
+        let (row1, word) = (i / words, i % words);
+        let row2 = rows_per_frame + row1;
+        // second frame = first frame + small noise (temporally correlated)
+        let p1 = rng.below(mask + 1);
+        let noise = rng.below(16) as i64 - 8;
+        let p2 = (p1 as i64 + noise).clamp(0, mask as i64) as u64;
+        setup.push(CimOp::Write { addr: WordAddr { row: row1, word }, value: p1 });
+        setup.push(CimOp::Write { addr: WordAddr { row: row2, word }, value: p2 });
+        diffs.push(CimOp::Sub { row_a: row1, row_b: row2, word });
+        expected.push(signed(p1) - signed(p2));
+    }
+    (setup, diffs, expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::{AdraEngine, CimValue, Engine};
+    use crate::config::{SensingScheme, SimConfig};
+    use crate::logic::CompareResult;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::square(64, SensingScheme::Current);
+        c.word_bits = 8;
+        c
+    }
+
+    #[test]
+    fn database_trace_ground_truth_via_engine() {
+        let cfg = cfg();
+        let trace = database_filter_trace(&cfg, 32, 99);
+        let mut e = AdraEngine::new(&cfg);
+        for op in &trace.setup {
+            e.execute(op).unwrap();
+        }
+        let mut matches = Vec::new();
+        for (i, op) in trace.query.iter().enumerate() {
+            let r = e.execute(op).unwrap();
+            if r.value == CimValue::Ordering(CompareResult::Less) {
+                matches.push(i);
+            }
+        }
+        assert_eq!(matches, trace.expected_matches);
+        assert!(!trace.expected_matches.is_empty(), "degenerate trace");
+        assert!(trace.expected_matches.len() < 32, "degenerate trace");
+    }
+
+    #[test]
+    fn image_diff_ground_truth_via_engine() {
+        let cfg = cfg();
+        let (setup, diffs, expected) = image_diff_trace(&cfg, 48, 123);
+        let mut e = AdraEngine::new(&cfg);
+        for op in &setup {
+            e.execute(op).unwrap();
+        }
+        for (op, want) in diffs.iter().zip(&expected) {
+            let got = e.execute(op).unwrap();
+            assert_eq!(got.value, CimValue::Diff(*want));
+        }
+    }
+
+    #[test]
+    fn trace_capacity_check_panics_when_too_big() {
+        let cfg = cfg();
+        let r = std::panic::catch_unwind(|| database_filter_trace(&cfg, 100_000, 1));
+        assert!(r.is_err());
+    }
+}

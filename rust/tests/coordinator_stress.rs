@@ -1,0 +1,184 @@
+//! Coordinator invariants under stress (quickcheck-lite + thread storms):
+//!  * every request gets exactly one response, ids intact;
+//!  * batching never changes results (== serial mirror engine);
+//!  * per-shard linearization: reads observe the latest write;
+//!  * metrics conservation: ops + errors == requests.
+
+use std::sync::Arc;
+
+use adra::cim::{AdraEngine, CimOp, CimValue, Engine, WordAddr};
+use adra::config::{SensingScheme, SimConfig};
+use adra::coordinator::Coordinator;
+use adra::util::quick::{Arbitrary, Quick};
+use adra::util::rng::Rng;
+use adra::workload::{OpMix, WorkloadGen};
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::square(64, SensingScheme::Current);
+    c.word_bits = 8;
+    c.max_batch = 16;
+    c
+}
+
+#[test]
+fn storm_requests_one_response_each() {
+    let cfg = cfg();
+    let coord = Arc::new(Coordinator::adra(&cfg, 4));
+    let threads = 8;
+    let per_thread = 500;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let c = coord.clone();
+        let cfg2 = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut gen = WorkloadGen::new(&cfg2, OpMix::balanced(), 31 + t as u64);
+            let mut got = 0;
+            for i in 0..per_thread {
+                let shard = (t + i) % 4;
+                let op = gen.next_op();
+                match c.call(shard, op) {
+                    Ok(_) | Err(adra::coordinator::CallError::Engine(_)) => got += 1,
+                    Err(e) => panic!("routing failed: {e}"),
+                }
+            }
+            got
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, threads * per_thread);
+    let m = coord.metrics();
+    assert_eq!(m.ops + m.errors, (threads * per_thread) as u64);
+}
+
+/// A randomized single-shard script of writes and reads, validated
+/// against a HashMap model (linearizability of the shard queue).
+#[derive(Clone, Debug)]
+enum ScriptOp {
+    Write { row: usize, word: usize, value: u64 },
+    Read { row: usize, word: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Script(Vec<ScriptOp>);
+
+impl Arbitrary for Script {
+    fn generate(rng: &mut Rng) -> Self {
+        let len = 1 + rng.below(40) as usize;
+        Script(
+            (0..len)
+                .map(|_| {
+                    let row = rng.below(8) as usize;
+                    let word = rng.below(4) as usize;
+                    if rng.bool() {
+                        ScriptOp::Write { row, word, value: rng.below(256) }
+                    } else {
+                        ScriptOp::Read { row, word }
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut v = Vec::new();
+        if self.0.len() > 1 {
+            v.push(Script(self.0[..self.0.len() / 2].to_vec()));
+            v.push(Script(self.0[1..].to_vec()));
+        }
+        v
+    }
+}
+
+#[test]
+fn prop_reads_observe_latest_write() {
+    let cfg = cfg();
+    Quick::with_cases(60).check::<Script, _>("linearized shard", |script| {
+        let coord = Coordinator::adra(&cfg, 1);
+        let mut model: std::collections::HashMap<(usize, usize), u64> =
+            std::collections::HashMap::new();
+        let ops: Vec<CimOp> = script
+            .0
+            .iter()
+            .map(|s| match *s {
+                ScriptOp::Write { row, word, value } => {
+                    CimOp::Write { addr: WordAddr { row, word }, value }
+                }
+                ScriptOp::Read { row, word } => CimOp::Read(WordAddr { row, word }),
+            })
+            .collect();
+        let results = coord.call_batch(0, &ops).unwrap();
+        for (s, r) in script.0.iter().zip(results) {
+            match *s {
+                ScriptOp::Write { row, word, value } => {
+                    model.insert((row, word), value);
+                }
+                ScriptOp::Read { row, word } => {
+                    let want = model.get(&(row, word)).copied().unwrap_or(0);
+                    if r.unwrap().value != CimValue::Word(want) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_batched_equals_serial_mirror() {
+    let cfg = cfg();
+    Quick::with_cases(25).check::<u64, _>("batch == serial", |&seed| {
+        let coord = Coordinator::adra(&cfg, 1);
+        let mut mirror = AdraEngine::new(&cfg);
+        let mut gen = WorkloadGen::new(&cfg, OpMix::balanced(), seed);
+        let ops = gen.batch(60);
+        let batched = coord.call_batch(0, &ops).unwrap();
+        for (op, got) in ops.iter().zip(batched) {
+            let want = mirror.execute(op);
+            let agree = match (&got, &want) {
+                (Ok(g), Ok(w)) => g.value == w.value,
+                (Err(_), Err(_)) => true,
+                _ => false,
+            };
+            if !agree {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn shutdown_with_inflight_work_is_clean() {
+    let cfg = cfg();
+    for _ in 0..10 {
+        let coord = Coordinator::adra(&cfg, 2);
+        let mut gen = WorkloadGen::new(&cfg, OpMix::balanced(), 5);
+        let mut pending = Vec::new();
+        for i in 0..100 {
+            pending.push(coord.submit(i % 2, gen.next_op()).unwrap());
+        }
+        // drop half the pendings without waiting, wait on the rest
+        for (i, p) in pending.into_iter().enumerate() {
+            if i % 2 == 0 {
+                let _ = p.wait();
+            }
+        }
+        drop(coord); // must join cleanly, no hang, no panic
+    }
+}
+
+#[test]
+fn errors_are_reported_not_fatal() {
+    let cfg = cfg();
+    let coord = Coordinator::adra(&cfg, 1);
+    // out-of-range op
+    let r = coord.call(0, CimOp::Read(WordAddr { row: 10_000, word: 0 }));
+    assert!(r.is_err());
+    // the worker is still alive and serving
+    let ok = coord.call(0, CimOp::Read(WordAddr { row: 0, word: 0 })).unwrap();
+    assert_eq!(ok.value, CimValue::Word(0));
+    let m = coord.metrics();
+    assert_eq!(m.errors, 1);
+    assert_eq!(m.ops, 1);
+}

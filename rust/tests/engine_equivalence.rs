@@ -1,0 +1,164 @@
+//! Engine equivalence and paper-claim integration tests:
+//!  * ADRA (behavioral backend) == ADRA (PJRT artifact backend) on a
+//!    mixed workload — the analog substrate is interchangeable;
+//!  * ADRA == baseline on every op's VALUE (they disagree only on cost);
+//!  * the access-count asymmetry that *is* the paper: ADRA subtraction
+//!    takes one activation, the baseline takes two reads.
+
+use adra::cim::{
+    AdraEngine, BaselineEngine, CimOp, CimValue, Engine, WordAddr,
+};
+use adra::config::{SensingScheme, SimConfig};
+use adra::coordinator::Coordinator;
+use adra::runtime::{AnalogRuntime, ArtifactManifest, PjrtBackend};
+use adra::util::quick::{Arbitrary, Quick};
+use adra::util::rng::Rng;
+use adra::workload::{OpMix, WorkloadGen};
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::square(128, SensingScheme::Current);
+    c.word_bits = 16;
+    c
+}
+
+#[test]
+fn adra_and_baseline_agree_on_all_values() {
+    let cfg = cfg();
+    let mut adra = AdraEngine::new(&cfg);
+    let mut base = BaselineEngine::new(&cfg);
+    let mut gen = WorkloadGen::new(&cfg, OpMix::balanced(), 1234);
+    let ops = gen.batch(1500);
+    for op in &ops {
+        let a = adra.execute(op);
+        let b = base.execute(op);
+        match (a, b) {
+            (Ok(ra), Ok(rb)) => assert_eq!(ra.value, rb.value, "op {op:?}"),
+            (Err(_), Err(_)) => {}
+            (a, b) => panic!("divergence on {op:?}: {a:?} vs {b:?}"),
+        }
+    }
+}
+
+#[test]
+fn access_count_asymmetry_is_the_paper() {
+    let cfg = cfg();
+    let mut adra = AdraEngine::new(&cfg);
+    let mut base = BaselineEngine::new(&cfg);
+    for e in [&mut adra as &mut dyn Engine, &mut base as &mut dyn Engine] {
+        e.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 100 }).unwrap();
+        e.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 58 }).unwrap();
+    }
+    adra.array_mut().reset_stats();
+    base.array_mut().reset_stats();
+    let n = 50;
+    for _ in 0..n {
+        adra.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        base.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+    }
+    assert_eq!(adra.array().stats().dual_activations, n);
+    assert_eq!(adra.array().stats().reads, 0);
+    assert_eq!(base.array().stats().reads, 2 * n);
+    assert_eq!(base.array().stats().dual_activations, 0);
+}
+
+#[test]
+fn pjrt_backend_equals_behavioral_backend() {
+    let manifest = match ArtifactManifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            return;
+        }
+    };
+    let cfg = cfg();
+    let rt = AnalogRuntime::new(manifest).expect("PJRT init");
+    let mut pjrt = AdraEngine::with_backend(&cfg, Box::new(PjrtBackend::new(rt)));
+    let mut behav = AdraEngine::new(&cfg);
+    let mut gen = WorkloadGen::new(&cfg, OpMix::balanced(), 777);
+    // smaller batch: each PJRT dual op executes a real XLA computation
+    let ops = gen.batch(120);
+    for op in &ops {
+        let a = pjrt.execute(op);
+        let b = behav.execute(op);
+        match (a, b) {
+            (Ok(ra), Ok(rb)) => assert_eq!(
+                ra.value, rb.value,
+                "backend divergence on {op:?}"
+            ),
+            (Err(_), Err(_)) => {}
+            (a, b) => panic!("backend divergence on {op:?}: {a:?} vs {b:?}"),
+        }
+    }
+}
+
+#[test]
+fn pjrt_backend_through_coordinator_end_to_end() {
+    let manifest = match ArtifactManifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            return;
+        }
+    };
+    let cfg = cfg();
+    let rt = AnalogRuntime::new(manifest).expect("PJRT init");
+    let cfg2 = cfg.clone();
+    let mut rt_slot = Some(rt);
+    let coord = Coordinator::new(&cfg, 1, move |_| -> Box<dyn Engine> {
+        let rt = rt_slot.take().expect("single shard");
+        Box::new(AdraEngine::with_backend(&cfg2, Box::new(PjrtBackend::new(rt))))
+    });
+    // values kept inside the positive 16-bit two's-complement range
+    coord
+        .call(0, CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 21_000 })
+        .unwrap();
+    coord
+        .call(0, CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 4_500 })
+        .unwrap();
+    let r = coord.call(0, CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+    assert_eq!(r.value, CimValue::Diff(16_500));
+    let m = coord.metrics();
+    assert_eq!(m.ops, 3);
+}
+
+/// Property: for random word pairs, in-memory sub/compare match integer
+/// semantics through the WHOLE stack (write -> activate -> sense ->
+/// modules -> carry chain).
+#[derive(Clone, Debug)]
+struct Pair {
+    a: u64,
+    b: u64,
+}
+
+impl Arbitrary for Pair {
+    fn generate(rng: &mut Rng) -> Self {
+        Self { a: rng.below(1 << 16), b: rng.below(1 << 16) }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut v = Vec::new();
+        if self.a > 0 {
+            v.push(Self { a: self.a / 2, b: self.b });
+        }
+        if self.b > 0 {
+            v.push(Self { a: self.a, b: self.b / 2 });
+        }
+        v
+    }
+}
+
+#[test]
+fn prop_full_stack_subtraction() {
+    let cfg = cfg();
+    let engine = std::cell::RefCell::new(AdraEngine::new(&cfg));
+    Quick::with_cases(100).check::<Pair, _>("stack sub == integer sub", |p| {
+        let mut e = engine.borrow_mut();
+        e.execute(&CimOp::Write { addr: WordAddr { row: 2, word: 1 }, value: p.a }).unwrap();
+        e.execute(&CimOp::Write { addr: WordAddr { row: 3, word: 1 }, value: p.b }).unwrap();
+        let r = e.execute(&CimOp::Sub { row_a: 2, row_b: 3, word: 1 }).unwrap();
+        let sign = |v: u64| -> i128 {
+            (v as i128) - if v >= 1 << 15 { 1 << 16 } else { 0 }
+        };
+        r.value == CimValue::Diff(sign(p.a) - sign(p.b))
+    });
+}
