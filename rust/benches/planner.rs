@@ -1,0 +1,87 @@
+//! Bench: planner overhead and scaling — how much wall time the planning
+//! layers (lowering, placement) add on top of raw execution, and what the
+//! shard fan-out buys end-to-end.
+//!
+//! §Perf targets: lowering throughput in the millions of ops/s (planning
+//! must never be the bottleneck of a query), and 4-shard planned
+//! execution beating the 1-shard path on wall time.
+
+use std::time::Instant;
+
+use adra::config::{SensingScheme, SimConfig};
+use adra::planner::{lower, place, planned_coordinator, Objective, PlanCostModel};
+use adra::util::bench::black_box;
+use adra::workload::analytics_scenario;
+
+fn timed<T>(label: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("bench {label:<46} {dt:>10.4} s");
+    (out, dt)
+}
+
+fn main() {
+    let mut cfg = SimConfig::square(512, SensingScheme::Current);
+    cfg.word_bits = 32;
+    cfg.max_batch = 256;
+    let n_records = 4096;
+    let objective = Objective::Edp;
+
+    let scenario = analytics_scenario(&cfg, n_records, 11);
+    let model = PlanCostModel::new(&cfg, objective);
+
+    // --- planning-layer throughput ---
+    let reps = 20;
+    let (lowered, t_lower) = timed(&format!("lower x{reps} ({n_records} records)"), || {
+        let mut last = None;
+        for _ in 0..reps {
+            last = Some(lower(&scenario.program, &cfg, &model).unwrap());
+        }
+        last.unwrap()
+    });
+    let lowered_ops = lowered.ops.len();
+    println!(
+        "      lowering throughput: {:.2} M lowered ops/s ({lowered_ops} ops per program)",
+        reps as f64 * lowered_ops as f64 / t_lower / 1e6
+    );
+
+    let (placement4, t_place) = timed(&format!("place x{reps} across 4 shards"), || {
+        let mut last = None;
+        for _ in 0..reps {
+            last = Some(place(&scenario.program, &cfg, 4, &model).unwrap());
+        }
+        last.unwrap()
+    });
+    println!(
+        "      placement throughput: {:.2} M lowered ops/s",
+        reps as f64 * lowered_ops as f64 / t_place / 1e6
+    );
+
+    // --- end-to-end: planned execution, 1 shard vs 4 shards ---
+    let placement1 = place(&scenario.program, &cfg, 1, &model).unwrap();
+    let coord1 = planned_coordinator(&cfg, 1, objective);
+    let (rep1, t1) = timed("execute planned, 1 shard", || {
+        black_box(placement1.execute(&coord1).unwrap())
+    });
+    let coord4 = planned_coordinator(&cfg, 4, objective);
+    let (rep4, t4) = timed("execute planned, 4 shards", || {
+        black_box(placement4.execute(&coord4).unwrap())
+    });
+    // the 4-shard placement replicates the broadcast scratch row on each
+    // extra shard; everything else must match op for op
+    let replicated = (placement4.shards.len() - 1) * cfg.words_per_row();
+    assert_eq!(rep4.ops_executed, rep1.ops_executed + replicated);
+    assert!(rep1.prediction.within(0.2) && rep4.prediction.within(0.2));
+
+    println!(
+        "\nplanning overhead: {:.2}% of 1-shard execution wall time",
+        (t_lower + t_place) / reps as f64 / t1 * 100.0
+    );
+    println!("4-shard speedup over 1-shard: {:.2}x wall", t1 / t4);
+    println!(
+        "modeled device makespan: {:.3} us (1 shard) -> {:.3} us (4 shards)",
+        placement1.predicted_makespan * 1e6,
+        placement4.predicted_makespan * 1e6
+    );
+}

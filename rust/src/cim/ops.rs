@@ -100,6 +100,20 @@ impl CimOp {
     pub fn is_write(&self) -> bool {
         matches!(self, CimOp::Write { .. })
     }
+
+    /// Does this op consume BOTH operand rows in one activation (the ops
+    /// dual-row activation exists for)?
+    pub fn is_dual(&self) -> bool {
+        matches!(
+            self,
+            CimOp::Read2 { .. }
+                | CimOp::Bool { .. }
+                | CimOp::Add { .. }
+                | CimOp::Sub { .. }
+                | CimOp::Compare { .. }
+        )
+    }
+
 }
 
 /// Values produced by an operation.
@@ -205,5 +219,13 @@ mod tests {
         assert_eq!(r.rows(), (5, None));
         assert!(!r.is_write());
         assert!(CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 1 }.is_write());
+    }
+
+    #[test]
+    fn dual_classification() {
+        assert!(CimOp::Sub { row_a: 3, row_b: 9, word: 4 }.is_dual());
+        assert!(CimOp::Read2 { row_a: 0, row_b: 1, word: 0 }.is_dual());
+        assert!(!CimOp::Read(WordAddr { row: 5, word: 2 }).is_dual());
+        assert!(!CimOp::Write { addr: WordAddr { row: 0, word: 7 }, value: 1 }.is_dual());
     }
 }

@@ -123,12 +123,26 @@ fn derive(op: &CimOp, outs: &[SenseOut], cost: OpCost) -> CimResult {
     CimResult { value, cost }
 }
 
+/// Cost of a fused-group follower given the group's full activation cost:
+/// compute-module + latch only, no array access (the paper's +4T
+/// duplicated datapath makes add+sub literally same-cycle; further
+/// followers model extra module evaluations off the latched sense
+/// outputs).  Shared by `execute_fused` and the planner's fusion-aware
+/// cost prediction so both price followers identically.
+pub fn follower_cost(full: &OpCost) -> OpCost {
+    OpCost {
+        energy: crate::energy::EnergyBreakdown {
+            peripheral: 0.1 * full.energy.peripheral,
+            ..Default::default()
+        },
+        latency: 0.05e-9,
+    }
+}
+
 /// Execute a batch with fusion on an `AdraEngine`.  Returns results in
 /// the original batch order.  The first op of a fused group is charged
 /// the full activation `cim_cost`; followers are charged only the
-/// compute-module increment (the paper's +4T duplicated datapath makes
-/// add+sub literally same-cycle; further followers model extra module
-/// evaluations off the latched sense outputs).
+/// `follower_cost` compute-module increment.
 pub fn execute_fused(
     engine: &mut AdraEngine,
     ops: &[CimOp],
@@ -136,14 +150,7 @@ pub fn execute_fused(
     let plan = fuse_batch(ops);
     let mut results: Vec<Option<Result<CimResult, EngineError>>> = vec![None; ops.len()];
     let full = engine.energy_model().cim_cost();
-    // follower increment: compute-module + latch only; no array access
-    let follower = OpCost {
-        energy: crate::energy::EnergyBreakdown {
-            peripheral: 0.1 * full.energy.peripheral,
-            ..Default::default()
-        },
-        latency: 0.05e-9,
-    };
+    let follower = follower_cost(&full);
     for step in plan {
         match step {
             PlanStep::Passthrough(i) => {

@@ -70,6 +70,13 @@ impl OpCost {
             latency: self.latency + next.latency,
         }
     }
+
+    /// Serial repetition of this op `n` times — bulk pricing (e.g. the
+    /// planner charges a fused group's followers in one step).
+    pub fn repeat(&self, n: u64) -> OpCost {
+        let k = n as f64;
+        OpCost { energy: self.energy.scale(k), latency: self.latency * k }
+    }
 }
 
 /// Relative improvement metrics of `ours` vs `baseline`.
@@ -123,6 +130,15 @@ mod tests {
         let c = a.then(&b);
         assert_eq!(c.latency, 5.0);
         assert_eq!(c.energy.total(), 30.0);
+    }
+
+    #[test]
+    fn repeat_is_n_serial_compositions() {
+        let a = OpCost { energy: bd(4.0), latency: 2.0 };
+        let r = a.repeat(3);
+        assert_eq!(r.latency, 6.0);
+        assert_eq!(r.energy.total(), 30.0);
+        assert_eq!(a.repeat(0).energy.total(), 0.0);
     }
 
     #[test]

@@ -13,6 +13,11 @@
 //!   baseline CiM engines, and a threaded request coordinator.  The
 //!   `runtime` module executes the AOT artifacts over PJRT (CPU) — Python
 //!   is never on the request path.
+//! * **Planner (`planner`)** — the query layer above the engines: a tiny
+//!   program IR for bulk bitwise/arithmetic column programs, calibrated
+//!   ADRA-vs-baseline cost tables, per-op executor routing, and
+//!   shard-aware placement over the coordinator pool with
+//!   predicted-vs-measured cost reporting.
 
 pub mod analysis;
 pub mod array;
@@ -24,6 +29,7 @@ pub mod energy;
 pub mod figures;
 pub mod logic;
 pub mod metrics;
+pub mod planner;
 pub mod runtime;
 pub mod sensing;
 pub mod util;

@@ -6,7 +6,10 @@ use crate::energy::{EnergyBreakdown, OpCost};
 /// Log-bucketed latency histogram (nanosecond ops up to seconds).
 #[derive(Clone, Debug)]
 pub struct LatencyHistogram {
-    /// bucket i covers [2^i, 2^(i+1)) nanoseconds.
+    /// Bucket 0 covers [0, 2) ns (every sub-nanosecond sample lands there
+    /// together with the [1, 2) ns ones); bucket i >= 1 covers
+    /// [2^i, 2^(i+1)) ns; the last bucket absorbs everything above its
+    /// lower edge.  See `bucket_bounds`.
     buckets: Vec<u64>,
     count: u64,
     sum_ns: f64,
@@ -15,11 +18,34 @@ pub struct LatencyHistogram {
 
 impl Default for LatencyHistogram {
     fn default() -> Self {
-        Self { buckets: vec![0; 40], count: 0, sum_ns: 0.0, max_ns: 0.0 }
+        Self {
+            buckets: vec![0; LatencyHistogram::NUM_BUCKETS],
+            count: 0,
+            sum_ns: 0.0,
+            max_ns: 0.0,
+        }
     }
 }
 
 impl LatencyHistogram {
+    /// Number of buckets (fixed; the last one is open-ended).
+    pub const NUM_BUCKETS: usize = 40;
+
+    /// The [lo, hi) nanosecond range bucket `i` covers.  Bucket 0 is
+    /// [0, 2) — NOT [2^0, 2^1) — because `record` floors sub-nanosecond
+    /// samples into the first bucket; the last bucket's upper edge is
+    /// reported as infinity since it absorbs all larger samples.
+    pub fn bucket_bounds(i: usize) -> (f64, f64) {
+        assert!(i < Self::NUM_BUCKETS, "bucket {i} out of range");
+        let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+        let hi = if i + 1 == Self::NUM_BUCKETS {
+            f64::INFINITY
+        } else {
+            (1u64 << (i + 1)) as f64
+        };
+        (lo, hi)
+    }
+
     pub fn record(&mut self, seconds: f64) {
         let ns = seconds * 1e9;
         let idx = if ns < 1.0 {
@@ -45,6 +71,12 @@ impl LatencyHistogram {
         } else {
             self.sum_ns / self.count as f64
         }
+    }
+
+    /// Exact sum of all recorded samples (ns) — unlike the percentiles,
+    /// this is not bucket-quantized.
+    pub fn sum_ns(&self) -> f64 {
+        self.sum_ns
     }
 
     pub fn max_ns(&self) -> f64 {
@@ -131,6 +163,72 @@ impl RunMetrics {
             self.wall_seconds,
         )
     }
+
+    /// The total modeled cost this run accumulated (energy summed, latency
+    /// summed serially) — what the planner's predictions are checked
+    /// against.
+    pub fn total_cost(&self) -> OpCost {
+        OpCost {
+            energy: self.energy,
+            latency: self.model_latency.sum_ns() * 1e-9,
+        }
+    }
+}
+
+/// Predicted-vs-measured cost comparison: the planner predicts a program's
+/// cost from its tables at lowering time; execution measures it through
+/// the engines' per-op accounting.  Relative errors are signed
+/// (positive = over-prediction).
+#[derive(Clone, Copy, Debug)]
+pub struct PredictionReport {
+    pub predicted: OpCost,
+    pub measured: OpCost,
+}
+
+impl PredictionReport {
+    pub fn new(predicted: OpCost, measured: OpCost) -> Self {
+        Self { predicted, measured }
+    }
+
+    fn rel(predicted: f64, measured: f64) -> f64 {
+        if measured == 0.0 {
+            if predicted == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            (predicted - measured) / measured
+        }
+    }
+
+    /// (predicted - measured) / measured on total energy.
+    pub fn energy_error(&self) -> f64 {
+        Self::rel(self.predicted.energy.total(), self.measured.energy.total())
+    }
+
+    /// (predicted - measured) / measured on summed latency.
+    pub fn latency_error(&self) -> f64 {
+        Self::rel(self.predicted.latency, self.measured.latency)
+    }
+
+    /// Are both errors within +-tol (e.g. 0.2 for 20%)?
+    pub fn within(&self, tol: f64) -> bool {
+        self.energy_error().abs() <= tol && self.latency_error().abs() <= tol
+    }
+
+    pub fn report(&self, label: &str) -> String {
+        format!(
+            "{label}: predicted {:.3} nJ / {:.1} ns vs measured {:.3} nJ / {:.1} ns \
+             (energy err {:+.2}%, latency err {:+.2}%)",
+            self.predicted.energy.total() * 1e9,
+            self.predicted.latency * 1e9,
+            self.measured.energy.total() * 1e9,
+            self.measured.latency * 1e9,
+            self.energy_error() * 100.0,
+            self.latency_error() * 100.0,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -186,5 +284,67 @@ mod tests {
         let r = m.report("test");
         assert!(r.contains("1 ops"));
         assert!(r.contains("test"));
+    }
+
+    /// Pin the bucket edges: bucket 0 is [0, 2) ns (doc/code mismatch fix
+    /// — `record` floors log2, so 1.0 ns and 1.9 ns BOTH land in bucket 0
+    /// alongside sub-ns samples), bucket i >= 1 is [2^i, 2^(i+1)), and the
+    /// last bucket clamps.
+    #[test]
+    fn bucket_edges_pinned() {
+        assert_eq!(LatencyHistogram::bucket_bounds(0), (0.0, 2.0));
+        assert_eq!(LatencyHistogram::bucket_bounds(1), (2.0, 4.0));
+        assert_eq!(LatencyHistogram::bucket_bounds(5), (32.0, 64.0));
+        let (lo, hi) = LatencyHistogram::bucket_bounds(LatencyHistogram::NUM_BUCKETS - 1);
+        assert_eq!(lo, (1u64 << 39) as f64);
+        assert!(hi.is_infinite());
+
+        let mut h = LatencyHistogram::default();
+        // (sample ns, expected bucket): edges exercised on both sides
+        let cases = [
+            (0.25, 0usize),
+            (1.0, 0),
+            (1.99, 0),
+            (2.0, 1),
+            (3.99, 1),
+            (4.0, 2),
+            (32.0, 5),
+            (63.9, 5),
+            (1e12, LatencyHistogram::NUM_BUCKETS - 1), // 2^39.9 ns: clamped
+        ];
+        for &(ns, bucket) in &cases {
+            h.record(ns * 1e-9);
+            let (lo, hi) = LatencyHistogram::bucket_bounds(bucket);
+            assert!(ns >= lo && ns < hi, "{ns} ns not in bucket {bucket} [{lo}, {hi})");
+        }
+        let mut want = vec![0u64; LatencyHistogram::NUM_BUCKETS];
+        for &(_, bucket) in &cases {
+            want[bucket] += 1;
+        }
+        assert_eq!(h.buckets, want);
+    }
+
+    #[test]
+    fn total_cost_sums_energy_and_latency() {
+        let mut m = RunMetrics::default();
+        m.record(&cost(2.0));
+        m.record(&cost(4.0));
+        let t = m.total_cost();
+        assert!((t.latency - 6e-9).abs() < 1e-18);
+        assert!((t.energy.total() - 2e-15).abs() < 1e-25);
+    }
+
+    #[test]
+    fn prediction_report_errors_and_tolerance() {
+        let meas = OpCost { energy: EnergyBreakdown { rbl: 100.0, ..Default::default() }, latency: 10.0 };
+        let pred = OpCost { energy: EnergyBreakdown { rbl: 110.0, ..Default::default() }, latency: 9.0 };
+        let p = PredictionReport::new(pred, meas);
+        assert!((p.energy_error() - 0.1).abs() < 1e-12);
+        assert!((p.latency_error() + 0.1).abs() < 1e-12);
+        assert!(p.within(0.2));
+        assert!(!p.within(0.05));
+        let exact = PredictionReport::new(meas, meas);
+        assert!(exact.within(0.0));
+        assert!(exact.report("x").contains("+0.00%"));
     }
 }

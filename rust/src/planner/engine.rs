@@ -1,0 +1,145 @@
+//! The planned (hybrid) engine: one shard's executor pair, routed per-op
+//! by the cost model.
+//!
+//! The coordinator's worker pool owns one engine per shard; to let the
+//! planner route each op to whichever executor its cost table picked, a
+//! `PlannedEngine` bundles an `AdraEngine` and a `BaselineEngine` over
+//! mirrored array state and dispatches through `PlanCostModel::choose`.
+//! Writes execute on the ADRA array (charged once) and are mirrored into
+//! the baseline array state, so either executor sees consistent data
+//! whenever the router sends it an op.
+
+use crate::cim::{AdraEngine, BaselineEngine, CimOp, CimResult, Engine, EngineError};
+use crate::config::SimConfig;
+use crate::coordinator::Coordinator;
+
+use super::cost::{Executor, Objective, PlanCostModel};
+
+/// Cost-routed engine over mirrored ADRA + baseline array state.
+pub struct PlannedEngine {
+    adra: AdraEngine,
+    baseline: BaselineEngine,
+    model: PlanCostModel,
+}
+
+impl PlannedEngine {
+    pub fn new(cfg: &SimConfig, objective: Objective) -> Self {
+        Self {
+            adra: AdraEngine::new(cfg),
+            baseline: BaselineEngine::new(cfg),
+            model: PlanCostModel::new(cfg, objective),
+        }
+    }
+
+    pub fn model(&self) -> &PlanCostModel {
+        &self.model
+    }
+
+    pub fn adra_engine(&self) -> &AdraEngine {
+        &self.adra
+    }
+
+    pub fn baseline_engine(&self) -> &BaselineEngine {
+        &self.baseline
+    }
+}
+
+impl Engine for PlannedEngine {
+    fn execute(&mut self, op: &CimOp) -> Result<CimResult, EngineError> {
+        if let CimOp::Write { addr, value } = *op {
+            // charge the write once (ADRA path), then mirror the data into
+            // the baseline array so both executors stay consistent.  The
+            // mirror bumps the baseline array's write *stat*, not its cost.
+            let r = self.adra.execute(op)?;
+            self.baseline.array_mut().write_word(addr.row, addr.word, value);
+            return Ok(r);
+        }
+        match self.model.choose(op).executor {
+            Executor::Adra => self.adra.execute(op),
+            Executor::Baseline => self.baseline.execute(op),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "planned"
+    }
+}
+
+/// A coordinator whose every shard runs a cost-routed `PlannedEngine`
+/// with the given objective — the deployment the planner's placements
+/// execute on.
+pub fn planned_coordinator(cfg: &SimConfig, shards: usize, objective: Objective) -> Coordinator {
+    let cfg2 = cfg.clone();
+    Coordinator::new(cfg, shards, move |_| {
+        Box::new(PlannedEngine::new(&cfg2, objective)) as Box<dyn Engine>
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::{CimValue, WordAddr};
+    use crate::config::SensingScheme;
+    use crate::workload::{OpMix, WorkloadGen};
+
+    fn cfg(scheme: SensingScheme) -> SimConfig {
+        let mut c = SimConfig::square(64, scheme);
+        c.word_bits = 8;
+        c
+    }
+
+    #[test]
+    fn planned_engine_matches_adra_values() {
+        let cfg = cfg(SensingScheme::Current);
+        let mut planned = PlannedEngine::new(&cfg, Objective::Edp);
+        let mut adra = AdraEngine::new(&cfg);
+        let mut gen = WorkloadGen::new(&cfg, OpMix::balanced(), 321);
+        for op in gen.batch(600) {
+            let a = planned.execute(&op);
+            let b = adra.execute(&op);
+            match (a, b) {
+                (Ok(ra), Ok(rb)) => assert_eq!(ra.value, rb.value, "op {op:?}"),
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("divergence on {op:?}: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    /// Under scheme 1 + energy objective the router must send dual ops to
+    /// the baseline executor — observable as READS (not activations) on
+    /// the baseline array, with values still correct.
+    #[test]
+    fn scheme1_energy_objective_runs_dual_ops_on_baseline() {
+        let cfg = cfg(SensingScheme::VoltagePrecharged);
+        let mut e = PlannedEngine::new(&cfg, Objective::Energy);
+        e.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 40 }).unwrap();
+        e.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 15 }).unwrap();
+        let r = e.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert_eq!(r.value, CimValue::Diff(25), "baseline route must still be correct");
+        assert_eq!(e.baseline_engine().array().stats().reads, 2, "two-read baseline path");
+        assert_eq!(e.adra_engine().array().stats().dual_activations, 0);
+
+        // same scheme, EDP objective: routed to ADRA instead
+        let mut e2 = PlannedEngine::new(&cfg, Objective::Edp);
+        e2.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 40 }).unwrap();
+        e2.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 15 }).unwrap();
+        let r2 = e2.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert_eq!(r2.value, CimValue::Diff(25));
+        assert_eq!(e2.adra_engine().array().stats().dual_activations, 1);
+        assert_eq!(e2.baseline_engine().array().stats().reads, 0);
+    }
+
+    #[test]
+    fn planned_coordinator_round_trip() {
+        let cfg = cfg(SensingScheme::Current);
+        let coord = planned_coordinator(&cfg, 2, Objective::Edp);
+        coord
+            .call(1, CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 7 })
+            .unwrap();
+        coord
+            .call(1, CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 3 })
+            .unwrap();
+        let r = coord.call(1, CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert_eq!(r.value, CimValue::Diff(4));
+    }
+}

@@ -1,0 +1,484 @@
+//! The planner's program IR: bulk bitwise/arithmetic column programs.
+//!
+//! A [`Program`] describes a database-style query plan over a table of
+//! records laid out row-major in an array shard (record `i` lives at row
+//! `i / words_per_row`, word `i % words_per_row` — the same layout
+//! `workload::database_filter_trace` uses), plus a small set of
+//! *scratch rows* holding broadcast constants (thresholds, masks,
+//! subtrahends) above the record region.
+//!
+//! The IR is deliberately static: every op's address stream is known
+//! before execution, which is what lets `cost` price it, `lower` route it
+//! per-op between the ADRA and baseline executors, and `place` split it
+//! across coordinator shards.  Data-dependent reductions (min/max/sum)
+//! lower to plain reads plus a host-side fold — read-only ops never pay
+//! for an activation they don't need.
+
+use crate::cim::{BoolFn, WordAddr};
+use crate::config::SimConfig;
+use crate::logic::CompareResult;
+
+/// Comparison predicate a [`IrOp::Filter`] keeps records by
+/// (two's-complement ordering, matching `CimOp::Compare`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Predicate {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl Predicate {
+    /// Does a three-way compare outcome satisfy this predicate?
+    pub fn accepts(&self, o: CompareResult) -> bool {
+        match self {
+            Predicate::Lt => o == CompareResult::Less,
+            Predicate::Le => o != CompareResult::Greater,
+            Predicate::Gt => o == CompareResult::Greater,
+            Predicate::Ge => o != CompareResult::Less,
+            Predicate::Eq => o == CompareResult::Equal,
+            Predicate::Ne => o != CompareResult::Equal,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Predicate::Lt => "<",
+            Predicate::Le => "<=",
+            Predicate::Gt => ">",
+            Predicate::Ge => ">=",
+            Predicate::Eq => "==",
+            Predicate::Ne => "!=",
+        }
+    }
+}
+
+/// Half-open range `[start, start + len)` of record slots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecordRange {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl RecordRange {
+    pub fn new(start: usize, len: usize) -> Self {
+        Self { start, len }
+    }
+
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Intersect with the window `[lo, hi)` and rebase to window-local
+    /// indices (record `lo` becomes 0).  `None` when disjoint.
+    pub fn clip(&self, lo: usize, hi: usize) -> Option<RecordRange> {
+        let s = self.start.max(lo);
+        let e = self.end().min(hi);
+        if s >= e {
+            None
+        } else {
+            Some(RecordRange { start: s - lo, len: e - s })
+        }
+    }
+}
+
+/// Handle to a broadcast scratch row.  Scratch rows sit above the record
+/// region and are replicated on every shard a program is placed on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScratchRow(pub usize);
+
+/// Host-side reduction kinds (lowered to plain reads + a fold).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggKind {
+    Min,
+    Max,
+    Sum,
+}
+
+impl AggKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggKind::Min => "min",
+            AggKind::Max => "max",
+            AggKind::Sum => "sum",
+        }
+    }
+}
+
+/// One IR operation over the record table.
+#[derive(Clone, Debug, PartialEq)]
+pub enum IrOp {
+    /// Store `values[i]` into record slot `start + i` (setup writes).
+    Load { start: usize, values: Vec<u64> },
+    /// Broadcast `value` into every word of a scratch row, so any record
+    /// can be compared/combined against it column-locally.
+    Broadcast { scratch: ScratchRow, value: u64 },
+    /// Three-way compare of every record in `range` against `rhs`.
+    Compare { range: RecordRange, rhs: ScratchRow },
+    /// Keep the records in `range` whose compare against `rhs` satisfies
+    /// `pred` (`SELECT * WHERE value <pred> rhs`).
+    Filter { range: RecordRange, rhs: ScratchRow, pred: Predicate },
+    /// Signed per-record difference `record - rhs`.
+    Sub { range: RecordRange, rhs: ScratchRow },
+    /// Bitwise `f(record, rhs)` per record.
+    Bool { f: BoolFn, range: RecordRange, rhs: ScratchRow },
+    /// Plain readout of every record in `range`.
+    Scan { range: RecordRange },
+    /// Host-side reduction over plain reads of `range`.
+    Aggregate { range: RecordRange, agg: AggKind },
+}
+
+impl IrOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IrOp::Load { .. } => "load",
+            IrOp::Broadcast { .. } => "broadcast",
+            IrOp::Compare { .. } => "compare",
+            IrOp::Filter { .. } => "filter",
+            IrOp::Sub { .. } => "sub",
+            IrOp::Bool { .. } => "bool",
+            IrOp::Scan { .. } => "scan",
+            IrOp::Aggregate { .. } => "aggregate",
+        }
+    }
+
+    /// Number of `CimOp`s this lowers to, given the words-per-row of the
+    /// target layout.
+    pub fn op_count(&self, words_per_row: usize) -> usize {
+        match self {
+            IrOp::Load { values, .. } => values.len(),
+            IrOp::Broadcast { .. } => words_per_row,
+            IrOp::Compare { range, .. }
+            | IrOp::Filter { range, .. }
+            | IrOp::Sub { range, .. }
+            | IrOp::Bool { range, .. }
+            | IrOp::Scan { range }
+            | IrOp::Aggregate { range, .. } => range.len,
+        }
+    }
+
+    /// The record range a per-record op covers (`None` for setup ops).
+    pub fn range(&self) -> Option<RecordRange> {
+        match self {
+            IrOp::Load { .. } | IrOp::Broadcast { .. } => None,
+            IrOp::Compare { range, .. }
+            | IrOp::Filter { range, .. }
+            | IrOp::Sub { range, .. }
+            | IrOp::Bool { range, .. }
+            | IrOp::Scan { range }
+            | IrOp::Aggregate { range, .. } => Some(*range),
+        }
+    }
+}
+
+/// Planner failure modes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// The program does not fit the array (rows needed vs available).
+    Capacity { need_rows: usize, have_rows: usize },
+    /// A range or load window lies outside the record table.
+    BadRange(String),
+    /// A scratch handle was never allocated via `Program::scratch`.
+    BadScratch(String),
+    /// Degenerate program (no records / no shards).
+    Empty(String),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Capacity { need_rows, have_rows } => {
+                write!(f, "program needs {need_rows} rows, array has {have_rows}")
+            }
+            PlanError::BadRange(s) => write!(f, "bad record range: {s}"),
+            PlanError::BadScratch(s) => write!(f, "bad scratch row: {s}"),
+            PlanError::Empty(s) => write!(f, "degenerate program: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// A bulk bitwise/arithmetic program over `n_records` record slots.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    pub n_records: usize,
+    pub n_scratch: usize,
+    pub ops: Vec<IrOp>,
+}
+
+impl Program {
+    pub fn new(n_records: usize) -> Self {
+        Self { n_records, n_scratch: 0, ops: Vec::new() }
+    }
+
+    /// Allocate a scratch row for broadcast constants.
+    pub fn scratch(&mut self) -> ScratchRow {
+        let s = ScratchRow(self.n_scratch);
+        self.n_scratch += 1;
+        s
+    }
+
+    /// The range covering every record slot.
+    pub fn all(&self) -> RecordRange {
+        RecordRange::new(0, self.n_records)
+    }
+
+    pub fn load(&mut self, start: usize, values: Vec<u64>) -> &mut Self {
+        self.ops.push(IrOp::Load { start, values });
+        self
+    }
+
+    pub fn broadcast(&mut self, scratch: ScratchRow, value: u64) -> &mut Self {
+        self.ops.push(IrOp::Broadcast { scratch, value });
+        self
+    }
+
+    pub fn compare(&mut self, range: RecordRange, rhs: ScratchRow) -> &mut Self {
+        self.ops.push(IrOp::Compare { range, rhs });
+        self
+    }
+
+    pub fn filter(&mut self, range: RecordRange, rhs: ScratchRow, pred: Predicate) -> &mut Self {
+        self.ops.push(IrOp::Filter { range, rhs, pred });
+        self
+    }
+
+    pub fn sub(&mut self, range: RecordRange, rhs: ScratchRow) -> &mut Self {
+        self.ops.push(IrOp::Sub { range, rhs });
+        self
+    }
+
+    pub fn bool_op(&mut self, f: BoolFn, range: RecordRange, rhs: ScratchRow) -> &mut Self {
+        self.ops.push(IrOp::Bool { f, range, rhs });
+        self
+    }
+
+    pub fn scan(&mut self, range: RecordRange) -> &mut Self {
+        self.ops.push(IrOp::Scan { range });
+        self
+    }
+
+    pub fn aggregate(&mut self, range: RecordRange, agg: AggKind) -> &mut Self {
+        self.ops.push(IrOp::Aggregate { range, agg });
+        self
+    }
+
+    /// Check the program against one array shard's geometry: structural
+    /// checks plus the capacity check for THIS geometry.
+    pub fn validate(&self, cfg: &SimConfig) -> Result<(), PlanError> {
+        self.validate_structure()?;
+        let layout = Layout::of(cfg, self.n_records);
+        let need = layout.rows_needed(self.n_scratch);
+        if need > cfg.rows {
+            return Err(PlanError::Capacity { need_rows: need, have_rows: cfg.rows });
+        }
+        Ok(())
+    }
+
+    /// Geometry-independent checks (ranges, scratch handles, load
+    /// windows).  `place` runs this on the GLOBAL program — whose record
+    /// count may legitimately exceed one shard's capacity — so malformed
+    /// ranges are rejected instead of being silently clipped away.
+    pub fn validate_structure(&self) -> Result<(), PlanError> {
+        if self.n_records == 0 {
+            return Err(PlanError::Empty("0 records".into()));
+        }
+        for op in &self.ops {
+            if let Some(range) = op.range() {
+                if range.is_empty() {
+                    // an empty per-record op is meaningless and (for
+                    // aggregates) would surface the fold's sentinel as if
+                    // it were data
+                    return Err(PlanError::BadRange(format!(
+                        "{} range at {} is empty",
+                        op.name(),
+                        range.start
+                    )));
+                }
+                if range.end() > self.n_records {
+                    return Err(PlanError::BadRange(format!(
+                        "{} range [{}, {}) exceeds {} records",
+                        op.name(),
+                        range.start,
+                        range.end(),
+                        self.n_records
+                    )));
+                }
+            }
+            let scratch = match op {
+                IrOp::Broadcast { scratch, .. } => Some(*scratch),
+                IrOp::Compare { rhs, .. }
+                | IrOp::Filter { rhs, .. }
+                | IrOp::Sub { rhs, .. }
+                | IrOp::Bool { rhs, .. } => Some(*rhs),
+                _ => None,
+            };
+            if let Some(ScratchRow(s)) = scratch {
+                if s >= self.n_scratch {
+                    return Err(PlanError::BadScratch(format!(
+                        "{} uses scratch {s}, only {} allocated",
+                        op.name(),
+                        self.n_scratch
+                    )));
+                }
+            }
+            if let IrOp::Load { start, values } = op {
+                if start + values.len() > self.n_records {
+                    return Err(PlanError::BadRange(format!(
+                        "load [{}, {}) exceeds {} records",
+                        start,
+                        start + values.len(),
+                        self.n_records
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total `CimOp`s the program lowers to on the given geometry.
+    pub fn op_count(&self, cfg: &SimConfig) -> usize {
+        let words = cfg.words_per_row();
+        self.ops.iter().map(|op| op.op_count(words)).sum()
+    }
+}
+
+/// Physical layout of a program on ONE array shard: records first, then
+/// scratch rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Layout {
+    /// Words per row of the target geometry.
+    pub words_per_row: usize,
+    /// Records stored on this shard.
+    pub n_records: usize,
+    /// First scratch row (== number of record rows).
+    pub scratch_base: usize,
+}
+
+impl Layout {
+    pub fn of(cfg: &SimConfig, n_records: usize) -> Self {
+        let words_per_row = cfg.words_per_row();
+        Self {
+            words_per_row,
+            n_records,
+            scratch_base: n_records.div_ceil(words_per_row.max(1)),
+        }
+    }
+
+    /// Physical address of record slot `i`.
+    pub fn record_addr(&self, i: usize) -> WordAddr {
+        WordAddr { row: i / self.words_per_row, word: i % self.words_per_row }
+    }
+
+    /// Physical row of a scratch handle.
+    pub fn scratch_row(&self, s: ScratchRow) -> usize {
+        self.scratch_base + s.0
+    }
+
+    /// Rows the layout occupies with `n_scratch` scratch rows.
+    pub fn rows_needed(&self, n_scratch: usize) -> usize {
+        self.scratch_base + n_scratch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SensingScheme;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::square(64, SensingScheme::Current);
+        c.word_bits = 8; // 8 words per row
+        c
+    }
+
+    #[test]
+    fn predicate_semantics() {
+        use CompareResult::*;
+        assert!(Predicate::Lt.accepts(Less) && !Predicate::Lt.accepts(Equal));
+        assert!(Predicate::Le.accepts(Equal) && !Predicate::Le.accepts(Greater));
+        assert!(Predicate::Ge.accepts(Greater) && Predicate::Ge.accepts(Equal));
+        assert!(Predicate::Eq.accepts(Equal) && !Predicate::Eq.accepts(Less));
+        assert!(Predicate::Ne.accepts(Less) && !Predicate::Ne.accepts(Equal));
+    }
+
+    #[test]
+    fn range_clip_rebases() {
+        let r = RecordRange::new(10, 20); // [10, 30)
+        assert_eq!(r.clip(0, 15), Some(RecordRange::new(10, 5)));
+        assert_eq!(r.clip(15, 25), Some(RecordRange::new(0, 10)));
+        assert_eq!(r.clip(25, 100), Some(RecordRange::new(0, 5)));
+        assert_eq!(r.clip(30, 40), None);
+        assert_eq!(r.clip(0, 10), None);
+    }
+
+    #[test]
+    fn layout_addresses_records_row_major() {
+        let cfg = cfg();
+        let l = Layout::of(&cfg, 20); // 8 words/row -> 3 record rows
+        assert_eq!(l.record_addr(0), WordAddr { row: 0, word: 0 });
+        assert_eq!(l.record_addr(9), WordAddr { row: 1, word: 1 });
+        assert_eq!(l.scratch_base, 3);
+        assert_eq!(l.scratch_row(ScratchRow(1)), 4);
+        assert_eq!(l.rows_needed(2), 5);
+    }
+
+    #[test]
+    fn builder_and_validation() {
+        let cfg = cfg();
+        let mut p = Program::new(20);
+        let t = p.scratch();
+        let all = p.all();
+        p.load(0, vec![1; 20])
+            .broadcast(t, 42)
+            .filter(all, t, Predicate::Lt)
+            .aggregate(RecordRange::new(0, 10), AggKind::Min);
+        assert!(p.validate(&cfg).is_ok());
+        // 20 loads + 8 broadcast words + 20 compares + 10 reads
+        assert_eq!(p.op_count(&cfg), 58);
+    }
+
+    #[test]
+    fn validation_rejects_bad_programs() {
+        let cfg = cfg();
+        // range out of bounds
+        let mut p = Program::new(10);
+        let t = p.scratch();
+        p.filter(RecordRange::new(5, 10), t, Predicate::Lt);
+        assert!(matches!(p.validate(&cfg), Err(PlanError::BadRange(_))));
+        // unallocated scratch
+        let mut p2 = Program::new(10);
+        p2.broadcast(ScratchRow(3), 1);
+        assert!(matches!(p2.validate(&cfg), Err(PlanError::BadScratch(_))));
+        // over capacity: 64 rows x 8 words = 512 record slots max
+        let p3 = Program::new(10_000);
+        assert!(matches!(p3.validate(&cfg), Err(PlanError::Capacity { .. })));
+        // empty
+        assert!(matches!(Program::new(0).validate(&cfg), Err(PlanError::Empty(_))));
+        // load window out of bounds
+        let mut p4 = Program::new(10);
+        p4.load(8, vec![0; 5]);
+        assert!(matches!(p4.validate(&cfg), Err(PlanError::BadRange(_))));
+        // empty per-record range (would leak the aggregate sentinel)
+        let mut p5 = Program::new(10);
+        p5.aggregate(RecordRange::new(0, 0), AggKind::Min);
+        assert!(matches!(p5.validate(&cfg), Err(PlanError::BadRange(_))));
+        // structural checks are geometry-independent: a program too big
+        // for ONE shard still structure-validates (place shards it)...
+        let mut p6 = Program::new(10_000);
+        let all6 = p6.all();
+        p6.scan(all6);
+        assert!(p6.validate_structure().is_ok());
+        // ...while its bad-range variant is caught without any cfg
+        let mut p7 = Program::new(10_000);
+        p7.scan(RecordRange::new(9_999, 2));
+        assert!(matches!(p7.validate_structure(), Err(PlanError::BadRange(_))));
+    }
+}

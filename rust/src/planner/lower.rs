@@ -1,0 +1,301 @@
+//! Lowering: IR program -> cost-routed `CimOp` stream.
+//!
+//! Each IR op expands into its per-record `CimOp`s against the shard
+//! layout; every emitted op carries the executor the cost model chose and
+//! the predicted cost of running it there.  The lowered stream preserves
+//! IR order (writes before the queries that read them), and records which
+//! stream span each IR step produced so execution can map results back.
+//!
+//! `fused_prediction` re-prices the stream for the
+//! `coordinator::fuse::execute_fused` path: dual ops over the same
+//! operand pair share one activation, followers paying only the
+//! compute-module increment — the planner predicts the fusion win without
+//! executing anything.
+
+use crate::cim::CimOp;
+use crate::config::SimConfig;
+use crate::coordinator::fuse::{follower_cost, fuse_batch, planned_activations, PlanStep};
+use crate::energy::OpCost;
+
+use super::cost::{Executor, PlanCostModel};
+use super::ir::{IrOp, Layout, PlanError, Program};
+
+/// One op of the lowered stream with its routing decision.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoutedOp {
+    pub op: CimOp,
+    pub executor: Executor,
+    /// Modeled cost of this op on `executor` (from the price table).
+    pub predicted: OpCost,
+    /// Array accesses this op issues on `executor`.
+    pub accesses: u64,
+}
+
+/// The contiguous stream span one IR step lowered to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepSpan {
+    /// Index of the producing op in `Program::ops`.
+    pub ir_index: usize,
+    /// First op of the span in the lowered stream.
+    pub start: usize,
+    pub len: usize,
+}
+
+/// A lowered program: routed op stream + per-step spans + predictions.
+#[derive(Clone, Debug)]
+pub struct LoweredProgram {
+    pub layout: Layout,
+    pub ops: Vec<RoutedOp>,
+    pub spans: Vec<StepSpan>,
+    /// Serial prediction: every op at its routed executor's price.
+    pub predicted: OpCost,
+    /// Total array accesses predicted.
+    pub predicted_accesses: u64,
+}
+
+impl LoweredProgram {
+    /// The bare op stream (what `Coordinator::call_batch` consumes).
+    pub fn op_stream(&self) -> Vec<CimOp> {
+        self.ops.iter().map(|r| r.op).collect()
+    }
+
+    /// (ops routed to ADRA, ops routed to the baseline).
+    pub fn executor_counts(&self) -> (usize, usize) {
+        let adra = self.ops.iter().filter(|r| r.executor == Executor::Adra).count();
+        (adra, self.ops.len() - adra)
+    }
+
+    /// Predicted cost and activation count if this stream ran through
+    /// `coordinator::fuse::execute_fused` on one ADRA engine (fusion
+    /// reprices everything at the ADRA tables: the fused path drives an
+    /// `AdraEngine` regardless of per-op routing).
+    pub fn fused_prediction(&self, model: &PlanCostModel) -> (OpCost, usize) {
+        let stream = self.op_stream();
+        let plan = fuse_batch(&stream);
+        let mut total = OpCost::default();
+        for step in &plan {
+            match step {
+                PlanStep::Passthrough(i) => {
+                    total = total.then(&model.price(&stream[*i], Executor::Adra).cost);
+                }
+                PlanStep::Fused { indices, .. } => {
+                    let full = model.price(&stream[indices[0]], Executor::Adra).cost;
+                    total = total.then(&full);
+                    if indices.len() > 1 {
+                        let followers = follower_cost(&full).repeat(indices.len() as u64 - 1);
+                        total = total.then(&followers);
+                    }
+                }
+            }
+        }
+        (total, planned_activations(&plan))
+    }
+}
+
+/// Lower a program onto one shard's layout, routing every op through the
+/// cost model.
+pub fn lower(
+    program: &Program,
+    cfg: &SimConfig,
+    model: &PlanCostModel,
+) -> Result<LoweredProgram, PlanError> {
+    program.validate(cfg)?;
+    let layout = Layout::of(cfg, program.n_records);
+    let mut ops: Vec<RoutedOp> = Vec::with_capacity(program.op_count(cfg));
+    let mut spans = Vec::with_capacity(program.ops.len());
+    let mut predicted = OpCost::default();
+    let mut predicted_accesses = 0u64;
+
+    let mut route = |ops: &mut Vec<RoutedOp>, op: CimOp| {
+        let d = model.choose(&op);
+        predicted = predicted.then(&d.cost.cost);
+        predicted_accesses += d.cost.accesses;
+        ops.push(RoutedOp {
+            op,
+            executor: d.executor,
+            predicted: d.cost.cost,
+            accesses: d.cost.accesses,
+        });
+    };
+
+    for (ir_index, ir) in program.ops.iter().enumerate() {
+        let start = ops.len();
+        match ir {
+            IrOp::Load { start: s, values } => {
+                for (i, &v) in values.iter().enumerate() {
+                    route(&mut ops, CimOp::Write { addr: layout.record_addr(s + i), value: v });
+                }
+            }
+            IrOp::Broadcast { scratch, value } => {
+                let row = layout.scratch_row(*scratch);
+                for word in 0..layout.words_per_row {
+                    route(
+                        &mut ops,
+                        CimOp::Write {
+                            addr: crate::cim::WordAddr { row, word },
+                            value: *value,
+                        },
+                    );
+                }
+            }
+            IrOp::Compare { range, rhs } | IrOp::Filter { range, rhs, .. } => {
+                let row_b = layout.scratch_row(*rhs);
+                for i in range.start..range.end() {
+                    let a = layout.record_addr(i);
+                    route(&mut ops, CimOp::Compare { row_a: a.row, row_b, word: a.word });
+                }
+            }
+            IrOp::Sub { range, rhs } => {
+                let row_b = layout.scratch_row(*rhs);
+                for i in range.start..range.end() {
+                    let a = layout.record_addr(i);
+                    route(&mut ops, CimOp::Sub { row_a: a.row, row_b, word: a.word });
+                }
+            }
+            IrOp::Bool { f, range, rhs } => {
+                let row_b = layout.scratch_row(*rhs);
+                for i in range.start..range.end() {
+                    let a = layout.record_addr(i);
+                    route(&mut ops, CimOp::Bool { f: *f, row_a: a.row, row_b, word: a.word });
+                }
+            }
+            IrOp::Scan { range } | IrOp::Aggregate { range, .. } => {
+                for i in range.start..range.end() {
+                    route(&mut ops, CimOp::Read(layout.record_addr(i)));
+                }
+            }
+        }
+        spans.push(StepSpan { ir_index, start, len: ops.len() - start });
+    }
+
+    Ok(LoweredProgram { layout, ops, spans, predicted, predicted_accesses })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::AdraEngine;
+    use crate::config::SensingScheme;
+    use crate::coordinator::fuse::execute_fused;
+    use crate::planner::cost::Objective;
+    use crate::planner::ir::{AggKind, Predicate};
+    use crate::util::rng::Rng;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::square(64, SensingScheme::Current);
+        c.word_bits = 8;
+        c
+    }
+
+    fn filter_program(n: usize) -> Program {
+        let mut p = Program::new(n);
+        let t = p.scratch();
+        let all = p.all();
+        let mut rng = Rng::new(7);
+        let values: Vec<u64> = (0..n).map(|_| rng.below(128)).collect();
+        p.load(0, values);
+        p.broadcast(t, 64);
+        p.filter(all, t, Predicate::Lt);
+        p.aggregate(all, AggKind::Min);
+        p
+    }
+
+    #[test]
+    fn lowered_stream_shape_and_spans() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let p = filter_program(20);
+        let l = lower(&p, &cfg, &model).unwrap();
+        // 20 loads + 8 broadcast + 20 compares + 20 reads
+        assert_eq!(l.ops.len(), 68);
+        assert_eq!(l.spans.len(), 4);
+        assert_eq!(l.spans[0], StepSpan { ir_index: 0, start: 0, len: 20 });
+        assert_eq!(l.spans[1], StepSpan { ir_index: 1, start: 20, len: 8 });
+        assert_eq!(l.spans[2], StepSpan { ir_index: 2, start: 28, len: 20 });
+        assert_eq!(l.spans[3], StepSpan { ir_index: 3, start: 48, len: 20 });
+        // filter lowers to dual-row compares routed to ADRA...
+        for r in &l.ops[28..48] {
+            assert!(matches!(r.op, CimOp::Compare { .. }));
+            assert_eq!(r.executor, Executor::Adra);
+            assert_eq!(r.accesses, 1, "ADRA compare is single-access");
+        }
+        // ...and the aggregate lowers to PLAIN READS (no activation paid)
+        let read_cost = model.adra().read.cost;
+        for r in &l.ops[48..68] {
+            assert!(matches!(r.op, CimOp::Read(_)));
+            assert_eq!(r.predicted, read_cost);
+        }
+    }
+
+    #[test]
+    fn prediction_is_sum_of_table_prices() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let p = filter_program(16);
+        let l = lower(&p, &cfg, &model).unwrap();
+        let mut want = OpCost::default();
+        for r in &l.ops {
+            want = want.then(&r.predicted);
+        }
+        assert_eq!(l.predicted, want);
+        assert_eq!(
+            l.predicted_accesses,
+            l.ops.iter().map(|r| r.accesses).sum::<u64>()
+        );
+    }
+
+    /// The fused prediction must equal what `execute_fused` actually
+    /// charges, and must beat the unfused prediction on a fusion-heavy
+    /// stream.
+    #[test]
+    fn fused_prediction_matches_fused_execution() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        // fusion-heavy: compare + sub + bool all on the same operand pair
+        let mut p = Program::new(8);
+        let t = p.scratch();
+        let all = p.all();
+        p.load(0, (0..8).map(|i| i as u64 * 3).collect());
+        p.broadcast(t, 11);
+        p.compare(all, t);
+        p.sub(all, t);
+        let l = lower(&p, &cfg, &model).unwrap();
+        let (fused_pred, activations) = l.fused_prediction(&model);
+        assert!(
+            fused_pred.energy.total() < l.predicted.energy.total(),
+            "fusion must be predicted cheaper: {:e} vs {:e}",
+            fused_pred.energy.total(),
+            l.predicted.energy.total()
+        );
+        // each record's compare+sub share one activation
+        assert_eq!(activations, 8);
+
+        let mut engine = AdraEngine::new(&cfg);
+        let stream = l.op_stream();
+        let results = execute_fused(&mut engine, &stream);
+        let mut measured = OpCost::default();
+        for r in &results {
+            measured = measured.then(&r.as_ref().unwrap().cost);
+        }
+        assert_eq!(engine.array().stats().dual_activations, 8);
+        assert!(
+            (fused_pred.energy.total() - measured.energy.total()).abs()
+                <= 1e-9 * measured.energy.total(),
+            "fused prediction {:e} vs measured {:e}",
+            fused_pred.energy.total(),
+            measured.energy.total()
+        );
+        assert!(
+            (fused_pred.latency - measured.latency).abs() <= 1e-9 * measured.latency,
+            "fused latency prediction"
+        );
+    }
+
+    #[test]
+    fn lowering_rejects_invalid_programs() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let p = Program::new(100_000);
+        assert!(lower(&p, &cfg, &model).is_err());
+    }
+}

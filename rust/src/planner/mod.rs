@@ -1,0 +1,39 @@
+//! The cost-model-driven CiM query planner.
+//!
+//! Callers used to hand-build `CimOp` streams against a single engine;
+//! the planner is the layer above the engines that decides *which*
+//! executor runs each op and *where* it runs:
+//!
+//! * [`ir`] — a tiny program IR for bulk bitwise/arithmetic column
+//!   programs (filter, compare, subtract, aggregate over record ranges);
+//! * [`cost`] — calibrated per-op price tables for the ADRA engine vs the
+//!   two-read near-memory baseline, derived from the same
+//!   `energy::EnergyModel` the engines charge, plus the
+//!   objective-driven routing decision;
+//! * [`engine`] — the cost-routed hybrid engine one coordinator shard
+//!   runs, dispatching each op to the executor the model picked;
+//! * [`lower`] — IR -> routed `CimOp` stream, with serial and
+//!   fusion-aware (`coordinator::fuse`) cost predictions;
+//! * [`place`] — shard-aware placement over the `Coordinator` worker
+//!   pool, parallel execution, output merging, and predicted-vs-measured
+//!   reporting through `metrics::PredictionReport`.
+//!
+//! ```text
+//!   Program (ir) --lower--> RoutedOp stream --place--> per-shard batches
+//!        |                        |                         |
+//!    cost tables            predictions            Coordinator workers
+//!        |                        |                  (PlannedEngine)
+//!        +---- PlanCostModel -----+--- PredictionReport <-- metrics
+//! ```
+
+pub mod cost;
+pub mod engine;
+pub mod ir;
+pub mod lower;
+pub mod place;
+
+pub use cost::{class_of, CostTable, Decision, Executor, Objective, OpClass, PlanCostModel, TableCost};
+pub use engine::{planned_coordinator, PlannedEngine};
+pub use ir::{AggKind, IrOp, Layout, PlanError, Predicate, Program, RecordRange, ScratchRow};
+pub use lower::{lower, LoweredProgram, RoutedOp, StepSpan};
+pub use place::{place, ExecError, ExecutionReport, Placement, Reduction, ShardPlan, StepOutput};

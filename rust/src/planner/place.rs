@@ -1,0 +1,544 @@
+//! Shard-aware placement: split a program across the coordinator's
+//! worker pool, execute it, and report predicted vs measured cost.
+//!
+//! Records are partitioned into contiguous chunks, one per shard; scratch
+//! rows (broadcast constants) are replicated on every shard, so every
+//! lowered op stays shard-local and the pool needs no cross-shard
+//! traffic.  Each shard's subprogram is lowered independently; execution
+//! drives all shards in parallel through `Coordinator::call_batch`,
+//! merges per-record outputs back to global record indices, and checks
+//! the planner's prediction against the measured per-op costs through
+//! `metrics::PredictionReport`.
+
+use crate::cim::{CimOp, CimValue, EngineError};
+use crate::config::SimConfig;
+use crate::coordinator::{Coordinator, RouteError};
+use crate::energy::OpCost;
+use crate::logic::CompareResult;
+use crate::metrics::{PredictionReport, RunMetrics};
+
+use super::cost::PlanCostModel;
+use super::ir::{AggKind, IrOp, PlanError, Program};
+use super::lower::{lower, LoweredProgram};
+
+/// One shard's slice of a placed program.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Coordinator shard (array id) this slice runs on.
+    pub shard: usize,
+    /// Global index of this shard's record slot 0.
+    pub record_offset: usize,
+    /// The shard-local subprogram (record indices rebased to 0).
+    pub program: Program,
+    pub lowered: LoweredProgram,
+    /// For each subprogram op index, the originating op index in the
+    /// placed program (clipping can drop steps on some shards).
+    pub ir_map: Vec<usize>,
+}
+
+/// A program split across coordinator shards.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// The placed program (outputs are indexed by its op list).
+    pub program: Program,
+    pub shards: Vec<ShardPlan>,
+    /// Serial prediction summed across shards (compare against summed
+    /// per-op measurements).
+    pub predicted: OpCost,
+    /// Parallel wall model: the slowest shard's predicted latency.
+    pub predicted_makespan: f64,
+    /// Total predicted array accesses.
+    pub predicted_accesses: u64,
+}
+
+/// Split `program` across `shards` coordinator shards and lower each
+/// slice through the cost model.
+pub fn place(
+    program: &Program,
+    cfg: &SimConfig,
+    shards: usize,
+    model: &PlanCostModel,
+) -> Result<Placement, PlanError> {
+    if shards == 0 {
+        return Err(PlanError::Empty("0 shards".into()));
+    }
+    // reject malformed GLOBAL programs up front — clipping would
+    // otherwise silently drop out-of-range ops (and an all-dropped
+    // aggregate would surface its fold sentinel as data)
+    program.validate_structure()?;
+    let chunk = program.n_records.div_ceil(shards);
+    let mut plans = Vec::new();
+    for shard in 0..shards {
+        let lo = shard * chunk;
+        let hi = ((shard + 1) * chunk).min(program.n_records);
+        if lo >= hi {
+            break; // fewer records than shards: trailing shards stay idle
+        }
+        let mut sub = Program::new(hi - lo);
+        sub.n_scratch = program.n_scratch;
+        let mut ir_map = Vec::new();
+        for (ir_index, op) in program.ops.iter().enumerate() {
+            let clipped = clip_op(op, lo, hi);
+            if let Some(c) = clipped {
+                sub.ops.push(c);
+                ir_map.push(ir_index);
+            }
+        }
+        let lowered = lower(&sub, cfg, model)?;
+        plans.push(ShardPlan { shard, record_offset: lo, program: sub, lowered, ir_map });
+    }
+    let mut predicted = OpCost::default();
+    let mut predicted_makespan = 0.0f64;
+    let mut predicted_accesses = 0u64;
+    for p in &plans {
+        predicted = predicted.then(&p.lowered.predicted);
+        predicted_makespan = predicted_makespan.max(p.lowered.predicted.latency);
+        predicted_accesses += p.lowered.predicted_accesses;
+    }
+    Ok(Placement {
+        program: program.clone(),
+        shards: plans,
+        predicted,
+        predicted_makespan,
+        predicted_accesses,
+    })
+}
+
+/// Restrict one IR op to the record window `[lo, hi)`, rebasing record
+/// indices to window-local.  `None` if nothing of it lands in the window.
+fn clip_op(op: &IrOp, lo: usize, hi: usize) -> Option<IrOp> {
+    match op {
+        IrOp::Load { start, values } => {
+            let s = (*start).max(lo);
+            let e = (start + values.len()).min(hi);
+            if s >= e {
+                return None;
+            }
+            Some(IrOp::Load {
+                start: s - lo,
+                values: values[s - start..e - start].to_vec(),
+            })
+        }
+        // broadcast constants are replicated on every shard
+        IrOp::Broadcast { scratch, value } => {
+            Some(IrOp::Broadcast { scratch: *scratch, value: *value })
+        }
+        IrOp::Compare { range, rhs } => {
+            Some(IrOp::Compare { range: range.clip(lo, hi)?, rhs: *rhs })
+        }
+        IrOp::Filter { range, rhs, pred } => {
+            Some(IrOp::Filter { range: range.clip(lo, hi)?, rhs: *rhs, pred: *pred })
+        }
+        IrOp::Sub { range, rhs } => Some(IrOp::Sub { range: range.clip(lo, hi)?, rhs: *rhs }),
+        IrOp::Bool { f, range, rhs } => {
+            Some(IrOp::Bool { f: *f, range: range.clip(lo, hi)?, rhs: *rhs })
+        }
+        IrOp::Scan { range } => Some(IrOp::Scan { range: range.clip(lo, hi)? }),
+        IrOp::Aggregate { range, agg } => {
+            Some(IrOp::Aggregate { range: range.clip(lo, hi)?, agg: *agg })
+        }
+    }
+}
+
+/// Host-side reduction results.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reduction {
+    Min { index: usize, value: u64 },
+    Max { index: usize, value: u64 },
+    Sum(u128),
+}
+
+/// Merged output of one IR step, keyed by GLOBAL record index.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepOutput {
+    /// Setup steps (load / broadcast) produce no output.
+    None,
+    /// Scan / Bool results per record.
+    Words(Vec<(usize, u64)>),
+    /// Sub results per record.
+    Diffs(Vec<(usize, i128)>),
+    /// Compare results per record.
+    Orderings(Vec<(usize, CompareResult)>),
+    /// Filter: accepted record indices, ascending.
+    Matches(Vec<usize>),
+    /// Aggregate result.
+    Reduced(Reduction),
+}
+
+/// Execution failure.
+#[derive(Debug)]
+pub enum ExecError {
+    Route(RouteError),
+    Engine { op: CimOp, err: EngineError },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Route(e) => write!(f, "routing: {e}"),
+            ExecError::Engine { op, err } => write!(f, "engine failed on {op:?}: {err}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// What a placement execution returns.
+#[derive(Clone, Debug)]
+pub struct ExecutionReport {
+    /// Per-IR-step outputs, indexed like `Program::ops`.
+    pub outputs: Vec<StepOutput>,
+    /// Measured cost summed from every op's engine-charged result.
+    pub measured: OpCost,
+    /// Predicted (placement) vs measured comparison.
+    pub prediction: PredictionReport,
+    /// The coordinator's cumulative metrics snapshot after the run.
+    pub coordinator_metrics: RunMetrics,
+    pub ops_executed: usize,
+}
+
+impl Placement {
+    /// Execute on a coordinator (one `call_batch` per shard, in
+    /// parallel), merge outputs, and compare prediction to measurement.
+    ///
+    /// Routing fidelity: execute on a `planner::planned_coordinator`
+    /// built with the SAME objective as the cost model so the workers
+    /// dispatch each op to the executor the plan priced.  (Whenever the
+    /// plan routes everything to ADRA — any objective under current or
+    /// voltage-2 sensing — a plain `Coordinator::adra` measures
+    /// identically.)
+    pub fn execute(&self, coord: &Coordinator) -> Result<ExecutionReport, ExecError> {
+        // run every shard's stream concurrently
+        let batches: Vec<Result<Vec<Result<crate::cim::CimResult, EngineError>>, RouteError>> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .shards
+                    .iter()
+                    .map(|sp| {
+                        s.spawn(move || coord.call_batch(sp.shard, &sp.lowered.op_stream()))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("shard thread panicked")).collect()
+            });
+
+        let mut outputs: Vec<StepOutput> = self.program.ops.iter().map(empty_output).collect();
+        let mut measured = OpCost::default();
+        let mut ops_executed = 0usize;
+
+        for (sp, batch) in self.shards.iter().zip(batches) {
+            let results = batch.map_err(ExecError::Route)?;
+            debug_assert_eq!(results.len(), sp.lowered.ops.len());
+            for span in &sp.lowered.spans {
+                let sub_op = &sp.program.ops[span.ir_index];
+                let global_ir = sp.ir_map[span.ir_index];
+                for k in 0..span.len {
+                    let idx = span.start + k;
+                    let r = match &results[idx] {
+                        Ok(r) => r,
+                        Err(e) => {
+                            return Err(ExecError::Engine {
+                                op: sp.lowered.ops[idx].op,
+                                err: e.clone(),
+                            })
+                        }
+                    };
+                    measured = measured.then(&r.cost);
+                    ops_executed += 1;
+                    merge_result(
+                        &mut outputs[global_ir],
+                        sub_op,
+                        sp.record_offset,
+                        k,
+                        &r.value,
+                    );
+                }
+            }
+        }
+
+        let prediction = PredictionReport::new(self.predicted, measured);
+        Ok(ExecutionReport {
+            outputs,
+            measured,
+            prediction,
+            coordinator_metrics: coord.metrics(),
+            ops_executed,
+        })
+    }
+}
+
+/// The empty accumulator for one IR step's output.
+fn empty_output(op: &IrOp) -> StepOutput {
+    match op {
+        IrOp::Load { .. } | IrOp::Broadcast { .. } => StepOutput::None,
+        IrOp::Compare { .. } => StepOutput::Orderings(Vec::new()),
+        IrOp::Filter { .. } => StepOutput::Matches(Vec::new()),
+        IrOp::Sub { .. } => StepOutput::Diffs(Vec::new()),
+        IrOp::Bool { .. } | IrOp::Scan { .. } => StepOutput::Words(Vec::new()),
+        IrOp::Aggregate { agg, .. } => StepOutput::Reduced(match agg {
+            AggKind::Min => Reduction::Min { index: usize::MAX, value: u64::MAX },
+            AggKind::Max => Reduction::Max { index: usize::MAX, value: 0 },
+            AggKind::Sum => Reduction::Sum(0),
+        }),
+    }
+}
+
+/// Fold the `k`-th result of a (shard-local) IR step into the merged
+/// output.  `sub_op` is the shard-local op, so its range is local; the
+/// global record index is `offset + local_range.start + k`.
+fn merge_result(
+    out: &mut StepOutput,
+    sub_op: &IrOp,
+    offset: usize,
+    k: usize,
+    value: &CimValue,
+) {
+    let rec = |range_start: usize| offset + range_start + k;
+    match (sub_op, value) {
+        (IrOp::Load { .. }, _) | (IrOp::Broadcast { .. }, _) => {}
+        (IrOp::Compare { range, .. }, CimValue::Ordering(o)) => {
+            if let StepOutput::Orderings(v) = out {
+                v.push((rec(range.start), *o));
+            }
+        }
+        (IrOp::Filter { range, pred, .. }, CimValue::Ordering(o)) => {
+            if let StepOutput::Matches(v) = out {
+                if pred.accepts(*o) {
+                    v.push(rec(range.start));
+                }
+            }
+        }
+        (IrOp::Sub { range, .. }, CimValue::Diff(d)) => {
+            if let StepOutput::Diffs(v) = out {
+                v.push((rec(range.start), *d));
+            }
+        }
+        (IrOp::Bool { range, .. }, CimValue::Word(w))
+        | (IrOp::Scan { range }, CimValue::Word(w)) => {
+            if let StepOutput::Words(v) = out {
+                v.push((rec(range.start), *w));
+            }
+        }
+        (IrOp::Aggregate { range, agg }, CimValue::Word(w)) => {
+            if let StepOutput::Reduced(red) = out {
+                let rec = rec(range.start);
+                match agg {
+                    AggKind::Min => {
+                        if let Reduction::Min { index, value } = red {
+                            if *w < *value || *index == usize::MAX {
+                                *red = Reduction::Min { index: rec, value: *w };
+                            }
+                        }
+                    }
+                    AggKind::Max => {
+                        if let Reduction::Max { index, value } = red {
+                            if *w > *value || *index == usize::MAX {
+                                *red = Reduction::Max { index: rec, value: *w };
+                            }
+                        }
+                    }
+                    AggKind::Sum => {
+                        if let Reduction::Sum(s) = red {
+                            *s += *w as u128;
+                        }
+                    }
+                }
+            }
+        }
+        // value kinds are fixed per op kind; anything else is an engine
+        // contract violation surfaced loudly in debug builds
+        _ => debug_assert!(false, "unexpected value {value:?} for {sub_op:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::{AdraEngine, Engine};
+    use crate::config::SensingScheme;
+    use crate::planner::cost::Objective;
+    use crate::planner::engine::planned_coordinator;
+    use crate::workload::programs::{analytics_scenario, AnalyticsScenario};
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::square(64, SensingScheme::Current);
+        c.word_bits = 8;
+        c.max_batch = 16;
+        c
+    }
+
+    /// The shared filter + compare + aggregate workload with host-side
+    /// ground truth (same builder the example and bench drive).
+    fn scenario(cfg: &SimConfig, n: usize, seed: u64) -> AnalyticsScenario {
+        analytics_scenario(cfg, n, seed)
+    }
+
+    #[test]
+    fn placement_partitions_records_and_replicates_scratch() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let p = scenario(&cfg, 100, 5).program;
+        let pl = place(&p, &cfg, 4, &model).unwrap();
+        assert_eq!(pl.shards.len(), 4);
+        let sizes: Vec<usize> = pl.shards.iter().map(|s| s.program.n_records).collect();
+        assert_eq!(sizes, vec![25, 25, 25, 25]);
+        assert_eq!(pl.shards[2].record_offset, 50);
+        for s in &pl.shards {
+            // every shard re-broadcasts the threshold
+            assert!(s.program.ops.iter().any(|o| matches!(o, IrOp::Broadcast { .. })));
+            assert_eq!(s.program.n_scratch, 1);
+        }
+        // serial prediction decomposes over shards
+        let sum: f64 = pl.shards.iter().map(|s| s.lowered.predicted.latency).sum();
+        assert!((pl.predicted.latency - sum).abs() < 1e-15);
+        assert!(pl.predicted_makespan <= pl.predicted.latency / 3.9);
+    }
+
+    #[test]
+    fn fewer_records_than_shards_leaves_shards_idle() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let p = scenario(&cfg, 3, 6).program;
+        let pl = place(&p, &cfg, 8, &model).unwrap();
+        assert_eq!(pl.shards.len(), 3);
+    }
+
+    #[test]
+    fn four_shard_execution_matches_single_engine_ground_truth() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let s = scenario(&cfg, 120, 77);
+        let pl = place(&s.program, &cfg, 4, &model).unwrap();
+        let coord = planned_coordinator(&cfg, 4, Objective::Edp);
+        let rep = pl.execute(&coord).unwrap();
+
+        // filter output == host ground truth
+        assert_eq!(
+            rep.outputs[s.filter_step],
+            StepOutput::Matches(s.expected_matches.clone())
+        );
+
+        // compare output covers every record, in order
+        if let StepOutput::Orderings(o) = &rep.outputs[s.compare_step] {
+            assert_eq!(o.len(), 120);
+            assert!(o.windows(2).all(|w| w[0].0 < w[1].0), "global order");
+            for &(i, ord) in o {
+                let want = match s.values[i].cmp(&s.threshold) {
+                    std::cmp::Ordering::Less => CompareResult::Less,
+                    std::cmp::Ordering::Equal => CompareResult::Equal,
+                    std::cmp::Ordering::Greater => CompareResult::Greater,
+                };
+                assert_eq!(ord, want, "record {i}");
+            }
+        } else {
+            panic!("expected orderings, got {:?}", rep.outputs[s.compare_step]);
+        }
+
+        // aggregate min == host min (ties: lowest record index)
+        assert_eq!(
+            rep.outputs[s.aggregate_step],
+            StepOutput::Reduced(Reduction::Min {
+                index: s.expected_min_index,
+                value: s.values[s.expected_min_index],
+            })
+        );
+
+        // cross-check against one unsharded engine replaying the same
+        // plan: the ONLY energy delta sharding may introduce is the
+        // scratch-row broadcast replicated on the 3 extra shards
+        let single = place(&s.program, &cfg, 1, &model).unwrap();
+        let mut engine = AdraEngine::new(&cfg);
+        let mut single_measured = OpCost::default();
+        for r in &single.shards[0].lowered.ops {
+            let res = engine.execute(&r.op).unwrap();
+            single_measured = single_measured.then(&res.cost);
+        }
+        let extra_writes = (pl.shards.len() - 1) * cfg.words_per_row();
+        let extra_energy =
+            model.adra().write.cost.energy.total() * extra_writes as f64;
+        assert!(
+            (single_measured.energy.total() + extra_energy - rep.measured.energy.total())
+                .abs()
+                <= 1e-9 * rep.measured.energy.total(),
+            "sharding must only add the replicated broadcasts: single {:e} + extra {:e} vs sharded {:e}",
+            single_measured.energy.total(),
+            extra_energy,
+            rep.measured.energy.total()
+        );
+        assert_eq!(
+            rep.ops_executed,
+            single.shards[0].lowered.ops.len() + extra_writes,
+            "op-count delta must be exactly the replicated broadcast writes"
+        );
+    }
+
+    /// The acceptance criterion: predicted within 20% of measured — and
+    /// in fact the tables are exact, so pin much tighter than 20%.
+    #[test]
+    fn prediction_within_tolerance_of_measured_metrics() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let p = scenario(&cfg, 200, 99).program;
+        let pl = place(&p, &cfg, 4, &model).unwrap();
+        let coord = planned_coordinator(&cfg, 4, Objective::Edp);
+        let rep = pl.execute(&coord).unwrap();
+        assert!(rep.prediction.within(0.2), "{}", rep.prediction.report("planner"));
+        assert!(rep.prediction.within(1e-6), "tables are exact: {}", rep.prediction.report("planner"));
+        // and the coordinator's own metrics agree with the summed results
+        let m = rep.coordinator_metrics.total_cost();
+        assert!(
+            (m.energy.total() - rep.measured.energy.total()).abs()
+                <= 1e-9 * rep.measured.energy.total()
+        );
+        assert_eq!(rep.coordinator_metrics.ops as usize, rep.ops_executed);
+    }
+
+    /// Mixed routing under scheme 1 + energy objective: the planner sends
+    /// dual ops to the baseline executor and the planned coordinator
+    /// honors it — prediction still matches measurement.
+    #[test]
+    fn mixed_routing_prediction_matches_on_planned_coordinator() {
+        let mut cfg = cfg();
+        cfg.scheme = SensingScheme::VoltagePrecharged;
+        let model = PlanCostModel::new(&cfg, Objective::Energy);
+        let s = scenario(&cfg, 60, 42);
+        let pl = place(&s.program, &cfg, 2, &model).unwrap();
+        let (adra_ops, baseline_ops) = pl.shards[0].lowered.executor_counts();
+        assert!(baseline_ops > 0, "scheme1/energy must route compares to baseline");
+        assert!(adra_ops > 0, "writes/reads stay on the default path");
+        let coord = planned_coordinator(&cfg, 2, Objective::Energy);
+        let rep = pl.execute(&coord).unwrap();
+        assert!(rep.prediction.within(1e-6), "{}", rep.prediction.report("mixed"));
+        assert_eq!(
+            rep.outputs[s.filter_step],
+            StepOutput::Matches(s.expected_matches.clone())
+        );
+    }
+
+    #[test]
+    fn place_rejects_malformed_global_programs() {
+        use crate::planner::ir::{AggKind, PlanError, Program, RecordRange};
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        // out-of-bounds aggregate: must error, never be clipped away into
+        // a sentinel result
+        let mut p = Program::new(10);
+        p.aggregate(RecordRange::new(12, 3), AggKind::Min);
+        assert!(matches!(place(&p, &cfg, 2, &model), Err(PlanError::BadRange(_))));
+        // partially out-of-bounds filter: rejected, not truncated
+        let mut p2 = Program::new(10);
+        let t = p2.scratch();
+        p2.broadcast(t, 1);
+        p2.filter(RecordRange::new(5, 10), t, crate::planner::ir::Predicate::Lt);
+        assert!(matches!(place(&p2, &cfg, 2, &model), Err(PlanError::BadRange(_))));
+    }
+
+    #[test]
+    fn route_error_on_missing_shard() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let p = scenario(&cfg, 40, 3).program;
+        let pl = place(&p, &cfg, 4, &model).unwrap();
+        let coord = Coordinator::adra(&cfg, 2); // too few shards
+        assert!(matches!(pl.execute(&coord), Err(ExecError::Route(_))));
+    }
+}

@@ -186,6 +186,63 @@ mod tests {
     }
 
     #[test]
+    fn deterministic_for_seed_with_skew_and_divergent_across_seeds() {
+        let cfg = cfg();
+        let mut g1 = WorkloadGen::new(&cfg, OpMix::subtraction_heavy(), 7).with_skew(1.2);
+        let mut g2 = WorkloadGen::new(&cfg, OpMix::subtraction_heavy(), 7).with_skew(1.2);
+        assert_eq!(g1.batch(500), g2.batch(500));
+        let mut g3 = WorkloadGen::new(&cfg, OpMix::subtraction_heavy(), 8).with_skew(1.2);
+        assert_ne!(g1.batch(500), g3.batch(500), "different seeds must diverge");
+    }
+
+    /// Empirical op-class frequencies must track the OpMix weights.  With
+    /// n = 20000 draws the worst per-class sigma is sqrt(p(1-p)/n) <
+    /// 0.0036, so a +-0.02 absolute tolerance is > 5 sigma — stable under
+    /// any seed while still catching a broken weighting.
+    #[test]
+    fn empirical_frequencies_match_mix_weights() {
+        let cfg = cfg();
+        let n = 20_000usize;
+        for (label, mix) in [
+            ("subtraction_heavy", OpMix::subtraction_heavy()),
+            ("balanced", OpMix::balanced()),
+        ] {
+            let mut g = WorkloadGen::new(&cfg, mix, 12345);
+            let mut counts = [0usize; 7];
+            for _ in 0..n {
+                let k = match g.next_op() {
+                    CimOp::Read(_) => 0,
+                    CimOp::Read2 { .. } => 1,
+                    CimOp::Bool { .. } => 2,
+                    CimOp::Add { .. } => 3,
+                    CimOp::Sub { .. } => 4,
+                    CimOp::Compare { .. } => 5,
+                    CimOp::Write { .. } => 6,
+                };
+                counts[k] += 1;
+            }
+            let total = mix.read
+                + mix.read2
+                + mix.boolean
+                + mix.add
+                + mix.sub
+                + mix.compare
+                + mix.write;
+            let want = [
+                mix.read, mix.read2, mix.boolean, mix.add, mix.sub, mix.compare, mix.write,
+            ];
+            for (k, &w) in want.iter().enumerate() {
+                let expect = w / total;
+                let got = counts[k] as f64 / n as f64;
+                assert!(
+                    (got - expect).abs() < 0.02,
+                    "{label} class {k}: got {got:.4}, want {expect:.4}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn mix_produces_all_classes() {
         let cfg = cfg();
         let mut g = WorkloadGen::new(&cfg, OpMix::balanced(), 3);

@@ -1,8 +1,11 @@
 //! Workload generators: the op streams the examples, benches, and the
-//! coordinator's end-to-end driver feed through the engines.
+//! coordinator's end-to-end driver feed through the engines, plus
+//! planner-level IR programs with ground truth (`programs`).
 
 pub mod generators;
+pub mod programs;
 pub mod traces;
 
 pub use generators::{OpMix, WorkloadGen};
+pub use programs::{analytics_scenario, AnalyticsScenario};
 pub use traces::{database_filter_trace, image_diff_trace, DatabaseTrace};

@@ -1,0 +1,104 @@
+//! Planner-level workloads: IR programs with host-side ground truth, the
+//! program-granularity counterpart of `traces` (which builds raw `CimOp`
+//! streams).  Examples, benches, and integration tests feed these through
+//! `planner::{lower, place}` and validate the outputs.
+
+use crate::config::SimConfig;
+use crate::planner::ir::{AggKind, Predicate, Program};
+use crate::util::rng::Rng;
+
+/// A database-analytics program (`SELECT * WHERE value < k`, a full
+/// three-way compare pass, and a min aggregate) plus its ground truth.
+#[derive(Clone, Debug)]
+pub struct AnalyticsScenario {
+    pub program: Program,
+    /// Record values, in record order (positive signed range so
+    /// two's-complement compare matches unsigned intuition).
+    pub values: Vec<u64>,
+    pub threshold: u64,
+    /// IR step indices of the interesting ops in `program.ops`.
+    pub filter_step: usize,
+    pub compare_step: usize,
+    pub aggregate_step: usize,
+    /// Ground truth for the filter step.
+    pub expected_matches: Vec<usize>,
+    /// Ground truth for the aggregate step (lowest index wins ties).
+    pub expected_min_index: usize,
+}
+
+/// Build the filter+compare+aggregate analytics program over `n_records`
+/// random records.
+pub fn analytics_scenario(cfg: &SimConfig, n_records: usize, seed: u64) -> AnalyticsScenario {
+    assert!(n_records > 0, "scenario needs records");
+    let mask = if cfg.word_bits == 64 { u64::MAX } else { (1 << cfg.word_bits) - 1 };
+    let pos_max = mask >> 1;
+    let threshold = pos_max / 2;
+    let mut rng = Rng::new(seed);
+    let values: Vec<u64> = (0..n_records).map(|_| rng.below(pos_max + 1)).collect();
+
+    let mut program = Program::new(n_records);
+    let t = program.scratch();
+    let all = program.all();
+    program.load(0, values.clone());
+    program.broadcast(t, threshold);
+    program.filter(all, t, Predicate::Lt);
+    program.compare(all, t);
+    program.aggregate(all, AggKind::Min);
+
+    let expected_matches: Vec<usize> = values
+        .iter()
+        .enumerate()
+        .filter(|(_, &v)| v < threshold)
+        .map(|(i, _)| i)
+        .collect();
+    let expected_min_index = (0..n_records).min_by_key(|&i| (values[i], i)).unwrap();
+
+    AnalyticsScenario {
+        program,
+        values,
+        threshold,
+        filter_step: 2,
+        compare_step: 3,
+        aggregate_step: 4,
+        expected_matches,
+        expected_min_index,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SensingScheme, SimConfig};
+    use crate::planner::ir::IrOp;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::square(64, SensingScheme::Current);
+        c.word_bits = 8;
+        c
+    }
+
+    #[test]
+    fn scenario_is_valid_and_nondegenerate() {
+        let cfg = cfg();
+        let s = analytics_scenario(&cfg, 100, 2026);
+        s.program.validate(&cfg).unwrap();
+        assert_eq!(s.values.len(), 100);
+        assert!(matches!(s.program.ops[s.filter_step], IrOp::Filter { .. }));
+        assert!(matches!(s.program.ops[s.compare_step], IrOp::Compare { .. }));
+        assert!(matches!(s.program.ops[s.aggregate_step], IrOp::Aggregate { .. }));
+        assert!(!s.expected_matches.is_empty(), "degenerate: no matches");
+        assert!(s.expected_matches.len() < 100, "degenerate: all match");
+        assert_eq!(s.values[s.expected_min_index], *s.values.iter().min().unwrap());
+    }
+
+    #[test]
+    fn scenario_is_deterministic_per_seed() {
+        let cfg = cfg();
+        let a = analytics_scenario(&cfg, 50, 7);
+        let b = analytics_scenario(&cfg, 50, 7);
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.program, b.program);
+        let c = analytics_scenario(&cfg, 50, 8);
+        assert_ne!(a.values, c.values);
+    }
+}

@@ -1,0 +1,111 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The offline build environment cannot fetch crates.io dependencies, so
+//! this vendored stub provides exactly the API subset the repo uses:
+//! `anyhow::{Error, Result, Context, anyhow!}`.  Semantics match real
+//! anyhow for that subset: contexts wrap outermost-first, `?` converts any
+//! `std::error::Error`, and `Error` itself deliberately does NOT implement
+//! `std::error::Error` (that is what makes the blanket `From` coherent —
+//! the same trick the real crate uses).
+
+use std::fmt;
+
+/// A type-erased error: a rendered message with wrapped context.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Self { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error as it propagates.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("boom {}", 42))
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i32> {
+            let n: i32 = "not a number".parse()?;
+            Ok(n)
+        }
+        assert!(parse().is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The offline build environment has no XLA/PJRT shared libraries, so this
+//! vendored stub keeps the `runtime` module compiling with the exact API
+//! surface `runtime::client` uses.  Every entry path fails at runtime with
+//! a clear message; the repo's PJRT code paths all gate on
+//! `ArtifactManifest::load*` succeeding first, so in practice the stub is
+//! never reached unless someone generates artifacts without installing the
+//! real bindings — and then the error says exactly that.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+const UNAVAILABLE: &str = "PJRT is unavailable in this offline build (the `xla` \
+     dependency is a vendored stub); the behavioral AnalogBackend serves all engines";
+
+/// Stub error carrying the unavailability message.
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!("{what}: {UNAVAILABLE}"))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module proto (stub: parsing always fails).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping a module proto.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _priv: () }
+    }
+}
+
+/// Compiled executable handle (stub: execution always fails).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host literal (stub: carries no data).
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn scalar(_v: f32) -> Self {
+        Self::default()
+    }
+
+    pub fn vec1(_v: &[f32]) -> Self {
+        Self::default()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_path_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::scalar(1.0).to_vec::<f32>().is_err());
+    }
+}
