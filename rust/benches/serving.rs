@@ -1,0 +1,140 @@
+//! Bench: serving-layer throughput and modeled energy vs naive
+//! per-program execution as concurrent tenants scale.
+//!
+//! Naive = every submission runs `Placement::execute` on a shared
+//! planned coordinator, sequentially (no coalescing, fusion, dedup, or
+//! caching).  Served = the same multiset of programs pushed through a
+//! `ServeQueue` from one client thread per tenant.
+//!
+//! §Perf targets: served modeled energy well below naive at >= 4 tenants
+//! (cross-tenant dedup + fusion + cache), wall throughput at worst
+//! comparable at 1 tenant and improving with tenant count.
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use adra::config::{SensingScheme, SimConfig};
+use adra::energy::OpCost;
+use adra::planner::{place, planned_coordinator, Objective, PlanCostModel, Predicate, Program};
+use adra::serve::{ServeConfig, ServeQueue};
+use adra::util::rng::Rng;
+
+const N_RECORDS: usize = 256;
+const SHARDS: usize = 4;
+const REPEATS: usize = 4;
+
+fn tenant_program(values: &[u64], threshold: u64, tenant: usize) -> Program {
+    let mut p = Program::new(values.len());
+    let t = p.scratch();
+    let all = p.all();
+    p.load(0, values.to_vec());
+    p.broadcast(t, threshold);
+    if tenant % 2 == 0 {
+        p.filter(all, t, Predicate::Lt);
+        p.compare(all, t);
+    } else {
+        p.sub(all, t);
+    }
+    p
+}
+
+fn main() {
+    let mut cfg = SimConfig::square(256, SensingScheme::Current);
+    cfg.word_bits = 32;
+    cfg.max_batch = 256;
+    let mut rng = Rng::new(7);
+    let values: Vec<u64> = (0..N_RECORDS).map(|_| rng.below(1 << 20)).collect();
+    let threshold: u64 = 1 << 19;
+    let model = PlanCostModel::new(&cfg, Objective::Edp);
+
+    println!(
+        "serving bench: {N_RECORDS} records, {SHARDS} shards, {REPEATS} replays/tenant\n"
+    );
+    println!(
+        "{:>7} {:>12} {:>12} {:>8} {:>14} {:>14} {:>8} {:>7} {:>7}",
+        "tenants",
+        "naive wall",
+        "serve wall",
+        "speedup",
+        "naive energy",
+        "serve energy",
+        "saving",
+        "fused%",
+        "hit%"
+    );
+
+    for &tenants in &[1usize, 2, 4, 8] {
+        let programs: Vec<Program> = (0..tenants)
+            .map(|t| tenant_program(&values, threshold, t))
+            .collect();
+
+        // --- naive: sequential per-program execution ---
+        let naive_coord = planned_coordinator(&cfg, SHARDS, Objective::Edp);
+        let placements: Vec<_> = programs
+            .iter()
+            .map(|p| place(p, &cfg, SHARDS, &model).expect("place"))
+            .collect();
+        let t0 = Instant::now();
+        let mut naive_cost = OpCost::default();
+        for _ in 0..REPEATS {
+            for pl in &placements {
+                let rep = pl.execute(&naive_coord).expect("naive");
+                naive_cost = naive_cost.then(&rep.measured);
+            }
+        }
+        let naive_wall = t0.elapsed().as_secs_f64();
+
+        // --- served: one client thread per tenant ---
+        let queue = Arc::new(ServeQueue::start(ServeConfig {
+            cfg: cfg.clone(),
+            shards: SHARDS,
+            objective: Objective::Edp,
+            n_records: N_RECORDS,
+            max_round: 32,
+            cache_capacity: 4096,
+        }));
+        let barrier = Arc::new(Barrier::new(tenants));
+        let t1 = Instant::now();
+        let handles: Vec<_> = programs
+            .into_iter()
+            .enumerate()
+            .map(|(t, program)| {
+                let q = queue.clone();
+                let b = barrier.clone();
+                std::thread::spawn(move || {
+                    b.wait();
+                    let mut cost = OpCost::default();
+                    for _ in 0..REPEATS {
+                        let rep = q.submit(t, program.clone()).expect("admit").wait().expect("serve");
+                        cost = cost.then(&rep.measured);
+                    }
+                    cost
+                })
+            })
+            .collect();
+        let mut serve_cost = OpCost::default();
+        for h in handles {
+            serve_cost = serve_cost.then(&h.join().expect("tenant"));
+        }
+        let serve_wall = t1.elapsed().as_secs_f64();
+        let m = queue.metrics();
+
+        println!(
+            "{:>7} {:>11.4}s {:>11.4}s {:>7.2}x {:>12.3}nJ {:>12.3}nJ {:>7.1}% {:>6.1}% {:>6.1}%",
+            tenants,
+            naive_wall,
+            serve_wall,
+            naive_wall / serve_wall,
+            naive_cost.energy.total() * 1e9,
+            serve_cost.energy.total() * 1e9,
+            (1.0 - serve_cost.energy.total() / naive_cost.energy.total()) * 100.0,
+            m.fused_share() * 100.0,
+            m.cache_hit_rate() * 100.0,
+        );
+
+        assert!(
+            serve_cost.energy.total() <= naive_cost.energy.total(),
+            "serving must never cost more modeled energy than naive"
+        );
+    }
+}

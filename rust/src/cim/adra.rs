@@ -396,6 +396,12 @@ impl Engine for AdraEngine {
         }
     }
 
+    /// ADRA has a native fused datapath: dual ops over the same operand
+    /// pair share one asymmetric activation (`coordinator::fuse`).
+    fn execute_fused(&mut self, ops: &[CimOp]) -> Option<Vec<Result<CimResult, EngineError>>> {
+        Some(crate::coordinator::fuse::execute_fused(self, ops))
+    }
+
     fn name(&self) -> &'static str {
         "adra"
     }

@@ -159,6 +159,16 @@ pub trait Engine: Send {
     /// Execute one operation against the engine's array state.
     fn execute(&mut self, op: &CimOp) -> Result<CimResult, EngineError>;
 
+    /// Execute a whole batch with activation fusion
+    /// (`coordinator::fuse`) if this engine supports it, returning
+    /// results in batch order.  `None` tells the caller to fall back to
+    /// sequential `execute` — the default for engines without a fused
+    /// datapath (e.g. the symmetric baseline).
+    fn execute_fused(&mut self, ops: &[CimOp]) -> Option<Vec<Result<CimResult, EngineError>>> {
+        let _ = ops;
+        None
+    }
+
     /// Engine label for metrics/reporting.
     fn name(&self) -> &'static str;
 }

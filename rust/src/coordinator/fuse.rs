@@ -71,6 +71,17 @@ pub fn planned_activations(plan: &[PlanStep]) -> usize {
         .count()
 }
 
+/// Count the follower ops a plan serves from an already-latched
+/// activation (every fused-group member after the first).
+pub fn fused_followers(plan: &[PlanStep]) -> usize {
+    plan.iter()
+        .map(|s| match s {
+            PlanStep::Fused { indices, .. } => indices.len() - 1,
+            PlanStep::Passthrough(_) => 0,
+        })
+        .sum()
+}
+
 /// Derive one op's result from a shared sense vector.
 fn derive(op: &CimOp, outs: &[SenseOut], cost: OpCost) -> CimResult {
     let value = match *op {

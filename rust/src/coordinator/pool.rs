@@ -20,6 +20,11 @@ enum WorkerMsg {
     /// A pre-batched request group with a single group reply (§Perf: one
     /// channel round-trip amortized over the whole group).
     Batch(Vec<Request>, Sender<Vec<Response>>),
+    /// Like `Batch`, but executed through the engine's fused datapath
+    /// (`Engine::execute_fused`) when it has one: dual ops over the same
+    /// operand pair share one activation.  Falls back to sequential
+    /// execution on engines without fusion support.
+    FusedBatch(Vec<Request>, Sender<Vec<Response>>),
     /// Collect a metrics snapshot.
     Stats(Sender<RunMetrics>),
 }
@@ -127,7 +132,9 @@ impl Coordinator {
                 .tx
                 .send(WorkerMsg::Batch(reqs, tx))
                 .map_err(|_| RouteError::ShuttingDown)?;
-            let resps = rx.recv().expect("worker died");
+            // a dead worker surfaces as a routing error, not a panic —
+            // long-lived serving threads must survive pool shutdown
+            let resps = rx.recv().map_err(|_| RouteError::ShuttingDown)?;
             debug_assert_eq!(resps.len(), ids.len());
             for (resp, id) in resps.into_iter().zip(ids) {
                 debug_assert_eq!(resp.id, id, "response/request id mismatch");
@@ -135,6 +142,45 @@ impl Coordinator {
             }
         }
         Ok(out)
+    }
+
+    /// Submit a whole batch to one shard for FUSED execution
+    /// (`Engine::execute_fused`), then await all responses in submission
+    /// order.
+    ///
+    /// Unlike `call_batch` the stream is sent as ONE group — chunking by
+    /// `max_batch` would cut fusion groups at chunk boundaries — so the
+    /// caller controls batch sizing.  Engines without a fused datapath
+    /// fall back to sequential execution; results are identical either
+    /// way (property-tested in `coordinator::fuse`).
+    pub fn call_batch_fused(
+        &self,
+        array_id: usize,
+        ops: &[CimOp],
+    ) -> Result<Vec<Result<CimResult, EngineError>>, RouteError> {
+        let worker = self
+            .workers
+            .get(array_id)
+            .ok_or(RouteError::UnknownArray(array_id))?;
+        if ops.is_empty() {
+            return Ok(Vec::new());
+        }
+        let reqs: Vec<Request> = ops
+            .iter()
+            .map(|op| Request {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                array_id,
+                op: *op,
+            })
+            .collect();
+        let (tx, rx) = channel();
+        worker
+            .tx
+            .send(WorkerMsg::FusedBatch(reqs, tx))
+            .map_err(|_| RouteError::ShuttingDown)?;
+        let resps = rx.recv().map_err(|_| RouteError::ShuttingDown)?;
+        debug_assert_eq!(resps.len(), ops.len());
+        Ok(resps.into_iter().map(|r| r.result).collect())
     }
 
     /// Aggregate metrics across all workers.
@@ -198,12 +244,43 @@ impl std::fmt::Display for CallError {
 
 impl std::error::Error for CallError {}
 
+/// Execute one request group on the worker's engine — through
+/// `Engine::execute_fused` when `fused` is set and the engine supports
+/// it, sequentially otherwise — recording metrics per result.
+fn run_group(
+    engine: &mut dyn Engine,
+    reqs: Vec<Request>,
+    fused: bool,
+    metrics: &mut RunMetrics,
+) -> Vec<Response> {
+    let results: Vec<Result<CimResult, EngineError>> = if fused {
+        let ops: Vec<CimOp> = reqs.iter().map(|r| r.op).collect();
+        match engine.execute_fused(&ops) {
+            Some(rs) => rs,
+            None => ops.iter().map(|op| engine.execute(op)).collect(),
+        }
+    } else {
+        reqs.iter().map(|r| engine.execute(&r.op)).collect()
+    };
+    debug_assert_eq!(results.len(), reqs.len());
+    reqs.into_iter()
+        .zip(results)
+        .map(|(req, result)| {
+            match &result {
+                Ok(r) => metrics.record(&r.cost),
+                Err(_) => metrics.record_error(),
+            }
+            Response { id: req.id, result }
+        })
+        .collect()
+}
+
 fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: usize) {
     let mut metrics = RunMetrics::default();
     let mut batch: Vec<(Request, Sender<Response>)> = Vec::with_capacity(max_batch);
     loop {
         // block for the first message
-        let mut group_reply: Option<(Vec<Request>, Sender<Vec<Response>>)> = None;
+        let mut group_reply: Option<(Vec<Request>, Sender<Vec<Response>>, bool)> = None;
         match rx.recv() {
             Err(_) => return, // disconnected: shutdown
             Ok(WorkerMsg::Stats(tx)) => {
@@ -211,19 +288,12 @@ fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: 
                 continue;
             }
             Ok(WorkerMsg::Work(req, tx)) => batch.push((req, tx)),
-            Ok(WorkerMsg::Batch(reqs, tx)) => group_reply = Some((reqs, tx)),
+            Ok(WorkerMsg::Batch(reqs, tx)) => group_reply = Some((reqs, tx, false)),
+            Ok(WorkerMsg::FusedBatch(reqs, tx)) => group_reply = Some((reqs, tx, true)),
         }
         // grouped fast path: execute the whole group, one reply message
-        if let Some((reqs, tx)) = group_reply {
-            let mut resps = Vec::with_capacity(reqs.len());
-            for req in reqs {
-                let result = engine.execute(&req.op);
-                match &result {
-                    Ok(r) => metrics.record(&r.cost),
-                    Err(_) => metrics.record_error(),
-                }
-                resps.push(Response { id: req.id, result });
-            }
+        if let Some((reqs, tx, fused)) = group_reply {
+            let resps = run_group(&mut *engine, reqs, fused, &mut metrics);
             let _ = tx.send(resps);
             continue;
         }
@@ -234,10 +304,9 @@ fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: 
                 Ok(WorkerMsg::Stats(tx)) => {
                     let _ = tx.send(metrics.clone());
                 }
-                Ok(WorkerMsg::Batch(reqs, tx)) => {
-                    // execute inline to preserve arrival order
-                    let mut resps = Vec::with_capacity(reqs.len());
-                    // first flush the singles gathered so far
+                Ok(msg @ WorkerMsg::Batch(..)) | Ok(msg @ WorkerMsg::FusedBatch(..)) => {
+                    // execute inline to preserve arrival order: first
+                    // flush the singles gathered so far, then the group
                     for (req, rtx) in batch.drain(..) {
                         let result = engine.execute(&req.op);
                         match &result {
@@ -246,14 +315,12 @@ fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: 
                         }
                         let _ = rtx.send(Response { id: req.id, result });
                     }
-                    for req in reqs {
-                        let result = engine.execute(&req.op);
-                        match &result {
-                            Ok(r) => metrics.record(&r.cost),
-                            Err(_) => metrics.record_error(),
-                        }
-                        resps.push(Response { id: req.id, result });
-                    }
+                    let (reqs, tx, fused) = match msg {
+                        WorkerMsg::Batch(reqs, tx) => (reqs, tx, false),
+                        WorkerMsg::FusedBatch(reqs, tx) => (reqs, tx, true),
+                        _ => unreachable!(),
+                    };
+                    let resps = run_group(&mut *engine, reqs, fused, &mut metrics);
                     let _ = tx.send(resps);
                 }
                 Err(TryRecvError::Empty) => break,
@@ -384,6 +451,86 @@ mod tests {
         let m = coord.metrics();
         assert_eq!(m.ops, 10);
         assert!(m.energy.total() > 0.0);
+    }
+
+    #[test]
+    fn fused_batch_matches_unbatched() {
+        let cfg = cfg();
+        let coord = Coordinator::adra(&cfg, 1);
+        let mut mirror = AdraEngine::new(&cfg);
+        let mut gen = WorkloadGen::new(&cfg, OpMix::balanced(), 991);
+        let ops = gen.batch(300);
+        let fused = coord.call_batch_fused(0, &ops).unwrap();
+        assert_eq!(fused.len(), ops.len());
+        for (op, got) in ops.iter().zip(fused) {
+            let want = mirror.execute(op);
+            match (got, want) {
+                (Ok(g), Ok(w)) => assert_eq!(g.value, w.value, "op {op:?}"),
+                (Err(ge), Err(we)) => assert_eq!(
+                    std::mem::discriminant(&ge),
+                    std::mem::discriminant(&we)
+                ),
+                (g, w) => panic!("divergence on {op:?}: {g:?} vs {w:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn fused_batch_shares_activations() {
+        let cfg = cfg();
+        let coord = Coordinator::adra(&cfg, 1);
+        let mut ops = vec![
+            CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 77 },
+            CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 33 },
+        ];
+        for _ in 0..6 {
+            ops.push(CimOp::Sub { row_a: 0, row_b: 1, word: 0 });
+            ops.push(CimOp::Compare { row_a: 0, row_b: 1, word: 0 });
+        }
+        let fused: f64 = coord
+            .call_batch_fused(0, &ops)
+            .unwrap()
+            .iter()
+            .map(|r| r.as_ref().unwrap().cost.energy.total())
+            .sum();
+        let coord2 = Coordinator::adra(&cfg, 1);
+        let plain: f64 = coord2
+            .call_batch(0, &ops)
+            .unwrap()
+            .iter()
+            .map(|r| r.as_ref().unwrap().cost.energy.total())
+            .sum();
+        assert!(
+            fused < 0.5 * plain,
+            "12 dual ops on one pair must fuse: {fused:e} vs {plain:e}"
+        );
+    }
+
+    /// A worker that dies mid-batch must surface as `ShuttingDown`, not a
+    /// client-side panic (long-lived serving threads depend on this).
+    #[test]
+    fn dead_worker_surfaces_as_route_error() {
+        struct PanicEngine;
+        impl Engine for PanicEngine {
+            fn execute(&mut self, _op: &CimOp) -> Result<CimResult, EngineError> {
+                panic!("engine down");
+            }
+            fn name(&self) -> &'static str {
+                "panic"
+            }
+        }
+        let cfg = cfg();
+        let coord = Coordinator::new(&cfg, 1, |_| Box::new(PanicEngine) as Box<dyn Engine>);
+        let ops = vec![CimOp::Read(WordAddr { row: 0, word: 0 })];
+        assert_eq!(
+            coord.call_batch(0, &ops).unwrap_err(),
+            RouteError::ShuttingDown
+        );
+        // and the fused path reports the same
+        assert_eq!(
+            coord.call_batch_fused(0, &ops).unwrap_err(),
+            RouteError::ShuttingDown
+        );
     }
 
     #[test]

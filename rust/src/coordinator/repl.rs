@@ -116,7 +116,19 @@ pub fn render_value(v: &CimValue) -> String {
 pub fn serve<R: BufRead, W: Write>(
     coord: &Coordinator,
     input: R,
+    output: W,
+) -> std::io::Result<u64> {
+    serve_with_stats(coord, input, output, || None)
+}
+
+/// Like [`serve`], with an extra stats source: when a serving layer is
+/// attached, `stats` additionally prints its cache/fusion counters
+/// (e.g. `|| Some(queue.metrics().report("serve-layer"))`).
+pub fn serve_with_stats<R: BufRead, W: Write, F: Fn() -> Option<String>>(
+    coord: &Coordinator,
+    input: R,
     mut output: W,
+    extra_stats: F,
 ) -> std::io::Result<u64> {
     let mut served = 0;
     for line in input.lines() {
@@ -127,6 +139,9 @@ pub fn serve<R: BufRead, W: Write>(
         }
         if trimmed == "stats" {
             writeln!(output, "ok {}", coord.metrics().report("serve"))?;
+            if let Some(extra) = extra_stats() {
+                writeln!(output, "ok {extra}")?;
+            }
             continue;
         }
         match parse_line(trimmed) {
@@ -212,6 +227,41 @@ quit
         assert!(lines[6].starts_with("err"), "bad shard must error: {}", lines[6]);
         assert!(lines[7].starts_with("ok serve:"));
         assert_eq!(served, 7);
+    }
+
+    #[test]
+    fn stats_includes_tail_latency_and_attached_serve_counters() {
+        use crate::config::SimConfig;
+        use crate::planner::Objective;
+        use crate::serve::{ServeConfig, ServeQueue};
+        use crate::workload::analytics_scenario;
+
+        let mut cfg = SimConfig::square(64, crate::config::SensingScheme::Current);
+        cfg.word_bits = 8;
+        let queue = ServeQueue::start(ServeConfig {
+            cfg: cfg.clone(),
+            shards: 2,
+            objective: Objective::Edp,
+            n_records: 24,
+            max_round: 8,
+            cache_capacity: 64,
+        });
+        let s = analytics_scenario(&cfg, 24, 1);
+        queue.submit(0, s.program).unwrap().wait().unwrap();
+
+        let c = coord();
+        c.call(0, CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 5 }).unwrap();
+        let mut out = Vec::new();
+        serve_with_stats(&c, "stats\nquit\n".as_bytes(), &mut out, || {
+            Some(queue.metrics().report("serve-layer"))
+        })
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].starts_with("ok serve:"), "{}", lines[0]);
+        assert!(lines[0].contains("p50/p95/p99"), "tail latency: {}", lines[0]);
+        assert!(lines[1].starts_with("ok serve-layer:"), "{}", lines[1]);
+        assert!(lines[1].contains("hit rate"), "{}", lines[1]);
     }
 
     #[test]

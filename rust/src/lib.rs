@@ -18,6 +18,10 @@
 //!   ADRA-vs-baseline cost tables, per-op executor routing, and
 //!   shard-aware placement over the coordinator pool with
 //!   predicted-vs-measured cost reporting.
+//! * **Serving layer (`serve`)** — multi-tenant admission in front of the
+//!   planner: cross-program batch coalescing, write dedup, fused shard
+//!   execution through the pool, and a versioned result cache, with
+//!   queue/fusion/cache/per-tenant observability.
 
 pub mod analysis;
 pub mod array;
@@ -32,5 +36,6 @@ pub mod metrics;
 pub mod planner;
 pub mod runtime;
 pub mod sensing;
+pub mod serve;
 pub mod util;
 pub mod workload;

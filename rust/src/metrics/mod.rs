@@ -153,12 +153,15 @@ impl RunMetrics {
     pub fn report(&self, label: &str) -> String {
         format!(
             "{label}: {} ops ({} errors), modeled energy {:.3} nJ, \
-             mean op latency {:.3} ns, modeled throughput {:.2} Mop/s, \
-             wall {:.3} s",
+             mean op latency {:.3} ns, p50/p95/p99 {:.0}/{:.0}/{:.0} ns, \
+             modeled throughput {:.2} Mop/s, wall {:.3} s",
             self.ops,
             self.errors,
             self.energy.total() * 1e9,
             self.model_latency.mean_ns(),
+            self.model_latency.percentile_ns(50.0),
+            self.model_latency.percentile_ns(95.0),
+            self.model_latency.percentile_ns(99.0),
             self.modeled_throughput() / 1e6,
             self.wall_seconds,
         )
@@ -284,6 +287,9 @@ mod tests {
         let r = m.report("test");
         assert!(r.contains("1 ops"));
         assert!(r.contains("test"));
+        // tail-latency line: one 3 ns sample lands in bucket [2, 4), so
+        // every percentile reports the 4 ns bucket upper bound
+        assert!(r.contains("p50/p95/p99 4/4/4 ns"), "{r}");
     }
 
     /// Pin the bucket edges: bucket 0 is [0, 2) ns (doc/code mismatch fix

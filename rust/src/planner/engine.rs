@@ -60,6 +60,20 @@ impl Engine for PlannedEngine {
         }
     }
 
+    /// Fused execution drives the ADRA half regardless of per-op routing
+    /// (same contract as `LoweredProgram::fused_prediction`); successful
+    /// writes are mirrored into the baseline array afterwards so later
+    /// routed ops still see consistent state.
+    fn execute_fused(&mut self, ops: &[CimOp]) -> Option<Vec<Result<CimResult, EngineError>>> {
+        let results = crate::coordinator::fuse::execute_fused(&mut self.adra, ops);
+        for (op, r) in ops.iter().zip(&results) {
+            if let (CimOp::Write { addr, value }, Ok(_)) = (*op, r) {
+                self.baseline.array_mut().write_word(addr.row, addr.word, value);
+            }
+        }
+        Some(results)
+    }
+
     fn name(&self) -> &'static str {
         "planned"
     }

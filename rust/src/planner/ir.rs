@@ -20,7 +20,7 @@ use crate::logic::CompareResult;
 
 /// Comparison predicate a [`IrOp::Filter`] keeps records by
 /// (two's-complement ordering, matching `CimOp::Compare`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Predicate {
     Lt,
     Le,
@@ -94,7 +94,7 @@ impl RecordRange {
 pub struct ScratchRow(pub usize);
 
 /// Host-side reduction kinds (lowered to plain reads + a fold).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum AggKind {
     Min,
     Max,

@@ -221,12 +221,31 @@ impl Placement {
                 handles.into_iter().map(|h| h.join().expect("shard thread panicked")).collect()
             });
 
+        let mut per_shard = Vec::with_capacity(self.shards.len());
+        for batch in batches {
+            let results = batch.map_err(ExecError::Route)?;
+            per_shard.push(results.into_iter().map(Some).collect());
+        }
+        self.assemble(per_shard, coord.metrics())
+    }
+
+    /// Merge per-shard per-op results into global step outputs.
+    ///
+    /// `per_shard[i]` is aligned to `shards[i].lowered.ops`; a `None`
+    /// entry means the op was skipped upstream (the serving layer's
+    /// write dedup and result cache do this) and contributes neither
+    /// measured cost nor merged output — its step's output is expected
+    /// to be supplied by the caller (or to be `StepOutput::None`).
+    pub fn assemble(
+        &self,
+        per_shard: Vec<Vec<Option<Result<crate::cim::CimResult, EngineError>>>>,
+        coordinator_metrics: RunMetrics,
+    ) -> Result<ExecutionReport, ExecError> {
         let mut outputs: Vec<StepOutput> = self.program.ops.iter().map(empty_output).collect();
         let mut measured = OpCost::default();
         let mut ops_executed = 0usize;
 
-        for (sp, batch) in self.shards.iter().zip(batches) {
-            let results = batch.map_err(ExecError::Route)?;
+        for (sp, results) in self.shards.iter().zip(&per_shard) {
             debug_assert_eq!(results.len(), sp.lowered.ops.len());
             for span in &sp.lowered.spans {
                 let sub_op = &sp.program.ops[span.ir_index];
@@ -234,8 +253,9 @@ impl Placement {
                 for k in 0..span.len {
                     let idx = span.start + k;
                     let r = match &results[idx] {
-                        Ok(r) => r,
-                        Err(e) => {
+                        None => continue, // skipped (deduped / cached)
+                        Some(Ok(r)) => r,
+                        Some(Err(e)) => {
                             return Err(ExecError::Engine {
                                 op: sp.lowered.ops[idx].op,
                                 err: e.clone(),
@@ -260,7 +280,7 @@ impl Placement {
             outputs,
             measured,
             prediction,
-            coordinator_metrics: coord.metrics(),
+            coordinator_metrics,
             ops_executed,
         })
     }

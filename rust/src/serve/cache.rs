@@ -1,0 +1,313 @@
+//! The serving layer's versioned result cache and its view of the shared
+//! table.
+//!
+//! [`TableState`] shadows what the serving layer knows about array
+//! contents: per-record-slot masked words with a monotone version, and
+//! per-scratch-row broadcast contents.  Two uses:
+//!
+//! * **write dedup** — a write whose masked value provably equals what
+//!   the cell already stores is a state no-op (`FefetArray::write_bit`
+//!   sets polarization deterministically, no drift), so the coalescer can
+//!   drop it and save the write energy;
+//! * **cache keys** — a query step's result is fully determined by
+//!   (op kind, record-range contents, broadcast-row contents).  The key
+//!   captures range contents through a monotone fingerprint (max slot
+//!   version) and rhs contents by value, so any overlapping
+//!   content-changing load bumps the fingerprint and strands stale
+//!   entries without an explicit invalidation walk.
+
+use std::collections::HashMap;
+
+use crate::cim::BoolFn;
+use crate::config::SimConfig;
+use crate::planner::{AggKind, IrOp, Predicate, RecordRange, ScratchRow, StepOutput};
+
+/// What the serving layer knows about the shared table's contents.
+#[derive(Clone, Debug)]
+pub struct TableState {
+    n_records: usize,
+    word_mask: u64,
+    /// Known masked contents per record slot (`None` = never written
+    /// through the serving layer; fresh arrays hold 0 but we only dedupe
+    /// against *observed* writes).
+    records: Vec<Option<u64>>,
+    /// Monotone per-slot version, bumped by content-changing writes.
+    versions: Vec<u64>,
+    /// Known broadcast contents per scratch row index.
+    scratch: Vec<Option<u64>>,
+    epoch: u64,
+    /// Content-changing record writes observed (cache-invalidating).
+    pub invalidating_writes: u64,
+}
+
+impl TableState {
+    pub fn new(cfg: &SimConfig, n_records: usize) -> Self {
+        let word_mask = if cfg.word_bits >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << cfg.word_bits) - 1
+        };
+        Self {
+            n_records,
+            word_mask,
+            records: vec![None; n_records],
+            versions: vec![0; n_records],
+            scratch: Vec::new(),
+            epoch: 0,
+            invalidating_writes: 0,
+        }
+    }
+
+    pub fn n_records(&self) -> usize {
+        self.n_records
+    }
+
+    /// Observe a write to a record slot.  Returns `true` when the write
+    /// is redundant (known-equal masked contents) and safe to drop.
+    pub fn record_write(&mut self, slot: usize, value: u64) -> bool {
+        debug_assert!(slot < self.n_records, "slot {slot} out of table");
+        let v = value & self.word_mask;
+        if self.records[slot] == Some(v) {
+            return true;
+        }
+        self.records[slot] = Some(v);
+        self.epoch += 1;
+        self.versions[slot] = self.epoch;
+        self.invalidating_writes += 1;
+        false
+    }
+
+    /// Observe a broadcast to a scratch row.  Returns `true` when
+    /// redundant (the row already holds this masked value everywhere).
+    pub fn scratch_write(&mut self, idx: usize, value: u64) -> bool {
+        let v = value & self.word_mask;
+        if self.scratch.len() <= idx {
+            self.scratch.resize(idx + 1, None);
+        }
+        if self.scratch[idx] == Some(v) {
+            return true;
+        }
+        self.scratch[idx] = Some(v);
+        false
+    }
+
+    /// Known broadcast contents of a scratch row.
+    pub fn scratch_value(&self, idx: usize) -> Option<u64> {
+        self.scratch.get(idx).copied().flatten()
+    }
+
+    /// Monotone fingerprint of a record range: the max slot version.
+    /// Any content-changing write inside the range strictly increases it.
+    pub fn range_fingerprint(&self, range: RecordRange) -> u64 {
+        self.versions[range.start..range.end().min(self.n_records)]
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Query-step kinds the cache distinguishes (a Filter(Lt) and a Compare
+/// over the same range are different results).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QueryKind {
+    Compare,
+    Filter(Predicate),
+    Sub,
+    Bool(BoolFn),
+    Scan,
+    Aggregate(AggKind),
+}
+
+/// Cache key: everything a query step's output depends on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub kind: QueryKind,
+    pub start: usize,
+    pub len: usize,
+    /// Broadcast-row CONTENTS the step reads (`None` for scan/aggregate,
+    /// which read records only).
+    pub rhs: Option<u64>,
+    /// `TableState::range_fingerprint` at key-construction time.
+    pub fingerprint: u64,
+}
+
+/// Cache key for a global IR step under the current table state; `None`
+/// when the step is not cacheable (setup steps, or rhs contents the
+/// serving layer has never observed).
+pub fn key_for(op: &IrOp, state: &TableState) -> Option<CacheKey> {
+    let (kind, range, rhs) = match op {
+        IrOp::Load { .. } | IrOp::Broadcast { .. } => return None,
+        IrOp::Compare { range, rhs } => (QueryKind::Compare, *range, Some(*rhs)),
+        IrOp::Filter { range, rhs, pred } => (QueryKind::Filter(*pred), *range, Some(*rhs)),
+        IrOp::Sub { range, rhs } => (QueryKind::Sub, *range, Some(*rhs)),
+        IrOp::Bool { f, range, rhs } => (QueryKind::Bool(*f), *range, Some(*rhs)),
+        IrOp::Scan { range } => (QueryKind::Scan, *range, None),
+        IrOp::Aggregate { range, agg } => (QueryKind::Aggregate(*agg), *range, None),
+    };
+    let rhs = match rhs {
+        Some(ScratchRow(s)) => Some(state.scratch_value(s)?),
+        None => None,
+    };
+    Some(CacheKey {
+        kind,
+        start: range.start,
+        len: range.len,
+        rhs,
+        fingerprint: state.range_fingerprint(range),
+    })
+}
+
+/// Memoized query-step outputs.  Stale entries (older fingerprint than
+/// their range's current one) can never match a fresh key; they are
+/// swept lazily when the cache fills.
+#[derive(Clone, Debug)]
+pub struct ResultCache {
+    map: HashMap<CacheKey, StepOutput>,
+    capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ResultCache {
+    pub fn new(capacity: usize) -> Self {
+        Self { map: HashMap::new(), capacity: capacity.max(1), hits: 0, misses: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn lookup(&mut self, key: &CacheKey) -> Option<StepOutput> {
+        match self.map.get(key) {
+            Some(out) => {
+                self.hits += 1;
+                Some(out.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert an entry.  At capacity, stale entries are swept first; if
+    /// every entry is still live the whole map is dropped — the cache is
+    /// a performance layer, never a correctness one.
+    pub fn insert(&mut self, key: CacheKey, out: StepOutput, state: &TableState) {
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            self.map.retain(|k, _| {
+                k.fingerprint >= state.range_fingerprint(RecordRange::new(k.start, k.len))
+            });
+            if self.map.len() >= self.capacity {
+                self.map.clear();
+            }
+        }
+        self.map.insert(key, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SensingScheme, SimConfig};
+    use crate::planner::Program;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::square(64, SensingScheme::Current);
+        c.word_bits = 8;
+        c
+    }
+
+    #[test]
+    fn record_writes_dedupe_and_version() {
+        let mut s = TableState::new(&cfg(), 10);
+        assert!(!s.record_write(3, 42), "first write is not redundant");
+        assert!(s.record_write(3, 42), "identical rewrite is redundant");
+        // masked equality: 0x142 & 0xFF == 0x42
+        assert!(s.record_write(3, 0x142), "masked-equal rewrite is redundant");
+        let fp = s.range_fingerprint(RecordRange::new(0, 10));
+        assert!(!s.record_write(3, 7), "new content is not redundant");
+        assert!(
+            s.range_fingerprint(RecordRange::new(0, 10)) > fp,
+            "content change must bump the fingerprint"
+        );
+        // disjoint range is untouched
+        assert_eq!(s.range_fingerprint(RecordRange::new(4, 6)), 0);
+        assert_eq!(s.invalidating_writes, 2);
+    }
+
+    #[test]
+    fn scratch_writes_dedupe_by_contents() {
+        let mut s = TableState::new(&cfg(), 4);
+        assert_eq!(s.scratch_value(0), None);
+        assert!(!s.scratch_write(0, 9));
+        assert!(s.scratch_write(0, 9));
+        assert!(!s.scratch_write(0, 10), "new value re-broadcasts");
+        assert_eq!(s.scratch_value(0), Some(10));
+    }
+
+    #[test]
+    fn keys_capture_contents_and_versions() {
+        let mut s = TableState::new(&cfg(), 20);
+        let mut p = Program::new(20);
+        let t = p.scratch();
+        let all = p.all();
+        p.broadcast(t, 5).filter(all, t, Predicate::Lt);
+
+        // rhs unknown -> uncacheable
+        assert!(key_for(&p.ops[1], &s).is_none());
+        s.scratch_write(0, 5);
+        let k1 = key_for(&p.ops[1], &s).unwrap();
+        assert_eq!(k1.rhs, Some(5));
+
+        // same query after an overlapping content change: different key
+        s.record_write(7, 1);
+        let k2 = key_for(&p.ops[1], &s).unwrap();
+        assert_ne!(k1, k2, "load must strand the old key");
+
+        // different predicate, different key
+        let mut p2 = Program::new(20);
+        let t2 = p2.scratch();
+        let all2 = p2.all();
+        p2.broadcast(t2, 5).filter(all2, t2, Predicate::Gt);
+        assert_ne!(key_for(&p2.ops[1], &s).unwrap(), k2);
+    }
+
+    #[test]
+    fn cache_round_trip_and_stale_sweep() {
+        let mut s = TableState::new(&cfg(), 8);
+        let mut c = ResultCache::new(2);
+        let range = RecordRange::new(0, 8);
+        let key = CacheKey {
+            kind: QueryKind::Scan,
+            start: 0,
+            len: 8,
+            rhs: None,
+            fingerprint: s.range_fingerprint(range),
+        };
+        assert!(c.lookup(&key).is_none());
+        c.insert(key, StepOutput::Words(vec![(0, 1)]), &s);
+        assert_eq!(c.lookup(&key), Some(StepOutput::Words(vec![(0, 1)])));
+        assert_eq!((c.hits, c.misses), (1, 1));
+
+        // stale the entry, then fill past capacity: sweep drops it
+        s.record_write(2, 9);
+        for start in 0..2usize {
+            let k = CacheKey {
+                kind: QueryKind::Scan,
+                start,
+                len: 1,
+                rhs: None,
+                fingerprint: s.range_fingerprint(RecordRange::new(start, 1)),
+            };
+            c.insert(k, StepOutput::Words(Vec::new()), &s);
+        }
+        assert!(c.len() <= 2, "capacity respected, stale entry swept");
+        assert!(c.lookup(&key).is_none(), "stale entry gone");
+    }
+}

@@ -1,0 +1,316 @@
+//! The per-shard coalescer: merge one round of placed programs into one
+//! batch per shard, drop provably redundant writes, answer query steps
+//! from the result cache, and count the fusion the workers will realize.
+//!
+//! Correctness argument (property-tested in `tests/serve_equivalence`):
+//! shard state is private to its worker, and per shard the coalesced
+//! batch is exactly the concatenation, in admission order, of each
+//! program's shard-local stream — i.e. the very op sequence sequential
+//! per-program execution would issue.  On top of that sequence,
+//! * fusion regroups dual ops without crossing a write to either operand
+//!   row (`coordinator::fuse`), so derived values are unchanged;
+//! * a deduped write rewrote known-equal masked contents, a state no-op;
+//! * a cached step's key pins (kind, range fingerprint, rhs contents),
+//!   which fully determine its output.
+
+use crate::cim::CimOp;
+use crate::coordinator::fuse::{fuse_batch, fused_followers, planned_activations, PlanStep};
+use crate::planner::{IrOp, Placement, StepOutput};
+
+use super::cache::{key_for, CacheKey, ResultCache, TableState};
+
+/// What the coalescer decided for one global IR step of one program.
+#[derive(Clone, Debug)]
+pub enum StepAction {
+    /// Execute every lowered op of the step.
+    Run,
+    /// Load step: per-value redundancy flags (`true` = drop that write).
+    RunPartial(Vec<bool>),
+    /// Broadcast step whose contents are already in place on every shard.
+    Skip,
+    /// Query step answered from the cache.
+    Cached(StepOutput),
+    /// Query step to execute and memoize under this key.
+    RunAndCache(CacheKey),
+}
+
+/// Per-program coalescing decisions, indexed like `Program::ops`.
+#[derive(Clone, Debug)]
+pub struct ProgramActions {
+    pub actions: Vec<StepAction>,
+    pub skipped_writes: usize,
+    pub cached_steps: usize,
+}
+
+/// One shard's merged multi-program batch.
+#[derive(Clone, Debug, Default)]
+pub struct ShardBatch {
+    pub shard: usize,
+    pub ops: Vec<CimOp>,
+    /// For each op: (program index in the round, shard-plan index in that
+    /// program's placement, op index in that shard plan's lowered
+    /// stream).  The executor's reply is demultiplexed through this.
+    pub origins: Vec<(usize, usize, usize)>,
+}
+
+/// Round-level coalescing/fusion statistics.  The fusion numbers are a
+/// forecast of the plan the workers deterministically recompute.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundStats {
+    /// Lowered ops across the round before dedup/caching.
+    pub submitted_ops: u64,
+    /// Ops actually shipped to workers.
+    pub coalesced_ops: u64,
+    pub skipped_writes: u64,
+    pub cached_steps: u64,
+    pub cache_misses: u64,
+    pub dual_ops: u64,
+    /// Activations the fused batches will issue.
+    pub activations: u64,
+    /// Dual ops served as followers of an already-latched activation.
+    pub fused_followers: u64,
+    /// Follower ops whose activation was opened by a DIFFERENT program.
+    pub cross_program_fused_ops: u64,
+}
+
+/// A coalesced round ready for fused execution.
+#[derive(Clone, Debug)]
+pub struct CoalescedRound {
+    pub shard_batches: Vec<ShardBatch>,
+    pub programs: Vec<ProgramActions>,
+    pub stats: RoundStats,
+}
+
+/// Coalesce one round of placed programs (admission order) against the
+/// shared table state and result cache.  Mutates `state` with every
+/// observed write and charges cache hit/miss counters; cache *inserts*
+/// happen post-execution (`ResultCache::insert`) with the keys returned
+/// in `StepAction::RunAndCache`.
+///
+/// `fuse` mirrors how the round will execute: the fused path forces
+/// dual ops onto the ADRA engine, so the queue disables it whenever the
+/// cost model routes dual ops to the baseline executor (energy
+/// objective under voltage scheme 1) — dedup and caching still apply,
+/// and the fusion forecast is skipped to match.
+pub fn coalesce_round(
+    placements: &[&Placement],
+    state: &mut TableState,
+    cache: &mut ResultCache,
+    fuse: bool,
+) -> CoalescedRound {
+    let n_shards = placements
+        .iter()
+        .flat_map(|p| p.shards.iter().map(|sp| sp.shard + 1))
+        .max()
+        .unwrap_or(0);
+    let mut batches: Vec<ShardBatch> = (0..n_shards)
+        .map(|shard| ShardBatch { shard, ..Default::default() })
+        .collect();
+    let mut programs = Vec::with_capacity(placements.len());
+    let mut stats = RoundStats::default();
+
+    for (pi, placement) in placements.iter().enumerate() {
+        // pass 1: walk the GLOBAL program in order, updating the shared
+        // table view and deciding each step's action.  Later programs in
+        // the round see earlier programs' (not-yet-executed but
+        // guaranteed-to-succeed) writes, exactly as sequential execution
+        // would.
+        let mut actions = Vec::with_capacity(placement.program.ops.len());
+        for op in &placement.program.ops {
+            let action = match op {
+                IrOp::Load { start, values } => StepAction::RunPartial(
+                    values
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &v)| state.record_write(start + j, v))
+                        .collect(),
+                ),
+                IrOp::Broadcast { scratch, value } => {
+                    if state.scratch_write(scratch.0, *value) {
+                        StepAction::Skip
+                    } else {
+                        StepAction::Run
+                    }
+                }
+                query => match key_for(query, state) {
+                    Some(key) => match cache.lookup(&key) {
+                        Some(out) => StepAction::Cached(out),
+                        None => StepAction::RunAndCache(key),
+                    },
+                    None => StepAction::Run,
+                },
+            };
+            actions.push(action);
+        }
+
+        // pass 2: apply the decisions to every shard plan's lowered
+        // stream, appending surviving ops to the shard batches
+        let mut skipped_writes = 0usize;
+        for (spi, sp) in placement.shards.iter().enumerate() {
+            stats.submitted_ops += sp.lowered.ops.len() as u64;
+            for span in &sp.lowered.spans {
+                let g = sp.ir_map[span.ir_index];
+                match &actions[g] {
+                    StepAction::Skip => skipped_writes += span.len,
+                    StepAction::Cached(_) => {}
+                    StepAction::RunPartial(flags) => {
+                        // the clipped load's k-th write covers global slot
+                        // record_offset + local_start + k; flags are
+                        // indexed from the global load's start
+                        let local_start = match &sp.program.ops[span.ir_index] {
+                            IrOp::Load { start, .. } => *start,
+                            other => unreachable!("RunPartial on non-load {other:?}"),
+                        };
+                        let global_start = match &placement.program.ops[g] {
+                            IrOp::Load { start, .. } => *start,
+                            other => unreachable!("RunPartial on non-load {other:?}"),
+                        };
+                        for k in 0..span.len {
+                            let slot = sp.record_offset + local_start + k;
+                            if flags[slot - global_start] {
+                                skipped_writes += 1;
+                            } else {
+                                batches[sp.shard].ops.push(sp.lowered.ops[span.start + k].op);
+                                batches[sp.shard].origins.push((pi, spi, span.start + k));
+                            }
+                        }
+                    }
+                    StepAction::Run | StepAction::RunAndCache(_) => {
+                        for k in 0..span.len {
+                            batches[sp.shard].ops.push(sp.lowered.ops[span.start + k].op);
+                            batches[sp.shard].origins.push((pi, spi, span.start + k));
+                        }
+                    }
+                }
+            }
+        }
+
+        let cached_steps =
+            actions.iter().filter(|a| matches!(a, StepAction::Cached(_))).count();
+        stats.cached_steps += cached_steps as u64;
+        stats.cache_misses += actions
+            .iter()
+            .filter(|a| matches!(a, StepAction::RunAndCache(_)))
+            .count() as u64;
+        stats.skipped_writes += skipped_writes as u64;
+        programs.push(ProgramActions { actions, skipped_writes, cached_steps });
+    }
+
+    // fusion forecast over the merged batches (the workers recompute the
+    // same deterministic plan; this serial pass is O(ops) bookkeeping)
+    for b in &batches {
+        stats.coalesced_ops += b.ops.len() as u64;
+        stats.dual_ops += b.ops.iter().filter(|o| o.is_dual()).count() as u64;
+        if !fuse {
+            continue;
+        }
+        let plan = fuse_batch(&b.ops);
+        stats.activations += planned_activations(&plan) as u64;
+        stats.fused_followers += fused_followers(&plan) as u64;
+        for step in &plan {
+            if let PlanStep::Fused { indices, .. } = step {
+                let first_prog = b.origins[indices[0]].0;
+                stats.cross_program_fused_ops += indices
+                    .iter()
+                    .filter(|&&i| b.origins[i].0 != first_prog)
+                    .count() as u64;
+            }
+        }
+    }
+
+    CoalescedRound { shard_batches: batches, programs, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SensingScheme, SimConfig};
+    use crate::planner::{place, Objective, PlanCostModel};
+    use crate::workload::{analytics_scenario, diff_scenario};
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::square(64, SensingScheme::Current);
+        c.word_bits = 8;
+        c.max_batch = 16;
+        c
+    }
+
+    #[test]
+    fn identical_programs_dedupe_and_cache() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let s = analytics_scenario(&cfg, 40, 5);
+        let p1 = place(&s.program, &cfg, 2, &model).unwrap();
+        let p2 = p1.clone();
+        let mut state = TableState::new(&cfg, 40);
+        let mut cache = ResultCache::new(64);
+
+        let round = coalesce_round(&[&p1, &p2], &mut state, &mut cache, true);
+        // program 0 runs everything (first sight of the table)
+        assert_eq!(round.programs[0].skipped_writes, 0);
+        assert_eq!(round.programs[0].cached_steps, 0);
+        // program 1: all writes deduped, no queries executed twice IN THE
+        // SAME round (cache inserts happen post-execution, so its queries
+        // are misses here — but every one of its dual ops fuses onto
+        // program 0's activations)
+        let broadcast_writes = 2 * cfg.words_per_row(); // replicated on 2 shards
+        assert_eq!(round.programs[1].skipped_writes, 40 + broadcast_writes);
+        assert!(round.stats.cross_program_fused_ops > 0, "{:?}", round.stats);
+        assert_eq!(
+            round.stats.submitted_ops - round.stats.coalesced_ops,
+            round.stats.skipped_writes,
+            "no steps were cached, so only dedup may drop ops"
+        );
+    }
+
+    #[test]
+    fn second_round_hits_the_cache() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let s = analytics_scenario(&cfg, 40, 6);
+        let pl = place(&s.program, &cfg, 2, &model).unwrap();
+        let mut state = TableState::new(&cfg, 40);
+        let mut cache = ResultCache::new(64);
+
+        let r1 = coalesce_round(&[&pl], &mut state, &mut cache, true);
+        // simulate post-execution inserts
+        for (g, a) in r1.programs[0].actions.iter().enumerate() {
+            if let StepAction::RunAndCache(key) = a {
+                cache.insert(*key, StepOutput::Matches(vec![g]), &state);
+            }
+        }
+        let r2 = coalesce_round(&[&pl], &mut state, &mut cache, true);
+        // filter + compare + aggregate all hit; loads/broadcast deduped
+        assert_eq!(r2.programs[0].cached_steps, 3);
+        assert_eq!(r2.stats.coalesced_ops, 0, "repeat round touches no array");
+
+        // an overlapping load with NEW contents invalidates
+        let mut changed = s.program.clone();
+        changed.ops[0] = IrOp::Load { start: 0, values: vec![255; 40] };
+        let pl3 = place(&changed, &cfg, 2, &model).unwrap();
+        let r3 = coalesce_round(&[&pl3], &mut state, &mut cache, true);
+        assert_eq!(r3.programs[0].cached_steps, 0, "stale keys must miss");
+        assert_eq!(r3.programs[0].skipped_writes, 2 * cfg.words_per_row());
+    }
+
+    #[test]
+    fn mixed_query_kinds_fuse_across_programs() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        // same table + same broadcast contents, different query kinds:
+        // the diff program's subs ride the analytics program's compares
+        let a = analytics_scenario(&cfg, 32, 9);
+        let d = diff_scenario(&cfg, 32, 9);
+        let pa = place(&a.program, &cfg, 2, &model).unwrap();
+        let pd = place(&d.program, &cfg, 2, &model).unwrap();
+        let mut state = TableState::new(&cfg, 32);
+        let mut cache = ResultCache::new(64);
+        let round = coalesce_round(&[&pa, &pd], &mut state, &mut cache, true);
+        assert!(
+            round.stats.cross_program_fused_ops >= 32,
+            "every sub must follow a compare's activation: {:?}",
+            round.stats
+        );
+        assert_eq!(round.programs[1].skipped_writes, 32 + 2 * cfg.words_per_row());
+    }
+}

@@ -1,0 +1,157 @@
+//! Serving-layer observability: admission/round counters, coalescing and
+//! fusion effectiveness, cache hit rate, and per-tenant wall latency.
+
+use std::collections::HashMap;
+
+use crate::metrics::LatencyHistogram;
+
+/// Counters the `ServeQueue` scheduler maintains across rounds.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// Programs admitted and answered.
+    pub programs: u64,
+    /// Coalescing rounds executed.
+    pub rounds: u64,
+    /// Largest round (programs found queued at a round start — the
+    /// observed queue depth).
+    pub max_round_occupancy: u64,
+    /// Lowered ops across all programs before dedup/caching.
+    pub submitted_ops: u64,
+    /// Ops actually shipped to the worker pool.
+    pub coalesced_ops: u64,
+    /// Writes dropped because the masked contents were already stored.
+    pub skipped_writes: u64,
+    /// Query steps answered from the result cache.
+    pub cached_steps: u64,
+    /// Query steps that missed the cache (and were memoized).
+    pub cache_misses: u64,
+    /// Dual-row ops shipped (fusion candidates).
+    pub dual_ops: u64,
+    /// Asymmetric activations the fused batches issue.
+    pub activations: u64,
+    /// Dual ops served as followers of an already-latched activation.
+    pub fused_followers: u64,
+    /// Followers riding an activation opened by a DIFFERENT program.
+    pub cross_program_fused_ops: u64,
+    /// Content-changing record writes (each strands overlapping cache
+    /// entries).
+    pub invalidating_writes: u64,
+    /// Submission-to-reply wall latency per tenant.
+    pub tenant_latency: HashMap<usize, LatencyHistogram>,
+}
+
+impl ServeMetrics {
+    pub fn record_latency(&mut self, tenant: usize, seconds: f64) {
+        self.tenant_latency.entry(tenant).or_default().record(seconds);
+    }
+
+    /// Mean programs per round.
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.programs as f64 / self.rounds as f64
+        }
+    }
+
+    /// Fraction of query steps answered from the cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cached_steps + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cached_steps as f64 / total as f64
+        }
+    }
+
+    /// Fraction of shipped dual ops served as fusion followers.
+    pub fn fused_share(&self) -> f64 {
+        if self.dual_ops == 0 {
+            0.0
+        } else {
+            self.fused_followers as f64 / self.dual_ops as f64
+        }
+    }
+
+    /// Single-line counter summary (REPL `stats` prints this).
+    pub fn report(&self, label: &str) -> String {
+        format!(
+            "{label}: {} programs / {} rounds (occupancy {:.2}, max {}), \
+             {}/{} ops shipped ({} writes deduped), \
+             {} activations for {} dual ops (fused share {:.1}%, {} cross-program), \
+             cache {} hits / {} misses ({:.1}% hit rate), {} invalidating writes",
+            self.programs,
+            self.rounds,
+            self.batch_occupancy(),
+            self.max_round_occupancy,
+            self.coalesced_ops,
+            self.submitted_ops,
+            self.skipped_writes,
+            self.activations,
+            self.dual_ops,
+            self.fused_share() * 100.0,
+            self.cross_program_fused_ops,
+            self.cached_steps,
+            self.cache_misses,
+            self.cache_hit_rate() * 100.0,
+            self.invalidating_writes,
+        )
+    }
+
+    /// Per-tenant latency lines (tenant id ascending), for the example
+    /// and bench reports.
+    pub fn tenant_report(&self) -> Vec<String> {
+        let mut tenants: Vec<_> = self.tenant_latency.iter().collect();
+        tenants.sort_by_key(|(t, _)| **t);
+        tenants
+            .into_iter()
+            .map(|(t, h)| {
+                format!(
+                    "tenant {t}: {} programs, wall p50/p95/p99 {:.1}/{:.1}/{:.1} us (mean {:.1} us)",
+                    h.count(),
+                    h.percentile_ns(50.0) / 1e3,
+                    h.percentile_ns(95.0) / 1e3,
+                    h.percentile_ns(99.0) / 1e3,
+                    h.mean_ns() / 1e3,
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_rates() {
+        let mut m = ServeMetrics::default();
+        assert_eq!(m.batch_occupancy(), 0.0);
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        assert_eq!(m.fused_share(), 0.0);
+        m.programs = 12;
+        m.rounds = 4;
+        m.cached_steps = 3;
+        m.cache_misses = 1;
+        m.dual_ops = 10;
+        m.fused_followers = 5;
+        assert!((m.batch_occupancy() - 3.0).abs() < 1e-12);
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((m.fused_share() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reports_are_informative() {
+        let mut m = ServeMetrics::default();
+        m.programs = 2;
+        m.rounds = 1;
+        m.record_latency(7, 3e-6);
+        m.record_latency(7, 5e-6);
+        let r = m.report("serve");
+        assert!(r.contains("2 programs"));
+        assert!(r.contains("hit rate"));
+        let t = m.tenant_report();
+        assert_eq!(t.len(), 1);
+        assert!(t[0].starts_with("tenant 7: 2 programs"));
+    }
+}

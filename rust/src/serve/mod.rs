@@ -1,0 +1,49 @@
+//! L4 serving layer: multi-tenant admission in front of the planner and
+//! the coordinator pool.
+//!
+//! One `Placement::execute` ships a private batch per shard and pays the
+//! array for every op, even when many concurrent clients are asking
+//! near-identical questions about the same rows.  ADRA's core property —
+//! one asymmetric activation answers *every* dual-row question about a
+//! row pair — makes cross-client sharing unusually profitable, so this
+//! layer batches *programs*, not ops:
+//!
+//! * [`queue`] — [`ServeQueue`]: admission from many concurrent clients
+//!   (OS threads + channels, same no-tokio style as `coordinator::pool`).
+//!   Programs queued while a round is in flight are coalesced into the
+//!   next round; each client gets a [`Ticket`] to wait on.
+//! * [`coalesce`] — the per-shard coalescer: merges the round's shard
+//!   streams into one batch per shard (admission order preserved, so the
+//!   result is bit-identical to sequential per-program execution — shard
+//!   state is private, and per shard the op sequence is exactly the
+//!   sequential one), dedupes writes whose masked contents are already
+//!   in the array, and lets `coordinator::fuse` fuse dual ops across
+//!   program boundaries.
+//! * [`cache`] — the versioned result cache: query steps are keyed on
+//!   (op kind, broadcast-row *contents*, record range, range version);
+//!   any content-changing load bumps the range version, so overlapping
+//!   entries can never serve stale data.
+//! * [`metrics`] — [`ServeMetrics`]: queue depth / batch occupancy,
+//!   fused share, cache hit rate, and per-tenant latency histograms.
+//!
+//! ```text
+//!   tenants --submit--> ServeQueue --place--> round of Placements
+//!                           |                      |
+//!                      coalesce_round     TableState + ResultCache
+//!                           |                      |
+//!              per-shard fused batches    cached / deduped steps
+//!                           |
+//!              Coordinator::call_batch_fused (WorkerMsg::FusedBatch)
+//!                           |
+//!              demux -> Placement::assemble -> ServeReport per ticket
+//! ```
+
+pub mod cache;
+pub mod coalesce;
+pub mod metrics;
+pub mod queue;
+
+pub use cache::{key_for, CacheKey, QueryKind, ResultCache, TableState};
+pub use coalesce::{coalesce_round, CoalescedRound, ProgramActions, RoundStats, ShardBatch, StepAction};
+pub use metrics::ServeMetrics;
+pub use queue::{ServeConfig, ServeError, ServeQueue, ServeReport, Ticket};

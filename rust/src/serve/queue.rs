@@ -1,0 +1,498 @@
+//! The multi-tenant serve queue: admission, round scheduling, fused
+//! execution, and reply plumbing.
+//!
+//! One scheduler thread owns the coordinator, the cost model, the shared
+//! `TableState`, and the `ResultCache`.  Clients (any number of OS
+//! threads) `submit` planned programs and block on their [`Ticket`];
+//! everything queued while a round executes is coalesced into the next
+//! round, so batch occupancy rises exactly when the system is loaded —
+//! the same backpressure-free design as `coordinator::pool`, one layer
+//! up.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::cim::{CimResult, EngineError};
+use crate::config::SimConfig;
+use crate::coordinator::RouteError;
+use crate::energy::OpCost;
+use crate::metrics::RunMetrics;
+use crate::planner::{
+    place, planned_coordinator, ExecError, Executor, Objective, OpClass, PlanCostModel,
+    PlanError, Placement, Program, StepOutput,
+};
+
+use super::cache::{ResultCache, TableState};
+use super::coalesce::{coalesce_round, StepAction};
+use super::metrics::ServeMetrics;
+
+/// Serving deployment parameters.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub cfg: SimConfig,
+    /// Coordinator shards (worker threads / array shards).
+    pub shards: usize,
+    /// Routing objective for the planned workers and cost model.
+    pub objective: Objective,
+    /// Shared table geometry; every admitted program must match it so
+    /// record slots, shard partitioning, and scratch rows line up across
+    /// tenants (a mismatch is rejected at submission).
+    pub n_records: usize,
+    /// Max programs coalesced into one round.
+    pub max_round: usize,
+    pub cache_capacity: usize,
+}
+
+impl ServeConfig {
+    pub fn new(cfg: SimConfig, shards: usize, n_records: usize) -> Self {
+        Self {
+            cfg,
+            shards,
+            objective: Objective::Edp,
+            n_records,
+            max_round: 32,
+            cache_capacity: 1024,
+        }
+    }
+}
+
+/// Serving failure modes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Program geometry differs from the serve table's.
+    Geometry { expected: usize, got: usize },
+    Plan(PlanError),
+    Route(RouteError),
+    /// An engine failed mid-round (formatted op + error).
+    Engine(String),
+    ShuttingDown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Geometry { expected, got } => {
+                write!(f, "program has {got} records, serve table has {expected}")
+            }
+            ServeError::Plan(e) => write!(f, "planning: {e}"),
+            ServeError::Route(e) => write!(f, "routing: {e}"),
+            ServeError::Engine(s) => write!(f, "engine: {s}"),
+            ServeError::ShuttingDown => write!(f, "serve queue is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a served program returns to its tenant.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Per-IR-step outputs, indexed like `Program::ops` — bit-identical
+    /// to naive per-program execution.
+    pub outputs: Vec<StepOutput>,
+    /// Modeled cost of the ops actually executed for this program;
+    /// cached steps and deduped writes contribute zero.
+    pub measured: OpCost,
+    /// Query steps answered from the cache.
+    pub cached_steps: usize,
+    /// Writes dropped by content dedup.
+    pub skipped_writes: usize,
+    /// Programs sharing this program's round.
+    pub round_occupancy: usize,
+    /// Submission-to-reply wall seconds.
+    pub wall: f64,
+}
+
+struct Admission {
+    tenant: usize,
+    program: Program,
+    submitted: Instant,
+    reply: Sender<Result<ServeReport, ServeError>>,
+}
+
+/// Handle to an admitted program.
+pub struct Ticket {
+    rx: Receiver<Result<ServeReport, ServeError>>,
+}
+
+impl Ticket {
+    /// Block until the program's round completes.
+    pub fn wait(self) -> Result<ServeReport, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
+    }
+}
+
+/// The serving front door.  `Send + Sync`: submit from any thread.
+pub struct ServeQueue {
+    tx: Option<Sender<Admission>>,
+    handle: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    n_records: usize,
+}
+
+impl ServeQueue {
+    /// Spawn the scheduler thread and its coordinator pool.
+    pub fn start(config: ServeConfig) -> Self {
+        let (tx, rx) = channel::<Admission>();
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let m2 = metrics.clone();
+        let n_records = config.n_records;
+        let handle = std::thread::Builder::new()
+            .name("adra-serve".into())
+            .spawn(move || scheduler(config, rx, m2))
+            .expect("spawn serve scheduler");
+        Self { tx: Some(tx), handle: Some(handle), metrics, n_records }
+    }
+
+    /// Admit a tenant's program; returns a ticket to wait on.
+    pub fn submit(&self, tenant: usize, program: Program) -> Result<Ticket, ServeError> {
+        if program.n_records != self.n_records {
+            return Err(ServeError::Geometry {
+                expected: self.n_records,
+                got: program.n_records,
+            });
+        }
+        let (reply, rx) = channel();
+        let adm = Admission { tenant, program, submitted: Instant::now(), reply };
+        self.tx
+            .as_ref()
+            .ok_or(ServeError::ShuttingDown)?
+            .send(adm)
+            .map_err(|_| ServeError::ShuttingDown)?;
+        Ok(Ticket { rx })
+    }
+
+    /// Snapshot of the serve-layer metrics.
+    pub fn metrics(&self) -> ServeMetrics {
+        self.metrics.lock().expect("metrics lock").clone()
+    }
+}
+
+impl Drop for ServeQueue {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // scheduler drains and exits on disconnect
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<ServeMetrics>>) {
+    let ServeConfig { cfg, shards, objective, n_records, max_round, cache_capacity } = config;
+    let coord = planned_coordinator(&cfg, shards, objective);
+    let model = PlanCostModel::new(&cfg, objective);
+    // the fused path forces dual ops onto the ADRA engine; honor the
+    // routing objective by fusing only when the cost model routes dual
+    // ops there anyway (it routes them to the baseline under the energy
+    // objective on voltage scheme 1 — fusing would cost MORE energy).
+    // Dedup and caching stay on either way; they are objective-neutral.
+    let fuse = model.choose_class(OpClass::Dual).executor == Executor::Adra;
+    let mut state = TableState::new(&cfg, n_records);
+    let mut cache = ResultCache::new(cache_capacity);
+
+    while let Ok(first) = rx.recv() {
+        // batch window: everything already queued joins this round
+        let mut admitted = vec![first];
+        while admitted.len() < max_round {
+            match rx.try_recv() {
+                Ok(a) => admitted.push(a),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+
+        // place each program; planning failures answer immediately
+        let mut round: Vec<(Admission, Placement)> = Vec::with_capacity(admitted.len());
+        for a in admitted {
+            match place(&a.program, &cfg, shards, &model) {
+                Ok(p) => round.push((a, p)),
+                Err(e) => {
+                    let _ = a.reply.send(Err(ServeError::Plan(e)));
+                }
+            }
+        }
+        if round.is_empty() {
+            continue;
+        }
+        let occupancy = round.len();
+
+        let placements: Vec<&Placement> = round.iter().map(|(_, p)| p).collect();
+        let coalesced = coalesce_round(&placements, &mut state, &mut cache, fuse);
+
+        // execute every shard batch in parallel, fused when routing allows
+        let coord_ref = &coord;
+        let shard_results: Vec<Result<Vec<Result<CimResult, EngineError>>, RouteError>> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = coalesced
+                    .shard_batches
+                    .iter()
+                    .map(|b| {
+                        s.spawn(move || {
+                            if fuse {
+                                coord_ref.call_batch_fused(b.shard, &b.ops)
+                            } else {
+                                coord_ref.call_batch(b.shard, &b.ops)
+                            }
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("serve shard thread panicked"))
+                    .collect()
+            });
+
+        let mut results: Vec<Vec<Result<CimResult, EngineError>>> =
+            Vec::with_capacity(shard_results.len());
+        let mut route_err = None;
+        for r in shard_results {
+            match r {
+                Ok(v) => results.push(v),
+                Err(e) => {
+                    route_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = route_err {
+            for (a, _) in round {
+                let _ = a.reply.send(Err(ServeError::Route(e.clone())));
+            }
+            continue;
+        }
+
+        // demultiplex worker replies back to (program, shard plan, op)
+        let mut slots: Vec<Vec<Vec<Option<Result<CimResult, EngineError>>>>> = round
+            .iter()
+            .map(|(_, p)| {
+                p.shards.iter().map(|sp| vec![None; sp.lowered.ops.len()]).collect()
+            })
+            .collect();
+        for (b, res) in coalesced.shard_batches.iter().zip(&results) {
+            for (i, &(pi, spi, oi)) in b.origins.iter().enumerate() {
+                slots[pi][spi][oi] = Some(res[i].clone());
+            }
+        }
+
+        let coord_metrics: RunMetrics = coord.metrics();
+        {
+            let mut m = metrics.lock().expect("metrics lock");
+            m.rounds += 1;
+            m.programs += occupancy as u64;
+            m.max_round_occupancy = m.max_round_occupancy.max(occupancy as u64);
+            let st = &coalesced.stats;
+            m.submitted_ops += st.submitted_ops;
+            m.coalesced_ops += st.coalesced_ops;
+            m.skipped_writes += st.skipped_writes;
+            m.cached_steps += st.cached_steps;
+            m.cache_misses += st.cache_misses;
+            m.dual_ops += st.dual_ops;
+            m.activations += st.activations;
+            m.fused_followers += st.fused_followers;
+            m.cross_program_fused_ops += st.cross_program_fused_ops;
+            m.invalidating_writes = state.invalidating_writes;
+        }
+
+        // assemble per program, splice cached outputs, memoize fresh ones
+        for (((a, placement), per_shard), pa) in
+            round.into_iter().zip(slots).zip(&coalesced.programs)
+        {
+            let reply = match placement.assemble(per_shard, coord_metrics.clone()) {
+                Err(ExecError::Route(r)) => Err(ServeError::Route(r)),
+                Err(other) => Err(ServeError::Engine(other.to_string())),
+                Ok(mut rep) => {
+                    for (g, action) in pa.actions.iter().enumerate() {
+                        match action {
+                            StepAction::Cached(out) => rep.outputs[g] = out.clone(),
+                            StepAction::RunAndCache(key) => {
+                                cache.insert(*key, rep.outputs[g].clone(), &state);
+                            }
+                            _ => {}
+                        }
+                    }
+                    let wall = a.submitted.elapsed().as_secs_f64();
+                    metrics
+                        .lock()
+                        .expect("metrics lock")
+                        .record_latency(a.tenant, wall);
+                    Ok(ServeReport {
+                        outputs: rep.outputs,
+                        measured: rep.measured,
+                        cached_steps: pa.cached_steps,
+                        skipped_writes: pa.skipped_writes,
+                        round_occupancy: occupancy,
+                        wall,
+                    })
+                }
+            };
+            let _ = a.reply.send(reply);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SensingScheme;
+    use crate::planner::StepOutput;
+    use crate::workload::analytics_scenario;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::square(64, SensingScheme::Current);
+        c.word_bits = 8;
+        c.max_batch = 16;
+        c
+    }
+
+    fn queue(n_records: usize) -> ServeQueue {
+        ServeQueue::start(ServeConfig::new(cfg(), 2, n_records))
+    }
+
+    #[test]
+    fn served_outputs_match_naive_execution() {
+        let cfg = cfg();
+        let s = analytics_scenario(&cfg, 48, 3);
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let pl = place(&s.program, &cfg, 2, &model).unwrap();
+        let naive_coord = planned_coordinator(&cfg, 2, Objective::Edp);
+        let naive = pl.execute(&naive_coord).unwrap();
+
+        let q = queue(48);
+        let rep = q.submit(0, s.program.clone()).unwrap().wait().unwrap();
+        assert_eq!(rep.outputs, naive.outputs);
+        assert_eq!(rep.outputs[s.filter_step], StepOutput::Matches(s.expected_matches));
+    }
+
+    #[test]
+    fn repeat_program_is_served_from_cache_and_dedup() {
+        let cfg = cfg();
+        let s = analytics_scenario(&cfg, 48, 4);
+        let q = queue(48);
+        let first = q.submit(1, s.program.clone()).unwrap().wait().unwrap();
+        assert_eq!(first.cached_steps, 0);
+        assert!(first.measured.energy.total() > 0.0);
+
+        // waiting for the first reply guarantees a separate round, so the
+        // repeat hits the now-populated cache and the dedup shadow
+        let second = q.submit(1, s.program.clone()).unwrap().wait().unwrap();
+        assert_eq!(second.outputs, first.outputs, "bit-identical");
+        assert_eq!(second.cached_steps, 3, "filter+compare+aggregate cached");
+        assert!(second.skipped_writes >= 48, "loads deduped");
+        assert_eq!(second.measured.energy.total(), 0.0, "nothing touched the array");
+
+        let m = q.metrics();
+        assert_eq!(m.programs, 2);
+        assert!(m.cache_hit_rate() > 0.0);
+        assert_eq!(m.invalidating_writes, 48, "only the first load changed contents");
+    }
+
+    #[test]
+    fn overlapping_load_invalidates_cached_results() {
+        let cfg = cfg();
+        let s = analytics_scenario(&cfg, 48, 5);
+        let q = queue(48);
+        let first = q.submit(0, s.program.clone()).unwrap().wait().unwrap();
+
+        // rewrite every record with its complement, then re-query
+        let mut changed = s.program.clone();
+        let new_values: Vec<u64> = s.values.iter().map(|v| 127 - v).collect();
+        changed.ops[0] = crate::planner::IrOp::Load { start: 0, values: new_values.clone() };
+        let rep = q.submit(0, changed).unwrap().wait().unwrap();
+        assert_eq!(rep.cached_steps, 0, "stale entries must not serve");
+        let want: Vec<usize> = new_values
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v < s.threshold)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(rep.outputs[s.filter_step], StepOutput::Matches(want));
+        assert_ne!(rep.outputs[s.filter_step], first.outputs[s.filter_step]);
+    }
+
+    /// Under the energy objective on voltage scheme 1 the cost model
+    /// routes dual ops to the baseline executor; the serve layer must
+    /// honor that instead of force-fusing everything onto ADRA (which
+    /// would cost MORE energy than the naive routed path).
+    #[test]
+    fn baseline_routed_objectives_are_not_force_fused() {
+        let mut cfg = cfg();
+        cfg.scheme = SensingScheme::VoltagePrecharged;
+        let s = analytics_scenario(&cfg, 48, 8);
+        let model = PlanCostModel::new(&cfg, Objective::Energy);
+        let pl = place(&s.program, &cfg, 2, &model).unwrap();
+        let naive_coord = planned_coordinator(&cfg, 2, Objective::Energy);
+        let naive = pl.execute(&naive_coord).unwrap();
+
+        let q = ServeQueue::start(ServeConfig {
+            cfg: cfg.clone(),
+            shards: 2,
+            objective: Objective::Energy,
+            n_records: 48,
+            max_round: 8,
+            cache_capacity: 64,
+        });
+        let rep = q.submit(0, s.program.clone()).unwrap().wait().unwrap();
+        assert_eq!(rep.outputs, naive.outputs);
+        // a first submission has nothing to dedupe or cache, so honoring
+        // the routing objective means costs match the naive path exactly
+        assert!(
+            (rep.measured.energy.total() - naive.measured.energy.total()).abs()
+                <= 1e-9 * naive.measured.energy.total(),
+            "serve {:e} vs naive {:e}",
+            rep.measured.energy.total(),
+            naive.measured.energy.total()
+        );
+        let m = q.metrics();
+        assert_eq!(m.activations, 0, "fusion must be disabled under baseline routing");
+        assert_eq!(m.fused_followers, 0);
+    }
+
+    #[test]
+    fn geometry_mismatch_is_rejected_at_submission() {
+        let cfg = cfg();
+        let s = analytics_scenario(&cfg, 20, 6);
+        let q = queue(48);
+        assert_eq!(
+            q.submit(0, s.program).unwrap_err(),
+            ServeError::Geometry { expected: 48, got: 20 }
+        );
+    }
+
+    #[test]
+    fn malformed_program_answers_with_plan_error() {
+        let q = queue(48);
+        let mut p = Program::new(48);
+        p.aggregate(crate::planner::RecordRange::new(40, 20), crate::planner::AggKind::Min);
+        let res = q.submit(0, p).unwrap().wait();
+        assert!(matches!(res, Err(ServeError::Plan(_))), "{res:?}");
+    }
+
+    #[test]
+    fn concurrent_tenants_all_get_answers() {
+        let cfg = cfg();
+        let q = std::sync::Arc::new(queue(48));
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let q2 = q.clone();
+            let cfg2 = cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                let s = analytics_scenario(&cfg2, 48, 7); // same table for all
+                for _ in 0..3 {
+                    let rep = q2.submit(t, s.program.clone()).unwrap().wait().unwrap();
+                    assert_eq!(
+                        rep.outputs[s.filter_step],
+                        StepOutput::Matches(s.expected_matches.clone())
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = q.metrics();
+        assert_eq!(m.programs, 12);
+        assert_eq!(m.tenant_latency.len(), 4);
+        assert!(m.rounds <= 12);
+    }
+}

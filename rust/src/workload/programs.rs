@@ -65,6 +65,60 @@ pub fn analytics_scenario(cfg: &SimConfig, n_records: usize, seed: u64) -> Analy
     }
 }
 
+/// A dashboard-style derived-metric program over the SAME table as
+/// [`analytics_scenario`]: per-record signed differences against a
+/// broadcast reference, plus a SUM aggregate.
+///
+/// Built from the same seed it loads the same values and broadcasts the
+/// same constant as the analytics program, so when both are served
+/// together the serving layer dedupes the loads/broadcast and the sub
+/// ops fuse onto the compare ops' activations (same operand pairs).
+#[derive(Clone, Debug)]
+pub struct DiffScenario {
+    pub program: Program,
+    pub values: Vec<u64>,
+    pub reference: u64,
+    pub sub_step: usize,
+    pub aggregate_step: usize,
+    /// Ground truth for the sub step, in record order.
+    pub expected_diffs: Vec<i128>,
+    /// Ground truth for the SUM aggregate (over record values).
+    pub expected_sum: u128,
+}
+
+/// Build the sub+sum scenario over the same `n_records` random records
+/// as `analytics_scenario(cfg, n_records, seed)`.
+pub fn diff_scenario(cfg: &SimConfig, n_records: usize, seed: u64) -> DiffScenario {
+    assert!(n_records > 0, "scenario needs records");
+    let mask = if cfg.word_bits == 64 { u64::MAX } else { (1 << cfg.word_bits) - 1 };
+    let pos_max = mask >> 1;
+    let reference = pos_max / 2; // == the analytics threshold
+    let mut rng = Rng::new(seed);
+    let values: Vec<u64> = (0..n_records).map(|_| rng.below(pos_max + 1)).collect();
+
+    let mut program = Program::new(n_records);
+    let r = program.scratch();
+    let all = program.all();
+    program.load(0, values.clone());
+    program.broadcast(r, reference);
+    program.sub(all, r);
+    program.aggregate(all, AggKind::Sum);
+
+    let expected_diffs: Vec<i128> =
+        values.iter().map(|&v| v as i128 - reference as i128).collect();
+    let expected_sum: u128 = values.iter().map(|&v| v as u128).sum();
+
+    DiffScenario {
+        program,
+        values,
+        reference,
+        sub_step: 2,
+        aggregate_step: 3,
+        expected_diffs,
+        expected_sum,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,6 +143,20 @@ mod tests {
         assert!(!s.expected_matches.is_empty(), "degenerate: no matches");
         assert!(s.expected_matches.len() < 100, "degenerate: all match");
         assert_eq!(s.values[s.expected_min_index], *s.values.iter().min().unwrap());
+    }
+
+    #[test]
+    fn diff_scenario_shares_the_analytics_table() {
+        let cfg = cfg();
+        let a = analytics_scenario(&cfg, 60, 11);
+        let d = diff_scenario(&cfg, 60, 11);
+        assert_eq!(a.values, d.values, "same seed, same table");
+        assert_eq!(a.threshold, d.reference, "same broadcast contents");
+        assert!(matches!(d.program.ops[d.sub_step], IrOp::Sub { .. }));
+        assert!(matches!(d.program.ops[d.aggregate_step], IrOp::Aggregate { .. }));
+        d.program.validate(&cfg).unwrap();
+        assert_eq!(d.expected_diffs[0], d.values[0] as i128 - d.reference as i128);
+        assert_eq!(d.expected_sum, d.values.iter().map(|&v| v as u128).sum::<u128>());
     }
 
     #[test]

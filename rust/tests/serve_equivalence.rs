@@ -1,0 +1,197 @@
+//! Property: serving-layer execution (coalesced + fused + write-deduped
+//! + cached) of random multi-program batches is bit-identical to naive
+//! sequential unfused execution — including cache invalidation when a
+//! load overwrites a cached query's range.
+//!
+//! The naive reference executes every program in admission order through
+//! `Placement::execute` (per-program `call_batch`, no fusion, no dedup,
+//! no cache) on its own coordinator; the serve path pushes the same
+//! programs through a `ServeQueue` from a single submitter thread, so
+//! admission order equals program order and any round partitioning the
+//! scheduler picks must preserve the outputs.
+
+use adra::cim::BoolFn;
+use adra::config::{SensingScheme, SimConfig};
+use adra::planner::{
+    place, planned_coordinator, AggKind, Objective, PlanCostModel, Predicate, Program,
+    RecordRange, StepOutput,
+};
+use adra::serve::{ServeConfig, ServeQueue};
+use adra::util::quick::{Arbitrary, Quick};
+use adra::util::rng::Rng;
+
+const N_RECORDS: usize = 48;
+const SHARDS: usize = 3;
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::square(64, SensingScheme::Current);
+    c.word_bits = 8;
+    c.max_batch = 16;
+    c
+}
+
+/// A random but always-valid program over the shared table: loads,
+/// broadcasts, and the full query palette over random in-bounds ranges.
+fn random_program(rng: &mut Rng, n_records: usize) -> Program {
+    let mut p = Program::new(n_records);
+    let s0 = p.scratch();
+    let s1 = p.scratch();
+    let n_ops = 3 + rng.below(6) as usize;
+    for _ in 0..n_ops {
+        let start = rng.below(n_records as u64 - 1) as usize;
+        let len = 1 + rng.below((n_records - start) as u64) as usize;
+        let range = RecordRange::new(start, len);
+        let rhs = if rng.bool() { s0 } else { s1 };
+        match rng.below(8) {
+            0 => {
+                let values: Vec<u64> = (0..len).map(|_| rng.below(128)).collect();
+                p.load(start, values);
+            }
+            1 => {
+                p.broadcast(rhs, rng.below(128));
+            }
+            2 => {
+                p.compare(range, rhs);
+            }
+            3 => {
+                let preds = [
+                    Predicate::Lt,
+                    Predicate::Le,
+                    Predicate::Gt,
+                    Predicate::Ge,
+                    Predicate::Eq,
+                    Predicate::Ne,
+                ];
+                p.filter(range, rhs, preds[rng.below(6) as usize]);
+            }
+            4 => {
+                p.sub(range, rhs);
+            }
+            5 => {
+                let fns = [BoolFn::And, BoolFn::Xor, BoolFn::AndNot, BoolFn::OrNot];
+                p.bool_op(fns[rng.below(4) as usize], range, rhs);
+            }
+            6 => {
+                p.scan(range);
+            }
+            _ => {
+                let aggs = [AggKind::Min, AggKind::Max, AggKind::Sum];
+                p.aggregate(range, aggs[rng.below(3) as usize]);
+            }
+        }
+    }
+    p
+}
+
+#[derive(Clone, Debug)]
+struct Seed(u64);
+
+impl Arbitrary for Seed {
+    fn generate(rng: &mut Rng) -> Self {
+        Seed(rng.next_u64())
+    }
+}
+
+#[test]
+fn prop_served_batches_match_sequential_unfused_execution() {
+    let cfg = cfg();
+    Quick::with_cases(10).check::<Seed, _>("serve == naive", |s| {
+        let mut rng = Rng::new(s.0);
+        let mut programs: Vec<Program> =
+            (0..6).map(|_| random_program(&mut rng, N_RECORDS)).collect();
+        // force the interesting paths: an exact repeat (cache hits when
+        // rounds split) and a whole-table load straight after it (every
+        // overlapping cached range must be invalidated, not served)
+        programs.push(programs[1].clone());
+        let mut clobber = Program::new(N_RECORDS);
+        let values: Vec<u64> = (0..N_RECORDS).map(|_| rng.below(128)).collect();
+        let all = clobber.all();
+        clobber.load(0, values);
+        clobber.scan(all);
+        programs.push(clobber);
+        programs.push(programs[1].clone()); // re-query the clobbered table
+
+        // naive reference: sequential, unfused, uncached
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let naive_coord = planned_coordinator(&cfg, SHARDS, Objective::Edp);
+        let naive: Vec<Vec<StepOutput>> = programs
+            .iter()
+            .map(|p| {
+                let pl = place(p, &cfg, SHARDS, &model).expect("valid by construction");
+                pl.execute(&naive_coord).expect("naive execution").outputs
+            })
+            .collect();
+
+        // serve path: single submitter, admission order == program order
+        let queue = ServeQueue::start(ServeConfig::new(cfg.clone(), SHARDS, N_RECORDS));
+        let tickets: Vec<_> = programs
+            .iter()
+            .map(|p| queue.submit(0, p.clone()).expect("geometry matches"))
+            .collect();
+        let served: Vec<Vec<StepOutput>> = tickets
+            .into_iter()
+            .map(|t| t.wait().expect("served").outputs)
+            .collect();
+
+        naive == served
+    });
+}
+
+/// Concurrent multi-tenant submission: admission order is nondeterministic
+/// across tenants, so give every tenant identical table contents (loads
+/// dedupe) and a private threshold — each program is self-contained, so
+/// ANY admission interleaving must reproduce the naive per-tenant outputs.
+#[test]
+fn concurrent_identical_table_tenants_match_naive() {
+    let cfg = cfg();
+    let model = PlanCostModel::new(&cfg, Objective::Edp);
+    // one shared load + per-tenant query programs over the same contents
+    let mut rng = Rng::new(2026);
+    let values: Vec<u64> = (0..N_RECORDS).map(|_| rng.below(128)).collect();
+    let make_tenant_program = |tenant: usize| {
+        let mut p = Program::new(N_RECORDS);
+        let t = p.scratch();
+        let all = p.all();
+        p.load(0, values.clone());
+        p.broadcast(t, 20 + 10 * tenant as u64);
+        p.filter(all, t, Predicate::Lt);
+        p.sub(all, t);
+        p.aggregate(all, AggKind::Max);
+        p
+    };
+
+    let naive_coord = planned_coordinator(&cfg, SHARDS, Objective::Edp);
+    let naive: Vec<Vec<StepOutput>> = (0..4)
+        .map(|t| {
+            let pl = place(&make_tenant_program(t), &cfg, SHARDS, &model).unwrap();
+            pl.execute(&naive_coord).unwrap().outputs
+        })
+        .collect();
+
+    let queue = std::sync::Arc::new(ServeQueue::start(ServeConfig::new(
+        cfg.clone(),
+        SHARDS,
+        N_RECORDS,
+    )));
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let q = queue.clone();
+            let program = make_tenant_program(t);
+            std::thread::spawn(move || {
+                let mut outs = Vec::new();
+                for _ in 0..3 {
+                    outs.push(q.submit(t, program.clone()).unwrap().wait().unwrap());
+                }
+                outs
+            })
+        })
+        .collect();
+    for (t, h) in handles.into_iter().enumerate() {
+        for rep in h.join().unwrap() {
+            assert_eq!(rep.outputs, naive[t], "tenant {t} diverged");
+        }
+    }
+    let m = queue.metrics();
+    assert_eq!(m.programs, 12);
+    assert!(m.skipped_writes > 0, "identical loads must dedupe: {}", m.report("serve"));
+}
