@@ -233,7 +233,7 @@ quit
     fn stats_includes_tail_latency_and_attached_serve_counters() {
         use crate::config::SimConfig;
         use crate::planner::Objective;
-        use crate::serve::{ServeConfig, ServeQueue};
+        use crate::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeQueue};
         use crate::workload::analytics_scenario;
 
         let mut cfg = SimConfig::square(64, crate::config::SensingScheme::Current);
@@ -245,6 +245,8 @@ quit
             n_records: 24,
             max_round: 8,
             cache_capacity: 64,
+            admission: AdmissionPolicy::Fair,
+            batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
         });
         let s = analytics_scenario(&cfg, 24, 1);
         queue.submit(0, s.program).unwrap().wait().unwrap();
@@ -262,6 +264,10 @@ quit
         assert!(lines[0].contains("p50/p95/p99"), "tail latency: {}", lines[0]);
         assert!(lines[1].starts_with("ok serve-layer:"), "{}", lines[1]);
         assert!(lines[1].contains("hit rate"), "{}", lines[1]);
+        // control-plane counters ride the same stats line
+        assert!(lines[1].contains("quota hits"), "{}", lines[1]);
+        assert!(lines[1].contains("controller max_round"), "{}", lines[1]);
+        assert!(lines[1].contains("evictions"), "{}", lines[1]);
     }
 
     #[test]

@@ -21,7 +21,10 @@
 //! * **Serving layer (`serve`)** — multi-tenant admission in front of the
 //!   planner: cross-program batch coalescing, write dedup, fused shard
 //!   execution through the pool, and a versioned result cache, with
-//!   queue/fusion/cache/per-tenant observability.
+//!   queue/fusion/cache/per-tenant observability.  Its control plane
+//!   (`serve::control`) adds weighted fair queueing with per-tenant
+//!   quotas, an EWMA-adaptive round size with a p95 target, and
+//!   size-aware LRU + negative-result caching.
 
 pub mod analysis;
 pub mod array;

@@ -158,20 +158,89 @@ pub fn key_for(op: &IrOp, state: &TableState) -> Option<CacheKey> {
     })
 }
 
-/// Memoized query-step outputs.  Stale entries (older fingerprint than
-/// their range's current one) can never match a fresh key; they are
-/// swept lazily when the cache fills.
-#[derive(Clone, Debug)]
-pub struct ResultCache {
-    map: HashMap<CacheKey, StepOutput>,
-    capacity: usize,
-    pub hits: u64,
-    pub misses: u64,
+/// Payload elements a cached output carries (its dominant heap cost).
+fn payload_elems(out: &StepOutput) -> usize {
+    match out {
+        StepOutput::None | StepOutput::Reduced(_) => 0,
+        StepOutput::Words(v) => v.len(),
+        StepOutput::Diffs(v) => v.len(),
+        StepOutput::Orderings(v) => v.len(),
+        StepOutput::Matches(v) => v.len(),
+    }
 }
 
+/// Negative result: a filter that matched nothing.  These recur under
+/// dashboard polling (the same empty `WHERE` clause asked again and
+/// again), carry no payload, and deserve to survive capacity pressure —
+/// they are stored at zero weight.
+fn is_negative(kind: &QueryKind, out: &StepOutput) -> bool {
+    matches!(kind, QueryKind::Filter(_))
+        && matches!(out, StepOutput::Matches(m) if m.is_empty())
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    out: StepOutput,
+    /// Slots this entry charges against the budget (0 for negatives).
+    weight: usize,
+    /// LRU clock value of the last lookup/insert that touched it.
+    last_used: u64,
+    negative: bool,
+}
+
+/// Memoized query-step outputs with size-aware LRU eviction.
+///
+/// The budget is counted in SLOTS: a small output costs one slot, and
+/// every [`ELEMS_PER_SLOT`] payload elements cost one more, so a handful
+/// of whole-table scans cannot silently pin the memory a thousand tiny
+/// filters would share.  Negative results (empty filters) weigh zero and
+/// are bounded by the entry cap instead.
+///
+/// At capacity the cache first sweeps stale entries (older fingerprint
+/// than their range's current one — they can never match a fresh key),
+/// then evicts live entries in least-recently-used order until the
+/// incoming entry fits.  Entries for untouched ranges are kept — the
+/// PR 2 wholesale `clear()` is gone.
+#[derive(Clone, Debug)]
+pub struct ResultCache {
+    map: HashMap<CacheKey, Entry>,
+    /// Slot budget (see struct docs).
+    budget: usize,
+    /// Slots currently charged by live entries.
+    used: usize,
+    /// Monotone LRU clock.
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Hits answered by zero-weight negative entries (also counted in
+    /// `hits`).
+    pub negative_hits: u64,
+    /// Live entries evicted in LRU order under capacity pressure.
+    pub evictions: u64,
+    /// Stale entries dropped by the pre-eviction sweep.
+    pub swept: u64,
+}
+
+/// Payload elements per budget slot (see [`ResultCache`]).
+pub const ELEMS_PER_SLOT: usize = 16;
+
+/// Total entries are capped at `budget * ENTRY_CAP_FACTOR` so zero-weight
+/// negative entries stay bounded too.
+pub const ENTRY_CAP_FACTOR: usize = 4;
+
 impl ResultCache {
-    pub fn new(capacity: usize) -> Self {
-        Self { map: HashMap::new(), capacity: capacity.max(1), hits: 0, misses: 0 }
+    pub fn new(budget: usize) -> Self {
+        Self {
+            map: HashMap::new(),
+            budget: budget.max(1),
+            used: 0,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            negative_hits: 0,
+            evictions: 0,
+            swept: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -182,11 +251,27 @@ impl ResultCache {
         self.map.is_empty()
     }
 
+    /// Slot budget this cache evicts toward.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Slots currently charged (invariant: `used <= budget` except for a
+    /// single oversized entry).
+    pub fn used_slots(&self) -> usize {
+        self.used
+    }
+
     pub fn lookup(&mut self, key: &CacheKey) -> Option<StepOutput> {
-        match self.map.get(key) {
-            Some(out) => {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.tick;
                 self.hits += 1;
-                Some(out.clone())
+                if e.negative {
+                    self.negative_hits += 1;
+                }
+                Some(e.out.clone())
             }
             None => {
                 self.misses += 1;
@@ -195,19 +280,76 @@ impl ResultCache {
         }
     }
 
-    /// Insert an entry.  At capacity, stale entries are swept first; if
-    /// every entry is still live the whole map is dropped — the cache is
-    /// a performance layer, never a correctness one.
+    /// Insert an entry, evicting stale-then-LRU entries as needed.  An
+    /// entry too large for the whole budget is still admitted (alone) —
+    /// the cache is a performance layer, never a correctness one.
     pub fn insert(&mut self, key: CacheKey, out: StepOutput, state: &TableState) {
-        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
-            self.map.retain(|k, _| {
-                k.fingerprint >= state.range_fingerprint(RecordRange::new(k.start, k.len))
-            });
-            if self.map.len() >= self.capacity {
-                self.map.clear();
-            }
+        self.tick += 1;
+        let negative = is_negative(&key.kind, &out);
+        let weight = if negative { 0 } else { 1 + payload_elems(&out) / ELEMS_PER_SLOT };
+        if let Some(old) = self.map.remove(&key) {
+            self.used -= old.weight;
         }
-        self.map.insert(key, out);
+        if self.used + weight > self.budget
+            || self.map.len() + 1 > self.budget * ENTRY_CAP_FACTOR
+        {
+            self.make_room(weight, state);
+        }
+        self.used += weight;
+        self.map.insert(key, Entry { out, weight, last_used: self.tick, negative });
+    }
+
+    /// Free space for an incoming entry of `incoming` slots: sweep stale
+    /// entries, then evict live ones least-recently-used first.  Valid
+    /// entries for untouched ranges survive unless the LRU order says
+    /// they must go.
+    fn make_room(&mut self, incoming: usize, state: &TableState) {
+        let before = self.map.len();
+        let mut freed = 0usize;
+        self.map.retain(|k, e| {
+            let live =
+                k.fingerprint >= state.range_fingerprint(RecordRange::new(k.start, k.len));
+            if !live {
+                freed += e.weight;
+            }
+            live
+        });
+        self.swept += (before - self.map.len()) as u64;
+        self.used -= freed;
+
+        let entry_cap = self.budget * ENTRY_CAP_FACTOR;
+        loop {
+            let over_slots = self.used + incoming > self.budget;
+            let over_entries = self.map.len() + 1 > entry_cap;
+            if !(over_slots || over_entries) || self.map.is_empty() {
+                break;
+            }
+            // O(n) victim scan; eviction is the rare path and maps are
+            // budget-bounded, so an index structure isn't worth carrying.
+            // Slot pressure can only be relieved by entries that charge
+            // slots — zero-weight negatives are never sacrificed for it
+            // (they go only under entry-cap pressure), otherwise a cold
+            // negative would be evicted for zero freed slots.
+            let positive_lru = self
+                .map
+                .iter()
+                .filter(|(_, e)| e.weight > 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let victim = match (over_slots, positive_lru) {
+                (true, Some(k)) => Some(k),
+                // slot pressure with only zero-weight entries left: fall
+                // through to entry-cap eviction if that also applies
+                (true, None) | (false, _) if over_entries => {
+                    self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k)
+                }
+                _ => None, // nothing left that frees slots
+            };
+            let Some(victim) = victim else { break };
+            let e = self.map.remove(&victim).expect("victim present");
+            self.used -= e.weight;
+            self.evictions += 1;
+        }
     }
 }
 
@@ -309,5 +451,232 @@ mod tests {
         }
         assert!(c.len() <= 2, "capacity respected, stale entry swept");
         assert!(c.lookup(&key).is_none(), "stale entry gone");
+        assert_eq!(c.swept, 1, "the stale entry was swept, not LRU-evicted");
+        assert_eq!(c.evictions, 0);
+    }
+
+    fn scan_key(s: &TableState, start: usize, len: usize) -> CacheKey {
+        CacheKey {
+            kind: QueryKind::Scan,
+            start,
+            len,
+            rhs: None,
+            fingerprint: s.range_fingerprint(RecordRange::new(start, len)),
+        }
+    }
+
+    #[test]
+    fn lru_order_respected_under_capacity_pressure() {
+        let s = TableState::new(&cfg(), 8);
+        let mut c = ResultCache::new(2);
+        let (a, b, d) = (scan_key(&s, 0, 1), scan_key(&s, 1, 1), scan_key(&s, 2, 1));
+        c.insert(a, StepOutput::Words(vec![(0, 1)]), &s);
+        c.insert(b, StepOutput::Words(vec![(1, 2)]), &s);
+        // touch `a` so `b` becomes least recently used
+        assert!(c.lookup(&a).is_some());
+        c.insert(d, StepOutput::Words(vec![(2, 3)]), &s);
+        assert!(c.lookup(&a).is_some(), "recently-used entry survives");
+        assert!(c.lookup(&b).is_none(), "LRU entry evicted");
+        assert!(c.lookup(&d).is_some(), "incoming entry admitted");
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.swept, 0, "no entry was stale — the fix: no wholesale clear");
+    }
+
+    #[test]
+    fn eviction_keeps_valid_entries_for_untouched_ranges() {
+        // the PR 2 bug: at capacity with all-live entries the whole map
+        // was cleared, dropping entries for ranges nothing had written
+        let s = TableState::new(&cfg(), 16);
+        let mut c = ResultCache::new(4);
+        let keys: Vec<CacheKey> = (0..4).map(|i| scan_key(&s, i, 1)).collect();
+        for (i, k) in keys.iter().enumerate() {
+            c.insert(*k, StepOutput::Words(vec![(i, i as u64)]), &s);
+        }
+        c.insert(scan_key(&s, 9, 1), StepOutput::Words(vec![(9, 9)]), &s);
+        // exactly one live entry (the LRU head) made room; the other
+        // three valid entries survive
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.len(), 4);
+        let survivors = keys.iter().filter(|k| c.lookup(k).is_some()).count();
+        assert_eq!(survivors, 3, "valid entries must be kept when evicting");
+    }
+
+    #[test]
+    fn size_aware_weights_charge_large_payloads_more() {
+        let s = TableState::new(&cfg(), 8);
+        let mut c = ResultCache::new(4);
+        let big: Vec<(usize, u64)> = (0..3 * ELEMS_PER_SLOT).map(|i| (i, i as u64)).collect();
+        c.insert(scan_key(&s, 0, 8), StepOutput::Words(big), &s);
+        assert_eq!(c.used_slots(), 4, "1 + 48/16 slots");
+        // the big entry fills the budget; the next insert must evict it
+        c.insert(scan_key(&s, 1, 1), StepOutput::Words(vec![(1, 1)]), &s);
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.used_slots(), 1);
+    }
+
+    #[test]
+    fn negative_entries_are_free_and_invalidated_by_version_bumps() {
+        let mut s = TableState::new(&cfg(), 8);
+        let mut c = ResultCache::new(2);
+        let range = RecordRange::new(0, 8);
+        let nkey = CacheKey {
+            kind: QueryKind::Filter(crate::planner::Predicate::Lt),
+            start: 0,
+            len: 8,
+            rhs: Some(0),
+            fingerprint: s.range_fingerprint(range),
+        };
+        c.insert(nkey, StepOutput::Matches(Vec::new()), &s);
+        assert_eq!(c.used_slots(), 0, "negative entries weigh nothing");
+        assert_eq!(c.lookup(&nkey), Some(StepOutput::Matches(Vec::new())));
+        assert_eq!(c.negative_hits, 1);
+
+        // fill the budget with positives: the negative survives pressure
+        c.insert(scan_key(&s, 0, 1), StepOutput::Words(vec![(0, 1)]), &s);
+        c.insert(scan_key(&s, 1, 1), StepOutput::Words(vec![(1, 2)]), &s);
+        assert!(c.lookup(&nkey).is_some(), "zero-weight entry needs no slot");
+
+        // a content-changing write bumps the range version: the old key
+        // can never be asked again, and the sweep reclaims the entry
+        s.record_write(3, 77);
+        let fresh = CacheKey { fingerprint: s.range_fingerprint(range), ..nkey };
+        assert_ne!(fresh, nkey, "version bump strands the negative key");
+        assert!(c.lookup(&fresh).is_none(), "stale negative must not serve");
+        c.insert(scan_key(&s, 2, 1), StepOutput::Words(vec![(2, 3)]), &s);
+        c.insert(scan_key(&s, 4, 1), StepOutput::Words(vec![(4, 5)]), &s);
+        assert!(c.lookup(&nkey).is_none(), "swept after the version bump");
+        assert!(c.swept >= 1, "stale negative reclaimed by the sweep");
+    }
+
+    /// The reviewer trap: a negative entry that is NOT recently used must
+    /// still survive slot pressure — evicting it would free zero slots.
+    #[test]
+    fn cold_negative_entries_survive_slot_pressure()  {
+        let s = TableState::new(&cfg(), 8);
+        let mut c = ResultCache::new(2);
+        let nkey = CacheKey {
+            kind: QueryKind::Filter(crate::planner::Predicate::Lt),
+            start: 0,
+            len: 8,
+            rhs: Some(0),
+            fingerprint: s.range_fingerprint(RecordRange::new(0, 8)),
+        };
+        c.insert(nkey, StepOutput::Matches(Vec::new()), &s);
+        // five positives through a budget of two: constant LRU eviction,
+        // the untouched negative is always the LRU-oldest entry
+        for i in 0..5 {
+            c.insert(scan_key(&s, i, 1), StepOutput::Words(vec![(i, 1)]), &s);
+        }
+        assert!(c.evictions >= 3, "positives churned: {}", c.evictions);
+        assert_eq!(
+            c.lookup(&nkey),
+            Some(StepOutput::Matches(Vec::new())),
+            "slot pressure must never evict a zero-weight negative"
+        );
+    }
+
+    #[test]
+    fn hit_rate_counters_match_observed_hits() {
+        let mut s = TableState::new(&cfg(), 8);
+        let mut c = ResultCache::new(8);
+        let k1 = scan_key(&s, 0, 2);
+        let neg = CacheKey {
+            kind: QueryKind::Filter(crate::planner::Predicate::Gt),
+            start: 0,
+            len: 8,
+            rhs: Some(255),
+            fingerprint: s.range_fingerprint(RecordRange::new(0, 8)),
+        };
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let mut neg_hits = 0u64;
+        assert!(c.lookup(&k1).is_none());
+        misses += 1;
+        c.insert(k1, StepOutput::Words(vec![(0, 1)]), &s);
+        c.insert(neg, StepOutput::Matches(Vec::new()), &s);
+        for _ in 0..3 {
+            assert!(c.lookup(&k1).is_some());
+            hits += 1;
+            assert!(c.lookup(&neg).is_some());
+            hits += 1;
+            neg_hits += 1;
+        }
+        s.record_write(1, 9);
+        let stale_probe = scan_key(&s, 0, 2); // fresh fingerprint: miss
+        assert!(c.lookup(&stale_probe).is_none());
+        misses += 1;
+        assert_eq!((c.hits, c.misses, c.negative_hits), (hits, misses, neg_hits));
+        assert!(c.negative_hits <= c.hits, "negative hits are a subset of hits");
+    }
+
+    /// Model check: random lookup/insert/write traffic against a tiny
+    /// cache — a lookup may miss at any time, but whenever it HITS the
+    /// value must equal what an unbounded, always-correct memo table
+    /// holds for that exact key.
+    #[test]
+    fn prop_lru_cache_never_serves_a_wrong_value() {
+        use crate::util::quick::{Arbitrary, Quick};
+        use crate::util::rng::Rng;
+
+        #[derive(Clone, Debug)]
+        struct TrafficSeed(u64);
+        impl Arbitrary for TrafficSeed {
+            fn generate(rng: &mut Rng) -> Self {
+                TrafficSeed(rng.next_u64())
+            }
+        }
+
+        Quick::with_cases(40).check::<TrafficSeed, _>("lru model check", |seed| {
+            let cfg = cfg();
+            let mut rng = Rng::new(seed.0);
+            let mut state = TableState::new(&cfg, 16);
+            let mut cache = ResultCache::new(3);
+            let mut model: std::collections::HashMap<CacheKey, StepOutput> =
+                std::collections::HashMap::new();
+            for step in 0..200u64 {
+                match rng.below(4) {
+                    0 => {
+                        // content-changing write strands overlapping keys
+                        state.record_write(rng.below(16) as usize, rng.below(256));
+                    }
+                    1 => {
+                        let start = rng.below(12) as usize;
+                        let len = 1 + rng.below(4) as usize;
+                        let key = CacheKey {
+                            kind: QueryKind::Scan,
+                            start,
+                            len,
+                            rhs: None,
+                            fingerprint: state
+                                .range_fingerprint(RecordRange::new(start, len)),
+                        };
+                        let out = StepOutput::Words(vec![(start, step)]);
+                        cache.insert(key, out.clone(), &state);
+                        model.insert(key, out);
+                    }
+                    _ => {
+                        let start = rng.below(12) as usize;
+                        let len = 1 + rng.below(4) as usize;
+                        let key = CacheKey {
+                            kind: QueryKind::Scan,
+                            start,
+                            len,
+                            rhs: None,
+                            fingerprint: state
+                                .range_fingerprint(RecordRange::new(start, len)),
+                        };
+                        if let Some(got) = cache.lookup(&key) {
+                            if model.get(&key) != Some(&got) {
+                                return false; // served a wrong value
+                            }
+                        }
+                    }
+                }
+                if cache.used_slots() > cache.budget() {
+                    return false; // budget invariant violated
+                }
+            }
+            true
+        });
     }
 }

@@ -64,6 +64,9 @@ pub struct RoundStats {
     pub skipped_writes: u64,
     pub cached_steps: u64,
     pub cache_misses: u64,
+    /// Cached steps answered by zero-weight negative (empty-filter)
+    /// entries — a subset of `cached_steps`.
+    pub negative_hits: u64,
     pub dual_ops: u64,
     /// Activations the fused batches will issue.
     pub activations: u64,
@@ -108,6 +111,7 @@ pub fn coalesce_round(
         .collect();
     let mut programs = Vec::with_capacity(placements.len());
     let mut stats = RoundStats::default();
+    let negative_hits_before = cache.negative_hits;
 
     for (pi, placement) in placements.iter().enumerate() {
         // pass 1: walk the GLOBAL program in order, updating the shared
@@ -196,6 +200,8 @@ pub fn coalesce_round(
         programs.push(ProgramActions { actions, skipped_writes, cached_steps });
     }
 
+    stats.negative_hits = cache.negative_hits - negative_hits_before;
+
     // fusion forecast over the merged batches (the workers recompute the
     // same deterministic plan; this serial pass is O(ops) bookkeeping)
     for b in &batches {
@@ -225,7 +231,7 @@ pub fn coalesce_round(
 mod tests {
     use super::*;
     use crate::config::{SensingScheme, SimConfig};
-    use crate::planner::{place, Objective, PlanCostModel};
+    use crate::planner::{place, Objective, PlanCostModel, Predicate, Program};
     use crate::workload::{analytics_scenario, diff_scenario};
 
     fn cfg() -> SimConfig {
@@ -291,6 +297,33 @@ mod tests {
         let r3 = coalesce_round(&[&pl3], &mut state, &mut cache, true);
         assert_eq!(r3.programs[0].cached_steps, 0, "stale keys must miss");
         assert_eq!(r3.programs[0].skipped_writes, 2 * cfg.words_per_row());
+    }
+
+    #[test]
+    fn negative_hits_are_counted_per_round() {
+        let cfg = cfg();
+        let model = PlanCostModel::new(&cfg, Objective::Edp);
+        let mut p = Program::new(24);
+        let t = p.scratch();
+        let all = p.all();
+        p.load(0, (0..24).map(|i| i as u64).collect());
+        p.broadcast(t, 0);
+        p.filter(all, t, Predicate::Lt); // v < 0: never matches
+        let pl = place(&p, &cfg, 2, &model).unwrap();
+        let mut state = TableState::new(&cfg, 24);
+        let mut cache = ResultCache::new(64);
+
+        let r1 = coalesce_round(&[&pl], &mut state, &mut cache, true);
+        assert_eq!(r1.stats.negative_hits, 0, "first sight misses");
+        for a in r1.programs[0].actions.iter() {
+            if let StepAction::RunAndCache(key) = a {
+                cache.insert(*key, StepOutput::Matches(Vec::new()), &state);
+            }
+        }
+        let r2 = coalesce_round(&[&pl], &mut state, &mut cache, true);
+        assert_eq!(r2.stats.negative_hits, 1, "the empty filter hit the negative cache");
+        assert_eq!(r2.stats.cached_steps, 1);
+        assert_eq!(r2.stats.coalesced_ops, 0, "repeat round touches no array");
     }
 
     #[test]

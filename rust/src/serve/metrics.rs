@@ -36,6 +36,24 @@ pub struct ServeMetrics {
     /// Content-changing record writes (each strands overlapping cache
     /// entries).
     pub invalidating_writes: u64,
+    /// Times a tenant exhausted its per-round fair-share quota while
+    /// still holding pending programs (the dominance WFQ caps).
+    pub quota_hits: u64,
+    /// Programs left pending when a round's admission closed, summed
+    /// over rounds (how much the fairness policy deferred).
+    pub deferred_programs: u64,
+    /// Adaptive `max_round` controller decisions.
+    pub controller_grows: u64,
+    pub controller_shrinks: u64,
+    pub controller_holds: u64,
+    /// The controller's current round-size ceiling.
+    pub current_max_round: u64,
+    /// Live cache entries evicted in LRU order under capacity pressure.
+    pub cache_evictions: u64,
+    /// Stale cache entries reclaimed by the pre-eviction sweep.
+    pub cache_swept: u64,
+    /// Cache hits served by zero-weight negative (empty-filter) entries.
+    pub negative_hits: u64,
     /// Submission-to-reply wall latency per tenant.
     pub tenant_latency: HashMap<usize, LatencyHistogram>,
 }
@@ -79,7 +97,10 @@ impl ServeMetrics {
             "{label}: {} programs / {} rounds (occupancy {:.2}, max {}), \
              {}/{} ops shipped ({} writes deduped), \
              {} activations for {} dual ops (fused share {:.1}%, {} cross-program), \
-             cache {} hits / {} misses ({:.1}% hit rate), {} invalidating writes",
+             cache {} hits / {} misses ({:.1}% hit rate, {} negative hits, \
+             {} evictions, {} swept), {} invalidating writes, \
+             fairness {} quota hits / {} deferrals, \
+             controller max_round {} ({}+ {}- {}=)",
             self.programs,
             self.rounds,
             self.batch_occupancy(),
@@ -94,8 +115,29 @@ impl ServeMetrics {
             self.cached_steps,
             self.cache_misses,
             self.cache_hit_rate() * 100.0,
+            self.negative_hits,
+            self.cache_evictions,
+            self.cache_swept,
             self.invalidating_writes,
+            self.quota_hits,
+            self.deferred_programs,
+            self.current_max_round,
+            self.controller_grows,
+            self.controller_shrinks,
+            self.controller_holds,
         )
+    }
+
+    /// p95 wall latency (ns) over every tenant EXCEPT `tenant` — the
+    /// fairness yardstick: what the heavy tenant's neighbors experience.
+    pub fn p95_ns_excluding(&self, tenant: usize) -> f64 {
+        let mut merged = LatencyHistogram::default();
+        for (t, h) in &self.tenant_latency {
+            if *t != tenant {
+                merged.merge(h);
+            }
+        }
+        merged.percentile_ns(95.0)
     }
 
     /// Per-tenant latency lines (tenant id ascending), for the example
@@ -145,13 +187,38 @@ mod tests {
         let mut m = ServeMetrics::default();
         m.programs = 2;
         m.rounds = 1;
+        m.quota_hits = 3;
+        m.deferred_programs = 4;
+        m.current_max_round = 9;
+        m.cache_evictions = 5;
+        m.negative_hits = 1;
         m.record_latency(7, 3e-6);
         m.record_latency(7, 5e-6);
         let r = m.report("serve");
         assert!(r.contains("2 programs"));
         assert!(r.contains("hit rate"));
+        assert!(r.contains("3 quota hits / 4 deferrals"), "{r}");
+        assert!(r.contains("controller max_round 9"), "{r}");
+        assert!(r.contains("5 evictions"), "{r}");
+        assert!(r.contains("1 negative hits"), "{r}");
         let t = m.tenant_report();
         assert_eq!(t.len(), 1);
         assert!(t[0].starts_with("tenant 7: 2 programs"));
+    }
+
+    #[test]
+    fn p95_excluding_merges_only_other_tenants() {
+        let mut m = ServeMetrics::default();
+        // tenant 0 (the heavy one): slow; tenants 1, 2: fast
+        for _ in 0..20 {
+            m.record_latency(0, 1e-3);
+            m.record_latency(1, 1e-6);
+            m.record_latency(2, 2e-6);
+        }
+        let without_heavy = m.p95_ns_excluding(0);
+        let with_heavy = m.p95_ns_excluding(9); // 9 never served: merge all
+        assert!(without_heavy < 1e5, "{without_heavy}");
+        assert!(with_heavy > 1e5, "{with_heavy}");
+        assert_eq!(m.p95_ns_excluding(0), without_heavy, "deterministic");
     }
 }

@@ -12,6 +12,10 @@
 //!   (OS threads + channels, same no-tokio style as `coordinator::pool`).
 //!   Programs queued while a round is in flight are coalesced into the
 //!   next round; each client gets a [`Ticket`] to wait on.
+//! * [`control`] — the control plane: [`FairScheduler`] picks each round
+//!   by weighted fair queueing with per-tenant quotas (no tenant can
+//!   flood a round), and [`BatchController`] adapts `max_round` with an
+//!   EWMA over observed round wall time against a p95 target.
 //! * [`coalesce`] — the per-shard coalescer: merges the round's shard
 //!   streams into one batch per shard (admission order preserved, so the
 //!   result is bit-identical to sequential per-program execution — shard
@@ -40,10 +44,15 @@
 
 pub mod cache;
 pub mod coalesce;
+pub mod control;
 pub mod metrics;
 pub mod queue;
 
 pub use cache::{key_for, CacheKey, QueryKind, ResultCache, TableState};
 pub use coalesce::{coalesce_round, CoalescedRound, ProgramActions, RoundStats, ShardBatch, StepAction};
+pub use control::{
+    service_weights, AdmissionPolicy, BatchController, BatchPolicy, FairScheduler,
+    RoundAdmission,
+};
 pub use metrics::ServeMetrics;
 pub use queue::{ServeConfig, ServeError, ServeQueue, ServeReport, Ticket};

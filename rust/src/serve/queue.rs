@@ -26,6 +26,9 @@ use crate::planner::{
 
 use super::cache::{ResultCache, TableState};
 use super::coalesce::{coalesce_round, StepAction};
+use super::control::{
+    service_weights, AdmissionPolicy, BatchController, BatchPolicy, FairScheduler,
+};
 use super::metrics::ServeMetrics;
 
 /// Serving deployment parameters.
@@ -40,9 +43,17 @@ pub struct ServeConfig {
     /// record slots, shard partitioning, and scratch rows line up across
     /// tenants (a mismatch is rejected at submission).
     pub n_records: usize,
-    /// Max programs coalesced into one round.
+    /// Max programs coalesced into one round.  Under
+    /// [`BatchPolicy::Adaptive`] this is the ceiling and starting point
+    /// of the EWMA controller; under [`BatchPolicy::Static`] it is the
+    /// round size, as in PR 2.
     pub max_round: usize,
+    /// Result-cache budget in slots (see `cache::ResultCache`).
     pub cache_capacity: usize,
+    /// How rounds are selected from the backlog.
+    pub admission: AdmissionPolicy,
+    /// How `max_round` is governed.
+    pub batch: BatchPolicy,
 }
 
 impl ServeConfig {
@@ -54,6 +65,8 @@ impl ServeConfig {
             n_records,
             max_round: 32,
             cache_capacity: 1024,
+            admission: AdmissionPolicy::Fair,
+            batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
         }
     }
 }
@@ -101,6 +114,9 @@ pub struct ServeReport {
     pub skipped_writes: usize,
     /// Programs sharing this program's round.
     pub round_occupancy: usize,
+    /// 1-based sequence number of the round that served this program —
+    /// the starvation-freedom tests bound it.
+    pub round: u64,
     /// Submission-to-reply wall seconds.
     pub wall: f64,
 }
@@ -180,7 +196,16 @@ impl Drop for ServeQueue {
 }
 
 fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<ServeMetrics>>) {
-    let ServeConfig { cfg, shards, objective, n_records, max_round, cache_capacity } = config;
+    let ServeConfig {
+        cfg,
+        shards,
+        objective,
+        n_records,
+        max_round,
+        cache_capacity,
+        admission,
+        batch,
+    } = config;
     let coord = planned_coordinator(&cfg, shards, objective);
     let model = PlanCostModel::new(&cfg, objective);
     // the fused path forces dual ops onto the ADRA engine; honor the
@@ -191,16 +216,54 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
     let fuse = model.choose_class(OpClass::Dual).executor == Executor::Adra;
     let mut state = TableState::new(&cfg, n_records);
     let mut cache = ResultCache::new(cache_capacity);
+    let mut controller = match batch {
+        BatchPolicy::Static => BatchController::fixed(max_round),
+        BatchPolicy::Adaptive { target_p95 } => BatchController::adaptive(max_round, target_p95),
+    };
+    let mut backlog: FairScheduler<Admission> = FairScheduler::new(admission);
+    let mut round_no: u64 = 0;
+    let mut open = true;
 
-    while let Ok(first) = rx.recv() {
-        // batch window: everything already queued joins this round
-        let mut admitted = vec![first];
-        while admitted.len() < max_round {
-            match rx.try_recv() {
-                Ok(a) => admitted.push(a),
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+    while open || !backlog.is_empty() {
+        // batch window: block for work only when the backlog is dry,
+        // then sweep in everything already queued
+        if backlog.is_empty() {
+            match rx.recv() {
+                Ok(a) => {
+                    let t = a.tenant;
+                    backlog.push(t, a);
+                }
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
             }
         }
+        while open {
+            match rx.try_recv() {
+                Ok(a) => {
+                    let t = a.tenant;
+                    backlog.push(t, a);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => open = false,
+            }
+        }
+
+        // round selection: WFQ (or FIFO) over the backlog, sized by the
+        // adaptive controller, weighted by the latency histograms
+        let weights = {
+            let m = metrics.lock().expect("metrics lock");
+            service_weights(&m.tenant_latency)
+        };
+        let selection = backlog
+            .next_round(controller.max_round(), |t| weights.get(&t).copied().unwrap_or(1.0));
+        let admitted = selection.admitted;
+        if admitted.is_empty() {
+            continue;
+        }
+        round_no += 1;
+        let round_start = Instant::now();
 
         // place each program; planning failures answer immediately
         let mut round: Vec<(Admission, Placement)> = Vec::with_capacity(admitted.len());
@@ -275,6 +338,9 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
             }
         }
 
+        // close the control loop on this round's observed wall time
+        controller.observe(round_start.elapsed().as_secs_f64(), occupancy);
+
         let coord_metrics: RunMetrics = coord.metrics();
         {
             let mut m = metrics.lock().expect("metrics lock");
@@ -287,11 +353,18 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
             m.skipped_writes += st.skipped_writes;
             m.cached_steps += st.cached_steps;
             m.cache_misses += st.cache_misses;
+            m.negative_hits += st.negative_hits;
             m.dual_ops += st.dual_ops;
             m.activations += st.activations;
             m.fused_followers += st.fused_followers;
             m.cross_program_fused_ops += st.cross_program_fused_ops;
             m.invalidating_writes = state.invalidating_writes;
+            m.quota_hits += selection.quota_hits;
+            m.deferred_programs += selection.deferred;
+            m.controller_grows = controller.grows;
+            m.controller_shrinks = controller.shrinks;
+            m.controller_holds = controller.holds;
+            m.current_max_round = controller.max_round() as u64;
         }
 
         // assemble per program, splice cached outputs, memoize fresh ones
@@ -322,11 +395,21 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
                         cached_steps: pa.cached_steps,
                         skipped_writes: pa.skipped_writes,
                         round_occupancy: occupancy,
+                        round: round_no,
                         wall,
                     })
                 }
             };
             let _ = a.reply.send(reply);
+        }
+
+        // post-insert cache counters (inserts above may have evicted);
+        // negative hits instead accumulate per round from RoundStats —
+        // lookups only happen during coalescing
+        {
+            let mut m = metrics.lock().expect("metrics lock");
+            m.cache_evictions = cache.evictions;
+            m.cache_swept = cache.swept;
         }
     }
 }
@@ -431,6 +514,8 @@ mod tests {
             n_records: 48,
             max_round: 8,
             cache_capacity: 64,
+            admission: AdmissionPolicy::Fair,
+            batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
         });
         let rep = q.submit(0, s.program.clone()).unwrap().wait().unwrap();
         assert_eq!(rep.outputs, naive.outputs);

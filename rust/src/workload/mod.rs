@@ -7,5 +7,8 @@ pub mod programs;
 pub mod traces;
 
 pub use generators::{OpMix, WorkloadGen};
-pub use programs::{analytics_scenario, diff_scenario, AnalyticsScenario, DiffScenario};
+pub use programs::{
+    analytics_scenario, diff_scenario, heavy_tenant_scenario, AnalyticsScenario, DiffScenario,
+    HeavyTenantScenario,
+};
 pub use traces::{database_filter_trace, image_diff_trace, DatabaseTrace};

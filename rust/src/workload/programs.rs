@@ -119,6 +119,101 @@ pub fn diff_scenario(cfg: &SimConfig, n_records: usize, seed: u64) -> DiffScenar
     }
 }
 
+/// An adversarial multi-tenant mix: one heavy tenant floods a burst of
+/// distinct analytics programs while several light tenants each ask one
+/// short query over the same table.
+///
+/// Every program is self-contained (it loads the shared values itself and
+/// broadcasts its own threshold), so ANY admission interleaving across
+/// tenants must reproduce each program's solo outputs — exactly the shape
+/// the serving fairness tests need: under FIFO the heavy burst starves
+/// the light tenants' latency, under weighted fair queueing it must not,
+/// and bit-identity stays checkable program-by-program either way.
+#[derive(Clone, Debug)]
+pub struct HeavyTenantScenario {
+    /// `(tenant, program)` in submission order: the heavy tenant's whole
+    /// burst first, then one program per light tenant.
+    pub submissions: Vec<(usize, Program)>,
+    /// Shared record values every program loads.
+    pub values: Vec<u64>,
+    pub heavy_tenant: usize,
+    pub light_tenants: usize,
+    /// Per-submission filter threshold (distinct per program, so the
+    /// heavy burst cannot be answered from the cache).
+    pub thresholds: Vec<u64>,
+    /// Per-submission ground truth for the filter step.
+    pub expected_matches: Vec<Vec<usize>>,
+    /// IR step index of the filter in every program.
+    pub filter_step: usize,
+}
+
+/// Build the adversarial mix: `heavy_burst` programs for tenant 0 plus
+/// one program for each of `light_tenants` tenants (ids `1..=light`).
+pub fn heavy_tenant_scenario(
+    cfg: &SimConfig,
+    n_records: usize,
+    seed: u64,
+    heavy_burst: usize,
+    light_tenants: usize,
+) -> HeavyTenantScenario {
+    assert!(n_records > 0 && heavy_burst > 0, "scenario needs work");
+    let mask = if cfg.word_bits == 64 { u64::MAX } else { (1 << cfg.word_bits) - 1 };
+    let pos_max = mask >> 1;
+    let mut rng = Rng::new(seed);
+    let values: Vec<u64> = (0..n_records).map(|_| rng.below(pos_max + 1)).collect();
+
+    let program_for = |threshold: u64| {
+        let mut p = Program::new(n_records);
+        let t = p.scratch();
+        let all = p.all();
+        p.load(0, values.clone());
+        p.broadcast(t, threshold);
+        p.filter(all, t, Predicate::Lt);
+        p.compare(all, t);
+        p
+    };
+    let matches_for = |threshold: u64| -> Vec<usize> {
+        values
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v < threshold)
+            .map(|(i, _)| i)
+            .collect()
+    };
+
+    let mut submissions = Vec::new();
+    let mut thresholds = Vec::new();
+    let mut expected_matches = Vec::new();
+    // heavy burst: spread thresholds over the value range so each
+    // program is distinct (no cache shortcut for the flood); u128
+    // intermediates keep wide-word configs from overflowing
+    let spread = |num: usize, den: usize| -> u64 {
+        1 + ((pos_max as u128 * num as u128) / (den as u128 + 1)) as u64
+    };
+    for i in 0..heavy_burst {
+        let threshold = spread(1 + i, heavy_burst);
+        submissions.push((0, program_for(threshold)));
+        thresholds.push(threshold);
+        expected_matches.push(matches_for(threshold));
+    }
+    for t in 1..=light_tenants {
+        let threshold = spread(t, light_tenants);
+        submissions.push((t, program_for(threshold)));
+        thresholds.push(threshold);
+        expected_matches.push(matches_for(threshold));
+    }
+
+    HeavyTenantScenario {
+        submissions,
+        values,
+        heavy_tenant: 0,
+        light_tenants,
+        thresholds,
+        expected_matches,
+        filter_step: 2,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +252,40 @@ mod tests {
         d.program.validate(&cfg).unwrap();
         assert_eq!(d.expected_diffs[0], d.values[0] as i128 - d.reference as i128);
         assert_eq!(d.expected_sum, d.values.iter().map(|&v| v as u128).sum::<u128>());
+    }
+
+    #[test]
+    fn heavy_tenant_scenario_is_adversarial_and_self_contained() {
+        let cfg = cfg();
+        let s = heavy_tenant_scenario(&cfg, 40, 3, 6, 3);
+        assert_eq!(s.submissions.len(), 9);
+        assert_eq!(s.thresholds.len(), 9);
+        assert_eq!(s.expected_matches.len(), 9);
+        // the burst comes first and belongs entirely to the heavy tenant
+        assert!(s.submissions[..6].iter().all(|(t, _)| *t == s.heavy_tenant));
+        let light: Vec<usize> = s.submissions[6..].iter().map(|(t, _)| *t).collect();
+        assert_eq!(light, vec![1, 2, 3]);
+        // distinct thresholds: the flood cannot be served from the cache
+        let mut heavy_thresholds = s.thresholds[..6].to_vec();
+        heavy_thresholds.dedup();
+        assert_eq!(heavy_thresholds.len(), 6);
+        for ((_, p), want) in s.submissions.iter().zip(&s.expected_matches) {
+            p.validate(&cfg).unwrap();
+            assert!(matches!(p.ops[s.filter_step], IrOp::Filter { .. }));
+            // ground truth is consistent with the shared values
+            let threshold = match &p.ops[1] {
+                IrOp::Broadcast { value, .. } => *value,
+                other => panic!("expected broadcast, got {other:?}"),
+            };
+            let host: Vec<usize> = s
+                .values
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v < threshold)
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(&host, want);
+        }
     }
 
     #[test]

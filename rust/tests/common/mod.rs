@@ -1,0 +1,95 @@
+//! Helpers shared by the serving test binaries (`serve_equivalence`,
+//! `serve_fairness`): the random program generator, the sequential
+//! unfused reference, and the quickcheck seed wrapper.  One copy, so the
+//! op palette cannot drift between the two suites.
+#![allow(dead_code)] // each test binary uses a subset
+
+use adra::cim::BoolFn;
+use adra::config::SimConfig;
+use adra::planner::{
+    place, planned_coordinator, AggKind, Objective, PlanCostModel, Predicate, Program,
+    RecordRange, StepOutput,
+};
+use adra::util::quick::Arbitrary;
+use adra::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Seed(pub u64);
+
+impl Arbitrary for Seed {
+    fn generate(rng: &mut Rng) -> Self {
+        Seed(rng.next_u64())
+    }
+}
+
+/// Sequential unfused reference: place + execute every program in order
+/// on one fresh planned coordinator (per-program `call_batch`, no
+/// fusion, no dedup, no cache) — what the serve path must bit-match.
+pub fn naive_outputs(
+    cfg: &SimConfig,
+    shards: usize,
+    programs: &[&Program],
+) -> Vec<Vec<StepOutput>> {
+    let model = PlanCostModel::new(cfg, Objective::Edp);
+    let coord = planned_coordinator(cfg, shards, Objective::Edp);
+    programs
+        .iter()
+        .map(|p| {
+            let pl = place(p, cfg, shards, &model).expect("valid by construction");
+            pl.execute(&coord).expect("naive execution").outputs
+        })
+        .collect()
+}
+
+/// A random but always-valid program over the shared table: loads,
+/// broadcasts, and the full query palette over random in-bounds ranges.
+pub fn random_program(rng: &mut Rng, n_records: usize) -> Program {
+    let mut p = Program::new(n_records);
+    let s0 = p.scratch();
+    let s1 = p.scratch();
+    let n_ops = 3 + rng.below(6) as usize;
+    for _ in 0..n_ops {
+        let start = rng.below(n_records as u64 - 1) as usize;
+        let len = 1 + rng.below((n_records - start) as u64) as usize;
+        let range = RecordRange::new(start, len);
+        let rhs = if rng.bool() { s0 } else { s1 };
+        match rng.below(8) {
+            0 => {
+                let values: Vec<u64> = (0..len).map(|_| rng.below(128)).collect();
+                p.load(start, values);
+            }
+            1 => {
+                p.broadcast(rhs, rng.below(128));
+            }
+            2 => {
+                p.compare(range, rhs);
+            }
+            3 => {
+                let preds = [
+                    Predicate::Lt,
+                    Predicate::Le,
+                    Predicate::Gt,
+                    Predicate::Ge,
+                    Predicate::Eq,
+                    Predicate::Ne,
+                ];
+                p.filter(range, rhs, preds[rng.below(6) as usize]);
+            }
+            4 => {
+                p.sub(range, rhs);
+            }
+            5 => {
+                let fns = [BoolFn::And, BoolFn::Xor, BoolFn::AndNot, BoolFn::OrNot];
+                p.bool_op(fns[rng.below(4) as usize], range, rhs);
+            }
+            6 => {
+                p.scan(range);
+            }
+            _ => {
+                let aggs = [AggKind::Min, AggKind::Max, AggKind::Sum];
+                p.aggregate(range, aggs[rng.below(3) as usize]);
+            }
+        }
+    }
+    p
+}

@@ -10,15 +10,14 @@
 //! admission order equals program order and any round partitioning the
 //! scheduler picks must preserve the outputs.
 
-use adra::cim::BoolFn;
 use adra::config::{SensingScheme, SimConfig};
-use adra::planner::{
-    place, planned_coordinator, AggKind, Objective, PlanCostModel, Predicate, Program,
-    RecordRange, StepOutput,
-};
+use adra::planner::{AggKind, Predicate, Program, StepOutput};
 use adra::serve::{ServeConfig, ServeQueue};
-use adra::util::quick::{Arbitrary, Quick};
+use adra::util::quick::Quick;
 use adra::util::rng::Rng;
+
+mod common;
+use common::{naive_outputs, random_program, Seed};
 
 const N_RECORDS: usize = 48;
 const SHARDS: usize = 3;
@@ -28,68 +27,6 @@ fn cfg() -> SimConfig {
     c.word_bits = 8;
     c.max_batch = 16;
     c
-}
-
-/// A random but always-valid program over the shared table: loads,
-/// broadcasts, and the full query palette over random in-bounds ranges.
-fn random_program(rng: &mut Rng, n_records: usize) -> Program {
-    let mut p = Program::new(n_records);
-    let s0 = p.scratch();
-    let s1 = p.scratch();
-    let n_ops = 3 + rng.below(6) as usize;
-    for _ in 0..n_ops {
-        let start = rng.below(n_records as u64 - 1) as usize;
-        let len = 1 + rng.below((n_records - start) as u64) as usize;
-        let range = RecordRange::new(start, len);
-        let rhs = if rng.bool() { s0 } else { s1 };
-        match rng.below(8) {
-            0 => {
-                let values: Vec<u64> = (0..len).map(|_| rng.below(128)).collect();
-                p.load(start, values);
-            }
-            1 => {
-                p.broadcast(rhs, rng.below(128));
-            }
-            2 => {
-                p.compare(range, rhs);
-            }
-            3 => {
-                let preds = [
-                    Predicate::Lt,
-                    Predicate::Le,
-                    Predicate::Gt,
-                    Predicate::Ge,
-                    Predicate::Eq,
-                    Predicate::Ne,
-                ];
-                p.filter(range, rhs, preds[rng.below(6) as usize]);
-            }
-            4 => {
-                p.sub(range, rhs);
-            }
-            5 => {
-                let fns = [BoolFn::And, BoolFn::Xor, BoolFn::AndNot, BoolFn::OrNot];
-                p.bool_op(fns[rng.below(4) as usize], range, rhs);
-            }
-            6 => {
-                p.scan(range);
-            }
-            _ => {
-                let aggs = [AggKind::Min, AggKind::Max, AggKind::Sum];
-                p.aggregate(range, aggs[rng.below(3) as usize]);
-            }
-        }
-    }
-    p
-}
-
-#[derive(Clone, Debug)]
-struct Seed(u64);
-
-impl Arbitrary for Seed {
-    fn generate(rng: &mut Rng) -> Self {
-        Seed(rng.next_u64())
-    }
 }
 
 #[test]
@@ -112,15 +49,8 @@ fn prop_served_batches_match_sequential_unfused_execution() {
         programs.push(programs[1].clone()); // re-query the clobbered table
 
         // naive reference: sequential, unfused, uncached
-        let model = PlanCostModel::new(&cfg, Objective::Edp);
-        let naive_coord = planned_coordinator(&cfg, SHARDS, Objective::Edp);
-        let naive: Vec<Vec<StepOutput>> = programs
-            .iter()
-            .map(|p| {
-                let pl = place(p, &cfg, SHARDS, &model).expect("valid by construction");
-                pl.execute(&naive_coord).expect("naive execution").outputs
-            })
-            .collect();
+        let refs: Vec<&Program> = programs.iter().collect();
+        let naive = naive_outputs(&cfg, SHARDS, &refs);
 
         // serve path: single submitter, admission order == program order
         let queue = ServeQueue::start(ServeConfig::new(cfg.clone(), SHARDS, N_RECORDS));
@@ -144,7 +74,6 @@ fn prop_served_batches_match_sequential_unfused_execution() {
 #[test]
 fn concurrent_identical_table_tenants_match_naive() {
     let cfg = cfg();
-    let model = PlanCostModel::new(&cfg, Objective::Edp);
     // one shared load + per-tenant query programs over the same contents
     let mut rng = Rng::new(2026);
     let values: Vec<u64> = (0..N_RECORDS).map(|_| rng.below(128)).collect();
@@ -160,13 +89,9 @@ fn concurrent_identical_table_tenants_match_naive() {
         p
     };
 
-    let naive_coord = planned_coordinator(&cfg, SHARDS, Objective::Edp);
-    let naive: Vec<Vec<StepOutput>> = (0..4)
-        .map(|t| {
-            let pl = place(&make_tenant_program(t), &cfg, SHARDS, &model).unwrap();
-            pl.execute(&naive_coord).unwrap().outputs
-        })
-        .collect();
+    let tenant_programs: Vec<Program> = (0..4).map(|t| make_tenant_program(t)).collect();
+    let refs: Vec<&Program> = tenant_programs.iter().collect();
+    let naive = naive_outputs(&cfg, SHARDS, &refs);
 
     let queue = std::sync::Arc::new(ServeQueue::start(ServeConfig::new(
         cfg.clone(),

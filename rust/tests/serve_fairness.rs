@@ -1,0 +1,213 @@
+//! Property tests for the serving control plane: weighted fair admission
+//! must keep an adversarial heavy tenant from starving anyone, adaptive
+//! batch sizing and LRU/negative caching must never break bit-identity
+//! with sequential unfused execution, and the negative cache must both
+//! serve repeated empty filters and invalidate on range-version bumps.
+//!
+//! The heavy-tenant scenario's programs are self-contained (each loads
+//! the shared values and broadcasts its own threshold), so every
+//! admission interleaving the control plane picks must reproduce each
+//! program's solo outputs — that is what makes bit-identity checkable
+//! while WFQ reorders across tenants.
+
+use adra::config::{SensingScheme, SimConfig};
+use adra::planner::{Objective, Predicate, Program, StepOutput};
+use adra::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeQueue};
+use adra::util::quick::Quick;
+use adra::util::rng::Rng;
+use adra::workload::heavy_tenant_scenario;
+
+mod common;
+use common::{naive_outputs, random_program, Seed};
+
+const N_RECORDS: usize = 48;
+const SHARDS: usize = 3;
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::square(64, SensingScheme::Current);
+    c.word_bits = 8;
+    c.max_batch = 16;
+    c
+}
+
+/// Starvation-freedom + bit-identity under an adversarial heavy tenant
+/// with ALL three policies on (WFQ admission, adaptive max_round,
+/// LRU+negative cache).  The heavy burst (18 programs) outlasts the
+/// round ceiling (6), so it needs several rounds; weighted fair queueing
+/// must slot every light tenant in before the flood drains — each light
+/// program's serving round is bounded by the heavy tenant's last round.
+#[test]
+fn prop_heavy_flood_cannot_starve_light_tenants() {
+    let cfg = cfg();
+    Quick::with_cases(3).check::<Seed, _>("no starvation under flood", |seed| {
+        let s = heavy_tenant_scenario(&cfg, N_RECORDS, seed.0, 18, 3);
+        let programs: Vec<&Program> = s.submissions.iter().map(|(_, p)| p).collect();
+        let naive = naive_outputs(&cfg, SHARDS, &programs);
+
+        let queue = ServeQueue::start(ServeConfig {
+            cfg: cfg.clone(),
+            shards: SHARDS,
+            objective: Objective::Edp,
+            n_records: N_RECORDS,
+            max_round: 6,
+            cache_capacity: 512,
+            admission: AdmissionPolicy::Fair,
+            batch: BatchPolicy::Adaptive { target_p95: 50e-3 },
+        });
+        // submit the whole adversarial pattern before waiting on anything
+        let tickets: Vec<_> = s
+            .submissions
+            .iter()
+            .map(|(t, p)| queue.submit(*t, p.clone()).expect("geometry matches"))
+            .collect();
+        let reports: Vec<_> = tickets
+            .into_iter()
+            .map(|t| t.wait().expect("served"))
+            .collect();
+
+        // bit-identity: every program matches its sequential unfused run
+        for ((rep, want), (tenant, _)) in reports.iter().zip(&naive).zip(&s.submissions) {
+            if &rep.outputs != want {
+                eprintln!("tenant {tenant} diverged from naive execution");
+                return false;
+            }
+        }
+        // ground truth double-check on the filter step
+        for (rep, want) in reports.iter().zip(&s.expected_matches) {
+            if rep.outputs[s.filter_step] != StepOutput::Matches(want.clone()) {
+                return false;
+            }
+        }
+
+        // starvation-freedom: no light program may be served after the
+        // heavy tenant's backlog has fully drained
+        let heavy_last = reports[..18].iter().map(|r| r.round).max().unwrap();
+        let light_last = reports[18..].iter().map(|r| r.round).max().unwrap();
+        if light_last > heavy_last {
+            eprintln!("light tenants starved: light last round {light_last} vs heavy {heavy_last}");
+            return false;
+        }
+        // the flood cannot fit one round, so fairness had work to do
+        heavy_last >= 2
+    });
+}
+
+/// A random single-tenant stream with fairness + adaptive batching + a
+/// DELIBERATELY tiny cache (constant eviction pressure) stays
+/// bit-identical to sequential unfused execution.  Per-tenant FIFO is
+/// what WFQ must preserve; eviction may only ever cost recomputation.
+#[test]
+fn prop_single_tenant_stream_identical_under_eviction_pressure() {
+    let cfg = cfg();
+    Quick::with_cases(6).check::<Seed, _>("identity under eviction", |seed| {
+        let mut rng = Rng::new(seed.0);
+        let mut programs: Vec<Program> =
+            (0..7).map(|_| random_program(&mut rng, N_RECORDS)).collect();
+        // exact repeat + whole-table clobber + re-query: the cache paths
+        programs.push(programs[0].clone());
+        let mut clobber = Program::new(N_RECORDS);
+        let values: Vec<u64> = (0..N_RECORDS).map(|_| rng.below(128)).collect();
+        let all = clobber.all();
+        clobber.load(0, values);
+        clobber.scan(all);
+        programs.push(clobber);
+        programs.push(programs[0].clone());
+
+        let refs: Vec<&Program> = programs.iter().collect();
+        let naive = naive_outputs(&cfg, SHARDS, &refs);
+
+        let queue = ServeQueue::start(ServeConfig {
+            cfg: cfg.clone(),
+            shards: SHARDS,
+            objective: Objective::Edp,
+            n_records: N_RECORDS,
+            max_round: 3,
+            cache_capacity: 4, // tiny: force LRU evictions mid-stream
+            admission: AdmissionPolicy::Fair,
+            batch: BatchPolicy::Adaptive { target_p95: 1e-3 },
+        });
+        let tickets: Vec<_> = programs
+            .iter()
+            .map(|p| queue.submit(0, p.clone()).expect("geometry matches"))
+            .collect();
+        let served: Vec<Vec<StepOutput>> = tickets
+            .into_iter()
+            .map(|t| t.wait().expect("served").outputs)
+            .collect();
+        served == naive
+    });
+}
+
+/// Repeated empty filters are answered by the zero-weight negative
+/// cache, and a content-changing load strands the negative entry.
+#[test]
+fn negative_cache_hits_and_is_invalidated_by_writes() {
+    let cfg = cfg();
+    let mut rng = Rng::new(11);
+    let values: Vec<u64> = (0..N_RECORDS).map(|_| rng.below(128)).collect();
+    let empty_filter = |vals: &[u64]| {
+        let mut p = Program::new(N_RECORDS);
+        let t = p.scratch();
+        let all = p.all();
+        p.load(0, vals.to_vec());
+        p.broadcast(t, 0);
+        p.filter(all, t, Predicate::Lt); // v < 0: never matches
+        p
+    };
+
+    let queue = ServeQueue::start(ServeConfig::new(cfg.clone(), SHARDS, N_RECORDS));
+    let p = empty_filter(&values);
+    let first = queue.submit(0, p.clone()).unwrap().wait().unwrap();
+    assert_eq!(first.outputs[2], StepOutput::Matches(Vec::new()));
+    assert_eq!(first.cached_steps, 0);
+
+    // waiting for the first reply guarantees a separate round: the
+    // repeat is a negative-cache hit and touches no array
+    let second = queue.submit(0, p).unwrap().wait().unwrap();
+    assert_eq!(second.outputs[2], StepOutput::Matches(Vec::new()));
+    assert_eq!(second.cached_steps, 1, "the empty filter came from the cache");
+    assert_eq!(second.measured.energy.total(), 0.0, "nothing touched the array");
+    let m = queue.metrics();
+    assert!(m.negative_hits >= 1, "{}", m.report("serve"));
+
+    // new contents bump every slot version: the stale negative entry can
+    // never serve again, and the recomputed filter is still empty
+    let changed: Vec<u64> = values.iter().map(|v| 127 - v).collect();
+    let third = queue.submit(0, empty_filter(&changed)).unwrap().wait().unwrap();
+    assert_eq!(third.cached_steps, 0, "version bump must strand the negative entry");
+    assert_eq!(third.outputs[2], StepOutput::Matches(Vec::new()));
+}
+
+/// The legacy knobs still exist: FIFO admission + static max_round is
+/// PR 2's scheduler, and it still matches naive execution.
+#[test]
+fn fifo_static_policies_remain_available_and_correct() {
+    let cfg = cfg();
+    let mut rng = Rng::new(5);
+    let programs: Vec<Program> = (0..5).map(|_| random_program(&mut rng, N_RECORDS)).collect();
+    let refs: Vec<&Program> = programs.iter().collect();
+    let naive = naive_outputs(&cfg, SHARDS, &refs);
+
+    let queue = ServeQueue::start(ServeConfig {
+        cfg: cfg.clone(),
+        shards: SHARDS,
+        objective: Objective::Edp,
+        n_records: N_RECORDS,
+        max_round: 4,
+        cache_capacity: 256,
+        admission: AdmissionPolicy::Fifo,
+        batch: BatchPolicy::Static,
+    });
+    let tickets: Vec<_> = programs
+        .iter()
+        .map(|p| queue.submit(0, p.clone()).expect("geometry matches"))
+        .collect();
+    let served: Vec<Vec<StepOutput>> = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("served").outputs)
+        .collect();
+    assert_eq!(served, naive);
+    let m = queue.metrics();
+    assert_eq!(m.quota_hits, 0, "FIFO admission has no quotas");
+    assert_eq!(m.controller_grows + m.controller_shrinks, 0, "static max_round");
+}
