@@ -130,8 +130,8 @@ fn main() {
     println!("=== multi-tenant serving layer ===");
     println!(
         "{TENANTS} tenants x {REPEATS} replays, {N_RECORDS} records of {} bits, \
-         {SHARDS}x {}x{} FeFET shards, scheme: {}\n",
-        cfg.word_bits, cfg.rows, cfg.cols, cfg.scheme.name()
+         {SHARDS}x {}x{} FeFET shards, scheme: {}, fidelity tier: {}\n",
+        cfg.word_bits, cfg.rows, cfg.cols, cfg.scheme.name(), cfg.tier.name()
     );
 
     // --- naive reference: per-program execution (no fusion, dedup, cache)
@@ -256,6 +256,19 @@ fn main() {
     ]);
     t.print();
     println!("\nserve wall time (main wave): {serve_wall:.3} s, {} rounds", m.rounds);
+    println!(
+        "activations served per tier ({} configured): digital {} / analog {} \
+         ({} xval mismatches)",
+        cfg.tier.name(),
+        m.array_digital_activations,
+        m.array_dual_activations - m.array_digital_activations,
+        m.array_xval_mismatches
+    );
+    assert!(
+        m.array_digital_activations > 0,
+        "serve rounds must ride the packed digital path end-to-end"
+    );
+    assert_eq!(m.array_xval_mismatches, 0);
 
     // --- the acceptance criteria, asserted ---
     assert!(

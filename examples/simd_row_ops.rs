@@ -27,7 +27,12 @@ fn main() {
         engine.execute(&CimOp::Write { addr: WordAddr { row: 1, word: w }, value: b[w] }).unwrap();
     }
 
-    println!("=== SIMD row ops: {} x {}-bit lanes per activation ===\n", words, cfg.word_bits);
+    println!("=== SIMD row ops: {} x {}-bit lanes per activation ===", words, cfg.word_bits);
+    println!(
+        "fidelity tier: {} (digital fast path {})\n",
+        engine.tier().name(),
+        if engine.digital_active() { "ACTIVE" } else { "off" }
+    );
 
     engine.array_mut().reset_stats();
     let mut v = VectorEngine::new(&mut engine);
@@ -86,5 +91,22 @@ fn main() {
         fmt_si(cost.energy.total(), "J")
     );
     assert_eq!(idx, want);
+
+    // per-tier accounting: with the default config every dual activation
+    // above rode the bit-packed digital kernel (identical decisions and
+    // modeled costs; only host wall-clock differs)
+    let s = engine.array().stats();
+    println!(
+        "\nactivations served per tier: digital {} / analog {} (of {} total, \
+         {} xval checks, {} mismatches)",
+        s.digital_activations,
+        s.dual_activations - s.digital_activations,
+        s.dual_activations,
+        s.xval_checks,
+        s.xval_mismatches
+    );
+    assert_eq!(s.digital_activations, s.dual_activations, "default tier is digital");
+    assert_eq!(s.xval_mismatches, 0);
+
     println!("\nSIMD VALIDATION PASSED");
 }

@@ -15,6 +15,30 @@ pub struct ArrayStats {
     /// Column accesses on words NOT selected by the operation but sharing
     /// the asserted wordline(s) — the pseudo-CiM columns of scheme 1.
     pub half_selected_cols: u64,
+    /// Dual activations served by the bit-packed digital tier (a subset
+    /// of `dual_activations`; the modeled cost is charged identically).
+    pub digital_activations: u64,
+    /// Sampled digital-vs-analog cross-validation checks run.
+    pub xval_checks: u64,
+    /// Cross-validation checks whose digital decisions diverged from the
+    /// analog pipeline (must stay 0 on a calibrated configuration).
+    pub xval_mismatches: u64,
+}
+
+impl ArrayStats {
+    /// Field-wise sum — used when aggregating stats across engines or
+    /// shards.
+    pub fn merged(&self, other: &ArrayStats) -> ArrayStats {
+        ArrayStats {
+            writes: self.writes + other.writes,
+            reads: self.reads + other.reads,
+            dual_activations: self.dual_activations + other.dual_activations,
+            half_selected_cols: self.half_selected_cols + other.half_selected_cols,
+            digital_activations: self.digital_activations + other.digital_activations,
+            xval_checks: self.xval_checks + other.xval_checks,
+            xval_mismatches: self.xval_mismatches + other.xval_mismatches,
+        }
+    }
 }
 
 /// Bit-accurate FeFET array with analog polarization state.
@@ -27,6 +51,12 @@ pub struct FefetArray {
     pol: Vec<f64>,
     /// Per-cell V_T variation offsets (volts); zeros unless vt_sigma > 0.
     dvt: Vec<f64>,
+    /// Bit-packed digital shadow of `pol` (one u64 per 64 columns per
+    /// row, LSB = lowest column), kept coherent on every write/reset.
+    /// This is the substrate of the `FidelityTier::Digital` fast path.
+    shadow: Vec<u64>,
+    /// u64 words per row in `shadow`.
+    shadow_stride: usize,
     stats: ArrayStats,
 }
 
@@ -39,15 +69,19 @@ impl FefetArray {
         } else {
             vec![0.0; n]
         };
+        let shadow_stride = (cfg.cols + 63) / 64;
         Self {
             params: cfg.device.clone(),
             rows: cfg.rows,
             cols: cfg.cols,
             word_bits: cfg.word_bits,
             // unwritten cells hold -P (HRS, '0') after a FLASH-like global
-            // reset (paper §II.B)
+            // reset (paper §II.B); the shadow plane starts all-zero to
+            // match
             pol: vec![cfg.device.pol_of_bit(false); n],
             dvt,
+            shadow: vec![0u64; cfg.rows * shadow_stride],
+            shadow_stride,
             stats: ArrayStats::default(),
         }
     }
@@ -109,9 +143,17 @@ impl FefetArray {
     }
 
     /// Write one bit (behavioral SET/RESET; counts one write access).
+    /// Keeps the digital shadow plane coherent with the analog state.
     pub fn write_bit(&mut self, row: usize, col: usize, bit: bool) {
         let i = self.idx(row, col);
         self.pol[i] = device::write_bit(&self.params, bit);
+        let w = row * self.shadow_stride + col / 64;
+        let m = 1u64 << (col % 64);
+        if bit {
+            self.shadow[w] |= m;
+        } else {
+            self.shadow[w] &= !m;
+        }
         self.stats.writes += 1;
     }
 
@@ -233,17 +275,68 @@ impl FefetArray {
         col_lo: usize,
         col_hi: usize,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
-        let take = |row: usize, f: &dyn Fn(usize) -> f64| -> Vec<f32> {
-            (col_lo..col_hi)
-                .map(|c| f(self.idx(row, c)) as f32)
-                .collect()
-        };
-        (
-            take(row_a, &|i| self.pol[i]),
-            take(row_b, &|i| self.pol[i]),
-            take(row_a, &|i| self.dvt[i]),
-            take(row_b, &|i| self.dvt[i]),
-        )
+        let mut pol_a = Vec::new();
+        let mut pol_b = Vec::new();
+        let mut dvt_a = Vec::new();
+        let mut dvt_b = Vec::new();
+        self.planes_into(
+            row_a, row_b, col_lo, col_hi, &mut pol_a, &mut pol_b, &mut dvt_a, &mut dvt_b,
+        );
+        (pol_a, pol_b, dvt_a, dvt_b)
+    }
+
+    /// `planes`, but writing into caller-owned buffers (cleared first) —
+    /// the zero-allocation analog hot path reuses engine scratch here.
+    #[allow(clippy::too_many_arguments)]
+    pub fn planes_into(
+        &self,
+        row_a: usize,
+        row_b: usize,
+        col_lo: usize,
+        col_hi: usize,
+        pol_a: &mut Vec<f32>,
+        pol_b: &mut Vec<f32>,
+        dvt_a: &mut Vec<f32>,
+        dvt_b: &mut Vec<f32>,
+    ) {
+        pol_a.clear();
+        pol_b.clear();
+        dvt_a.clear();
+        dvt_b.clear();
+        for c in col_lo..col_hi {
+            let ia = self.idx(row_a, c);
+            let ib = self.idx(row_b, c);
+            pol_a.push(self.pol[ia] as f32);
+            pol_b.push(self.pol[ib] as f32);
+            dvt_a.push(self.dvt[ia] as f32);
+            dvt_b.push(self.dvt[ib] as f32);
+        }
+    }
+
+    /// Bit-packed view of the column window `[col_lo, col_hi)` of a row
+    /// (at most 64 columns, LSB = `col_lo`), straight from the shadow
+    /// plane — no analog access, no stats.
+    pub fn packed_window(&self, row: usize, col_lo: usize, col_hi: usize) -> u64 {
+        debug_assert!(col_lo < col_hi && col_hi <= self.cols);
+        debug_assert!(col_hi - col_lo <= 64);
+        let base = row * self.shadow_stride;
+        let w0 = col_lo / 64;
+        let off = col_lo % 64;
+        let n = col_hi - col_lo;
+        let mut v = self.shadow[base + w0] >> off;
+        if off != 0 && off + n > 64 {
+            v |= self.shadow[base + w0 + 1] << (64 - off);
+        }
+        if n < 64 {
+            v &= (1u64 << n) - 1;
+        }
+        v
+    }
+
+    /// The whole shadow row (one u64 per 64 columns, LSB-first).
+    pub fn shadow_row(&self, row: usize) -> &[u64] {
+        let base = row * self.shadow_stride;
+        &self.shadow[base..base + self.shadow_stride]
     }
 }
 
@@ -341,6 +434,59 @@ mod tests {
         assert!(pa.iter().all(|&x| x > 0.0)); // row 2 all ones
         assert!(pb.iter().all(|&x| x < 0.0)); // row 3 all zeros
         assert!(da.iter().all(|&x| x == 0.0)); // no variation configured
+    }
+
+    #[test]
+    fn shadow_plane_coherent_with_bits() {
+        let mut arr = FefetArray::new(&small_cfg());
+        arr.write_word(1, 0, 0xA5);
+        arr.write_word(1, 3, 0x3C);
+        arr.write_bit(1, 40, true);
+        arr.write_bit(1, 40, false); // reset must clear the shadow too
+        for c in 0..64 {
+            let from_shadow = (arr.packed_window(1, c, c + 1)) & 1 == 1;
+            assert_eq!(from_shadow, arr.bit(1, c), "col {c}");
+        }
+        // packed word view matches the digital word view
+        assert_eq!(arr.packed_window(1, 0, 8), arr.peek_word(1, 0));
+        assert_eq!(arr.packed_window(1, 24, 32), arr.peek_word(1, 3));
+    }
+
+    #[test]
+    fn packed_window_straddles_u64_boundaries() {
+        let mut cfg = SimConfig::square(128, SensingScheme::Current);
+        cfg.word_bits = 32;
+        let mut arr = FefetArray::new(&cfg);
+        // set a known pattern across the 64-bit boundary of the row
+        for (i, c) in (48..80).enumerate() {
+            arr.write_bit(2, c, i % 3 == 0);
+        }
+        let got = arr.packed_window(2, 48, 80);
+        let mut want = 0u64;
+        for i in 0..32 {
+            if i % 3 == 0 {
+                want |= 1 << i;
+            }
+        }
+        assert_eq!(got, want);
+        // full-width window with offset 0
+        assert_eq!(arr.packed_window(2, 64, 128) & 0xFFFF, arr.packed_window(2, 64, 80));
+        assert_eq!(arr.shadow_row(2).len(), 2);
+    }
+
+    #[test]
+    fn planes_into_matches_planes() {
+        let mut cfg = small_cfg();
+        cfg.vt_sigma = 0.02;
+        let mut arr = FefetArray::new(&cfg);
+        arr.write_word(0, 1, 0x5A);
+        let (pa, pb, da, db) = arr.planes(0, 1, 4, 20);
+        let (mut qa, mut qb, mut ea, mut eb) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        arr.planes_into(0, 1, 4, 20, &mut qa, &mut qb, &mut ea, &mut eb);
+        assert_eq!(pa, qa);
+        assert_eq!(pb, qb);
+        assert_eq!(da, ea);
+        assert_eq!(db, eb);
     }
 
     #[test]

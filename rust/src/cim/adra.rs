@@ -1,6 +1,14 @@
 //! The ADRA CiM engine: asymmetric dual-row activation + three-SA sensing
 //! + the Fig. 3(d) compute modules, over either sensing family.
 //!
+//! Activations run through a **tiered kernel** (`SimConfig::tier`, see
+//! DESIGN.md §9): when decisions are provably deterministic the digital
+//! tier serves dual-row ops as packed bitwise ops over the array's
+//! shadow plane (64 columns per instruction, sampled cross-validation
+//! against the analog pipeline); the analog tiers (`Lut`/`Exact`) run a
+//! zero-allocation pipeline through reusable engine scratch.  All tiers
+//! report identical values and modeled costs.
+//!
 //! The analog senseline evaluation is pluggable (`AnalogBackend`): the
 //! behavioral device model serves the fast path; the PJRT runtime backend
 //! (`runtime::PjrtBackend`) executes the AOT JAX/Pallas artifacts for
@@ -41,6 +49,39 @@ pub trait AnalogBackend: Send {
         c_rbl: f64,
     ) -> Vec<f64>;
 
+    /// `dc_isl` into a caller-owned buffer (cleared first).  Backends on
+    /// the hot path override this to avoid the per-activation allocation;
+    /// the default delegates to the allocating variant.
+    #[allow(clippy::too_many_arguments)]
+    fn dc_isl_into(
+        &mut self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f64,
+        vg2: f64,
+        out: &mut Vec<f64>,
+    ) {
+        *out = self.dc_isl(pol_a, pol_b, dvt_a, dvt_b, vg1, vg2);
+    }
+
+    /// `transient_vfinal` into a caller-owned buffer (cleared first).
+    #[allow(clippy::too_many_arguments)]
+    fn transient_vfinal_into(
+        &mut self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f64,
+        vg2: f64,
+        c_rbl: f64,
+        out: &mut Vec<f64>,
+    ) {
+        *out = self.transient_vfinal(pol_a, pol_b, dvt_a, dvt_b, vg1, vg2, c_rbl);
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -68,7 +109,9 @@ impl BehavioralBackend {
         }
     }
 
-    fn transient_table(&mut self, c_rbl: f64) -> &crate::device::lut::TransientTable {
+    /// Build (or rebuild) the transient table for this `c_rbl`; a no-op
+    /// when the cached table is already current.
+    fn ensure_transient(&mut self, c_rbl: f64) {
         let stale = match &self.transient {
             Some(t) => t.c_rbl != c_rbl || t.v0 != self.params.v_read,
             None => true,
@@ -81,7 +124,6 @@ impl BehavioralBackend {
                 c_rbl,
             ));
         }
-        self.transient.as_ref().unwrap()
     }
 }
 
@@ -95,14 +137,28 @@ impl AnalogBackend for BehavioralBackend {
         vg1: f64,
         vg2: f64,
     ) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.dc_isl_into(pol_a, pol_b, dvt_a, dvt_b, vg1, vg2, &mut out);
+        out
+    }
+
+    fn dc_isl_into(
+        &mut self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f64,
+        vg2: f64,
+        out: &mut Vec<f64>,
+    ) {
         let s = self.lut.s(self.params.v_read);
-        (0..pol_a.len())
-            .map(|i| {
-                let fa = self.lut.f(self.lut.u_of(vg1, pol_a[i] as f64, dvt_a[i] as f64));
-                let fb = self.lut.f(self.lut.u_of(vg2, pol_b[i] as f64, dvt_b[i] as f64));
-                (fa + fb) * s
-            })
-            .collect()
+        out.clear();
+        for i in 0..pol_a.len() {
+            let fa = self.lut.f(self.lut.u_of(vg1, pol_a[i] as f64, dvt_a[i] as f64));
+            let fb = self.lut.f(self.lut.u_of(vg2, pol_b[i] as f64, dvt_b[i] as f64));
+            out.push((fa + fb) * s);
+        }
     }
 
     fn transient_vfinal(
@@ -115,19 +171,163 @@ impl AnalogBackend for BehavioralBackend {
         vg2: f64,
         c_rbl: f64,
     ) -> Vec<f64> {
-        let f_sums: Vec<f64> = (0..pol_a.len())
-            .map(|i| {
-                self.lut.f(self.lut.u_of(vg1, pol_a[i] as f64, dvt_a[i] as f64))
-                    + self.lut.f(self.lut.u_of(vg2, pol_b[i] as f64, dvt_b[i] as f64))
-            })
-            .collect();
-        let table = self.transient_table(c_rbl);
-        f_sums.into_iter().map(|f| table.v_final(f)).collect()
+        let mut out = Vec::new();
+        self.transient_vfinal_into(pol_a, pol_b, dvt_a, dvt_b, vg1, vg2, c_rbl, &mut out);
+        out
+    }
+
+    fn transient_vfinal_into(
+        &mut self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f64,
+        vg2: f64,
+        c_rbl: f64,
+        out: &mut Vec<f64>,
+    ) {
+        self.ensure_transient(c_rbl);
+        let table = self.transient.as_ref().expect("transient table built");
+        let lut = &self.lut;
+        out.clear();
+        for i in 0..pol_a.len() {
+            let f = lut.f(lut.u_of(vg1, pol_a[i] as f64, dvt_a[i] as f64))
+                + lut.f(lut.u_of(vg2, pol_b[i] as f64, dvt_b[i] as f64));
+            out.push(table.v_final(f));
+        }
     }
 
     fn name(&self) -> &'static str {
         "behavioral"
     }
+}
+
+/// Exact-model backend (`FidelityTier::Exact`): the closed-form device
+/// equations, no LUT approximation.  Slow; used for validation and as the
+/// reference the faster tiers are pinned against.
+pub struct ExactBackend {
+    params: crate::config::DeviceParams,
+}
+
+impl ExactBackend {
+    pub fn new(params: &crate::config::DeviceParams) -> Self {
+        Self { params: params.clone() }
+    }
+}
+
+impl AnalogBackend for ExactBackend {
+    fn dc_isl(
+        &mut self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f64,
+        vg2: f64,
+    ) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.dc_isl_into(pol_a, pol_b, dvt_a, dvt_b, vg1, vg2, &mut out);
+        out
+    }
+
+    fn dc_isl_into(
+        &mut self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f64,
+        vg2: f64,
+        out: &mut Vec<f64>,
+    ) {
+        let p = &self.params;
+        out.clear();
+        for i in 0..pol_a.len() {
+            out.push(crate::device::senseline_current(
+                p,
+                pol_a[i] as f64,
+                pol_b[i] as f64,
+                vg1,
+                vg2,
+                p.v_read,
+                dvt_a[i] as f64,
+                dvt_b[i] as f64,
+            ));
+        }
+    }
+
+    fn transient_vfinal(
+        &mut self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f64,
+        vg2: f64,
+        c_rbl: f64,
+    ) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.transient_vfinal_into(pol_a, pol_b, dvt_a, dvt_b, vg1, vg2, c_rbl, &mut out);
+        out
+    }
+
+    fn transient_vfinal_into(
+        &mut self,
+        pol_a: &[f32],
+        pol_b: &[f32],
+        dvt_a: &[f32],
+        dvt_b: &[f32],
+        vg1: f64,
+        vg2: f64,
+        c_rbl: f64,
+        out: &mut Vec<f64>,
+    ) {
+        let p = &self.params;
+        out.clear();
+        for i in 0..pol_a.len() {
+            out.push(
+                crate::device::rbl_transient(
+                    p,
+                    pol_a[i] as f64,
+                    pol_b[i] as f64,
+                    vg1,
+                    vg2,
+                    p.v_read,
+                    c_rbl,
+                    dvt_a[i] as f64,
+                    dvt_b[i] as f64,
+                )
+                .v_final,
+            );
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+}
+
+/// Reusable per-engine buffers: the analog pipeline runs allocation-free
+/// after warmup (`planes_into` -> `*_into` backend eval -> `sense_into`).
+#[derive(Default)]
+struct EngineScratch {
+    pol_a: Vec<f32>,
+    pol_b: Vec<f32>,
+    dvt_a: Vec<f32>,
+    dvt_b: Vec<f32>,
+    /// Backend output: I_SL (current sensing) or V_final (voltage).
+    analog: Vec<f64>,
+    /// Per-column sense decisions of the latest activation.
+    sense: Vec<SenseOut>,
+}
+
+/// What one dual-row activation produced: packed operand words straight
+/// from the digital shadow plane, or per-column sense outputs left in the
+/// engine scratch by an analog tier.
+enum Sensed {
+    Digital(u64, u64),
+    Analog,
 }
 
 /// The full ADRA engine.
@@ -140,15 +340,39 @@ pub struct AdraEngine {
     backend: Box<dyn AnalogBackend>,
     /// fast separable device tables for the single-row read path (§Perf).
     lut: crate::device::CellLut,
+    scratch: EngineScratch,
+    /// Digital tier engaged: `cfg.tier == Digital`, `vt_sigma == 0`, and
+    /// the one-time margin check against the analog references passed.
+    digital_ok: bool,
+    /// Digital activations since construction (drives xval sampling).
+    xval_tick: u64,
 }
 
 impl AdraEngine {
-    /// Engine with the behavioral analog backend.
+    /// Every `XVAL_PERIOD`-th digital activation re-runs the analog
+    /// pipeline and compares decisions (`ArrayStats::xval_*`).
+    pub const XVAL_PERIOD: u64 = 64;
+
+    /// Engine with the analog backend selected by `cfg.tier`
+    /// (`Digital`/`Lut` -> LUT behavioral model, `Exact` -> closed form).
+    /// The digital fast path engages only here, after calibration proves
+    /// decisions deterministic.
     pub fn new(cfg: &SimConfig) -> Self {
-        Self::with_backend(cfg, Box::new(BehavioralBackend::new(&cfg.device)))
+        let backend: Box<dyn AnalogBackend> = match cfg.tier {
+            crate::config::FidelityTier::Exact => Box::new(ExactBackend::new(&cfg.device)),
+            _ => Box::new(BehavioralBackend::new(&cfg.device)),
+        };
+        let mut e = Self::with_backend(cfg, backend);
+        if cfg.tier == crate::config::FidelityTier::Digital && cfg.vt_sigma == 0.0 {
+            e.digital_ok = e.margin_check();
+        }
+        e
     }
 
     /// Engine with a custom analog backend (e.g. the PJRT artifact path).
+    /// An explicit backend always runs the analog pipeline — the caller
+    /// asked for that backend to be exercised, so the digital shortcut
+    /// stays off regardless of `cfg.tier`.
     pub fn with_backend(cfg: &SimConfig, backend: Box<dyn AnalogBackend>) -> Self {
         let p = &cfg.device;
         let c_rbl = cfg.c_rbl();
@@ -162,7 +386,59 @@ impl AdraEngine {
             )),
             backend,
             lut: crate::device::CellLut::new(p),
+            scratch: EngineScratch::default(),
+            digital_ok: false,
+            xval_tick: 0,
         }
+    }
+
+    /// The configured fidelity tier.
+    pub fn tier(&self) -> crate::config::FidelityTier {
+        self.cfg.tier
+    }
+
+    /// Is the bit-packed digital fast path serving activations?
+    pub fn digital_active(&self) -> bool {
+        self.digital_ok
+    }
+
+    /// One-time calibration: push the four (A,B) corner vectors (and the
+    /// single-read levels) through THIS engine's analog backend and sense
+    /// banks, and require every decision to decode correctly.  With
+    /// `vt_sigma == 0` the analog pipeline is a pure function of the
+    /// stored bits, so passing here proves the packed digital decisions
+    /// are identical to the analog tier's.
+    fn margin_check(&mut self) -> bool {
+        let p = self.cfg.device.clone();
+        let c_rbl = self.cfg.c_rbl();
+        let mut ok = true;
+        for (a, b) in [(false, false), (true, false), (false, true), (true, true)] {
+            let pol_a = [p.pol_of_bit(a) as f32];
+            let pol_b = [p.pol_of_bit(b) as f32];
+            let z = [0.0f32];
+            let out = match self.cfg.scheme {
+                SensingScheme::Current => {
+                    self.backend.dc_isl_into(
+                        &pol_a, &pol_b, &z, &z, p.v_gread1, p.v_gread2,
+                        &mut self.scratch.analog,
+                    );
+                    self.cur_bank.sense(self.scratch.analog[0])
+                }
+                SensingScheme::VoltagePrecharged | SensingScheme::VoltageDischarged => {
+                    self.backend.transient_vfinal_into(
+                        &pol_a, &pol_b, &z, &z, p.v_gread1, p.v_gread2, c_rbl,
+                        &mut self.scratch.analog,
+                    );
+                    self.volt_bank.sense(self.scratch.analog[0])
+                }
+            };
+            ok &= out.or == (a || b) && out.b == b && out.and == (a && b) && out.a() == a;
+        }
+        // the single-row read decision must be deterministic too
+        let s = self.lut.s(p.v_read);
+        let i_lrs = self.lut.f(self.lut.u_of(p.v_gread2, p.pol_of_bit(true), 0.0)) * s;
+        let i_hrs = self.lut.f(self.lut.u_of(p.v_gread2, p.pol_of_bit(false), 0.0)) * s;
+        ok && self.cur_bank.sense_read(i_lrs) && !self.cur_bank.sense_read(i_hrs)
     }
 
     pub fn cfg(&self) -> &SimConfig {
@@ -198,54 +474,200 @@ impl AdraEngine {
         (lo, lo + self.cfg.word_bits)
     }
 
-    /// One asymmetric dual-row activation + sensing: the per-bit
-    /// SenseOut vector (LSB first) for the addressed word columns.
-    fn activate_and_sense(
-        &mut self,
+    /// Validate one dual-row activation's addressing.
+    fn check_pair(
+        &self,
         row_a: usize,
         row_b: usize,
-        word: usize,
-    ) -> Result<Vec<SenseOut>, EngineError> {
+        col_lo: usize,
+        col_hi: usize,
+    ) -> Result<(), EngineError> {
         if row_a == row_b {
             return Err(EngineError::Unsupported(
                 "dual-row activation requires two distinct rows".into(),
             ));
         }
-        let p = self.cfg.device.clone();
-        let (lo, hi) = self.word_cols(word);
-        // record the array access (stats: dual activation + half-select)
-        let (pol_a, pol_b, dvt_a, dvt_b) = self.array.planes(row_a, row_b, lo, hi);
-        self.note_dual_access(lo, hi);
-        let outs = match self.cfg.scheme {
+        if row_a >= self.cfg.rows
+            || row_b >= self.cfg.rows
+            || col_lo >= col_hi
+            || col_hi > self.cfg.cols
+        {
+            return Err(EngineError::OutOfRange(format!(
+                "rows {row_a}/{row_b} cols {col_lo}..{col_hi} (array {}x{})",
+                self.cfg.rows, self.cfg.cols
+            )));
+        }
+        Ok(())
+    }
+
+    /// Run the zero-allocation analog pipeline for `[lo, hi)` of the row
+    /// pair: planes -> backend eval -> sense bank, all into the engine
+    /// scratch.  Purely computational — no stats.
+    fn fill_sense_analog(&mut self, row_a: usize, row_b: usize, lo: usize, hi: usize) {
+        let vg1 = self.cfg.device.v_gread1;
+        let vg2 = self.cfg.device.v_gread2;
+        self.array.planes_into(
+            row_a,
+            row_b,
+            lo,
+            hi,
+            &mut self.scratch.pol_a,
+            &mut self.scratch.pol_b,
+            &mut self.scratch.dvt_a,
+            &mut self.scratch.dvt_b,
+        );
+        match self.cfg.scheme {
             SensingScheme::Current => {
-                let isl = self.backend.dc_isl(
-                    &pol_a, &pol_b, &dvt_a, &dvt_b, p.v_gread1, p.v_gread2,
+                self.backend.dc_isl_into(
+                    &self.scratch.pol_a,
+                    &self.scratch.pol_b,
+                    &self.scratch.dvt_a,
+                    &self.scratch.dvt_b,
+                    vg1,
+                    vg2,
+                    &mut self.scratch.analog,
                 );
-                self.cur_bank.sense_all(&isl)
+                self.cur_bank.sense_into(&self.scratch.analog, &mut self.scratch.sense);
             }
             SensingScheme::VoltagePrecharged | SensingScheme::VoltageDischarged => {
-                let vf = self.backend.transient_vfinal(
-                    &pol_a, &pol_b, &dvt_a, &dvt_b, p.v_gread1, p.v_gread2,
-                    self.cfg.c_rbl(),
+                let c_rbl = self.cfg.c_rbl();
+                self.backend.transient_vfinal_into(
+                    &self.scratch.pol_a,
+                    &self.scratch.pol_b,
+                    &self.scratch.dvt_a,
+                    &self.scratch.dvt_b,
+                    vg1,
+                    vg2,
+                    c_rbl,
+                    &mut self.scratch.analog,
                 );
-                self.volt_bank.sense_all(&vf)
+                self.volt_bank.sense_into(&self.scratch.analog, &mut self.scratch.sense);
             }
-        };
-        // sanity: the sense bank must produce a consistent (A,B) decode;
-        // an OR=0/AND=1 column means the margins collapsed
-        for (i, o) in outs.iter().enumerate() {
+        }
+    }
+
+    /// Build the sense vector for `[lo, hi)` from the bit-packed shadow
+    /// plane — `or = a | b`, `and = a & b`, 64 columns per instruction.
+    fn fill_sense_digital(&mut self, row_a: usize, row_b: usize, lo: usize, hi: usize) {
+        self.scratch.sense.clear();
+        let mut c = lo;
+        while c < hi {
+            let w = (hi - c).min(64);
+            let a = self.array.packed_window(row_a, c, c + w);
+            let b = self.array.packed_window(row_b, c, c + w);
+            let or = a | b;
+            let and = a & b;
+            for i in 0..w {
+                self.scratch.sense.push(SenseOut {
+                    or: (or >> i) & 1 == 1,
+                    b: (b >> i) & 1 == 1,
+                    and: (and >> i) & 1 == 1,
+                });
+            }
+            c += w;
+        }
+    }
+
+    /// Sanity on the analog decode: an OR=0/AND=1 column means the
+    /// margins collapsed.
+    fn check_margins(&self) -> Result<(), EngineError> {
+        for (i, o) in self.scratch.sense.iter().enumerate() {
             if o.and && !o.or {
                 return Err(EngineError::SenseFailure(format!(
                     "column {i}: AND asserted without OR — margin collapse"
                 )));
             }
         }
-        Ok(outs)
+        Ok(())
+    }
+
+    /// Sampled cross-validation of the digital tier: every
+    /// `XVAL_PERIOD`-th digital activation re-runs the analog pipeline
+    /// over the same window and compares every column's (OR, B, AND)
+    /// decision against the shadow plane.  Counts in `ArrayStats`.
+    fn maybe_cross_validate(&mut self, row_a: usize, row_b: usize, lo: usize, hi: usize) {
+        self.xval_tick += 1;
+        if self.xval_tick % Self::XVAL_PERIOD != 0 {
+            return;
+        }
+        self.fill_sense_analog(row_a, row_b, lo, hi);
+        let mut mismatch = false;
+        for (i, c) in (lo..hi).enumerate() {
+            let a = self.array.packed_window(row_a, c, c + 1) & 1 == 1;
+            let b = self.array.packed_window(row_b, c, c + 1) & 1 == 1;
+            let o = self.scratch.sense[i];
+            if o.or != (a || b) || o.b != b || o.and != (a && b) {
+                mismatch = true;
+            }
+        }
+        let stats = self.array.stats_mut();
+        stats.xval_checks += 1;
+        if mismatch {
+            stats.xval_mismatches += 1;
+        }
+    }
+
+    /// Shared digital-path bookkeeping: tier counter + sampled
+    /// cross-validation.  Every digital activation goes through here.
+    fn digital_preamble(&mut self, row_a: usize, row_b: usize, lo: usize, hi: usize) {
+        self.array.stats_mut().digital_activations += 1;
+        self.maybe_cross_validate(row_a, row_b, lo, hi);
+    }
+
+    /// Shared analog-path activation: zero-allocation pipeline into
+    /// scratch + margin sanity.  Every analog activation goes through
+    /// here.
+    fn analog_activate(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Result<(), EngineError> {
+        self.fill_sense_analog(row_a, row_b, lo, hi);
+        self.check_margins()
+    }
+
+    /// One dual-row activation over `[lo, hi)`: records stats, leaves the
+    /// per-column sense decisions in `scratch.sense` (either tier).
+    fn sense_cols(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Result<(), EngineError> {
+        self.note_dual_access(lo, hi);
+        if self.digital_ok {
+            self.digital_preamble(row_a, row_b, lo, hi);
+            self.fill_sense_digital(row_a, row_b, lo, hi);
+            Ok(())
+        } else {
+            self.analog_activate(row_a, row_b, lo, hi)
+        }
+    }
+
+    /// The scalar-op activation: the digital tier returns the packed
+    /// operand words directly (no per-column materialization at all); the
+    /// analog tiers leave sense outputs in scratch.
+    fn activate(&mut self, row_a: usize, row_b: usize, word: usize) -> Result<Sensed, EngineError> {
+        let (lo, hi) = self.word_cols(word);
+        self.check_pair(row_a, row_b, lo, hi)?;
+        self.note_dual_access(lo, hi);
+        if self.digital_ok {
+            self.digital_preamble(row_a, row_b, lo, hi);
+            let a = self.array.packed_window(row_a, lo, hi);
+            let b = self.array.packed_window(row_b, lo, hi);
+            Ok(Sensed::Digital(a, b))
+        } else {
+            self.analog_activate(row_a, row_b, lo, hi)?;
+            Ok(Sensed::Analog)
+        }
     }
 
     fn note_dual_access(&mut self, lo: usize, hi: usize) {
-        // FefetArray::planes doesn't mutate stats; account the activation
-        // here so both backends are counted identically.
+        // FefetArray::planes_into doesn't mutate stats; account the
+        // activation here so every tier/backend is counted identically.
         let cols = self.array.cols();
         let s = self.array_stats_mut();
         s.dual_activations += 1;
@@ -260,8 +682,9 @@ impl AdraEngine {
     }
 
     /// Public access to one dual-row activation + sensing over a word
-    /// window — used by the vector/SIMD extension (`cim::vector`) and by
-    /// ablation studies.  Counts one array activation.
+    /// window.  Counts one array activation.  Returns an owned vector
+    /// (one allocation per call) — hot paths should prefer
+    /// `activate_cols`, which returns a borrow of the engine scratch.
     pub fn activate_word(
         &mut self,
         row_a: usize,
@@ -270,7 +693,39 @@ impl AdraEngine {
     ) -> Result<Vec<SenseOut>, EngineError> {
         self.check_word(row_a, word)?;
         self.check_word(row_b, word)?;
-        self.activate_and_sense(row_a, row_b, word)
+        let (lo, hi) = self.word_cols(word);
+        self.check_pair(row_a, row_b, lo, hi)?;
+        self.sense_cols(row_a, row_b, lo, hi)?;
+        Ok(self.scratch.sense.clone())
+    }
+
+    /// One dual-row activation sensing an arbitrary column window (the
+    /// wordlines span the whole row anyway): ONE recorded activation,
+    /// `cols - (col_hi - col_lo)` half-selected columns, sense outputs
+    /// for every addressed column.  Returns a borrow of the engine's
+    /// sense scratch — copy out before the next activation.
+    pub fn activate_cols(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        col_lo: usize,
+        col_hi: usize,
+    ) -> Result<&[SenseOut], EngineError> {
+        self.check_pair(row_a, row_b, col_lo, col_hi)?;
+        self.sense_cols(row_a, row_b, col_lo, col_hi)?;
+        Ok(&self.scratch.sense)
+    }
+
+    /// One dual-row activation sensing EVERY column of the row pair —
+    /// the single-call row API the vector engine builds on.  Exactly one
+    /// dual activation and zero half-selected columns are recorded.
+    pub fn activate_row(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+    ) -> Result<&[SenseOut], EngineError> {
+        let cols = self.cfg.cols;
+        self.activate_cols(row_a, row_b, 0, cols)
     }
 
     /// Assemble words from per-bit sense outputs.
@@ -308,13 +763,18 @@ impl AdraEngine {
         v
     }
 
-    /// Standard single-row read through the sensing path (LUT-fast).
+    /// Standard single-row read through the sensing path (LUT-fast; the
+    /// digital tier serves it straight from the shadow plane — the read
+    /// decode was proven deterministic by the margin check).
     fn read_word_sensed(&mut self, addr: WordAddr) -> Result<u64, EngineError> {
         self.check_word(addr.row, addr.word)?;
-        let vg = self.cfg.device.v_gread2;
-        let s = self.lut.s(self.cfg.device.v_read);
         let (lo, hi) = self.word_cols(addr.word);
         self.array.stats_mut().reads += 1;
+        if self.digital_ok {
+            return Ok(self.array.packed_window(addr.row, lo, hi));
+        }
+        let vg = self.cfg.device.v_gread2;
+        let s = self.lut.s(self.cfg.device.v_read);
         let mut v = 0u64;
         for (i, c) in (lo..hi).enumerate() {
             let i_cell = self.lut.f(self.lut.u_of(
@@ -327,6 +787,104 @@ impl AdraEngine {
             }
         }
         Ok(v)
+    }
+
+    /// All-ones mask of a word's width.
+    #[inline]
+    fn word_mask(bits: usize) -> u64 {
+        if bits >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << bits) - 1
+        }
+    }
+
+    /// Two's-complement interpretation of an n-bit word.
+    #[inline]
+    fn signed_of(v: u64, bits: usize) -> i128 {
+        let sign = 1u64 << (bits - 1);
+        if v & sign != 0 {
+            v as i128 - (1i128 << bits)
+        } else {
+            v as i128
+        }
+    }
+
+    /// Evaluate a dual-row op from the packed operand words — the digital
+    /// tier's op derivation, shared by `execute` and the fused datapath.
+    /// Returns `None` for ops that are not dual-row.
+    pub(crate) fn digital_value(op: &CimOp, a: u64, b: u64, word_bits: usize) -> Option<CimValue> {
+        Some(match *op {
+            CimOp::Read2 { .. } => CimValue::Pair(a, b),
+            CimOp::Bool { f, .. } => CimValue::Word(f.apply(a, b, Self::word_mask(word_bits))),
+            // the packed sum equals the ripple chain's (n+1)-bit unsigned
+            // result exactly; sub/compare match its signed semantics
+            CimOp::Add { .. } => CimValue::Sum(a as u128 + b as u128),
+            CimOp::Sub { .. } => {
+                CimValue::Diff(Self::signed_of(a, word_bits) - Self::signed_of(b, word_bits))
+            }
+            CimOp::Compare { .. } => CimValue::Ordering(if a == b {
+                CompareResult::Equal
+            } else if Self::signed_of(a, word_bits) < Self::signed_of(b, word_bits) {
+                CompareResult::Less
+            } else {
+                CompareResult::Greater
+            }),
+            CimOp::Read(_) | CimOp::Write { .. } => return None,
+        })
+    }
+
+    /// Evaluate a dual-row op from per-column sense outputs — the analog
+    /// tiers' op derivation, shared by `execute` and the fused datapath.
+    pub(crate) fn analog_value(op: &CimOp, outs: &[SenseOut]) -> CimValue {
+        match *op {
+            CimOp::Read2 { .. } => {
+                let (a, b) = Self::words_from(outs);
+                CimValue::Pair(a, b)
+            }
+            CimOp::Bool { f, .. } => CimValue::Word(Self::bool_from(f, outs)),
+            CimOp::Add { .. } => CimValue::Sum(ripple_add_sub(outs, false).as_unsigned()),
+            CimOp::Sub { .. } => CimValue::Diff(ripple_add_sub(outs, true).as_signed()),
+            CimOp::Compare { .. } => {
+                let diff = ripple_add_sub(outs, true);
+                CimValue::Ordering(if and_tree_equal(&diff.bits) {
+                    CompareResult::Equal
+                } else if diff.sign() {
+                    CompareResult::Less
+                } else {
+                    CompareResult::Greater
+                })
+            }
+            CimOp::Read(_) | CimOp::Write { .. } => {
+                unreachable!("only dual-row ops go through sensing")
+            }
+        }
+    }
+
+    /// One dual-row activation for the fused datapath: the digital tier
+    /// returns the packed operand words (derive followers with
+    /// `digital_value` — no per-column work at all); the analog tiers
+    /// return `None` with the sense outputs left in the engine scratch
+    /// (read them back with `last_sense`).
+    pub(crate) fn activate_packed(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        word: usize,
+    ) -> Result<Option<(u64, u64)>, EngineError> {
+        self.check_word(row_a, word)?;
+        self.check_word(row_b, word)?;
+        match self.activate(row_a, row_b, word)? {
+            Sensed::Digital(a, b) => Ok(Some((a, b))),
+            Sensed::Analog => Ok(None),
+        }
+    }
+
+    /// Sense outputs of the latest analog activation (valid until the
+    /// next activation; the fused path reads this right after
+    /// `activate_packed` returns `Ok(None)`).
+    pub(crate) fn last_sense(&self) -> &[SenseOut] {
+        &self.scratch.sense
     }
 }
 
@@ -342,56 +900,21 @@ impl Engine for AdraEngine {
                 let v = self.read_word_sensed(addr)?;
                 Ok(CimResult { value: CimValue::Word(v), cost: self.energy.read_cost() })
             }
-            CimOp::Read2 { row_a, row_b, word } => {
+            CimOp::Read2 { row_a, row_b, word }
+            | CimOp::Bool { row_a, row_b, word, .. }
+            | CimOp::Add { row_a, row_b, word }
+            | CimOp::Sub { row_a, row_b, word }
+            | CimOp::Compare { row_a, row_b, word } => {
                 self.check_word(row_a, word)?;
                 self.check_word(row_b, word)?;
-                let outs = self.activate_and_sense(row_a, row_b, word)?;
-                let (a, b) = Self::words_from(&outs);
-                Ok(CimResult { value: CimValue::Pair(a, b), cost: self.energy.cim_cost() })
-            }
-            CimOp::Bool { f, row_a, row_b, word } => {
-                self.check_word(row_a, word)?;
-                self.check_word(row_b, word)?;
-                let outs = self.activate_and_sense(row_a, row_b, word)?;
-                let v = Self::bool_from(f, &outs);
-                Ok(CimResult { value: CimValue::Word(v), cost: self.energy.cim_cost() })
-            }
-            CimOp::Add { row_a, row_b, word } => {
-                self.check_word(row_a, word)?;
-                self.check_word(row_b, word)?;
-                let outs = self.activate_and_sense(row_a, row_b, word)?;
-                let r = ripple_add_sub(&outs, false);
-                Ok(CimResult {
-                    value: CimValue::Sum(r.as_unsigned()),
-                    cost: self.energy.cim_cost(),
-                })
-            }
-            CimOp::Sub { row_a, row_b, word } => {
-                self.check_word(row_a, word)?;
-                self.check_word(row_b, word)?;
-                let outs = self.activate_and_sense(row_a, row_b, word)?;
-                let r = ripple_add_sub(&outs, true);
-                Ok(CimResult {
-                    value: CimValue::Diff(r.as_signed()),
-                    cost: self.energy.cim_cost(),
-                })
-            }
-            CimOp::Compare { row_a, row_b, word } => {
-                self.check_word(row_a, word)?;
-                self.check_word(row_b, word)?;
-                let outs = self.activate_and_sense(row_a, row_b, word)?;
-                let diff = ripple_add_sub(&outs, true);
-                let res = if and_tree_equal(&diff.bits) {
-                    CompareResult::Equal
-                } else if diff.sign() {
-                    CompareResult::Less
-                } else {
-                    CompareResult::Greater
+                let wb = self.cfg.word_bits;
+                let value = match self.activate(row_a, row_b, word)? {
+                    Sensed::Digital(a, b) => {
+                        Self::digital_value(op, a, b, wb).expect("dual-row op")
+                    }
+                    Sensed::Analog => Self::analog_value(op, &self.scratch.sense),
                 };
-                Ok(CimResult {
-                    value: CimValue::Ordering(res),
-                    cost: self.energy.cim_cost(),
-                })
+                Ok(CimResult { value, cost: self.energy.cim_cost() })
             }
         }
     }
@@ -400,6 +923,10 @@ impl Engine for AdraEngine {
     /// pair share one asymmetric activation (`coordinator::fuse`).
     fn execute_fused(&mut self, ops: &[CimOp]) -> Option<Vec<Result<CimResult, EngineError>>> {
         Some(crate::coordinator::fuse::execute_fused(self, ops))
+    }
+
+    fn array_stats(&self) -> Option<crate::array::ArrayStats> {
+        Some(self.array.stats())
     }
 
     fn name(&self) -> &'static str {
@@ -530,6 +1057,96 @@ mod tests {
         assert!(cim.cost.latency > read.cost.latency);
         // but FAR less than two reads (that's the point of the paper)
         assert!(cim.cost.energy.total() < 2.0 * read.cost.energy.total());
+    }
+
+    #[test]
+    fn digital_tier_engages_on_default_config() {
+        let e = engine(SensingScheme::Current);
+        assert_eq!(e.tier(), crate::config::FidelityTier::Digital);
+        assert!(e.digital_active(), "margin check must pass at the paper bias");
+    }
+
+    #[test]
+    fn digital_activations_counted_as_subset() {
+        let mut e = engine(SensingScheme::Current);
+        setup(&mut e, 0x5A, 0x0F);
+        e.array_mut().reset_stats();
+        for _ in 0..5 {
+            e.execute(&CimOp::Bool { f: BoolFn::Or, row_a: 0, row_b: 1, word: 0 }).unwrap();
+        }
+        let s = e.array().stats();
+        assert_eq!(s.dual_activations, 5);
+        assert_eq!(s.digital_activations, 5, "digital tier must serve all of them");
+        assert_eq!(s.xval_mismatches, 0);
+    }
+
+    #[test]
+    fn lut_tier_serves_no_digital_activations() {
+        let mut cfg = SimConfig::square(256, SensingScheme::Current);
+        cfg.word_bits = 8;
+        cfg.tier = crate::config::FidelityTier::Lut;
+        let mut e = AdraEngine::new(&cfg);
+        assert!(!e.digital_active());
+        setup(&mut e, 0x5A, 0x0F);
+        let r = e.execute(&CimOp::Bool { f: BoolFn::Xor, row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert_eq!(r.value, CimValue::Word(0x55));
+        assert_eq!(e.array().stats().digital_activations, 0);
+    }
+
+    #[test]
+    fn explicit_backend_keeps_analog_pipeline() {
+        let cfg = {
+            let mut c = SimConfig::square(64, SensingScheme::Current);
+            c.word_bits = 8;
+            c
+        };
+        let mut e =
+            AdraEngine::with_backend(&cfg, Box::new(BehavioralBackend::new(&cfg.device)));
+        assert!(!e.digital_active(), "explicit backends must be exercised");
+        setup(&mut e, 9, 4);
+        let r = e.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert_eq!(r.value, CimValue::Diff(5));
+        assert_eq!(e.array().stats().digital_activations, 0);
+    }
+
+    #[test]
+    fn cross_validation_samples_and_agrees() {
+        let mut e = engine(SensingScheme::Current);
+        setup(&mut e, 0xA5, 0x3C);
+        let n = 3 * AdraEngine::XVAL_PERIOD;
+        for _ in 0..n {
+            e.execute(&CimOp::Read2 { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        }
+        let s = e.array().stats();
+        assert!(s.xval_checks >= 3, "sampling must have triggered: {s:?}");
+        assert_eq!(s.xval_mismatches, 0, "digital and analog tiers must agree");
+    }
+
+    #[test]
+    fn activate_row_records_one_activation_no_half_selects() {
+        let mut e = engine(SensingScheme::Current);
+        setup(&mut e, 1, 2);
+        e.array_mut().reset_stats();
+        let cols = e.cfg().cols;
+        let outs = e.activate_row(0, 1).unwrap();
+        assert_eq!(outs.len(), cols);
+        let s = e.array().stats();
+        assert_eq!(s.dual_activations, 1);
+        assert_eq!(s.half_selected_cols, 0, "full row: nothing is half-selected");
+    }
+
+    #[test]
+    fn activate_cols_counts_half_selects_once() {
+        let mut e = engine(SensingScheme::Current);
+        e.array_mut().reset_stats();
+        let cols = e.cfg().cols;
+        let outs = e.activate_cols(0, 1, 8, 40).unwrap();
+        assert_eq!(outs.len(), 32);
+        let s = e.array().stats();
+        assert_eq!(s.dual_activations, 1);
+        assert_eq!(s.half_selected_cols, (cols - 32) as u64);
+        assert!(matches!(e.activate_cols(0, 0, 0, 8), Err(EngineError::Unsupported(_))));
+        assert!(matches!(e.activate_cols(0, 1, 8, 8), Err(EngineError::OutOfRange(_))));
     }
 
     #[test]

@@ -229,6 +229,10 @@ impl Engine for BaselineEngine {
         }
     }
 
+    fn array_stats(&self) -> Option<crate::array::ArrayStats> {
+        Some(self.array.stats())
+    }
+
     fn name(&self) -> &'static str {
         "baseline"
     }

@@ -7,7 +7,7 @@ pub mod baseline;
 pub mod ops;
 pub mod vector;
 
-pub use adra::{AdraEngine, AnalogBackend, BehavioralBackend};
+pub use adra::{AdraEngine, AnalogBackend, BehavioralBackend, ExactBackend};
 pub use baseline::BaselineEngine;
 pub use ops::{BoolFn, CimOp, CimResult, CimValue, Engine, EngineError, WordAddr};
 pub use vector::{VectorEngine, VectorResult};

@@ -169,6 +169,13 @@ pub trait Engine: Send {
         None
     }
 
+    /// Snapshot of the engine's array access counters, if it has an
+    /// array (used by the pool to surface per-tier activation counts in
+    /// `RunMetrics` without touching the request hot path).
+    fn array_stats(&self) -> Option<crate::array::ArrayStats> {
+        None
+    }
+
     /// Engine label for metrics/reporting.
     fn name(&self) -> &'static str;
 }

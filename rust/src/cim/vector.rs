@@ -15,7 +15,6 @@ use crate::cim::adra::AdraEngine;
 use crate::cim::ops::{CimValue, EngineError};
 use crate::energy::{EnergyBreakdown, OpCost};
 use crate::logic::{ripple_add_sub, RippleResult};
-use crate::sensing::SenseOut;
 
 /// Vector-op results: per-word values + the single-activation cost.
 #[derive(Clone, Debug)]
@@ -34,31 +33,6 @@ impl<'a> VectorEngine<'a> {
         Self { engine }
     }
 
-    /// One dual-row activation sensing EVERY word of the row pair.
-    fn activate_row(
-        &mut self,
-        row_a: usize,
-        row_b: usize,
-    ) -> Result<Vec<SenseOut>, EngineError> {
-        let words = self.engine.cfg().words_per_row();
-        let mut all = Vec::with_capacity(self.engine.cfg().cols);
-        // one activation per word window is the engine's public unit; for
-        // the row-wide op we sense all windows under a single activation
-        // by reusing the same access and only accounting it once below.
-        for w in 0..words {
-            let outs = self.engine.activate_word(row_a, row_b, w)?;
-            all.extend(outs);
-        }
-        // collapse the stats: `words` activations above were really ONE
-        let cols = self.engine.cfg().cols;
-        let stats = self.engine.array_mut().stats_mut();
-        stats.dual_activations -= (words - 1) as u64;
-        stats.half_selected_cols = stats
-            .half_selected_cols
-            .saturating_sub(((words - 1) * cols) as u64);
-        Ok(all)
-    }
-
     /// Cost of one full-row activation at parallelism P = 1.
     fn row_cost(&self) -> OpCost {
         let m = self.engine.energy_model();
@@ -75,30 +49,35 @@ impl<'a> VectorEngine<'a> {
     }
 
     /// Vector subtract: word_i(row_a) - word_i(row_b) for ALL words, one
-    /// activation.  Returns one signed difference per word.
+    /// activation (`AdraEngine::activate_row` — a real single-access row
+    /// API; no after-the-fact stats surgery).  Returns one signed
+    /// difference per word.
     pub fn sub_row(&mut self, row_a: usize, row_b: usize) -> Result<VectorResult, EngineError> {
-        let outs = self.activate_row(row_a, row_b)?;
         let wb = self.engine.cfg().word_bits;
-        let values = outs
-            .chunks(wb)
-            .map(|w| CimValue::Diff(ripple_add_sub(w, true).as_signed()))
-            .collect();
+        let values: Vec<CimValue> = {
+            let outs = self.engine.activate_row(row_a, row_b)?;
+            outs.chunks(wb)
+                .map(|w| CimValue::Diff(ripple_add_sub(w, true).as_signed()))
+                .collect()
+        };
         Ok(VectorResult { values, cost: self.row_cost() })
     }
 
     /// Vector add over all words, one activation.
     pub fn add_row(&mut self, row_a: usize, row_b: usize) -> Result<VectorResult, EngineError> {
-        let outs = self.activate_row(row_a, row_b)?;
         let wb = self.engine.cfg().word_bits;
-        let values = outs
-            .chunks(wb)
-            .map(|w| CimValue::Sum(ripple_add_sub(w, false).as_unsigned()))
-            .collect();
+        let values: Vec<CimValue> = {
+            let outs = self.engine.activate_row(row_a, row_b)?;
+            outs.chunks(wb)
+                .map(|w| CimValue::Sum(ripple_add_sub(w, false).as_unsigned()))
+                .collect()
+        };
         Ok(VectorResult { values, cost: self.row_cost() })
     }
 
     /// Wide subtraction: operands span `m_words` consecutive words
-    /// (little-endian word order) in each row.  One activation; the carry
+    /// (little-endian word order) in each row.  One activation
+    /// (`AdraEngine::activate_cols` over the word span); the carry
     /// chains across word boundaries.  Result is an (m*word_bits + 1)-bit
     /// signed value.
     pub fn sub_wide(
@@ -111,14 +90,12 @@ impl<'a> VectorEngine<'a> {
         assert!(m_words >= 1);
         let wb = self.engine.cfg().word_bits;
         assert!(m_words * wb <= 127, "wide result must fit i128");
-        let mut sense = Vec::with_capacity(m_words * wb);
-        for w in 0..m_words {
-            sense.extend(self.engine.activate_word(row_a, row_b, word_lo + w)?);
-        }
-        // collapse stats to one activation as in activate_row
-        let stats = self.engine.array_mut().stats_mut();
-        stats.dual_activations -= (m_words - 1) as u64;
-        let r: RippleResult = ripple_add_sub(&sense, true);
+        let lo = word_lo * wb;
+        let hi = lo + m_words * wb;
+        let r: RippleResult = {
+            let sense = self.engine.activate_cols(row_a, row_b, lo, hi)?;
+            ripple_add_sub(sense, true)
+        };
         Ok((r.as_signed(), self.row_cost()))
     }
 
@@ -131,18 +108,22 @@ impl<'a> VectorEngine<'a> {
         word: usize,
     ) -> Result<(usize, usize, OpCost), EngineError> {
         assert!(!rows.is_empty());
+        let wb = self.engine.cfg().word_bits;
+        let lo = word * wb;
         let mut best = rows[0];
         let mut best_idx = 0;
         let mut compares = 0;
         let mut cost = OpCost::default();
         for (i, &row) in rows.iter().enumerate().skip(1) {
-            let outs = self.engine.activate_word(row, best, word)?;
+            let diff = {
+                let outs = self.engine.activate_cols(row, best, lo, lo + wb)?;
+                ripple_add_sub(outs, true)
+            };
             compares += 1;
             cost = cost.then(&OpCost {
                 energy: self.engine.energy_model().cim_cost().energy,
                 latency: self.engine.energy_model().t_cim(),
             });
-            let diff = ripple_add_sub(&outs, true);
             if !diff.sign() && !diff.is_zero() {
                 best = row;
                 best_idx = i;
@@ -251,6 +232,38 @@ mod tests {
         let (diff, _) = v.sub_wide(4, 5, 0, 3).unwrap();
         assert_eq!(diff, (a as i128) - (b as i128));
         assert!(diff < 0);
+    }
+
+    /// Regression for the old per-word loop + stats fix-up hack: a
+    /// row-wide op must record exactly ONE dual activation and ZERO
+    /// half-selected columns (the whole row computes), and a wide op must
+    /// half-select exactly the columns outside its word span — counted
+    /// once, not once per word.
+    #[test]
+    fn row_wide_ops_record_exact_stats() {
+        let cfg = cfg();
+        let mut e = AdraEngine::new(&cfg);
+        e.array_mut().reset_stats();
+        {
+            let mut v = VectorEngine::new(&mut e);
+            v.sub_row(0, 1).unwrap();
+        }
+        let s = e.array().stats();
+        assert_eq!(s.dual_activations, 1, "one activation for the whole row");
+        assert_eq!(s.half_selected_cols, 0, "full row: no half-selects");
+
+        e.array_mut().reset_stats();
+        {
+            let mut v = VectorEngine::new(&mut e);
+            v.sub_wide(0, 1, 1, 3).unwrap(); // 3 x 8-bit words of a 64-col row
+        }
+        let s = e.array().stats();
+        assert_eq!(s.dual_activations, 1, "one activation for the wide op");
+        assert_eq!(
+            s.half_selected_cols,
+            (cfg.cols - 3 * cfg.word_bits) as u64,
+            "half-selects counted once for the unspanned columns"
+        );
     }
 
     #[test]

@@ -6,4 +6,4 @@ pub mod sim;
 pub mod toml;
 
 pub use device::{DeviceParams, N_COLS, N_SWEEP};
-pub use sim::{SensingScheme, SimConfig};
+pub use sim::{FidelityTier, SensingScheme, SimConfig};

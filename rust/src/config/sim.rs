@@ -43,6 +43,53 @@ impl SensingScheme {
     }
 }
 
+/// How faithfully dual-row activations are evaluated (the tiered
+/// activation kernel).  All tiers produce identical digital decisions and
+/// charge identical modeled `OpCost`s — they differ only in host
+/// wall-clock cost:
+///
+/// * `Digital` — bit-packed fast path over the array's shadow plane
+///   (`or = a | b`, `and = a & b`, 64 columns per instruction).  Engaged
+///   only when decisions are provably deterministic (`vt_sigma == 0` and
+///   a one-time margin check against the analog references passes);
+///   otherwise the engine silently falls back to `Lut`.  Sampled
+///   cross-validation re-runs the analog pipeline every Nth activation
+///   and counts mismatches in `ArrayStats`.
+/// * `Lut` — the separable `CellLut` analog pipeline (< 1e-5 relative to
+///   the exact model), zero-allocation via engine scratch buffers.
+/// * `Exact` — the closed-form device model
+///   (`device::{senseline_current, rbl_transient}`), for validation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FidelityTier {
+    Digital,
+    Lut,
+    Exact,
+}
+
+impl FidelityTier {
+    pub const ALL: [FidelityTier; 3] =
+        [FidelityTier::Digital, FidelityTier::Lut, FidelityTier::Exact];
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "digital" => Ok(Self::Digital),
+            "lut" => Ok(Self::Lut),
+            "exact" => Ok(Self::Exact),
+            other => Err(format!(
+                "unknown fidelity tier {other:?} (expected digital|lut|exact)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Digital => "digital",
+            Self::Lut => "lut",
+            Self::Exact => "exact",
+        }
+    }
+}
+
 /// Full engine configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -54,6 +101,10 @@ pub struct SimConfig {
     /// Word width in bits.
     pub word_bits: usize,
     pub scheme: SensingScheme,
+    /// Activation-kernel fidelity tier (see [`FidelityTier`]).  `Digital`
+    /// is the default; it self-disables when `vt_sigma > 0` or the margin
+    /// check fails, so results are tier-invariant by construction.
+    pub tier: FidelityTier,
     /// sigma of per-cell V_T variation (volts); 0 disables Monte-Carlo.
     pub vt_sigma: f64,
     /// PRNG seed for variation and workloads.
@@ -76,6 +127,7 @@ impl Default for SimConfig {
             cols: 1024,
             word_bits: 32,
             scheme: SensingScheme::Current,
+            tier: FidelityTier::Digital,
             vt_sigma: 0.0,
             seed: 0xADA_2022,
             workers: 4,
@@ -134,6 +186,7 @@ impl SimConfig {
             cols: doc.usize_or("array.cols", d.cols)?,
             word_bits: doc.usize_or("array.word_bits", d.word_bits)?,
             scheme: SensingScheme::parse(doc.str_or("array.scheme", "current")?)?,
+            tier: FidelityTier::parse(doc.str_or("sim.tier", "digital")?)?,
             vt_sigma: doc.f64_or("array.vt_sigma", d.vt_sigma)?,
             seed: doc.usize_or("sim.seed", d.seed as usize)? as u64,
             workers: doc.usize_or("coordinator.workers", d.workers)?,
@@ -216,5 +269,16 @@ mod tests {
     #[test]
     fn toml_bad_scheme_fails() {
         assert!(SimConfig::from_toml("[array]\nscheme = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn tier_parsing_and_default() {
+        assert_eq!(SimConfig::default().tier, FidelityTier::Digital);
+        assert_eq!(FidelityTier::parse("lut").unwrap(), FidelityTier::Lut);
+        assert_eq!(FidelityTier::parse("exact").unwrap(), FidelityTier::Exact);
+        assert!(FidelityTier::parse("analog").is_err());
+        let cfg = SimConfig::from_toml("[sim]\ntier = \"exact\"\n").unwrap();
+        assert_eq!(cfg.tier, FidelityTier::Exact);
+        assert!(SimConfig::from_toml("[sim]\ntier = \"nope\"\n").is_err());
     }
 }

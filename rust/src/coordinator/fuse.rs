@@ -15,9 +15,8 @@
 //! property-tested.
 
 use crate::cim::adra::AdraEngine;
-use crate::cim::ops::{BoolFn, CimOp, CimResult, CimValue, Engine, EngineError};
+use crate::cim::ops::{CimOp, CimResult, Engine, EngineError};
 use crate::energy::OpCost;
-use crate::logic::{and_tree_equal, ripple_add_sub, CompareResult};
 use crate::sensing::SenseOut;
 
 /// One step of a fused execution plan.
@@ -82,56 +81,10 @@ pub fn fused_followers(plan: &[PlanStep]) -> usize {
         .sum()
 }
 
-/// Derive one op's result from a shared sense vector.
+/// Derive one op's result from a shared sense vector (the analog tiers'
+/// path; semantics centralized in `AdraEngine::analog_value`).
 fn derive(op: &CimOp, outs: &[SenseOut], cost: OpCost) -> CimResult {
-    let value = match *op {
-        CimOp::Read2 { .. } => {
-            let mut a = 0u64;
-            let mut b = 0u64;
-            for (i, o) in outs.iter().enumerate() {
-                if o.a() {
-                    a |= 1 << i;
-                }
-                if o.b {
-                    b |= 1 << i;
-                }
-            }
-            CimValue::Pair(a, b)
-        }
-        CimOp::Bool { f, .. } => {
-            let mut v = 0u64;
-            for (i, o) in outs.iter().enumerate() {
-                let bit = match f {
-                    BoolFn::And => o.and,
-                    BoolFn::Or => o.or,
-                    BoolFn::Nand => !o.and,
-                    BoolFn::Nor => !o.or,
-                    BoolFn::Xor => o.xor(),
-                    BoolFn::Xnor => !o.xor(),
-                    BoolFn::AndNot => o.a() && !o.b,
-                    BoolFn::OrNot => o.a() || !o.b,
-                };
-                if bit {
-                    v |= 1 << i;
-                }
-            }
-            CimValue::Word(v)
-        }
-        CimOp::Add { .. } => CimValue::Sum(ripple_add_sub(outs, false).as_unsigned()),
-        CimOp::Sub { .. } => CimValue::Diff(ripple_add_sub(outs, true).as_signed()),
-        CimOp::Compare { .. } => {
-            let diff = ripple_add_sub(outs, true);
-            CimValue::Ordering(if and_tree_equal(&diff.bits) {
-                CompareResult::Equal
-            } else if diff.sign() {
-                CompareResult::Less
-            } else {
-                CompareResult::Greater
-            })
-        }
-        _ => unreachable!("only dual-row ops are fused"),
-    };
-    CimResult { value, cost }
+    CimResult { value: AdraEngine::analog_value(op, outs), cost }
 }
 
 /// Cost of a fused-group follower given the group's full activation cost:
@@ -168,16 +121,30 @@ pub fn execute_fused(
                 results[i] = Some(engine.execute(&ops[i]));
             }
             PlanStep::Fused { row_a, row_b, word, indices } => {
-                match engine.activate_word(row_a, row_b, word) {
+                // one activation serves the whole group allocation-free:
+                // the digital tier hands back the two packed operand
+                // words and every follower derives by word arithmetic;
+                // the analog tiers leave sense outputs in the engine
+                // scratch and followers derive from that borrow
+                let wb = engine.cfg().word_bits;
+                match engine.activate_packed(row_a, row_b, word) {
                     Err(e) => {
                         for &i in &indices {
                             results[i] = Some(Err(e.clone()));
                         }
                     }
-                    Ok(outs) => {
+                    Ok(Some((a, b))) => {
                         for (k, &i) in indices.iter().enumerate() {
                             let cost = if k == 0 { full } else { follower };
-                            results[i] = Some(Ok(derive(&ops[i], &outs, cost)));
+                            let value = AdraEngine::digital_value(&ops[i], a, b, wb)
+                                .expect("only dual-row ops are fused");
+                            results[i] = Some(Ok(CimResult { value, cost }));
+                        }
+                    }
+                    Ok(None) => {
+                        for (k, &i) in indices.iter().enumerate() {
+                            let cost = if k == 0 { full } else { follower };
+                            results[i] = Some(Ok(derive(&ops[i], engine.last_sense(), cost)));
                         }
                     }
                 }

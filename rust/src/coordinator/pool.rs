@@ -275,6 +275,17 @@ fn run_group(
         .collect()
 }
 
+/// Metrics snapshot with the engine's array counters attached (per-tier
+/// activation split included) — collected only on `Stats` requests, so
+/// the request hot path never pays for it.
+fn snapshot(engine: &dyn Engine, metrics: &RunMetrics) -> RunMetrics {
+    let mut m = metrics.clone();
+    if let Some(s) = engine.array_stats() {
+        m.array = s;
+    }
+    m
+}
+
 fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: usize) {
     let mut metrics = RunMetrics::default();
     let mut batch: Vec<(Request, Sender<Response>)> = Vec::with_capacity(max_batch);
@@ -284,7 +295,7 @@ fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: 
         match rx.recv() {
             Err(_) => return, // disconnected: shutdown
             Ok(WorkerMsg::Stats(tx)) => {
-                let _ = tx.send(metrics.clone());
+                let _ = tx.send(snapshot(&*engine, &metrics));
                 continue;
             }
             Ok(WorkerMsg::Work(req, tx)) => batch.push((req, tx)),
@@ -302,7 +313,7 @@ fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: 
             match rx.try_recv() {
                 Ok(WorkerMsg::Work(req, tx)) => batch.push((req, tx)),
                 Ok(WorkerMsg::Stats(tx)) => {
-                    let _ = tx.send(metrics.clone());
+                    let _ = tx.send(snapshot(&*engine, &metrics));
                 }
                 Ok(msg @ WorkerMsg::Batch(..)) | Ok(msg @ WorkerMsg::FusedBatch(..)) => {
                     // execute inline to preserve arrival order: first
@@ -451,6 +462,26 @@ mod tests {
         let m = coord.metrics();
         assert_eq!(m.ops, 10);
         assert!(m.energy.total() > 0.0);
+    }
+
+    #[test]
+    fn metrics_surface_per_tier_activation_split() {
+        let cfg = cfg();
+        let coord = Coordinator::adra(&cfg, 2);
+        for shard in 0..2 {
+            coord
+                .call(shard, CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 9 })
+                .unwrap();
+            coord
+                .call(shard, CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 5 })
+                .unwrap();
+            coord.call(shard, CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        }
+        let m = coord.metrics();
+        assert_eq!(m.array.dual_activations, 2, "one dual op per shard");
+        assert_eq!(m.array.digital_activations, 2, "default tier is digital");
+        assert_eq!(m.array.xval_mismatches, 0);
+        assert!(m.array.writes >= 4);
     }
 
     #[test]

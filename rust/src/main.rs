@@ -105,12 +105,20 @@ fn cmd_run(args: &[String]) -> i32 {
         .opt("shards", Some("4"), "array shards / worker threads")
         .opt("mix", Some("sub"), "op mix: sub|balanced|subheavy")
         .opt("seed", Some("42"), "workload seed")
+        .opt("tier", Some("digital"), "activation fidelity tier: digital|lut|exact")
         .flag("baseline", "run the near-memory baseline engine instead");
     let p = parse_or_exit(&parser, args);
 
     let mut cfg = SimConfig::default();
     cfg.scheme = match SensingScheme::parse(p.get_or("scheme", "current")) {
         Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    cfg.tier = match adra::config::FidelityTier::parse(p.get_or("tier", "digital")) {
+        Ok(t) => t,
         Err(e) => {
             eprintln!("{e}");
             return 2;

@@ -119,6 +119,10 @@ pub struct RunMetrics {
     pub model_latency: LatencyHistogram,
     /// Wall-clock time of the run (set by the driver).
     pub wall_seconds: f64,
+    /// Array access counters snapshotted from the engine(s) at collection
+    /// time (`Engine::array_stats`) — includes the per-tier activation
+    /// split of the tiered activation kernel.
+    pub array: crate::array::ArrayStats,
 }
 
 impl RunMetrics {
@@ -138,6 +142,7 @@ impl RunMetrics {
         self.energy = self.energy.add(&other.energy);
         self.model_latency.merge(&other.model_latency);
         self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
+        self.array = self.array.merged(&other.array);
     }
 
     /// Modeled ops/s implied by the summed device latency.
@@ -154,7 +159,8 @@ impl RunMetrics {
         format!(
             "{label}: {} ops ({} errors), modeled energy {:.3} nJ, \
              mean op latency {:.3} ns, p50/p95/p99 {:.0}/{:.0}/{:.0} ns, \
-             modeled throughput {:.2} Mop/s, wall {:.3} s",
+             modeled throughput {:.2} Mop/s, \
+             activations {} ({} digital), wall {:.3} s",
             self.ops,
             self.errors,
             self.energy.total() * 1e9,
@@ -163,6 +169,8 @@ impl RunMetrics {
             self.model_latency.percentile_ns(95.0),
             self.model_latency.percentile_ns(99.0),
             self.modeled_throughput() / 1e6,
+            self.array.dual_activations,
+            self.array.digital_activations,
             self.wall_seconds,
         )
     }

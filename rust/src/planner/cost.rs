@@ -299,6 +299,42 @@ mod tests {
         assert_eq!(lat.choose(&op_sub()).executor, Executor::Adra);
     }
 
+    /// The fidelity tier is a host wall-clock optimization only: the
+    /// price tables — and therefore every routing decision — must be
+    /// bit-identical across `Digital`/`Lut`/`Exact`.
+    #[test]
+    fn fidelity_tier_leaves_price_tables_unchanged() {
+        use crate::config::FidelityTier;
+        for scheme in SensingScheme::ALL {
+            let mut cfg = SimConfig::square(1024, scheme);
+            let tables: Vec<PlanCostModel> = FidelityTier::ALL
+                .iter()
+                .map(|&t| {
+                    cfg.tier = t;
+                    PlanCostModel::new(&cfg, Objective::Edp)
+                })
+                .collect();
+            for m in &tables[1..] {
+                for class in [OpClass::Read, OpClass::Write, OpClass::Commutative, OpClass::Dual] {
+                    assert_eq!(
+                        tables[0].adra().price_class(class),
+                        m.adra().price_class(class),
+                        "{scheme:?} {class:?}"
+                    );
+                    assert_eq!(
+                        tables[0].baseline().price_class(class),
+                        m.baseline().price_class(class),
+                        "{scheme:?} {class:?}"
+                    );
+                    assert_eq!(
+                        tables[0].choose_class(class).executor,
+                        m.choose_class(class).executor
+                    );
+                }
+            }
+        }
+    }
+
     #[test]
     fn commutative_ties_break_to_adra() {
         let m = model(SensingScheme::Current, Objective::Energy);

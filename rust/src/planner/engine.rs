@@ -42,6 +42,13 @@ impl PlannedEngine {
     pub fn baseline_engine(&self) -> &BaselineEngine {
         &self.baseline
     }
+
+    /// The fidelity tier the ADRA half runs at (threaded from
+    /// `SimConfig::tier`; the price tables are tier-invariant — see
+    /// `planner::cost`).
+    pub fn tier(&self) -> crate::config::FidelityTier {
+        self.adra.tier()
+    }
 }
 
 impl Engine for PlannedEngine {
@@ -72,6 +79,17 @@ impl Engine for PlannedEngine {
             }
         }
         Some(results)
+    }
+
+    fn array_stats(&self) -> Option<crate::array::ArrayStats> {
+        // both halves touch real array state; report the sum so the pool
+        // sees every access (the baseline mirror's writes included)
+        Some(
+            self.adra
+                .array()
+                .stats()
+                .merged(&self.baseline.array().stats()),
+        )
     }
 
     fn name(&self) -> &'static str {
@@ -141,6 +159,28 @@ mod tests {
         assert_eq!(r2.value, CimValue::Diff(25));
         assert_eq!(e2.adra_engine().array().stats().dual_activations, 1);
         assert_eq!(e2.baseline_engine().array().stats().reads, 0);
+    }
+
+    /// The digital fast path must ride through the planned engine
+    /// untouched: default tier serves dual ops digitally, and the
+    /// reported costs equal the analog tiers' (tier-invariant pricing).
+    #[test]
+    fn digital_tier_rides_through_planned_engine() {
+        let cfg = cfg(SensingScheme::Current);
+        assert_eq!(cfg.tier, crate::config::FidelityTier::Digital);
+        let mut e = PlannedEngine::new(&cfg, Objective::Edp);
+        assert_eq!(e.tier(), crate::config::FidelityTier::Digital);
+        e.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 40 }).unwrap();
+        e.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 15 }).unwrap();
+        let r = e.execute(&CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert_eq!(r.value, CimValue::Diff(25));
+        let s = e.adra_engine().array().stats();
+        assert_eq!(s.dual_activations, 1);
+        assert_eq!(s.digital_activations, 1, "dual op must ride the packed path");
+        // aggregated stats include the baseline mirror's writes
+        let merged = e.array_stats().unwrap();
+        assert_eq!(merged.digital_activations, 1);
+        assert!(merged.writes >= 4);
     }
 
     #[test]

@@ -59,6 +59,13 @@ impl CurrentSenseBank {
         i_sl.iter().map(|&i| self.sense(i)).collect()
     }
 
+    /// `sense_all` into a caller-owned buffer (cleared first) — the
+    /// zero-allocation engine hot path reuses scratch here.
+    pub fn sense_into(&self, i_sl: &[f64], out: &mut Vec<SenseOut>) {
+        out.clear();
+        out.extend(i_sl.iter().map(|&i| self.sense(i)));
+    }
+
     /// Single-row read decision (standard memory read).
     #[inline]
     pub fn sense_read(&self, i_cell: f64) -> bool {
@@ -115,6 +122,10 @@ mod tests {
         for (i, o) in outs.iter().enumerate() {
             assert_eq!(*o, bank.sense(levels[i]));
         }
+        // slice-based variant is pointwise-identical and reuses capacity
+        let mut buf = vec![SenseOut::default(); 99];
+        bank.sense_into(&levels, &mut buf);
+        assert_eq!(buf, outs);
     }
 
     #[test]

@@ -35,6 +35,13 @@ impl VoltageSenseBank {
         v_final.iter().map(|&v| self.sense(v)).collect()
     }
 
+    /// `sense_all` into a caller-owned buffer (cleared first) — the
+    /// zero-allocation engine hot path reuses scratch here.
+    pub fn sense_into(&self, v_final: &[f64], out: &mut Vec<SenseOut>) {
+        out.clear();
+        out.extend(v_final.iter().map(|&v| self.sense(v)));
+    }
+
     /// Single-row read decision: '1' discharges below the read reference.
     #[inline]
     pub fn sense_read(&self, v_final: f64) -> bool {
@@ -73,6 +80,22 @@ mod tests {
                 assert_eq!(out.a(), a, "A at ({a},{b})");
             }
         }
+    }
+
+    #[test]
+    fn sense_all_matches_pointwise() {
+        let p = DeviceParams::default();
+        let c = 1024.0 * p.c_rbl_cell;
+        let bank = VoltageSenseBank::new(VoltageRefs::derive(&p, p.v_gread1, p.v_gread2, c));
+        let vf: Vec<f64> = (0..16).map(|i| 0.05 * i as f64).collect();
+        let outs = bank.sense_all(&vf);
+        let mut buf = Vec::new();
+        bank.sense_into(&vf, &mut buf);
+        assert_eq!(outs.len(), 16);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(*o, bank.sense(vf[i]));
+        }
+        assert_eq!(buf, outs, "sense_into must be pointwise-identical");
     }
 
     #[test]

@@ -54,6 +54,13 @@ pub struct ServeMetrics {
     pub cache_swept: u64,
     /// Cache hits served by zero-weight negative (empty-filter) entries.
     pub negative_hits: u64,
+    /// Engine-level dual activations across all shards (snapshot of the
+    /// pool's `RunMetrics::array` at the last round).
+    pub array_dual_activations: u64,
+    /// Of those, activations served by the bit-packed digital tier.
+    pub array_digital_activations: u64,
+    /// Digital-vs-analog cross-validation mismatches (must stay 0).
+    pub array_xval_mismatches: u64,
     /// Submission-to-reply wall latency per tenant.
     pub tenant_latency: HashMap<usize, LatencyHistogram>,
 }
@@ -100,7 +107,8 @@ impl ServeMetrics {
              cache {} hits / {} misses ({:.1}% hit rate, {} negative hits, \
              {} evictions, {} swept), {} invalidating writes, \
              fairness {} quota hits / {} deferrals, \
-             controller max_round {} ({}+ {}- {}=)",
+             controller max_round {} ({}+ {}- {}=), \
+             tiered kernel {}/{} activations digital ({} xval mismatches)",
             self.programs,
             self.rounds,
             self.batch_occupancy(),
@@ -125,6 +133,9 @@ impl ServeMetrics {
             self.controller_grows,
             self.controller_shrinks,
             self.controller_holds,
+            self.array_digital_activations,
+            self.array_dual_activations,
+            self.array_xval_mismatches,
         )
     }
 
@@ -192,6 +203,8 @@ mod tests {
         m.current_max_round = 9;
         m.cache_evictions = 5;
         m.negative_hits = 1;
+        m.array_dual_activations = 12;
+        m.array_digital_activations = 11;
         m.record_latency(7, 3e-6);
         m.record_latency(7, 5e-6);
         let r = m.report("serve");
@@ -201,6 +214,7 @@ mod tests {
         assert!(r.contains("controller max_round 9"), "{r}");
         assert!(r.contains("5 evictions"), "{r}");
         assert!(r.contains("1 negative hits"), "{r}");
+        assert!(r.contains("tiered kernel 11/12 activations digital"), "{r}");
         let t = m.tenant_report();
         assert_eq!(t.len(), 1);
         assert!(t[0].starts_with("tenant 7: 2 programs"));

@@ -365,6 +365,11 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
             m.controller_shrinks = controller.shrinks;
             m.controller_holds = controller.holds;
             m.current_max_round = controller.max_round() as u64;
+            // engine-level per-tier activation split (pool snapshot, not
+            // a per-round delta)
+            m.array_dual_activations = coord_metrics.array.dual_activations;
+            m.array_digital_activations = coord_metrics.array.digital_activations;
+            m.array_xval_mismatches = coord_metrics.array.xval_mismatches;
         }
 
         // assemble per program, splice cached outputs, memoize fresh ones

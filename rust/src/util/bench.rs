@@ -119,6 +119,49 @@ impl Bench {
     }
 }
 
+/// Serialize bench results as a JSON array of
+/// `{"name", "ns_per_iter", "p10_ns", "p90_ns", "iters"}` objects — the
+/// machine-readable companion of the printed table, consumed by the perf
+/// trajectory (CI uploads `BENCH_hotpath.json`).
+pub fn to_json(stats: &[BenchStats]) -> String {
+    let mut s = String::from("[\n");
+    for (i, b) in stats.iter().enumerate() {
+        let comma = if i + 1 == stats.len() { "" } else { "," };
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"ns_per_iter\": {:.3}, \"p10_ns\": {:.3}, \
+             \"p90_ns\": {:.3}, \"iters\": {}}}{}\n",
+            json_escape(&b.name),
+            b.median_ns(),
+            b.p10_ns(),
+            b.p90_ns(),
+            b.iters_per_sample,
+            comma
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+/// JSON string escaping (Rust's `{:?}` uses `\u{..}` syntax, which is not
+/// valid JSON).  Non-ASCII passes through raw — JSON is UTF-8.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write bench results to `path` as JSON (see [`to_json`]).
+pub fn write_json(path: &str, stats: &[BenchStats]) -> std::io::Result<()> {
+    std::fs::write(path, to_json(stats))
+}
+
 /// Optimization barrier. `std::hint::black_box` is stable since 1.66.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -156,6 +199,39 @@ mod tests {
         assert!(stats.median_ns() > 0.0);
         assert!(stats.throughput() > 0.0);
         assert_eq!(stats.samples_ns.len(), 3);
+    }
+
+    #[test]
+    fn json_output_is_well_formed() {
+        let stats = vec![
+            BenchStats {
+                name: "alpha".into(),
+                iters_per_sample: 10,
+                samples_ns: vec![10.0, 12.0, 11.0],
+            },
+            BenchStats {
+                name: "beta".into(),
+                iters_per_sample: 3,
+                samples_ns: vec![5.0],
+            },
+        ];
+        let json = to_json(&stats);
+        assert!(json.starts_with("[\n"));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"name\": \"alpha\""));
+        assert!(json.contains("\"name\": \"beta\""));
+        assert!(json.contains("\"ns_per_iter\": 11.000"));
+        assert!(json.contains("\"iters\": 3"));
+        // exactly one trailing comma between the two records
+        assert_eq!(json.matches("},").count(), 1);
+        // escaping: quotes/backslashes/control chars become valid JSON
+        assert_eq!(json_escape("a\"b\\c\nd µs"), "a\\\"b\\\\c\\u000ad µs");
+
+        let path = std::env::temp_dir().join("bench_json_test.json");
+        let path = path.to_str().unwrap();
+        write_json(path, &stats).unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), json);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

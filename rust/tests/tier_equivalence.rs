@@ -1,0 +1,236 @@
+//! Tiered activation kernel equivalence suite (the acceptance gate of
+//! the bit-packed digital fast path):
+//!
+//!  * every Boolean function, `sub`, `compare`, `read2`, `add`, and plain
+//!    reads produce bit-identical `CimResult`s — value AND reported
+//!    `OpCost` — across `Digital` / `Lut` / `Exact`, on every sensing
+//!    scheme;
+//!  * the digital tier auto-disables when `vt_sigma > 0` (decisions stop
+//!    being deterministic) while values stay correct through the analog
+//!    pipeline;
+//!  * the sampled digital-vs-analog cross-validation counter stays zero
+//!    on the default configuration;
+//!  * row-wide vector ops and fused batches are tier-invariant too.
+
+use adra::cim::{AdraEngine, BoolFn, CimOp, CimValue, Engine, VectorEngine, WordAddr};
+use adra::config::{FidelityTier, SensingScheme, SimConfig};
+use adra::coordinator::fuse::execute_fused;
+use adra::util::rng::Rng;
+use adra::workload::{OpMix, WorkloadGen};
+
+fn cfg(scheme: SensingScheme, tier: FidelityTier) -> SimConfig {
+    let mut c = SimConfig::square(64, scheme);
+    c.word_bits = 8;
+    c.tier = tier;
+    c
+}
+
+fn engines(scheme: SensingScheme) -> Vec<(FidelityTier, AdraEngine)> {
+    FidelityTier::ALL
+        .iter()
+        .map(|&t| (t, AdraEngine::new(&cfg(scheme, t))))
+        .collect()
+}
+
+#[test]
+fn all_ops_bit_identical_across_tiers() {
+    let mut rng = Rng::new(0x7137);
+    for scheme in SensingScheme::ALL {
+        let mut es = engines(scheme);
+        assert!(es[0].1.digital_active(), "{scheme:?}: digital tier must engage");
+        for _ in 0..6 {
+            let (a, b) = (rng.below(256), rng.below(256));
+            let mut ops: Vec<CimOp> = vec![
+                CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: a },
+                CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: b },
+                CimOp::Read(WordAddr { row: 0, word: 0 }),
+                CimOp::Read2 { row_a: 0, row_b: 1, word: 0 },
+                CimOp::Add { row_a: 0, row_b: 1, word: 0 },
+                CimOp::Sub { row_a: 0, row_b: 1, word: 0 },
+                CimOp::Compare { row_a: 0, row_b: 1, word: 0 },
+            ];
+            for f in BoolFn::ALL {
+                ops.push(CimOp::Bool { f, row_a: 0, row_b: 1, word: 0 });
+            }
+            for op in &ops {
+                let reference = es[0].1.execute(op).unwrap();
+                // pin the digital tier against host semantics first
+                if let CimOp::Bool { f, .. } = op {
+                    assert_eq!(
+                        reference.value,
+                        CimValue::Word(f.apply(a, b, 0xFF)),
+                        "{scheme:?} {f:?} a={a:#x} b={b:#x}"
+                    );
+                }
+                for (tier, e) in es.iter_mut().skip(1) {
+                    let got = e.execute(op).unwrap();
+                    assert_eq!(
+                        got.value, reference.value,
+                        "{scheme:?} {tier:?} {op:?} a={a:#x} b={b:#x}"
+                    );
+                    assert_eq!(
+                        got.cost, reference.cost,
+                        "reported OpCost must be tier-invariant: {scheme:?} {tier:?} {op:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn random_workload_identical_across_tiers() {
+    let base = cfg(SensingScheme::Current, FidelityTier::Digital);
+    let mut digital = AdraEngine::new(&base);
+    let mut lut = AdraEngine::new(&cfg(SensingScheme::Current, FidelityTier::Lut));
+    let mut exact = AdraEngine::new(&cfg(SensingScheme::Current, FidelityTier::Exact));
+    let mut gen = WorkloadGen::new(&base, OpMix::balanced(), 9090);
+    for op in gen.batch(800) {
+        let d = digital.execute(&op);
+        let l = lut.execute(&op);
+        let x = exact.execute(&op);
+        match (&d, &l, &x) {
+            (Ok(rd), Ok(rl), Ok(rx)) => {
+                assert_eq!(rd.value, rl.value, "digital vs lut on {op:?}");
+                assert_eq!(rd.value, rx.value, "digital vs exact on {op:?}");
+                assert_eq!(rd.cost, rl.cost, "cost on {op:?}");
+                assert_eq!(rd.cost, rx.cost, "cost on {op:?}");
+            }
+            (Err(_), Err(_), Err(_)) => {}
+            other => panic!("tier divergence on {op:?}: {other:?}"),
+        }
+    }
+    let s = digital.array().stats();
+    assert!(s.digital_activations > 0, "fast path must have served: {s:?}");
+    assert_eq!(s.digital_activations, s.dual_activations);
+    assert_eq!(s.xval_mismatches, 0);
+}
+
+#[test]
+fn digital_tier_auto_disables_with_variation() {
+    let mut c = cfg(SensingScheme::Current, FidelityTier::Digital);
+    c.rows = 256;
+    c.cols = 256;
+    c.vt_sigma = 0.02;
+    let mut e = AdraEngine::new(&c);
+    assert!(!e.digital_active(), "vt_sigma > 0 must disable the digital tier");
+    let mut c_lut = c.clone();
+    c_lut.tier = FidelityTier::Lut;
+    let mut mirror = AdraEngine::new(&c_lut); // same seed -> same variation plane
+    let mut rng = Rng::new(31);
+    for _ in 0..16 {
+        let (a, b) = (rng.below(256), rng.below(256));
+        for eng in [&mut e, &mut mirror] {
+            eng.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: a })
+                .unwrap();
+            eng.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: b })
+                .unwrap();
+        }
+        let r = e.execute(&CimOp::Read2 { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        let m = mirror.execute(&CimOp::Read2 { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert_eq!(r.value, CimValue::Pair(a, b), "analog fallback must stay correct");
+        assert_eq!(r.value, m.value);
+    }
+    assert_eq!(e.array().stats().digital_activations, 0);
+    assert!(e.array().stats().dual_activations > 0);
+}
+
+#[test]
+fn cross_validation_counter_stays_zero_on_default_config() {
+    // default config == default tier (digital); run enough activations
+    // that the sampled cross-validation triggers repeatedly
+    let mut c = SimConfig::default();
+    c.rows = 128;
+    c.cols = 128;
+    c.word_bits = 32;
+    let mut e = AdraEngine::new(&c);
+    assert!(e.digital_active());
+    e.execute(&CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 0xCAFE_F00D })
+        .unwrap();
+    e.execute(&CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 0x1234_5678 })
+        .unwrap();
+    let n = 4 * AdraEngine::XVAL_PERIOD;
+    for i in 0..n {
+        let f = BoolFn::ALL[(i % 8) as usize];
+        e.execute(&CimOp::Bool { f, row_a: 0, row_b: 1, word: 0 }).unwrap();
+    }
+    let s = e.array().stats();
+    assert!(s.xval_checks >= 4, "sampling must have run: {s:?}");
+    assert_eq!(s.xval_mismatches, 0, "digital decisions must match analog: {s:?}");
+}
+
+#[test]
+fn vector_row_ops_identical_across_tiers() {
+    let mut rng = Rng::new(0xBEEF);
+    let mut es = engines(SensingScheme::Current);
+    let words = 64 / 8;
+    for w in 0..words {
+        let (a, b) = (rng.below(256), rng.below(256));
+        for (_, e) in es.iter_mut() {
+            e.execute(&CimOp::Write { addr: WordAddr { row: 2, word: w }, value: a })
+                .unwrap();
+            e.execute(&CimOp::Write { addr: WordAddr { row: 3, word: w }, value: b })
+                .unwrap();
+        }
+    }
+    let results: Vec<_> = es
+        .iter_mut()
+        .map(|(tier, e)| {
+            let (sub, add, wide) = {
+                let mut v = VectorEngine::new(e);
+                (
+                    v.sub_row(2, 3).unwrap(),
+                    v.add_row(2, 3).unwrap(),
+                    v.sub_wide(2, 3, 0, 4).unwrap(),
+                )
+            };
+            (*tier, sub, add, wide)
+        })
+        .collect();
+    let (_, sub0, add0, wide0) = &results[0];
+    for (tier, sub, add, wide) in &results[1..] {
+        assert_eq!(sub.values, sub0.values, "{tier:?} sub_row");
+        assert_eq!(sub.cost, sub0.cost, "{tier:?} sub_row cost");
+        assert_eq!(add.values, add0.values, "{tier:?} add_row");
+        assert_eq!(wide.0, wide0.0, "{tier:?} sub_wide");
+        assert_eq!(wide.1, wide0.1, "{tier:?} sub_wide cost");
+    }
+    // and every tier records the same single-activation stats
+    for (tier, e) in &es {
+        let s = e.array().stats();
+        assert_eq!(s.dual_activations, 3, "{tier:?}: 3 row-wide ops, 3 activations");
+    }
+}
+
+#[test]
+fn fused_batches_identical_across_tiers() {
+    let mut ops = vec![
+        CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 99 },
+        CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 45 },
+    ];
+    for _ in 0..5 {
+        ops.push(CimOp::Sub { row_a: 0, row_b: 1, word: 0 });
+        ops.push(CimOp::Compare { row_a: 0, row_b: 1, word: 0 });
+        ops.push(CimOp::Bool { f: BoolFn::AndNot, row_a: 0, row_b: 1, word: 0 });
+    }
+    let mut results = Vec::new();
+    for tier in FidelityTier::ALL {
+        let mut e = AdraEngine::new(&cfg(SensingScheme::Current, tier));
+        let rs = execute_fused(&mut e, &ops);
+        assert_eq!(e.array().stats().dual_activations, 1, "{tier:?}: one fused activation");
+        results.push((tier, rs));
+    }
+    let (_, ref0) = &results[0];
+    for (tier, rs) in &results[1..] {
+        for (i, (got, want)) in rs.iter().zip(ref0.iter()).enumerate() {
+            match (got, want) {
+                (Ok(g), Ok(w)) => {
+                    assert_eq!(g.value, w.value, "{tier:?} fused op {i}");
+                    assert_eq!(g.cost, w.cost, "{tier:?} fused op {i} cost");
+                }
+                (Err(_), Err(_)) => {}
+                other => panic!("{tier:?} fused divergence at {i}: {other:?}"),
+            }
+        }
+    }
+}
