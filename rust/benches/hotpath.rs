@@ -5,8 +5,9 @@
 //! in `BENCH_hotpath.json` (name, ns/iter, iters) for the perf
 //! trajectory CI uploads.
 
-use adra::cim::{AdraEngine, BoolFn, CimOp, Engine, WordAddr};
+use adra::cim::{AdraEngine, BoolFn, CimOp, Engine, VectorEngine, WordAddr};
 use adra::config::{DeviceParams, FidelityTier, SensingScheme, SimConfig};
+use adra::coordinator::fuse::execute_fused;
 use adra::device;
 use adra::logic::{ripple_add_sub, sense_from_bits};
 use adra::sensing::{CurrentRefs, CurrentSenseBank};
@@ -142,6 +143,136 @@ fn main() {
         lut_ns / digital_ns
     );
 
-    bench::write_json("BENCH_hotpath.json", &all).expect("write BENCH_hotpath.json");
+    // ---- whole-row word-slice kernel vs the per-word PR 4 kernel ----
+    // the new packed row path serves a whole 256/1024-column sub_row from
+    // u64 word slices; the legacy kernel is what PR 4 shipped: one
+    // 64-col window at a time, per-column SenseOut materialization +
+    // ripple per word
+    let mut row_speedup_1024 = 0.0;
+    for cols in [256usize, 1024] {
+        let mut cfg = SimConfig::square(cols, SensingScheme::Current);
+        cfg.word_bits = 64;
+        let words = cfg.words_per_row();
+        let mut e = AdraEngine::new(&cfg);
+        let mut rng = Rng::new(7);
+        for row in 0..2 {
+            for w in 0..words {
+                e.execute(&CimOp::Write { addr: WordAddr { row, word: w }, value: rng.next_u64() })
+                    .unwrap();
+            }
+        }
+        let packed = b.run(&format!("row/sub {cols}c [digital]"), || {
+            let mut v = VectorEngine::new(&mut e);
+            v.sub_row(0, 1).unwrap()
+        });
+        let legacy = b.run(&format!("row/sub {cols}c [per-word legacy]"), || {
+            // the PR 4 kernel: per 64-col window, materialize + ripple
+            let mut acc = 0i128;
+            for w in 0..words {
+                let outs = e.activate_cols(0, 1, w * 64, (w + 1) * 64).unwrap();
+                acc = acc.wrapping_add(ripple_add_sub(outs, true).as_signed());
+            }
+            acc
+        });
+        let speedup = legacy.median_ns() / packed.median_ns();
+        println!("row/sub {cols}c: whole-row {speedup:.1}x vs per-word");
+        if cols == 1024 {
+            row_speedup_1024 = speedup;
+        }
+        all.push(packed);
+        all.push(legacy);
+    }
+    // the whole-row acceptance gate
+    assert!(
+        row_speedup_1024 >= 4.0,
+        "whole-row kernel regressed: {row_speedup_1024:.1}x < 4x vs the per-word kernel"
+    );
+
+    // ---- masked digital under variation (sigma = 20 mV, paper-nominal)
+    // vs the analog tiers on the same whole-row op; also record the
+    // deterministic-column fraction the masks deliver
+    let mut det_fraction = 0.0;
+    {
+        let mut mk = |tier: FidelityTier, label: &str| -> BenchStats {
+            let mut cfg = SimConfig::square(1024, SensingScheme::Current);
+            cfg.word_bits = 64;
+            cfg.vt_sigma = 0.02;
+            cfg.tier = tier;
+            let mut e = AdraEngine::new(&cfg);
+            let mut rng = Rng::new(11);
+            for row in 0..2 {
+                for w in 0..cfg.words_per_row() {
+                    e.execute(&CimOp::Write {
+                        addr: WordAddr { row, word: w },
+                        value: rng.next_u64(),
+                    })
+                    .unwrap();
+                }
+            }
+            if tier == FidelityTier::Digital {
+                assert!(e.masked_active(), "masked path must engage at 20 mV");
+            }
+            let stats = b.run(&format!("row/sub 1024c s20 [{label}]"), || {
+                let mut v = VectorEngine::new(&mut e);
+                v.sub_row(0, 1).unwrap()
+            });
+            if tier == FidelityTier::Digital {
+                let s = e.array().stats();
+                det_fraction = s.det_col_fraction();
+                assert_eq!(s.xval_mismatches, 0, "masked xval must stay clean");
+            }
+            stats
+        };
+        let masked = mk(FidelityTier::Digital, "masked");
+        let lut = mk(FidelityTier::Lut, "lut");
+        let exact = mk(FidelityTier::Exact, "exact");
+        println!(
+            "masked row kernel at 20 mV sigma: {:.1}x vs lut, {:.1}x vs exact, \
+             det-col fraction {:.3}",
+            lut.median_ns() / masked.median_ns(),
+            exact.median_ns() / masked.median_ns(),
+            det_fraction
+        );
+        assert!(
+            det_fraction >= 0.8,
+            "masks must keep >= 80% of columns packed at 20 mV: {det_fraction:.3}"
+        );
+        all.push(masked);
+        all.push(lut);
+        all.push(exact);
+    }
+
+    // ---- fused pair-batch: 8 word groups on one row pair, one plane
+    // fill per batch on the packed tiers
+    for (tier, label) in [(FidelityTier::Digital, "digital"), (FidelityTier::Lut, "lut")] {
+        let mut cfg = SimConfig::square(1024, SensingScheme::Current);
+        cfg.word_bits = 64;
+        cfg.tier = tier;
+        let mut e = AdraEngine::new(&cfg);
+        let mut ops = Vec::new();
+        let mut rng = Rng::new(13);
+        for w in 0..8 {
+            e.execute(&CimOp::Write { addr: WordAddr { row: 0, word: w }, value: rng.next_u64() })
+                .unwrap();
+            e.execute(&CimOp::Write { addr: WordAddr { row: 1, word: w }, value: rng.next_u64() })
+                .unwrap();
+            ops.push(CimOp::Sub { row_a: 0, row_b: 1, word: w });
+            ops.push(CimOp::Compare { row_a: 0, row_b: 1, word: w });
+        }
+        all.push(b.run(&format!("fused/pair-batch 8w [{label}]"), || {
+            execute_fused(&mut e, &ops)
+        }));
+    }
+
+    bench::write_json_with_meta(
+        "BENCH_hotpath.json",
+        &all,
+        &[
+            ("row/det-fraction s20 [masked]", det_fraction),
+            ("row/speedup 1024c [whole-row vs per-word]", row_speedup_1024),
+            ("tier/speedup 64c [digital vs lut]", lut_ns / digital_ns),
+        ],
+    )
+    .expect("write BENCH_hotpath.json");
     println!("wrote BENCH_hotpath.json ({} benchmarks)", all.len());
 }

@@ -1,10 +1,55 @@
 //! The 1T-FeFET array: rows x cols of polarization state with a digital
-//! bit view, per-cell V_T variation, word-level accessors, and access
-//! statistics (including half-select counts for the Fig. 5(b) analysis).
+//! bit view, per-cell V_T variation, word-level accessors, access
+//! statistics (including half-select counts for the Fig. 5(b) analysis),
+//! and the packed planes of the digital fast path: the bit shadow plane
+//! plus the variation-aware margin-mask plane (DESIGN.md §10).
 
-use crate::config::{DeviceParams, SimConfig};
+use crate::config::{DeviceParams, MaskPolicy, SimConfig, VT_SEED_SALT};
 use crate::device;
+use crate::sensing::DvtBudget;
 use crate::util::rng::Rng;
+
+/// All-ones mask of an `n`-bit window (`n <= 64`).
+#[inline]
+pub fn width_mask(n: usize) -> u64 {
+    debug_assert!(n <= 64);
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+/// Extract an `n <= 64`-bit window of a packed plane at bit offset `lo`
+/// (LSB = bit `lo`), straddling `u64` word boundaries.  The single shift
+/// helper shared by the shadow window, the mask window, and the engine's
+/// packed row planes — including the `n == 64` boundary cases that a
+/// naive `(1 << n) - 1` mask would overflow on.
+#[inline]
+pub fn plane_window(plane: &[u64], lo: usize, n: usize) -> u64 {
+    debug_assert!(n >= 1 && n <= 64, "window width {n} out of range 1..=64");
+    let w0 = lo / 64;
+    let off = lo % 64;
+    let mut v = plane[w0] >> off;
+    if off != 0 && off + n > 64 {
+        v |= plane[w0 + 1] << (64 - off);
+    }
+    if n < 64 {
+        v &= (1u64 << n) - 1;
+    }
+    v
+}
+
+/// Set or clear one bit of a packed plane.
+#[inline]
+pub fn plane_set_bit(plane: &mut [u64], idx: usize, bit: bool) {
+    let m = 1u64 << (idx % 64);
+    if bit {
+        plane[idx / 64] |= m;
+    } else {
+        plane[idx / 64] &= !m;
+    }
+}
 
 /// Access/energy-relevant event counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -15,9 +60,20 @@ pub struct ArrayStats {
     /// Column accesses on words NOT selected by the operation but sharing
     /// the asserted wordline(s) — the pseudo-CiM columns of scheme 1.
     pub half_selected_cols: u64,
-    /// Dual activations served by the bit-packed digital tier (a subset
-    /// of `dual_activations`; the modeled cost is charged identically).
+    /// Dual activations served entirely by the bit-packed digital tier (a
+    /// subset of `dual_activations`; the modeled cost is charged
+    /// identically).
     pub digital_activations: u64,
+    /// Dual activations served by the masked packed path under variation
+    /// (deterministic columns from the shadow plane, marginal columns
+    /// through the analog pipeline, merged by mask).
+    pub masked_activations: u64,
+    /// Columns served straight from the packed planes across all packed
+    /// activations and reads (the deterministic-fraction numerator).
+    pub det_cols: u64,
+    /// Columns within packed-path activations/reads that fell back to the
+    /// analog pipeline (the marginal minority).
+    pub marginal_cols: u64,
     /// Sampled digital-vs-analog cross-validation checks run.
     pub xval_checks: u64,
     /// Cross-validation checks whose digital decisions diverged from the
@@ -35,8 +91,22 @@ impl ArrayStats {
             dual_activations: self.dual_activations + other.dual_activations,
             half_selected_cols: self.half_selected_cols + other.half_selected_cols,
             digital_activations: self.digital_activations + other.digital_activations,
+            masked_activations: self.masked_activations + other.masked_activations,
+            det_cols: self.det_cols + other.det_cols,
+            marginal_cols: self.marginal_cols + other.marginal_cols,
             xval_checks: self.xval_checks + other.xval_checks,
             xval_mismatches: self.xval_mismatches + other.xval_mismatches,
+        }
+    }
+
+    /// Fraction of packed-path columns served deterministically (1.0 when
+    /// nothing packed ran — an empty trajectory is not a regression).
+    pub fn det_col_fraction(&self) -> f64 {
+        let total = self.det_cols + self.marginal_cols;
+        if total == 0 {
+            1.0
+        } else {
+            self.det_cols as f64 / total as f64
         }
     }
 }
@@ -55,7 +125,18 @@ pub struct FefetArray {
     /// row, LSB = lowest column), kept coherent on every write/reset.
     /// This is the substrate of the `FidelityTier::Digital` fast path.
     shadow: Vec<u64>,
-    /// u64 words per row in `shadow`.
+    /// Packed per-cell margin masks, same layout as `shadow`: a set bit
+    /// means the cell's sampled dVt keeps every decision it can feed
+    /// deterministic (classified against the sense references).  Empty
+    /// when no classification ran (`vt_sigma == 0` or `MaskPolicy::Off`).
+    mask: Vec<u64>,
+    /// `vt_sigma == 0`: every cell is deterministic; `mask_window`
+    /// short-circuits to all-ones without a mask plane.
+    mask_all: bool,
+    /// Per-stored-bit budgets for write-time reclassification
+    /// (`MaskPolicy::Write` only; `Construction` masks are static).
+    budget: Option<DvtBudget>,
+    /// u64 words per row in `shadow` (and `mask`).
     shadow_stride: usize,
     stats: ArrayStats,
 }
@@ -64,12 +145,40 @@ impl FefetArray {
     pub fn new(cfg: &SimConfig) -> Self {
         let n = cfg.rows * cfg.cols;
         let dvt = if cfg.vt_sigma > 0.0 {
-            let mut rng = Rng::new(cfg.seed ^ 0x5eed_d117);
+            let mut rng = Rng::new(cfg.seed ^ VT_SEED_SALT);
             (0..n).map(|_| rng.normal() * cfg.vt_sigma).collect()
         } else {
             vec![0.0; n]
         };
         let shadow_stride = (cfg.cols + 63) / 64;
+        let mask_all = cfg.vt_sigma == 0.0;
+        // only the Digital tier ever consults the mask plane; analog-tier
+        // arrays skip the budget bisection + per-cell classification
+        let wants_mask = cfg.tier == crate::config::FidelityTier::Digital
+            && cfg.mask_policy != MaskPolicy::Off;
+        let (mask, budget) = if !mask_all && wants_mask {
+            let b = DvtBudget::derive(cfg);
+            let mut mask = vec![0u64; cfg.rows * shadow_stride];
+            for r in 0..cfg.rows {
+                for c in 0..cfg.cols {
+                    let d = dvt[r * cfg.cols + c];
+                    // the global reset leaves every cell storing '0', so
+                    // write-time classification starts from the 0-budget;
+                    // construction-time uses the bit-independent one
+                    let det = match cfg.mask_policy {
+                        MaskPolicy::Write => b.classify(d, false),
+                        _ => d.abs() <= b.sym(),
+                    };
+                    if det {
+                        mask[r * shadow_stride + c / 64] |= 1u64 << (c % 64);
+                    }
+                }
+            }
+            let budget = (cfg.mask_policy == MaskPolicy::Write).then_some(b);
+            (mask, budget)
+        } else {
+            (Vec::new(), None)
+        };
         Self {
             params: cfg.device.clone(),
             rows: cfg.rows,
@@ -81,6 +190,9 @@ impl FefetArray {
             pol: vec![cfg.device.pol_of_bit(false); n],
             dvt,
             shadow: vec![0u64; cfg.rows * shadow_stride],
+            mask,
+            mask_all,
+            budget,
             shadow_stride,
             stats: ArrayStats::default(),
         }
@@ -143,7 +255,10 @@ impl FefetArray {
     }
 
     /// Write one bit (behavioral SET/RESET; counts one write access).
-    /// Keeps the digital shadow plane coherent with the analog state.
+    /// Keeps the digital shadow plane coherent with the analog state, and
+    /// under `MaskPolicy::Write` reclassifies the cell's margin-mask bit
+    /// against the budget of the bit it now stores (rewrite invalidates
+    /// the old classification).
     pub fn write_bit(&mut self, row: usize, col: usize, bit: bool) {
         let i = self.idx(row, col);
         self.pol[i] = device::write_bit(&self.params, bit);
@@ -153,6 +268,13 @@ impl FefetArray {
             self.shadow[w] |= m;
         } else {
             self.shadow[w] &= !m;
+        }
+        if let Some(b) = self.budget {
+            if b.classify(self.dvt[i], bit) {
+                self.mask[w] |= m;
+            } else {
+                self.mask[w] &= !m;
+            }
         }
         self.stats.writes += 1;
     }
@@ -315,28 +437,56 @@ impl FefetArray {
 
     /// Bit-packed view of the column window `[col_lo, col_hi)` of a row
     /// (at most 64 columns, LSB = `col_lo`), straight from the shadow
-    /// plane — no analog access, no stats.
+    /// plane — no analog access, no stats.  Delegates to [`plane_window`],
+    /// whose masking is safe for full 64-bit windows (the former inline
+    /// `1u64 << n` mask would overflow at `n == 64` without the width
+    /// guard; the shared helper keeps that guard in exactly one place).
     pub fn packed_window(&self, row: usize, col_lo: usize, col_hi: usize) -> u64 {
         debug_assert!(col_lo < col_hi && col_hi <= self.cols);
         debug_assert!(col_hi - col_lo <= 64);
-        let base = row * self.shadow_stride;
-        let w0 = col_lo / 64;
-        let off = col_lo % 64;
+        plane_window(self.shadow_row(row), col_lo, col_hi - col_lo)
+    }
+
+    /// Margin-mask view of the column window (same addressing as
+    /// `packed_window`): set bits mark deterministically-resolvable
+    /// cells.  All-ones without variation; all-zeros when no
+    /// classification ran (`MaskPolicy::Off` under variation).
+    pub fn mask_window(&self, row: usize, col_lo: usize, col_hi: usize) -> u64 {
+        debug_assert!(col_lo < col_hi && col_hi <= self.cols);
         let n = col_hi - col_lo;
-        let mut v = self.shadow[base + w0] >> off;
-        if off != 0 && off + n > 64 {
-            v |= self.shadow[base + w0 + 1] << (64 - off);
+        debug_assert!(n <= 64);
+        if self.mask_all {
+            return width_mask(n);
         }
-        if n < 64 {
-            v &= (1u64 << n) - 1;
+        if self.mask.is_empty() {
+            return 0;
         }
-        v
+        let base = row * self.shadow_stride;
+        plane_window(&self.mask[base..base + self.shadow_stride], col_lo, n)
     }
 
     /// The whole shadow row (one u64 per 64 columns, LSB-first).
     pub fn shadow_row(&self, row: usize) -> &[u64] {
         let base = row * self.shadow_stride;
         &self.shadow[base..base + self.shadow_stride]
+    }
+
+    /// Was a margin-mask plane classified for this array?
+    pub fn has_mask(&self) -> bool {
+        !self.mask.is_empty()
+    }
+
+    /// Fraction of cells currently classified deterministic (1.0 without
+    /// variation, 0.0 when classification is off under variation).
+    pub fn deterministic_fraction(&self) -> f64 {
+        if self.mask_all {
+            return 1.0;
+        }
+        if self.mask.is_empty() {
+            return 0.0;
+        }
+        let ones: u64 = self.mask.iter().map(|w| w.count_ones() as u64).sum();
+        ones as f64 / (self.rows * self.cols) as f64
     }
 }
 
@@ -472,6 +622,98 @@ mod tests {
         // full-width window with offset 0
         assert_eq!(arr.packed_window(2, 64, 128) & 0xFFFF, arr.packed_window(2, 64, 80));
         assert_eq!(arr.shadow_row(2).len(), 2);
+    }
+
+    /// Regression for the shift-overflow hazard in the packed extraction:
+    /// full 64-bit windows (aligned, straddling, and at the row tail)
+    /// must round-trip exactly — `1u64 << 64` would panic in debug and
+    /// silently corrupt in release.
+    #[test]
+    fn packed_window_full_width_and_boundaries() {
+        let mut cfg = SimConfig::square(128, SensingScheme::Current);
+        cfg.word_bits = 64;
+        let mut arr = FefetArray::new(&cfg);
+        let pat_a: u64 = 0xDEAD_BEEF_0123_4567;
+        let pat_b: u64 = 0xFEDC_BA98_7654_3210;
+        for i in 0..64 {
+            arr.write_bit(1, i, (pat_a >> i) & 1 == 1);
+            arr.write_bit(1, 64 + i, (pat_b >> i) & 1 == 1);
+        }
+        // aligned full-width windows
+        assert_eq!(arr.packed_window(1, 0, 64), pat_a);
+        assert_eq!(arr.packed_window(1, 64, 128), pat_b);
+        // full-width window straddling the u64 boundary
+        let want = (pat_a >> 32) | (pat_b << 32);
+        assert_eq!(arr.packed_window(1, 32, 96), want);
+        // one-past-boundary single columns
+        assert_eq!(arr.packed_window(1, 63, 64), (pat_a >> 63) & 1);
+        assert_eq!(arr.packed_window(1, 64, 65), pat_b & 1);
+        // width-64 window via the raw plane helper too
+        assert_eq!(plane_window(arr.shadow_row(1), 32, 64), want);
+        assert_eq!(width_mask(64), u64::MAX);
+        assert_eq!(width_mask(1), 1);
+    }
+
+    #[test]
+    fn mask_plane_all_ones_without_variation() {
+        let arr = FefetArray::new(&small_cfg());
+        assert!(!arr.has_mask(), "no plane needed without variation");
+        assert_eq!(arr.mask_window(0, 0, 64), u64::MAX);
+        assert_eq!(arr.mask_window(3, 5, 13), 0xFF);
+        assert_eq!(arr.deterministic_fraction(), 1.0);
+    }
+
+    #[test]
+    fn mask_policy_off_classifies_nothing() {
+        let mut cfg = small_cfg();
+        cfg.vt_sigma = 0.02;
+        cfg.mask_policy = crate::config::MaskPolicy::Off;
+        let arr = FefetArray::new(&cfg);
+        assert!(!arr.has_mask());
+        assert_eq!(arr.mask_window(0, 0, 64), 0);
+        assert_eq!(arr.deterministic_fraction(), 0.0);
+    }
+
+    #[test]
+    fn mask_plane_matches_per_cell_classification() {
+        let mut cfg = small_cfg();
+        cfg.vt_sigma = 0.02;
+        cfg.mask_policy = crate::config::MaskPolicy::Construction;
+        let arr = FefetArray::new(&cfg);
+        assert!(arr.has_mask());
+        let b = DvtBudget::derive(&cfg);
+        for r in 0..cfg.rows {
+            for c in 0..cfg.cols {
+                let want = arr.dvt(r, c).abs() <= b.sym();
+                let got = arr.mask_window(r, c, c + 1) & 1 == 1;
+                assert_eq!(got, want, "row {r} col {c} dvt {}", arr.dvt(r, c));
+            }
+        }
+        let f = arr.deterministic_fraction();
+        assert!(f > 0.9 && f < 1.0, "sigma=20mV current sensing: {f}");
+    }
+
+    #[test]
+    fn write_policy_reclassifies_on_rewrite() {
+        let mut cfg = small_cfg();
+        cfg.vt_sigma = 0.02;
+        cfg.mask_policy = crate::config::MaskPolicy::Write;
+        let mut arr = FefetArray::new(&cfg);
+        let b = DvtBudget::derive(&cfg);
+        // initial classification is against the stores-0 budget
+        for c in 0..cfg.cols {
+            let want = b.classify(arr.dvt(2, c), false);
+            assert_eq!(arr.mask_window(2, c, c + 1) & 1 == 1, want, "col {c}");
+        }
+        // every rewrite re-derives the bit for the stored value
+        for c in 0..cfg.cols {
+            arr.write_bit(2, c, true);
+            let want = b.classify(arr.dvt(2, c), true);
+            assert_eq!(arr.mask_window(2, c, c + 1) & 1 == 1, want, "col {c} after SET");
+            arr.write_bit(2, c, false);
+            let want = b.classify(arr.dvt(2, c), false);
+            assert_eq!(arr.mask_window(2, c, c + 1) & 1 == 1, want, "col {c} after RESET");
+        }
     }
 
     #[test]

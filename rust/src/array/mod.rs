@@ -8,5 +8,5 @@ pub mod write_scheme;
 
 pub use biasing::{BiasMode, RowBias};
 pub use endurance::{WearLeveler, WearTracker};
-pub use fefet_array::{ArrayStats, FefetArray};
+pub use fefet_array::{plane_set_bit, plane_window, width_mask, ArrayStats, FefetArray};
 pub use write_scheme::{bulk_write, WriteReport, WriteScheme};

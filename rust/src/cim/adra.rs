@@ -2,12 +2,17 @@
 //! + the Fig. 3(d) compute modules, over either sensing family.
 //!
 //! Activations run through a **tiered kernel** (`SimConfig::tier`, see
-//! DESIGN.md §9): when decisions are provably deterministic the digital
-//! tier serves dual-row ops as packed bitwise ops over the array's
-//! shadow plane (64 columns per instruction, sampled cross-validation
-//! against the analog pipeline); the analog tiers (`Lut`/`Exact`) run a
-//! zero-allocation pipeline through reusable engine scratch.  All tiers
-//! report identical values and modeled costs.
+//! DESIGN.md §9-§10): when decisions are provably deterministic the
+//! digital tier serves dual-row ops as whole-row packed word-slice ops
+//! over the array's shadow plane (sampled cross-validation against the
+//! analog pipeline).  Under `vt_sigma > 0` the **masked digital** path
+//! keeps the packed kernel hot: per-cell margin masks (classified at
+//! construction / write time against the sense references) route the
+//! deterministic majority of columns through the shadow plane and only
+//! the marginal minority through the zero-allocation analog pipeline,
+//! merging decisions by mask.  The analog tiers (`Lut`/`Exact`) run the
+//! full analog pipeline.  All tiers report identical values and modeled
+//! costs.
 //!
 //! The analog senseline evaluation is pluggable (`AnalogBackend`): the
 //! behavioral device model serves the fast path; the PJRT runtime backend
@@ -15,7 +20,7 @@
 //! analog ground truth.  Both produce identical digital decisions — that
 //! equivalence is asserted by the cross-validation integration test.
 
-use crate::array::FefetArray;
+use crate::array::{plane_set_bit, plane_window, width_mask, FefetArray};
 use crate::config::{SensingScheme, SimConfig};
 use crate::energy::EnergyModel;
 use crate::logic::{and_tree_equal, ripple_add_sub, CompareResult};
@@ -308,8 +313,10 @@ impl AnalogBackend for ExactBackend {
     }
 }
 
-/// Reusable per-engine buffers: the analog pipeline runs allocation-free
-/// after warmup (`planes_into` -> `*_into` backend eval -> `sense_into`).
+/// Reusable per-engine buffers: both the analog pipeline and the packed
+/// row planes run allocation-free after warmup (`planes_into` -> `*_into`
+/// backend eval -> `sense_into`; packed paths reuse the `u64` plane
+/// vectors below).
 #[derive(Default)]
 struct EngineScratch {
     pol_a: Vec<f32>,
@@ -320,6 +327,31 @@ struct EngineScratch {
     analog: Vec<f64>,
     /// Per-column sense decisions of the latest activation.
     sense: Vec<SenseOut>,
+    /// Packed row planes of the latest packed activation, window-relative
+    /// (bit 0 = column `planes_lo`): operand bits of each row...
+    packed_a: Vec<u64>,
+    packed_b: Vec<u64>,
+    /// ...decision planes (masked mode only; the pure digital tier
+    /// derives `or`/`and` from the operand planes on demand)...
+    p_or: Vec<u64>,
+    p_and: Vec<u64>,
+    /// ...and the deterministic-column mask (`mask_a & mask_b`).
+    p_det: Vec<u64>,
+    /// Absolute column indices the masked path routed through the analog
+    /// pipeline (the marginal minority), and their sense decisions.
+    marginal_cols: Vec<usize>,
+    marginal_sense: Vec<SenseOut>,
+    /// Column span the planes cover.
+    planes_lo: usize,
+    planes_hi: usize,
+    /// Planes carry merged analog decisions (masked mode) vs operand
+    /// bits only (pure digital mode).
+    planes_masked: bool,
+    /// Every merged analog triple is consistent with some (A, B) pair —
+    /// word arithmetic on the operand planes then equals the ripple
+    /// chain bit for bit.  The engine's own sense banks are thermometer
+    /// comparators, so this only goes false for an exotic backend.
+    planes_consistent: bool,
 }
 
 /// What one dual-row activation produced: packed operand words straight
@@ -344,8 +376,23 @@ pub struct AdraEngine {
     /// Digital tier engaged: `cfg.tier == Digital`, `vt_sigma == 0`, and
     /// the one-time margin check against the analog references passed.
     digital_ok: bool,
+    /// Masked digital path engaged: `cfg.tier == Digital`, `vt_sigma > 0`,
+    /// a classified margin-mask plane with a workable deterministic
+    /// fraction, and the nominal margin check passed.
+    masked_ok: bool,
     /// Digital activations since construction (drives xval sampling).
     xval_tick: u64,
+}
+
+/// What one packed-capable activation produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum RowActivation {
+    /// Packed planes covering the span sit in the engine scratch and are
+    /// consistent — derive ops with word arithmetic.
+    Packed,
+    /// Per-column sense decisions sit in the engine scratch (analog
+    /// tiers, or a demoted inconsistent packed window).
+    Sense,
 }
 
 impl AdraEngine {
@@ -353,18 +400,51 @@ impl AdraEngine {
     /// pipeline and compares decisions (`ArrayStats::xval_*`).
     pub const XVAL_PERIOD: u64 = 64;
 
+    /// Minimum deterministic-cell fraction for the masked path to engage:
+    /// below this the per-column gather costs more than the plain analog
+    /// pipeline it would replace (e.g. small-array voltage sensing, whose
+    /// dual-row levels compress to nanovolts).
+    pub const MASKED_MIN_DET_FRACTION: f64 = 0.05;
+
     /// Engine with the analog backend selected by `cfg.tier`
     /// (`Digital`/`Lut` -> LUT behavioral model, `Exact` -> closed form).
     /// The digital fast path engages only here, after calibration proves
-    /// decisions deterministic.
+    /// decisions deterministic; under variation the masked path engages
+    /// instead when a margin-mask plane was classified
+    /// (`SimConfig::mask_policy`) and enough of the array is
+    /// deterministic to be worth serving packed.
+    ///
+    /// A masked-capable Digital engine takes the EXACT backend: its
+    /// analog pipeline only ever evaluates the marginal minority, which
+    /// by definition sits near the sense references — exactly where the
+    /// LUT's approximation error could flip a decision.  Closed form for
+    /// the few marginal columns keeps the masked tier bit-identical to
+    /// `Exact` by construction while the deterministic majority stays on
+    /// the packed planes.
     pub fn new(cfg: &SimConfig) -> Self {
+        let masked_candidate = cfg.tier == crate::config::FidelityTier::Digital
+            && cfg.vt_sigma > 0.0
+            && cfg.mask_policy != crate::config::MaskPolicy::Off;
         let backend: Box<dyn AnalogBackend> = match cfg.tier {
             crate::config::FidelityTier::Exact => Box::new(ExactBackend::new(&cfg.device)),
+            _ if masked_candidate => Box::new(ExactBackend::new(&cfg.device)),
             _ => Box::new(BehavioralBackend::new(&cfg.device)),
         };
         let mut e = Self::with_backend(cfg, backend);
-        if cfg.tier == crate::config::FidelityTier::Digital && cfg.vt_sigma == 0.0 {
-            e.digital_ok = e.margin_check();
+        if cfg.tier == crate::config::FidelityTier::Digital {
+            if cfg.vt_sigma == 0.0 {
+                e.digital_ok = e.margin_check();
+            } else if e.array.has_mask()
+                && e.array.deterministic_fraction() >= Self::MASKED_MIN_DET_FRACTION
+            {
+                e.masked_ok = e.margin_check();
+            }
+        }
+        if masked_candidate && !e.masked_ok {
+            // masked path declined (collapsed margins or failed check):
+            // restore the Lut-tier pipeline so the full-analog fallback
+            // costs what the Lut tier costs
+            e.backend = Box::new(BehavioralBackend::new(&cfg.device));
         }
         e
     }
@@ -388,6 +468,7 @@ impl AdraEngine {
             lut: crate::device::CellLut::new(p),
             scratch: EngineScratch::default(),
             digital_ok: false,
+            masked_ok: false,
             xval_tick: 0,
         }
     }
@@ -400,6 +481,16 @@ impl AdraEngine {
     /// Is the bit-packed digital fast path serving activations?
     pub fn digital_active(&self) -> bool {
         self.digital_ok
+    }
+
+    /// Is the variation-aware masked packed path serving activations?
+    pub fn masked_active(&self) -> bool {
+        self.masked_ok
+    }
+
+    /// Either packed mode (full digital or masked) engaged?
+    pub fn packed_active(&self) -> bool {
+        self.digital_ok || self.masked_ok
     }
 
     /// One-time calibration: push the four (A,B) corner vectors (and the
@@ -546,25 +637,155 @@ impl AdraEngine {
         }
     }
 
-    /// Build the sense vector for `[lo, hi)` from the bit-packed shadow
-    /// plane — `or = a | b`, `and = a & b`, 64 columns per instruction.
-    fn fill_sense_digital(&mut self, row_a: usize, row_b: usize, lo: usize, hi: usize) {
-        self.scratch.sense.clear();
+    /// Build the packed row planes for `[lo, hi)` of the row pair in a
+    /// single pass over `u64` word slices: operand bits straight from the
+    /// shadow plane, and — in masked mode — the deterministic-column mask
+    /// `mask_a & mask_b` plus analog decisions for the marginal minority,
+    /// gathered into ONE compact backend evaluation and merged back into
+    /// the planes by mask.  A 1024-column row costs ~16 word ops plus the
+    /// marginal gather, not 1024 per-column pushes.  Purely
+    /// computational — no stats.
+    fn fill_planes(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Result<(), EngineError> {
+        self.scratch.packed_a.clear();
+        self.scratch.packed_b.clear();
+        self.scratch.p_or.clear();
+        self.scratch.p_and.clear();
+        self.scratch.p_det.clear();
+        self.scratch.marginal_cols.clear();
+        self.scratch.planes_lo = lo;
+        self.scratch.planes_hi = hi;
+        self.scratch.planes_masked = self.masked_ok;
+        self.scratch.planes_consistent = true;
         let mut c = lo;
         while c < hi {
             let w = (hi - c).min(64);
             let a = self.array.packed_window(row_a, c, c + w);
             let b = self.array.packed_window(row_b, c, c + w);
-            let or = a | b;
-            let and = a & b;
-            for i in 0..w {
-                self.scratch.sense.push(SenseOut {
-                    or: (or >> i) & 1 == 1,
-                    b: (b >> i) & 1 == 1,
-                    and: (and >> i) & 1 == 1,
-                });
+            self.scratch.packed_a.push(a);
+            self.scratch.packed_b.push(b);
+            if self.masked_ok {
+                let det = self.array.mask_window(row_a, c, c + w)
+                    & self.array.mask_window(row_b, c, c + w)
+                    & width_mask(w);
+                self.scratch.p_det.push(det);
+                self.scratch.p_or.push(a | b);
+                self.scratch.p_and.push(a & b);
+                let mut marg = !det & width_mask(w);
+                while marg != 0 {
+                    let i = marg.trailing_zeros() as usize;
+                    self.scratch.marginal_cols.push(c + i);
+                    marg &= marg - 1;
+                }
             }
             c += w;
+        }
+        if self.masked_ok && !self.scratch.marginal_cols.is_empty() {
+            self.sense_marginal_cols(row_a, row_b)?;
+        }
+        Ok(())
+    }
+
+    /// Run the analog pipeline over the gathered marginal columns of the
+    /// current planes and merge each decision back by mask.
+    fn sense_marginal_cols(&mut self, row_a: usize, row_b: usize) -> Result<(), EngineError> {
+        self.scratch.pol_a.clear();
+        self.scratch.pol_b.clear();
+        self.scratch.dvt_a.clear();
+        self.scratch.dvt_b.clear();
+        for k in 0..self.scratch.marginal_cols.len() {
+            let col = self.scratch.marginal_cols[k];
+            self.scratch.pol_a.push(self.array.pol(row_a, col) as f32);
+            self.scratch.pol_b.push(self.array.pol(row_b, col) as f32);
+            self.scratch.dvt_a.push(self.array.dvt(row_a, col) as f32);
+            self.scratch.dvt_b.push(self.array.dvt(row_b, col) as f32);
+        }
+        let vg1 = self.cfg.device.v_gread1;
+        let vg2 = self.cfg.device.v_gread2;
+        match self.cfg.scheme {
+            SensingScheme::Current => {
+                self.backend.dc_isl_into(
+                    &self.scratch.pol_a,
+                    &self.scratch.pol_b,
+                    &self.scratch.dvt_a,
+                    &self.scratch.dvt_b,
+                    vg1,
+                    vg2,
+                    &mut self.scratch.analog,
+                );
+                self.cur_bank.sense_into(&self.scratch.analog, &mut self.scratch.marginal_sense);
+            }
+            SensingScheme::VoltagePrecharged | SensingScheme::VoltageDischarged => {
+                let c_rbl = self.cfg.c_rbl();
+                self.backend.transient_vfinal_into(
+                    &self.scratch.pol_a,
+                    &self.scratch.pol_b,
+                    &self.scratch.dvt_a,
+                    &self.scratch.dvt_b,
+                    vg1,
+                    vg2,
+                    c_rbl,
+                    &mut self.scratch.analog,
+                );
+                self.volt_bank.sense_into(&self.scratch.analog, &mut self.scratch.marginal_sense);
+            }
+        }
+        for k in 0..self.scratch.marginal_cols.len() {
+            let col = self.scratch.marginal_cols[k];
+            let off = col - self.scratch.planes_lo;
+            let o = self.scratch.marginal_sense[k];
+            if o.and && !o.or {
+                return Err(EngineError::SenseFailure(format!(
+                    "column {off}: AND asserted without OR — margin collapse"
+                )));
+            }
+            let a = o.a();
+            plane_set_bit(&mut self.scratch.packed_a, off, a);
+            plane_set_bit(&mut self.scratch.packed_b, off, o.b);
+            plane_set_bit(&mut self.scratch.p_or, off, o.or);
+            plane_set_bit(&mut self.scratch.p_and, off, o.and);
+            if o.or != (a || o.b) || o.and != (a && o.b) {
+                self.scratch.planes_consistent = false;
+            }
+        }
+        Ok(())
+    }
+
+    /// The (OR, B, AND) decision triple of one plane column
+    /// (window-relative bit offset) — the single derivation shared by
+    /// sense materialization and cross-validation so the two can never
+    /// diverge.
+    fn plane_triple(&self, off: usize) -> SenseOut {
+        let w = off / 64;
+        let m = 1u64 << (off % 64);
+        if self.scratch.planes_masked {
+            SenseOut {
+                or: self.scratch.p_or[w] & m != 0,
+                b: self.scratch.packed_b[w] & m != 0,
+                and: self.scratch.p_and[w] & m != 0,
+            }
+        } else {
+            let a = self.scratch.packed_a[w] & m != 0;
+            let b = self.scratch.packed_b[w] & m != 0;
+            SenseOut { or: a || b, b, and: a && b }
+        }
+    }
+
+    /// Rebuild per-column `SenseOut`s for `[lo, hi)` (within the planes
+    /// span) from the packed planes — the legacy borrow-of-scratch API
+    /// of `activate_cols`/`activate_word`.
+    fn sense_from_planes(&mut self, lo: usize, hi: usize) {
+        debug_assert!(lo >= self.scratch.planes_lo && hi <= self.scratch.planes_hi);
+        let base = self.scratch.planes_lo;
+        self.scratch.sense.clear();
+        for c in lo..hi {
+            let o = self.plane_triple(c - base);
+            self.scratch.sense.push(o);
         }
     }
 
@@ -581,10 +802,14 @@ impl AdraEngine {
         Ok(())
     }
 
-    /// Sampled cross-validation of the digital tier: every
-    /// `XVAL_PERIOD`-th digital activation re-runs the analog pipeline
+    /// Sampled cross-validation of the packed paths: every
+    /// `XVAL_PERIOD`-th packed activation re-runs the analog pipeline
     /// over the same window and compares every column's (OR, B, AND)
-    /// decision against the shadow plane.  Counts in `ArrayStats`.
+    /// decision against the packed planes (which hold the shadow-derived
+    /// decisions for deterministic columns and the already-analog
+    /// decisions for marginal ones).  Counts in `ArrayStats`.
+    ///
+    /// Precondition: the planes cover `[lo, hi)`.
     fn maybe_cross_validate(&mut self, row_a: usize, row_b: usize, lo: usize, hi: usize) {
         self.xval_tick += 1;
         if self.xval_tick % Self::XVAL_PERIOD != 0 {
@@ -593,10 +818,8 @@ impl AdraEngine {
         self.fill_sense_analog(row_a, row_b, lo, hi);
         let mut mismatch = false;
         for (i, c) in (lo..hi).enumerate() {
-            let a = self.array.packed_window(row_a, c, c + 1) & 1 == 1;
-            let b = self.array.packed_window(row_b, c, c + 1) & 1 == 1;
-            let o = self.scratch.sense[i];
-            if o.or != (a || b) || o.b != b || o.and != (a && b) {
+            let served = self.plane_triple(c - self.scratch.planes_lo);
+            if self.scratch.sense[i] != served {
                 mismatch = true;
             }
         }
@@ -607,10 +830,27 @@ impl AdraEngine {
         }
     }
 
-    /// Shared digital-path bookkeeping: tier counter + sampled
-    /// cross-validation.  Every digital activation goes through here.
-    fn digital_preamble(&mut self, row_a: usize, row_b: usize, lo: usize, hi: usize) {
-        self.array.stats_mut().digital_activations += 1;
+    /// Shared packed-path bookkeeping for one activation over `[lo, hi)`
+    /// against the current planes: tier + deterministic-fraction counters
+    /// (given the window's marginal-column count) and sampled
+    /// cross-validation.  Every packed activation — whole-span or fused
+    /// group — goes through here, so batched and unbatched accounting
+    /// can never diverge.  NOTE: clobbers `scratch.sense` when the
+    /// sampled cross-validation fires — materialize sense AFTER this.
+    fn packed_bookkeeping(&mut self, row_a: usize, row_b: usize, lo: usize, hi: usize, marg: u64) {
+        let width = (hi - lo) as u64;
+        let masked = self.scratch.planes_masked;
+        {
+            let stats = self.array.stats_mut();
+            stats.det_cols += width - marg;
+            stats.marginal_cols += marg;
+            if marg == 0 {
+                stats.digital_activations += 1;
+            }
+            if masked {
+                stats.masked_activations += 1;
+            }
+        }
         self.maybe_cross_validate(row_a, row_b, lo, hi);
     }
 
@@ -628,6 +868,39 @@ impl AdraEngine {
         self.check_margins()
     }
 
+    /// One dual-row activation over an arbitrary span `[lo, hi)` — the
+    /// single-pass word-slice primitive every packed consumer builds on
+    /// (scalar ops, row-wide vector ops, fused batches).  Records stats.
+    /// After `Packed`, consistent planes covering the span sit in the
+    /// engine scratch; after `Sense`, per-column decisions do.
+    pub(crate) fn activate_span(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Result<RowActivation, EngineError> {
+        self.check_pair(row_a, row_b, lo, hi)?;
+        self.note_dual_access(lo, hi);
+        if self.digital_ok || self.masked_ok {
+            self.fill_planes(row_a, row_b, lo, hi)?;
+            let marg = self.scratch.marginal_cols.len() as u64;
+            self.packed_bookkeeping(row_a, row_b, lo, hi, marg);
+            if self.scratch.planes_consistent {
+                Ok(RowActivation::Packed)
+            } else {
+                // an inconsistent analog decode in a marginal column:
+                // demote the whole span to the sense representation so
+                // derivations stay bit-identical with the analog tiers
+                self.sense_from_planes(lo, hi);
+                Ok(RowActivation::Sense)
+            }
+        } else {
+            self.analog_activate(row_a, row_b, lo, hi)?;
+            Ok(RowActivation::Sense)
+        }
+    }
+
     /// One dual-row activation over `[lo, hi)`: records stats, leaves the
     /// per-column sense decisions in `scratch.sense` (either tier).
     fn sense_cols(
@@ -637,31 +910,28 @@ impl AdraEngine {
         lo: usize,
         hi: usize,
     ) -> Result<(), EngineError> {
-        self.note_dual_access(lo, hi);
-        if self.digital_ok {
-            self.digital_preamble(row_a, row_b, lo, hi);
-            self.fill_sense_digital(row_a, row_b, lo, hi);
-            Ok(())
-        } else {
-            self.analog_activate(row_a, row_b, lo, hi)
+        match self.activate_span(row_a, row_b, lo, hi)? {
+            RowActivation::Packed => {
+                self.sense_from_planes(lo, hi);
+                Ok(())
+            }
+            RowActivation::Sense => Ok(()),
         }
     }
 
-    /// The scalar-op activation: the digital tier returns the packed
-    /// operand words directly (no per-column materialization at all); the
-    /// analog tiers leave sense outputs in scratch.
+    /// The scalar-op activation: the packed paths return the operand
+    /// words directly (no per-column materialization at all); the analog
+    /// tiers leave sense outputs in scratch.
     fn activate(&mut self, row_a: usize, row_b: usize, word: usize) -> Result<Sensed, EngineError> {
         let (lo, hi) = self.word_cols(word);
-        self.check_pair(row_a, row_b, lo, hi)?;
-        self.note_dual_access(lo, hi);
-        if self.digital_ok {
-            self.digital_preamble(row_a, row_b, lo, hi);
-            let a = self.array.packed_window(row_a, lo, hi);
-            let b = self.array.packed_window(row_b, lo, hi);
-            Ok(Sensed::Digital(a, b))
-        } else {
-            self.analog_activate(row_a, row_b, lo, hi)?;
-            Ok(Sensed::Analog)
+        match self.activate_span(row_a, row_b, lo, hi)? {
+            RowActivation::Packed => {
+                let wb = hi - lo;
+                let a = plane_window(&self.scratch.packed_a, 0, wb);
+                let b = plane_window(&self.scratch.packed_b, 0, wb);
+                Ok(Sensed::Digital(a, b))
+            }
+            RowActivation::Sense => Ok(Sensed::Analog),
         }
     }
 
@@ -765,13 +1035,36 @@ impl AdraEngine {
 
     /// Standard single-row read through the sensing path (LUT-fast; the
     /// digital tier serves it straight from the shadow plane — the read
-    /// decode was proven deterministic by the margin check).
+    /// decode was proven deterministic by the margin check).  The masked
+    /// path serves mask-certified cells from the shadow and decodes only
+    /// the marginal ones analog, merging by mask.
     fn read_word_sensed(&mut self, addr: WordAddr) -> Result<u64, EngineError> {
         self.check_word(addr.row, addr.word)?;
         let (lo, hi) = self.word_cols(addr.word);
+        let n = hi - lo;
         self.array.stats_mut().reads += 1;
         if self.digital_ok {
+            self.array.stats_mut().det_cols += n as u64;
             return Ok(self.array.packed_window(addr.row, lo, hi));
+        }
+        if self.masked_ok {
+            let det = self.array.mask_window(addr.row, lo, hi) & width_mask(n);
+            let mut v = self.array.packed_window(addr.row, lo, hi) & det;
+            let det_count = det.count_ones() as u64;
+            {
+                let stats = self.array.stats_mut();
+                stats.det_cols += det_count;
+                stats.marginal_cols += n as u64 - det_count;
+            }
+            let mut marg = !det & width_mask(n);
+            while marg != 0 {
+                let i = marg.trailing_zeros() as usize;
+                if self.read_bit_analog(addr.row, lo + i) {
+                    v |= 1 << i;
+                }
+                marg &= marg - 1;
+            }
+            return Ok(v);
         }
         let vg = self.cfg.device.v_gread2;
         let s = self.lut.s(self.cfg.device.v_read);
@@ -789,21 +1082,41 @@ impl AdraEngine {
         Ok(v)
     }
 
-    /// All-ones mask of a word's width.
+    /// One cell's single-row read decision through the LUT + read
+    /// reference — shared by the analog read path and the masked path's
+    /// marginal bits.
+    fn read_bit_analog(&self, row: usize, col: usize) -> bool {
+        let vg = self.cfg.device.v_gread2;
+        let s = self.lut.s(self.cfg.device.v_read);
+        let i_cell =
+            self.lut.f(self.lut.u_of(vg, self.array.pol(row, col), self.array.dvt(row, col))) * s;
+        self.cur_bank.sense_read(i_cell)
+    }
+
+    /// All-ones mask of a word's width (the shared helper owns the
+    /// `n == 64` shift-overflow guard).
     #[inline]
     fn word_mask(bits: usize) -> u64 {
-        if bits >= 64 {
-            u64::MAX
-        } else {
-            (1u64 << bits) - 1
-        }
+        width_mask(bits)
     }
 
     /// Two's-complement interpretation of an n-bit word.
     #[inline]
-    fn signed_of(v: u64, bits: usize) -> i128 {
+    pub(crate) fn signed_of(v: u64, bits: usize) -> i128 {
         let sign = 1u64 << (bits - 1);
         if v & sign != 0 {
+            v as i128 - (1i128 << bits)
+        } else {
+            v as i128
+        }
+    }
+
+    /// Two's-complement interpretation of an n-bit value, n <= 127 —
+    /// the wide-operand variant the multi-word carry chain uses.
+    #[inline]
+    pub(crate) fn signed_of_wide(v: u128, bits: usize) -> i128 {
+        debug_assert!(bits >= 1 && bits <= 127);
+        if v & (1u128 << (bits - 1)) != 0 {
             v as i128 - (1i128 << bits)
         } else {
             v as i128
@@ -861,8 +1174,92 @@ impl AdraEngine {
         }
     }
 
-    /// One dual-row activation for the fused datapath: the digital tier
-    /// returns the packed operand words (derive followers with
+    /// Packed operand window `[c_lo, c_hi)` (absolute columns, <= 64
+    /// wide) of the planes left by the latest packed activation.
+    pub(crate) fn planes_window(&self, c_lo: usize, c_hi: usize) -> (u64, u64) {
+        let off = c_lo - self.scratch.planes_lo;
+        let n = c_hi - c_lo;
+        debug_assert!(c_lo >= self.scratch.planes_lo && c_hi <= self.scratch.planes_hi);
+        (
+            plane_window(&self.scratch.packed_a, off, n),
+            plane_window(&self.scratch.packed_b, off, n),
+        )
+    }
+
+    /// Wide packed operand window (up to 127 bits) — two chunked `u64`
+    /// extractions per operand, for the multi-word carry chain.
+    pub(crate) fn planes_window_wide(&self, c_lo: usize, c_hi: usize) -> (u128, u128) {
+        let n = c_hi - c_lo;
+        debug_assert!(n >= 1 && n <= 127);
+        if n <= 64 {
+            let (a, b) = self.planes_window(c_lo, c_lo + n);
+            return (a as u128, b as u128);
+        }
+        let (a_lo, b_lo) = self.planes_window(c_lo, c_lo + 64);
+        let (a_hi, b_hi) = self.planes_window(c_lo + 64, c_hi);
+        (
+            a_lo as u128 | ((a_hi as u128) << 64),
+            b_lo as u128 | ((b_hi as u128) << 64),
+        )
+    }
+
+    /// Prepare the packed planes for a fused pair batch spanning
+    /// `[lo, hi)` of one row pair.  Returns `false` when no packed mode
+    /// is engaged (analog tiers / explicit backends) — the caller then
+    /// activates per group exactly as before.  Records NO stats: each
+    /// group of the batch records its own activation through
+    /// `serve_group_from_planes`, so modeled accounting (activations,
+    /// half-selects, costs, cross-validation cadence) is identical to
+    /// unbatched execution; only the host-side plane fill is shared.
+    pub(crate) fn prefill_pair_planes(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Result<bool, EngineError> {
+        if !(self.digital_ok || self.masked_ok) {
+            return Ok(false);
+        }
+        self.check_pair(row_a, row_b, lo, hi)?;
+        self.fill_planes(row_a, row_b, lo, hi)?;
+        Ok(true)
+    }
+
+    /// Serve one fused group (a word window) from planes prepared by
+    /// `prefill_pair_planes`: records the group's own activation stats
+    /// and sampled cross-validation, then returns the packed operand
+    /// words — or `None` with the group's sense decisions left in
+    /// scratch when the planes were demoted (inconsistent decode).
+    pub(crate) fn serve_group_from_planes(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        word: usize,
+    ) -> Result<Option<(u64, u64)>, EngineError> {
+        self.check_word(row_a, word)?;
+        self.check_word(row_b, word)?;
+        let (lo, hi) = self.word_cols(word);
+        debug_assert!(lo >= self.scratch.planes_lo && hi <= self.scratch.planes_hi);
+        self.note_dual_access(lo, hi);
+        let wb = (hi - lo) as u64;
+        let off = lo - self.scratch.planes_lo;
+        let marg = if self.scratch.planes_masked {
+            wb - plane_window(&self.scratch.p_det, off, hi - lo).count_ones() as u64
+        } else {
+            0
+        };
+        self.packed_bookkeeping(row_a, row_b, lo, hi, marg);
+        if self.scratch.planes_consistent {
+            Ok(Some(self.planes_window(lo, hi)))
+        } else {
+            self.sense_from_planes(lo, hi);
+            Ok(None)
+        }
+    }
+
+    /// One dual-row activation for the fused datapath: the packed paths
+    /// return the packed operand words (derive followers with
     /// `digital_value` — no per-column work at all); the analog tiers
     /// return `None` with the sense outputs left in the engine scratch
     /// (read them back with `last_sense`).
@@ -1162,5 +1559,93 @@ mod tests {
             let r = e.execute(&CimOp::Read2 { row_a: 0, row_b: 1, word: 0 }).unwrap();
             assert_eq!(r.value, CimValue::Pair(a, b), "variation broke sensing");
         }
+    }
+
+    fn varied_cfg(policy: crate::config::MaskPolicy) -> SimConfig {
+        let mut cfg = SimConfig::square(256, SensingScheme::Current);
+        cfg.word_bits = 8;
+        cfg.vt_sigma = 0.02;
+        cfg.mask_policy = policy;
+        cfg
+    }
+
+    #[test]
+    fn masked_path_engages_under_variation() {
+        let e = AdraEngine::new(&varied_cfg(crate::config::MaskPolicy::Write));
+        assert!(!e.digital_active(), "full digital needs vt_sigma == 0");
+        assert!(e.masked_active(), "margin masks must keep the packed path hot");
+        assert!(e.packed_active());
+        assert!(e.array().deterministic_fraction() > 0.9);
+    }
+
+    #[test]
+    fn mask_policy_off_restores_full_analog_fallback() {
+        let mut e = AdraEngine::new(&varied_cfg(crate::config::MaskPolicy::Off));
+        assert!(!e.masked_active() && !e.digital_active());
+        setup(&mut e, 0x5A, 0x0F);
+        e.execute(&CimOp::Bool { f: BoolFn::Or, row_a: 0, row_b: 1, word: 0 }).unwrap();
+        let s = e.array().stats();
+        assert_eq!(s.digital_activations, 0);
+        assert_eq!(s.masked_activations, 0);
+        assert_eq!(s.det_cols + s.marginal_cols, 0, "no packed columns at all");
+    }
+
+    #[test]
+    fn masked_path_matches_analog_mirror() {
+        // same seed -> same variation plane; the masked engine must be
+        // bit-identical to a pure-analog (Exact) mirror on every op,
+        // including single reads
+        let cfg = varied_cfg(crate::config::MaskPolicy::Write);
+        let mut masked = AdraEngine::new(&cfg);
+        let mut mirror_cfg = cfg.clone();
+        mirror_cfg.tier = crate::config::FidelityTier::Exact;
+        let mut mirror = AdraEngine::new(&mirror_cfg);
+        assert!(masked.masked_active());
+        assert!(!mirror.masked_active());
+        let mut rng = Rng::new(23);
+        for round in 0..24 {
+            let (a, b) = (rng.below(256), rng.below(256));
+            let row = (round % 6) * 2;
+            for e in [&mut masked, &mut mirror] {
+                e.execute(&CimOp::Write { addr: WordAddr { row, word: 1 }, value: a }).unwrap();
+                e.execute(&CimOp::Write { addr: WordAddr { row: row + 1, word: 1 }, value: b })
+                    .unwrap();
+            }
+            let ops = [
+                CimOp::Read2 { row_a: row, row_b: row + 1, word: 1 },
+                CimOp::Add { row_a: row, row_b: row + 1, word: 1 },
+                CimOp::Sub { row_a: row, row_b: row + 1, word: 1 },
+                CimOp::Compare { row_a: row, row_b: row + 1, word: 1 },
+                CimOp::Bool { f: BoolFn::AndNot, row_a: row, row_b: row + 1, word: 1 },
+                CimOp::Read(WordAddr { row, word: 1 }),
+            ];
+            for op in &ops {
+                let got = masked.execute(op).unwrap();
+                let want = mirror.execute(op).unwrap();
+                assert_eq!(got.value, want.value, "{op:?} a={a:#x} b={b:#x}");
+                assert_eq!(got.cost, want.cost, "{op:?}");
+            }
+        }
+        let s = masked.array().stats();
+        assert!(s.masked_activations > 0, "{s:?}");
+        assert!(s.det_cols > 0, "{s:?}");
+        assert!(s.det_col_fraction() > 0.8, "{s:?}");
+        assert_eq!(s.xval_mismatches, 0, "{s:?}");
+        assert_eq!(mirror.array().stats().masked_activations, 0);
+    }
+
+    #[test]
+    fn masked_xval_samples_against_planes() {
+        let cfg = varied_cfg(crate::config::MaskPolicy::Construction);
+        let mut e = AdraEngine::new(&cfg);
+        assert!(e.masked_active());
+        setup(&mut e, 0xA5, 0x3C);
+        let n = 3 * AdraEngine::XVAL_PERIOD;
+        for _ in 0..n {
+            e.execute(&CimOp::Read2 { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        }
+        let s = e.array().stats();
+        assert!(s.xval_checks >= 3, "sampling must run under variation: {s:?}");
+        assert_eq!(s.xval_mismatches, 0, "planes must agree with the analog rerun: {s:?}");
     }
 }

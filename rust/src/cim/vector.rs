@@ -7,14 +7,22 @@
 //! whole row anyway), with energy accounted through
 //! `EnergyModel::row_activation_energy`.
 //!
+//! §Perf (DESIGN.md §10): on the packed tiers the whole row is served
+//! from `u64` word slices of the engine's row planes — per lane that is
+//! two windowed loads and one `u128` add/sub, so a 1024-column row costs
+//! ~16 word operations instead of 1024 per-column compute-module
+//! evaluations.  The analog tiers still ripple per column; both paths
+//! are bit-identical (pinned by `tests/tier_equivalence.rs`).
+//!
 //! Wide arithmetic chains the per-word carry: an m-word operand pair is
 //! subtracted with ONE activation (all sense outputs latched), then the
-//! carry ripples across word boundaries in the near-array logic.
+//! carry chains across word boundaries — a `u128` carry chain on the
+//! packed path.
 
-use crate::cim::adra::AdraEngine;
+use crate::cim::adra::{AdraEngine, RowActivation};
 use crate::cim::ops::{CimValue, EngineError};
 use crate::energy::{EnergyBreakdown, OpCost};
-use crate::logic::{ripple_add_sub, RippleResult};
+use crate::logic::ripple_add_sub;
 
 /// Vector-op results: per-word values + the single-activation cost.
 #[derive(Clone, Debug)]
@@ -49,37 +57,66 @@ impl<'a> VectorEngine<'a> {
     }
 
     /// Vector subtract: word_i(row_a) - word_i(row_b) for ALL words, one
-    /// activation (`AdraEngine::activate_row` — a real single-access row
-    /// API; no after-the-fact stats surgery).  Returns one signed
-    /// difference per word.
+    /// activation.  Returns one signed difference per word.
     pub fn sub_row(&mut self, row_a: usize, row_b: usize) -> Result<VectorResult, EngineError> {
-        let wb = self.engine.cfg().word_bits;
-        let values: Vec<CimValue> = {
-            let outs = self.engine.activate_row(row_a, row_b)?;
-            outs.chunks(wb)
-                .map(|w| CimValue::Diff(ripple_add_sub(w, true).as_signed()))
-                .collect()
-        };
-        Ok(VectorResult { values, cost: self.row_cost() })
+        self.row_op(row_a, row_b, true)
     }
 
     /// Vector add over all words, one activation.
     pub fn add_row(&mut self, row_a: usize, row_b: usize) -> Result<VectorResult, EngineError> {
+        self.row_op(row_a, row_b, false)
+    }
+
+    /// One whole-row activation + per-lane derivation: word slices of the
+    /// packed row planes on the packed tiers, per-column ripple on the
+    /// analog tiers.
+    fn row_op(
+        &mut self,
+        row_a: usize,
+        row_b: usize,
+        sub: bool,
+    ) -> Result<VectorResult, EngineError> {
         let wb = self.engine.cfg().word_bits;
-        let values: Vec<CimValue> = {
-            let outs = self.engine.activate_row(row_a, row_b)?;
-            outs.chunks(wb)
-                .map(|w| CimValue::Sum(ripple_add_sub(w, false).as_unsigned()))
-                .collect()
+        let cols = self.engine.cfg().cols;
+        let values = match self.engine.activate_span(row_a, row_b, 0, cols)? {
+            RowActivation::Packed => {
+                // ceil-divide + per-lane width so an unvalidated config
+                // (cols not a multiple of word_bits) still yields the
+                // same lane shapes as the analog arm's chunks(wb)
+                let lanes = (cols + wb - 1) / wb;
+                let mut values = Vec::with_capacity(lanes);
+                for l in 0..lanes {
+                    let w = wb.min(cols - l * wb);
+                    let (a, b) = self.engine.planes_window(l * wb, l * wb + w);
+                    values.push(if sub {
+                        CimValue::Diff(AdraEngine::signed_of(a, w) - AdraEngine::signed_of(b, w))
+                    } else {
+                        CimValue::Sum(a as u128 + b as u128)
+                    });
+                }
+                values
+            }
+            RowActivation::Sense => self
+                .engine
+                .last_sense()
+                .chunks(wb)
+                .map(|w| {
+                    if sub {
+                        CimValue::Diff(ripple_add_sub(w, true).as_signed())
+                    } else {
+                        CimValue::Sum(ripple_add_sub(w, false).as_unsigned())
+                    }
+                })
+                .collect(),
         };
         Ok(VectorResult { values, cost: self.row_cost() })
     }
 
     /// Wide subtraction: operands span `m_words` consecutive words
-    /// (little-endian word order) in each row.  One activation
-    /// (`AdraEngine::activate_cols` over the word span); the carry
-    /// chains across word boundaries.  Result is an (m*word_bits + 1)-bit
-    /// signed value.
+    /// (little-endian word order) in each row.  One activation over the
+    /// word span; the carry chains across word boundaries — as a `u128`
+    /// chain over the packed planes on the packed tiers.  Result is an
+    /// (m*word_bits + 1)-bit signed value.
     pub fn sub_wide(
         &mut self,
         row_a: usize,
@@ -92,11 +129,15 @@ impl<'a> VectorEngine<'a> {
         assert!(m_words * wb <= 127, "wide result must fit i128");
         let lo = word_lo * wb;
         let hi = lo + m_words * wb;
-        let r: RippleResult = {
-            let sense = self.engine.activate_cols(row_a, row_b, lo, hi)?;
-            ripple_add_sub(sense, true)
+        let n = m_words * wb;
+        let diff = match self.engine.activate_span(row_a, row_b, lo, hi)? {
+            RowActivation::Packed => {
+                let (a, b) = self.engine.planes_window_wide(lo, hi);
+                AdraEngine::signed_of_wide(a, n) - AdraEngine::signed_of_wide(b, n)
+            }
+            RowActivation::Sense => ripple_add_sub(self.engine.last_sense(), true).as_signed(),
         };
-        Ok((r.as_signed(), self.row_cost()))
+        Ok((diff, self.row_cost()))
     }
 
     /// In-memory argmin/argmax over the words of `rows` at `word`:
@@ -115,16 +156,23 @@ impl<'a> VectorEngine<'a> {
         let mut compares = 0;
         let mut cost = OpCost::default();
         for (i, &row) in rows.iter().enumerate().skip(1) {
-            let diff = {
-                let outs = self.engine.activate_cols(row, best, lo, lo + wb)?;
-                ripple_add_sub(outs, true)
+            let (neg, zero) = match self.engine.activate_span(row, best, lo, lo + wb)? {
+                RowActivation::Packed => {
+                    let (a, b) = self.engine.planes_window(lo, lo + wb);
+                    let d = AdraEngine::signed_of(a, wb) - AdraEngine::signed_of(b, wb);
+                    (d < 0, d == 0)
+                }
+                RowActivation::Sense => {
+                    let diff = ripple_add_sub(self.engine.last_sense(), true);
+                    (diff.sign(), diff.is_zero())
+                }
             };
             compares += 1;
             cost = cost.then(&OpCost {
                 energy: self.engine.energy_model().cim_cost().energy,
                 latency: self.engine.energy_model().t_cim(),
             });
-            if !diff.sign() && !diff.is_zero() {
+            if !neg && !zero {
                 best = row;
                 best_idx = i;
             }
@@ -264,6 +312,42 @@ mod tests {
             (cfg.cols - 3 * cfg.word_bits) as u64,
             "half-selects counted once for the unspanned columns"
         );
+    }
+
+    #[test]
+    fn row_ops_identical_under_masked_variation() {
+        // the packed word-slice path under vt_sigma > 0 must match the
+        // pure-analog mirror lane for lane (same seed -> same dvt plane)
+        let mut c = cfg();
+        c.vt_sigma = 0.02;
+        let mut masked = AdraEngine::new(&c);
+        assert!(masked.masked_active());
+        let mut c_exact = c.clone();
+        c_exact.tier = crate::config::FidelityTier::Exact;
+        let mut mirror = AdraEngine::new(&c_exact);
+        let mut rng = Rng::new(91);
+        for w in 0..c.words_per_row() {
+            let (a, b) = (rng.below(256), rng.below(256));
+            for e in [&mut masked, &mut mirror] {
+                e.execute(&CimOp::Write { addr: WordAddr { row: 6, word: w }, value: a }).unwrap();
+                e.execute(&CimOp::Write { addr: WordAddr { row: 7, word: w }, value: b }).unwrap();
+            }
+        }
+        let (m_sub, m_add, m_wide) = {
+            let mut v = VectorEngine::new(&mut masked);
+            (v.sub_row(6, 7).unwrap(), v.add_row(6, 7).unwrap(), v.sub_wide(6, 7, 1, 3).unwrap())
+        };
+        let (r_sub, r_add, r_wide) = {
+            let mut v = VectorEngine::new(&mut mirror);
+            (v.sub_row(6, 7).unwrap(), v.add_row(6, 7).unwrap(), v.sub_wide(6, 7, 1, 3).unwrap())
+        };
+        assert_eq!(m_sub.values, r_sub.values);
+        assert_eq!(m_add.values, r_add.values);
+        assert_eq!(m_wide.0, r_wide.0);
+        assert_eq!(m_wide.1, r_wide.1, "wide cost must be tier-invariant");
+        let s = masked.array().stats();
+        assert!(s.det_cols > 0 && s.det_col_fraction() > 0.5, "{s:?}");
+        assert_eq!(s.xval_mismatches, 0);
     }
 
     #[test]

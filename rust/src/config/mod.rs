@@ -6,4 +6,4 @@ pub mod sim;
 pub mod toml;
 
 pub use device::{DeviceParams, N_COLS, N_SWEEP};
-pub use sim::{FidelityTier, SensingScheme, SimConfig};
+pub use sim::{FidelityTier, MaskPolicy, SensingScheme, SimConfig, VT_SEED_SALT};

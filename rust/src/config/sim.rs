@@ -48,13 +48,17 @@ impl SensingScheme {
 /// charge identical modeled `OpCost`s — they differ only in host
 /// wall-clock cost:
 ///
-/// * `Digital` — bit-packed fast path over the array's shadow plane
-///   (`or = a | b`, `and = a & b`, 64 columns per instruction).  Engaged
-///   only when decisions are provably deterministic (`vt_sigma == 0` and
-///   a one-time margin check against the analog references passes);
-///   otherwise the engine silently falls back to `Lut`.  Sampled
-///   cross-validation re-runs the analog pipeline every Nth activation
-///   and counts mismatches in `ArrayStats`.
+/// * `Digital` — packed word-slice fast path over the array's shadow
+///   plane (whole-row `u64` slices; `or = a | b`, `and = a & b`).  With
+///   `vt_sigma == 0` it engages after a one-time margin check against
+///   the analog references.  With `vt_sigma > 0` the MASKED variant
+///   engages instead (see [`MaskPolicy`]): per-cell margin masks route
+///   deterministic columns through the packed planes and the marginal
+///   minority through the exact analog pipeline, merged by mask; if no
+///   mask is available (policy `off`, collapsed margins) the engine
+///   silently falls back to `Lut`.  Sampled cross-validation re-runs
+///   the analog pipeline every Nth activation and counts mismatches in
+///   `ArrayStats`.
 /// * `Lut` — the separable `CellLut` analog pipeline (< 1e-5 relative to
 ///   the exact model), zero-allocation via engine scratch buffers.
 /// * `Exact` — the closed-form device model
@@ -90,6 +94,55 @@ impl FidelityTier {
     }
 }
 
+/// How the variation-aware margin masks of the masked digital tier are
+/// maintained (DESIGN.md §10).  Only meaningful with `tier = digital` and
+/// `vt_sigma > 0`; with `vt_sigma == 0` every cell is deterministic and
+/// the policy is irrelevant.
+///
+/// * `Off` — no masks: under variation the digital tier fully disables
+///   (the PR 4 behavior) and every activation runs the analog pipeline.
+/// * `Construction` — classify each cell once at array construction with
+///   the bit-independent budget (`DvtBudget::sym`); masks never change.
+/// * `Write` — classify against the per-stored-bit budget; each
+///   `write_bit` re-derives the cell's mask bit for the bit it now
+///   stores (rewrite = invalidation + reclassification).  Never weaker
+///   than `Construction`; at the paper bias the budgets coincide.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MaskPolicy {
+    Off,
+    Construction,
+    Write,
+}
+
+impl MaskPolicy {
+    pub const ALL: [MaskPolicy; 3] =
+        [MaskPolicy::Off, MaskPolicy::Construction, MaskPolicy::Write];
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "off" => Ok(Self::Off),
+            "construction" => Ok(Self::Construction),
+            "write" => Ok(Self::Write),
+            other => Err(format!(
+                "unknown mask policy {other:?} (expected off|construction|write)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Construction => "construction",
+            Self::Write => "write",
+        }
+    }
+}
+
+/// Seed salt for the per-cell V_T variation stream — shared by
+/// `FefetArray` (which samples the plane) and the mask-fraction
+/// estimators that replay the stream without allocating it.
+pub const VT_SEED_SALT: u64 = 0x5eed_d117;
+
 /// Full engine configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -105,6 +158,9 @@ pub struct SimConfig {
     /// is the default; it self-disables when `vt_sigma > 0` or the margin
     /// check fails, so results are tier-invariant by construction.
     pub tier: FidelityTier,
+    /// Margin-mask maintenance policy for the masked digital tier under
+    /// variation (see [`MaskPolicy`]).
+    pub mask_policy: MaskPolicy,
     /// sigma of per-cell V_T variation (volts); 0 disables Monte-Carlo.
     pub vt_sigma: f64,
     /// PRNG seed for variation and workloads.
@@ -128,6 +184,7 @@ impl Default for SimConfig {
             word_bits: 32,
             scheme: SensingScheme::Current,
             tier: FidelityTier::Digital,
+            mask_policy: MaskPolicy::Write,
             vt_sigma: 0.0,
             seed: 0xADA_2022,
             workers: 4,
@@ -187,6 +244,7 @@ impl SimConfig {
             word_bits: doc.usize_or("array.word_bits", d.word_bits)?,
             scheme: SensingScheme::parse(doc.str_or("array.scheme", "current")?)?,
             tier: FidelityTier::parse(doc.str_or("sim.tier", "digital")?)?,
+            mask_policy: MaskPolicy::parse(doc.str_or("sim.mask_policy", "write")?)?,
             vt_sigma: doc.f64_or("array.vt_sigma", d.vt_sigma)?,
             seed: doc.usize_or("sim.seed", d.seed as usize)? as u64,
             workers: doc.usize_or("coordinator.workers", d.workers)?,
@@ -269,6 +327,21 @@ mod tests {
     #[test]
     fn toml_bad_scheme_fails() {
         assert!(SimConfig::from_toml("[array]\nscheme = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn mask_policy_parsing_and_default() {
+        assert_eq!(SimConfig::default().mask_policy, MaskPolicy::Write);
+        assert_eq!(MaskPolicy::parse("off").unwrap(), MaskPolicy::Off);
+        assert_eq!(
+            MaskPolicy::parse("construction").unwrap(),
+            MaskPolicy::Construction
+        );
+        assert_eq!(MaskPolicy::parse("write").unwrap(), MaskPolicy::Write);
+        assert!(MaskPolicy::parse("lazy").is_err());
+        let cfg = SimConfig::from_toml("[sim]\nmask_policy = \"off\"\n").unwrap();
+        assert_eq!(cfg.mask_policy, MaskPolicy::Off);
+        assert!(SimConfig::from_toml("[sim]\nmask_policy = \"nope\"\n").is_err());
     }
 
     #[test]

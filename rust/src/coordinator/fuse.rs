@@ -103,6 +103,53 @@ pub fn follower_cost(full: &OpCost) -> OpCost {
     }
 }
 
+/// One unit of fused execution: a passthrough op, or a PAIR BATCH — the
+/// run of fusion groups sharing one row pair with no intervening write
+/// to either row.  On the packed tiers the whole batch is served from
+/// ONE fill of the pair's row planes (`prefill_pair_planes`) instead of
+/// re-extracting packed windows word by word; every group still records
+/// its own activation, so modeled stats and charged costs are identical
+/// to unbatched execution — the batching is purely host-side.
+enum ExecStep {
+    Pass(usize),
+    Batch {
+        row_a: usize,
+        row_b: usize,
+        /// (word, batch indices of the ops fused on that word)
+        groups: Vec<(usize, Vec<usize>)>,
+    },
+}
+
+/// Coalesce a fusion plan into pair batches.  A write to either row of a
+/// pair closes its open batch exactly like it closes fusion groups, so a
+/// batch's planes are always coherent with every group it serves.
+fn pair_batches(plan: Vec<PlanStep>, ops: &[CimOp]) -> Vec<ExecStep> {
+    let mut steps: Vec<ExecStep> = Vec::new();
+    let mut open: Vec<((usize, usize), usize)> = Vec::new();
+    for step in plan {
+        match step {
+            PlanStep::Fused { row_a, row_b, word, indices } => {
+                if let Some(&(_, si)) = open.iter().find(|(k, _)| *k == (row_a, row_b)) {
+                    if let ExecStep::Batch { groups, .. } = &mut steps[si] {
+                        groups.push((word, indices));
+                        continue;
+                    }
+                }
+                let si = steps.len();
+                steps.push(ExecStep::Batch { row_a, row_b, groups: vec![(word, indices)] });
+                open.push(((row_a, row_b), si));
+            }
+            PlanStep::Passthrough(i) => {
+                if let CimOp::Write { addr, .. } = &ops[i] {
+                    open.retain(|((ra, rb), _)| *ra != addr.row && *rb != addr.row);
+                }
+                steps.push(ExecStep::Pass(i));
+            }
+        }
+    }
+    steps
+}
+
 /// Execute a batch with fusion on an `AdraEngine`.  Returns results in
 /// the original batch order.  The first op of a fused group is charged
 /// the full activation `cim_cost`; followers are charged only the
@@ -111,40 +158,62 @@ pub fn execute_fused(
     engine: &mut AdraEngine,
     ops: &[CimOp],
 ) -> Vec<Result<CimResult, EngineError>> {
-    let plan = fuse_batch(ops);
+    let steps = pair_batches(fuse_batch(ops), ops);
     let mut results: Vec<Option<Result<CimResult, EngineError>>> = vec![None; ops.len()];
     let full = engine.energy_model().cim_cost();
     let follower = follower_cost(&full);
-    for step in plan {
+    let wb = engine.cfg().word_bits;
+    for step in steps {
         match step {
-            PlanStep::Passthrough(i) => {
+            ExecStep::Pass(i) => {
                 results[i] = Some(engine.execute(&ops[i]));
             }
-            PlanStep::Fused { row_a, row_b, word, indices } => {
-                // one activation serves the whole group allocation-free:
-                // the digital tier hands back the two packed operand
-                // words and every follower derives by word arithmetic;
-                // the analog tiers leave sense outputs in the engine
-                // scratch and followers derive from that borrow
-                let wb = engine.cfg().word_bits;
-                match engine.activate_packed(row_a, row_b, word) {
+            ExecStep::Batch { row_a, row_b, groups } => {
+                // out-of-range words take the per-group path so a bad op
+                // errors alone instead of poisoning the batch's span
+                let words_per_row = engine.cfg().words_per_row();
+                let (groups, bad): (Vec<_>, Vec<_>) =
+                    groups.into_iter().partition(|(w, _)| *w < words_per_row);
+                for (word, indices) in &bad {
+                    let outcome = engine.activate_packed(row_a, row_b, *word);
+                    serve_group(engine, ops, &mut results, indices, outcome, &full, &follower, wb);
+                }
+                if groups.is_empty() {
+                    continue;
+                }
+                let lo = groups.iter().map(|(w, _)| w * wb).min().expect("non-empty batch");
+                let hi = groups.iter().map(|(w, _)| (w + 1) * wb).max().expect("non-empty");
+                // a sparse hull (served words cover < half the span) would
+                // fill — and in masked mode analog-sense — columns no
+                // group consumes; serve those batches per group instead
+                let sparse = hi - lo > 2 * groups.len() * wb;
+                let prefilled = if sparse {
+                    Ok(false)
+                } else {
+                    engine.prefill_pair_planes(row_a, row_b, lo, hi)
+                };
+                match prefilled {
                     Err(e) => {
-                        for &i in &indices {
-                            results[i] = Some(Err(e.clone()));
+                        for (_, indices) in &groups {
+                            for &i in indices {
+                                results[i] = Some(Err(e.clone()));
+                            }
                         }
                     }
-                    Ok(Some((a, b))) => {
-                        for (k, &i) in indices.iter().enumerate() {
-                            let cost = if k == 0 { full } else { follower };
-                            let value = AdraEngine::digital_value(&ops[i], a, b, wb)
-                                .expect("only dual-row ops are fused");
-                            results[i] = Some(Ok(CimResult { value, cost }));
+                    Ok(true) => {
+                        // packed tiers: every group serves from the one
+                        // plane fill; followers derive by word arithmetic
+                        for (word, indices) in &groups {
+                            let outcome = engine.serve_group_from_planes(row_a, row_b, *word);
+                            serve_group(engine, ops, &mut results, indices, outcome, &full, &follower, wb);
                         }
                     }
-                    Ok(None) => {
-                        for (k, &i) in indices.iter().enumerate() {
-                            let cost = if k == 0 { full } else { follower };
-                            results[i] = Some(Ok(derive(&ops[i], engine.last_sense(), cost)));
+                    Ok(false) => {
+                        // analog tiers and sparse batches: one activation
+                        // per group, exactly the unbatched datapath
+                        for (word, indices) in &groups {
+                            let outcome = engine.activate_packed(row_a, row_b, *word);
+                            serve_group(engine, ops, &mut results, indices, outcome, &full, &follower, wb);
                         }
                     }
                 }
@@ -152,6 +221,41 @@ pub fn execute_fused(
         }
     }
     results.into_iter().map(|r| r.expect("plan covers batch")).collect()
+}
+
+/// Derive one fused group's results from its activation outcome.
+#[allow(clippy::too_many_arguments)]
+fn serve_group(
+    engine: &AdraEngine,
+    ops: &[CimOp],
+    results: &mut [Option<Result<CimResult, EngineError>>],
+    indices: &[usize],
+    outcome: Result<Option<(u64, u64)>, EngineError>,
+    full: &OpCost,
+    follower: &OpCost,
+    wb: usize,
+) {
+    match outcome {
+        Err(e) => {
+            for &i in indices {
+                results[i] = Some(Err(e.clone()));
+            }
+        }
+        Ok(Some((a, b))) => {
+            for (k, &i) in indices.iter().enumerate() {
+                let cost = if k == 0 { *full } else { *follower };
+                let value = AdraEngine::digital_value(&ops[i], a, b, wb)
+                    .expect("only dual-row ops are fused");
+                results[i] = Some(Ok(CimResult { value, cost }));
+            }
+        }
+        Ok(None) => {
+            for (k, &i) in indices.iter().enumerate() {
+                let cost = if k == 0 { *full } else { *follower };
+                results[i] = Some(Ok(derive(&ops[i], engine.last_sense(), cost)));
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -256,6 +360,61 @@ mod tests {
             fused_energy < 0.25 * plain_energy,
             "fused {fused_energy:e} vs plain {plain_energy:e}"
         );
+    }
+
+    /// The pair-batch planes reuse must be host-side only: a multi-word
+    /// run on one row pair produces the same values, charged costs, AND
+    /// array stats as the per-group analog datapath.
+    #[test]
+    fn pair_batched_words_match_per_group_execution() {
+        let cfg = cfg(); // 64 cols x 8-bit words
+        let mut lut_cfg = cfg.clone();
+        lut_cfg.tier = crate::config::FidelityTier::Lut;
+        let mut ops = Vec::new();
+        for w in 0..4 {
+            ops.push(CimOp::Write { addr: WordAddr { row: 0, word: w }, value: 40 + w as u64 });
+            ops.push(CimOp::Write { addr: WordAddr { row: 1, word: w }, value: 90 + w as u64 });
+        }
+        for w in 0..4 {
+            ops.push(CimOp::Sub { row_a: 0, row_b: 1, word: w });
+            ops.push(CimOp::Compare { row_a: 0, row_b: 1, word: w });
+            ops.push(CimOp::Add { row_a: 0, row_b: 1, word: w });
+        }
+        let mut digital = AdraEngine::new(&cfg);
+        let mut lut = AdraEngine::new(&lut_cfg);
+        assert!(digital.digital_active() && !lut.digital_active());
+        let rd = execute_fused(&mut digital, &ops);
+        let rl = execute_fused(&mut lut, &ops);
+        for (i, (d, l)) in rd.iter().zip(&rl).enumerate() {
+            let (d, l) = (d.as_ref().unwrap(), l.as_ref().unwrap());
+            assert_eq!(d.value, l.value, "op {i}");
+            assert_eq!(d.cost, l.cost, "op {i}: batching must not change charges");
+        }
+        let sd = digital.array().stats();
+        let sl = lut.array().stats();
+        assert_eq!(sd.dual_activations, 4, "one activation per word group");
+        assert_eq!(sd.dual_activations, sl.dual_activations);
+        assert_eq!(sd.half_selected_cols, sl.half_selected_cols);
+        assert_eq!(sd.digital_activations, 4, "all groups served packed");
+    }
+
+    /// Planes cached for a pair batch must be refilled once a write to a
+    /// batch row lands — the second group sees the new contents.
+    #[test]
+    fn write_between_groups_refills_planes() {
+        let cfg = cfg();
+        let mut e = AdraEngine::new(&cfg);
+        let ops = vec![
+            CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 9 },
+            CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 4 },
+            CimOp::Sub { row_a: 0, row_b: 1, word: 0 },
+            CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 7 },
+            CimOp::Sub { row_a: 0, row_b: 1, word: 0 },
+        ];
+        let rs = execute_fused(&mut e, &ops);
+        assert_eq!(rs[2].as_ref().unwrap().value, crate::cim::CimValue::Diff(5));
+        assert_eq!(rs[4].as_ref().unwrap().value, crate::cim::CimValue::Diff(2));
+        assert_eq!(e.array().stats().dual_activations, 2);
     }
 
     /// Property: random batches — fused == unfused values, and fused

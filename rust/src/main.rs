@@ -106,6 +106,11 @@ fn cmd_run(args: &[String]) -> i32 {
         .opt("mix", Some("sub"), "op mix: sub|balanced|subheavy")
         .opt("seed", Some("42"), "workload seed")
         .opt("tier", Some("digital"), "activation fidelity tier: digital|lut|exact")
+        .opt(
+            "mask-policy",
+            Some("write"),
+            "margin-mask policy under vt_sigma > 0: off|construction|write",
+        )
         .flag("baseline", "run the near-memory baseline engine instead");
     let p = parse_or_exit(&parser, args);
 
@@ -119,6 +124,13 @@ fn cmd_run(args: &[String]) -> i32 {
     };
     cfg.tier = match adra::config::FidelityTier::parse(p.get_or("tier", "digital")) {
         Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    cfg.mask_policy = match adra::config::MaskPolicy::parse(p.get_or("mask-policy", "write")) {
+        Ok(m) => m,
         Err(e) => {
             eprintln!("{e}");
             return 2;

@@ -160,7 +160,8 @@ impl RunMetrics {
             "{label}: {} ops ({} errors), modeled energy {:.3} nJ, \
              mean op latency {:.3} ns, p50/p95/p99 {:.0}/{:.0}/{:.0} ns, \
              modeled throughput {:.2} Mop/s, \
-             activations {} ({} digital), wall {:.3} s",
+             activations {} ({} digital, {} masked, det cols {:.1}%), \
+             wall {:.3} s",
             self.ops,
             self.errors,
             self.energy.total() * 1e9,
@@ -171,6 +172,8 @@ impl RunMetrics {
             self.modeled_throughput() / 1e6,
             self.array.dual_activations,
             self.array.digital_activations,
+            self.array.masked_activations,
+            self.array.det_col_fraction() * 100.0,
             self.wall_seconds,
         )
     }

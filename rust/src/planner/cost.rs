@@ -21,8 +21,9 @@
 //! and an EDP-minimizing planner routes them to ADRA.
 
 use crate::cim::CimOp;
-use crate::config::SimConfig;
+use crate::config::{FidelityTier, MaskPolicy, SimConfig};
 use crate::energy::{EnergyModel, OpCost};
+use crate::sensing::DvtBudget;
 
 /// Which executor runs an op.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -165,6 +166,76 @@ pub struct Decision {
     pub cost: TableCost,
 }
 
+/// Host-side simulation cost of the tiered activation kernel.
+///
+/// Since the margin masks (DESIGN.md §10), digital-vs-analog routing is
+/// **per-column-fraction, not all-or-nothing**: under `vt_sigma > 0` a
+/// masked activation serves the deterministic column fraction from the
+/// packed planes and only the marginal remainder through the analog
+/// pipeline.  This model prices that blend so schedulers can reason
+/// about expected host throughput (the modeled HARDWARE cost stays
+/// tier-invariant by construction — see
+/// `fidelity_tier_leaves_price_tables_unchanged`).
+///
+/// Costs are relative units calibrated against the hotpath bench shape:
+/// one packed 64-column word op ~ unit cost; one analog column eval is
+/// a few tens of units (LUT pipeline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierCostModel {
+    /// Expected deterministically-served CELL fraction in [0, 1].
+    pub cell_det_fraction: f64,
+    /// Host cost of one packed 64-column word operation.
+    pub packed_word_cost: f64,
+    /// Host cost of one analog column evaluation.
+    pub analog_col_cost: f64,
+}
+
+impl TierCostModel {
+    /// Default relative calibration (hotpath bench shape).
+    const PACKED_WORD_COST: f64 = 1.0;
+    const ANALOG_COL_COST: f64 = 40.0;
+
+    /// Derive the expected deterministic fraction from the config: 1.0
+    /// for the clean digital tier, the mask-classified fraction under
+    /// variation, 0.0 for analog tiers or masks off.
+    pub fn from_config(cfg: &SimConfig) -> Self {
+        let cell = match cfg.tier {
+            FidelityTier::Digital if cfg.vt_sigma == 0.0 => 1.0,
+            FidelityTier::Digital if cfg.mask_policy != MaskPolicy::Off => {
+                let f = DvtBudget::deterministic_cell_fraction(cfg);
+                // below the engine's engagement floor the masked path
+                // stays off and everything runs analog
+                if f >= crate::cim::AdraEngine::MASKED_MIN_DET_FRACTION {
+                    f
+                } else {
+                    0.0
+                }
+            }
+            _ => 0.0,
+        };
+        Self {
+            cell_det_fraction: cell,
+            packed_word_cost: Self::PACKED_WORD_COST,
+            analog_col_cost: Self::ANALOG_COL_COST,
+        }
+    }
+
+    /// Expected deterministic COLUMN fraction: a dual-row column is
+    /// packed only when BOTH its cells are deterministic.
+    pub fn column_det_fraction(&self) -> f64 {
+        self.cell_det_fraction * self.cell_det_fraction
+    }
+
+    /// Expected host cost of one `width`-column dual-row activation:
+    /// packed word ops for the whole span plus analog evaluation of the
+    /// expected marginal minority.
+    pub fn activation_host_cost(&self, width: usize) -> f64 {
+        let words = ((width + 63) / 64) as f64;
+        let marginal = (1.0 - self.column_det_fraction()) * width as f64;
+        words * self.packed_word_cost + marginal * self.analog_col_cost
+    }
+}
+
 /// Cost model binding both executors' tables to one array configuration
 /// and an optimization objective.
 #[derive(Clone, Debug)]
@@ -172,11 +243,16 @@ pub struct PlanCostModel {
     pub objective: Objective,
     adra: CostTable,
     baseline: CostTable,
+    /// Host-side tier cost (per-column-fraction digital/analog blend);
+    /// advisory — never feeds the modeled-hardware routing above.
+    tier: TierCostModel,
 }
 
 impl PlanCostModel {
     pub fn new(cfg: &SimConfig, objective: Objective) -> Self {
-        Self::from_model(&EnergyModel::new(cfg), objective)
+        let mut m = Self::from_model(&EnergyModel::new(cfg), objective);
+        m.tier = TierCostModel::from_config(cfg);
+        m
     }
 
     pub fn from_model(model: &EnergyModel, objective: Objective) -> Self {
@@ -184,7 +260,18 @@ impl PlanCostModel {
             objective,
             adra: CostTable::adra(model),
             baseline: CostTable::baseline(model),
+            // callers without a SimConfig get the clean-digital blend
+            tier: TierCostModel {
+                cell_det_fraction: 1.0,
+                packed_word_cost: TierCostModel::PACKED_WORD_COST,
+                analog_col_cost: TierCostModel::ANALOG_COL_COST,
+            },
         }
+    }
+
+    /// The host-side tier cost model (per-column-fraction blend).
+    pub fn tier_model(&self) -> &TierCostModel {
+        &self.tier
     }
 
     pub fn adra(&self) -> &CostTable {
@@ -332,6 +419,67 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// The tier host-cost model prices digital-vs-analog routing as a
+    /// per-column fraction: full packed at sigma 0, a blend under
+    /// masked variation, full analog with masks off or on analog tiers.
+    #[test]
+    fn tier_host_cost_is_per_column_fraction() {
+        use crate::config::MaskPolicy;
+        let mut cfg = SimConfig::square(1024, SensingScheme::Current);
+
+        let clean = TierCostModel::from_config(&cfg);
+        assert_eq!(clean.cell_det_fraction, 1.0);
+        assert_eq!(clean.column_det_fraction(), 1.0);
+        // clean digital: 16 word ops for a 1024-col row, zero analog
+        assert!((clean.activation_host_cost(1024) - 16.0).abs() < 1e-9);
+
+        cfg.vt_sigma = 0.02;
+        let masked = TierCostModel::from_config(&cfg);
+        assert!(masked.cell_det_fraction > 0.95 && masked.cell_det_fraction < 1.0);
+        let blend = masked.activation_host_cost(1024);
+
+        cfg.mask_policy = MaskPolicy::Off;
+        let off = TierCostModel::from_config(&cfg);
+        assert_eq!(off.cell_det_fraction, 0.0);
+        let analog = off.activation_host_cost(1024);
+
+        assert!(
+            16.0 < blend && blend < analog,
+            "blend {blend} must sit between packed 16 and analog {analog}"
+        );
+        // the masked blend keeps most of the packed win: < 10% of analog
+        assert!(blend < 0.1 * analog, "blend {blend} vs analog {analog}");
+
+        cfg.mask_policy = MaskPolicy::Write;
+        cfg.tier = crate::config::FidelityTier::Lut;
+        assert_eq!(TierCostModel::from_config(&cfg).cell_det_fraction, 0.0);
+    }
+
+    #[test]
+    fn plan_model_exposes_tier_blend_without_touching_routing() {
+        use crate::config::MaskPolicy;
+        let mut cfg = SimConfig::square(256, SensingScheme::Current);
+        cfg.vt_sigma = 0.02;
+        let with_masks = PlanCostModel::new(&cfg, Objective::Edp);
+        cfg.mask_policy = MaskPolicy::Off;
+        let without = PlanCostModel::new(&cfg, Objective::Edp);
+        assert!(
+            with_masks.tier_model().column_det_fraction()
+                > without.tier_model().column_det_fraction()
+        );
+        // modeled-hardware routing must be identical either way
+        for class in [OpClass::Read, OpClass::Write, OpClass::Commutative, OpClass::Dual] {
+            assert_eq!(
+                with_masks.choose_class(class).executor,
+                without.choose_class(class).executor
+            );
+            assert_eq!(
+                with_masks.adra().price_class(class),
+                without.adra().price_class(class)
+            );
         }
     }
 

@@ -32,7 +32,10 @@ pub mod ir;
 pub mod lower;
 pub mod place;
 
-pub use cost::{class_of, CostTable, Decision, Executor, Objective, OpClass, PlanCostModel, TableCost};
+pub use cost::{
+    class_of, CostTable, Decision, Executor, Objective, OpClass, PlanCostModel, TableCost,
+    TierCostModel,
+};
 pub use engine::{planned_coordinator, PlannedEngine};
 pub use ir::{AggKind, IrOp, Layout, PlanError, Predicate, Program, RecordRange, ScratchRow};
 pub use lower::{lower, LoweredProgram, RoutedOp, StepSpan};

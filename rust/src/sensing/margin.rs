@@ -1,8 +1,11 @@
 //! Sense-margin analysis: the worst-case separation between adjacent
 //! levels and the sensing failure point as the wordline asymmetry shrinks
-//! (the ablation behind the V_GREAD1/V_GREAD2 design choice).
+//! (the ablation behind the V_GREAD1/V_GREAD2 design choice), plus the
+//! per-cell deterministic-dVt budget behind the variation-aware margin
+//! masks of the masked digital tier (DESIGN.md §10).
 
-use crate::config::DeviceParams;
+use super::refs::{CurrentRefs, VoltageRefs};
+use crate::config::{DeviceParams, SensingScheme, SimConfig};
 use crate::device;
 
 /// Margin summary for one operating point.
@@ -69,6 +72,220 @@ pub fn min_viable_asymmetry(p: &DeviceParams, c_rbl: f64, steps: usize) -> Optio
     None
 }
 
+/// Per-cell deterministic-dVt budget: the largest |dVt| a cell may carry
+/// and still be GUARANTEED to decode identically to the nominal digital
+/// decision, for every dual-row corner it can participate in and for the
+/// single-row read — the classification behind the packed margin masks.
+///
+/// Soundness rests on monotonicity: cell current falls (and the RBL final
+/// voltage rises) monotonically in dVt, and every sense decision is a
+/// threshold test, so checking the two extremes `±t` of both cells of a
+/// column covers the whole `[-t, +t]^2` square.  A guard band (0.1% of
+/// the reference scale) absorbs the LUT-vs-exact backend gap so the same
+/// mask is safe for either analog backend.
+///
+/// `t0`/`t1` are per-stored-bit budgets (write-time classification,
+/// `MaskPolicy::Write`); `sym()` is the bit-independent worst case
+/// (construction-time classification).  At the paper bias the corner that
+/// binds involves both bits, so `t0 == t1 == sym()` — the refinement pays
+/// off only at skewed operating points.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DvtBudget {
+    /// Budget for a cell currently storing '0' (HRS).
+    pub t0: f64,
+    /// Budget for a cell currently storing '1' (LRS).
+    pub t1: f64,
+}
+
+/// Relative guard band applied on every reference comparison (fraction of
+/// the reference scale): decisions inside the band count as marginal even
+/// if nominally correct, covering the `CellLut` approximation error
+/// (< 1e-5 relative) with two orders of magnitude to spare.
+const DECODE_GUARD_REL: f64 = 1e-3;
+
+/// Bisection search cap: no realistic budget exceeds this (volts).
+const BUDGET_CAP: f64 = 0.6;
+
+/// One operating point's guarded decode checker, references derived once.
+struct DecodeCheck {
+    p: DeviceParams,
+    scheme: SensingScheme,
+    c_rbl: f64,
+    cur: CurrentRefs,
+    volt: VoltageRefs,
+    i_guard: f64,
+    v_guard: f64,
+}
+
+impl DecodeCheck {
+    fn new(cfg: &SimConfig) -> Self {
+        let p = cfg.device.clone();
+        let c_rbl = cfg.c_rbl();
+        let cur = CurrentRefs::derive(&p, p.v_gread1, p.v_gread2);
+        let volt = VoltageRefs::derive(&p, p.v_gread1, p.v_gread2, c_rbl);
+        let i_guard = DECODE_GUARD_REL * cur.i_ref_and;
+        let v_guard = DECODE_GUARD_REL * p.v_read;
+        Self { p, scheme: cfg.scheme, c_rbl, cur, volt, i_guard, v_guard }
+    }
+
+    /// `q` must sit on the `want_above` side of `r`, clear of the guard.
+    fn side(q: f64, r: f64, want_above: bool, guard: f64) -> bool {
+        if want_above {
+            q > r + guard
+        } else {
+            q < r - guard
+        }
+    }
+
+    /// Do all four (A,B) corners and both single-read states decode
+    /// correctly with the A-role cell at `±t(a)` and the B-role cell at
+    /// `±t(b)` (t per stored bit)?
+    fn ok(&self, t0: f64, t1: f64) -> bool {
+        let p = &self.p;
+        let t_of = |bit: bool| if bit { t1 } else { t0 };
+        for a in [false, true] {
+            for b in [false, true] {
+                for sa in [-t_of(a), t_of(a)] {
+                    for sb in [-t_of(b), t_of(b)] {
+                        let ok = match self.scheme {
+                            SensingScheme::Current => {
+                                let i = device::senseline_current(
+                                    p,
+                                    p.pol_of_bit(a),
+                                    p.pol_of_bit(b),
+                                    p.v_gread1,
+                                    p.v_gread2,
+                                    p.v_read,
+                                    sa,
+                                    sb,
+                                );
+                                Self::side(i, self.cur.i_ref_or, a || b, self.i_guard)
+                                    && Self::side(i, self.cur.i_ref_b, b, self.i_guard)
+                                    && Self::side(i, self.cur.i_ref_and, a && b, self.i_guard)
+                            }
+                            SensingScheme::VoltagePrecharged
+                            | SensingScheme::VoltageDischarged => {
+                                // voltage polarity flips: decision is v < ref
+                                let v = device::rbl_transient(
+                                    p,
+                                    p.pol_of_bit(a),
+                                    p.pol_of_bit(b),
+                                    p.v_gread1,
+                                    p.v_gread2,
+                                    p.v_read,
+                                    self.c_rbl,
+                                    sa,
+                                    sb,
+                                )
+                                .v_final;
+                                Self::side(v, self.volt.v_ref_or, !(a || b), self.v_guard)
+                                    && Self::side(v, self.volt.v_ref_b, !b, self.v_guard)
+                                    && Self::side(v, self.volt.v_ref_and, !(a && b), self.v_guard)
+                            }
+                        };
+                        if !ok {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        // the single-row read decodes through the current reference on
+        // every scheme (AdraEngine::read_word_sensed)
+        for bit in [false, true] {
+            for s in [-t_of(bit), t_of(bit)] {
+                let i = device::cell_current(p, p.v_gread2, p.v_read, p.pol_of_bit(bit), s);
+                if !Self::side(i, self.cur.i_ref_read, bit, self.i_guard) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Largest `t >= lo` passing `f`, by bisection on `[lo, BUDGET_CAP]`.
+/// Returns the passing (lower) end of the final bracket — the safe side.
+fn bisect_budget(lo: f64, f: impl Fn(f64) -> bool) -> f64 {
+    if !f(lo) {
+        return 0.0;
+    }
+    if f(BUDGET_CAP) {
+        return BUDGET_CAP;
+    }
+    let (mut lo, mut hi) = (lo, BUDGET_CAP);
+    for _ in 0..48 {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+impl DvtBudget {
+    /// Budget of a cell storing `bit`.
+    pub fn of(&self, bit: bool) -> f64 {
+        if bit {
+            self.t1
+        } else {
+            self.t0
+        }
+    }
+
+    /// Bit-independent (construction-time) budget.
+    pub fn sym(&self) -> f64 {
+        self.t0.min(self.t1)
+    }
+
+    /// Is a cell with variation offset `dvt`, storing `bit`,
+    /// deterministically resolvable?
+    pub fn classify(&self, dvt: f64, bit: bool) -> bool {
+        dvt.abs() <= self.of(bit)
+    }
+
+    /// Derive the budgets for an operating point.  Starts from the
+    /// symmetric bisection, then two rounds of coordinate ascent grow the
+    /// per-bit budgets (each step re-checks every corner with the current
+    /// pair, so the pair stays jointly sound throughout).
+    pub fn derive(cfg: &SimConfig) -> Self {
+        let chk = DecodeCheck::new(cfg);
+        let sym = bisect_budget(0.0, |t| chk.ok(t, t));
+        let mut t0 = sym;
+        let mut t1 = sym;
+        for _ in 0..2 {
+            t0 = bisect_budget(t0, |t| chk.ok(t, t1));
+            t1 = bisect_budget(t1, |t| chk.ok(t0, t));
+        }
+        Self { t0, t1 }
+    }
+
+    /// Fraction of cells the construction-time classification marks
+    /// deterministic for this config — replays (a capped prefix of) the
+    /// array's variation RNG stream without allocating the planes.  The
+    /// number is advisory (it feeds the planner's host-cost blend), so a
+    /// 64k-cell sample is plenty and keeps `PlanCostModel` construction
+    /// from re-walking a megacell array the engine already classified.
+    /// 1.0 when `vt_sigma == 0`.
+    pub fn deterministic_cell_fraction(cfg: &SimConfig) -> f64 {
+        if cfg.vt_sigma <= 0.0 {
+            return 1.0;
+        }
+        let t = Self::derive(cfg).sym();
+        let mut rng = crate::util::rng::Rng::new(cfg.seed ^ crate::config::VT_SEED_SALT);
+        let n = (cfg.rows * cfg.cols).min(1 << 16);
+        let mut det = 0usize;
+        for _ in 0..n {
+            if (rng.normal() * cfg.vt_sigma).abs() <= t {
+                det += 1;
+            }
+        }
+        det as f64 / n as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,5 +322,67 @@ mod tests {
         assert!(dv <= (p.v_gread2 - p.v_gread1) + 1e-9,
                 "paper separation {} below minimum viable {dv}",
                 p.v_gread2 - p.v_gread1);
+    }
+
+    #[test]
+    fn current_budget_is_tens_of_millivolts() {
+        let cfg = SimConfig::square(256, SensingScheme::Current);
+        let b = DvtBudget::derive(&cfg);
+        assert!(b.sym() > 0.03 && b.sym() < 0.09, "{b:?}");
+        // per-bit budgets can only extend the symmetric one
+        assert!(b.t0 >= b.sym() && b.t1 >= b.sym());
+    }
+
+    #[test]
+    fn budget_extremes_still_decode_every_corner() {
+        // the certificate the classifier hands out: BOTH cells at their
+        // budget extremes must decode every corner through the real refs
+        let cfg = SimConfig::square(256, SensingScheme::Current);
+        let b = DvtBudget::derive(&cfg);
+        let chk = DecodeCheck::new(&cfg);
+        assert!(chk.ok(b.t0, b.t1), "{b:?} must be jointly sound");
+        // and a budget 10% past the boundary must NOT certify
+        assert!(!chk.ok(b.t0 * 1.5, b.t1 * 1.5), "{b:?} must be tight-ish");
+    }
+
+    #[test]
+    fn classify_respects_budget_and_sign() {
+        let cfg = SimConfig::square(256, SensingScheme::Current);
+        let b = DvtBudget::derive(&cfg);
+        assert!(b.classify(0.0, false) && b.classify(0.0, true));
+        assert!(b.classify(-0.9 * b.t0, false));
+        assert!(!b.classify(1.1 * b.t1, true));
+        assert!(!b.classify(-0.59, false), "past the cap is never deterministic");
+    }
+
+    #[test]
+    fn collapsed_margins_give_zero_budget() {
+        // 64-row voltage sensing discharges so deep the dual-row levels
+        // compress to nanovolts — nothing can be deterministic there, and
+        // the classifier must say so rather than certify garbage
+        let mut cfg = SimConfig::square(64, SensingScheme::VoltagePrecharged);
+        cfg.word_bits = 8;
+        let b = DvtBudget::derive(&cfg);
+        assert!(b.sym() < 1e-6, "{b:?}");
+    }
+
+    #[test]
+    fn large_array_voltage_budget_recovers() {
+        let cfg = SimConfig::square(1024, SensingScheme::VoltageDischarged);
+        let b = DvtBudget::derive(&cfg);
+        assert!(b.sym() > 0.02, "{b:?}: 1024-row voltage margins are real");
+    }
+
+    #[test]
+    fn cell_fraction_tracks_sigma() {
+        let mut cfg = SimConfig::square(256, SensingScheme::Current);
+        assert_eq!(DvtBudget::deterministic_cell_fraction(&cfg), 1.0);
+        cfg.vt_sigma = 0.02;
+        let f20 = DvtBudget::deterministic_cell_fraction(&cfg);
+        assert!(f20 > 0.95, "sigma=20mV: {f20}");
+        cfg.vt_sigma = 0.05;
+        let f50 = DvtBudget::deterministic_cell_fraction(&cfg);
+        assert!(f50 < f20, "more variation, fewer deterministic cells");
+        assert!(f50 > 0.3, "{f50}");
     }
 }

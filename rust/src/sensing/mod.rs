@@ -8,6 +8,6 @@ pub mod refs;
 pub mod voltage;
 
 pub use current::{CurrentSenseBank, SenseOut};
-pub use margin::MarginReport;
+pub use margin::{DvtBudget, MarginReport};
 pub use refs::{CurrentRefs, VoltageRefs};
 pub use voltage::VoltageSenseBank;

@@ -57,8 +57,15 @@ pub struct ServeMetrics {
     /// Engine-level dual activations across all shards (snapshot of the
     /// pool's `RunMetrics::array` at the last round).
     pub array_dual_activations: u64,
-    /// Of those, activations served by the bit-packed digital tier.
+    /// Of those, activations served entirely by the bit-packed digital
+    /// tier.
     pub array_digital_activations: u64,
+    /// Activations served by the masked packed path under variation.
+    pub array_masked_activations: u64,
+    /// Columns served straight from the packed planes (deterministic).
+    pub array_det_cols: u64,
+    /// Columns the masked path routed through the analog pipeline.
+    pub array_marginal_cols: u64,
     /// Digital-vs-analog cross-validation mismatches (must stay 0).
     pub array_xval_mismatches: u64,
     /// Submission-to-reply wall latency per tenant.
@@ -98,6 +105,18 @@ impl ServeMetrics {
         }
     }
 
+    /// Fraction of packed-path columns served deterministically —
+    /// delegates to `ArrayStats::det_col_fraction` so the empty-trajectory
+    /// convention lives in one place.
+    pub fn array_det_fraction(&self) -> f64 {
+        crate::array::ArrayStats {
+            det_cols: self.array_det_cols,
+            marginal_cols: self.array_marginal_cols,
+            ..Default::default()
+        }
+        .det_col_fraction()
+    }
+
     /// Single-line counter summary (REPL `stats` prints this).
     pub fn report(&self, label: &str) -> String {
         format!(
@@ -108,7 +127,8 @@ impl ServeMetrics {
              {} evictions, {} swept), {} invalidating writes, \
              fairness {} quota hits / {} deferrals, \
              controller max_round {} ({}+ {}- {}=), \
-             tiered kernel {}/{} activations digital ({} xval mismatches)",
+             tiered kernel {}/{} activations digital + {} masked \
+             (det-col fraction {:.1}%, {} xval mismatches)",
             self.programs,
             self.rounds,
             self.batch_occupancy(),
@@ -135,6 +155,8 @@ impl ServeMetrics {
             self.controller_holds,
             self.array_digital_activations,
             self.array_dual_activations,
+            self.array_masked_activations,
+            self.array_det_fraction() * 100.0,
             self.array_xval_mismatches,
         )
     }
@@ -205,6 +227,9 @@ mod tests {
         m.negative_hits = 1;
         m.array_dual_activations = 12;
         m.array_digital_activations = 11;
+        m.array_masked_activations = 6;
+        m.array_det_cols = 90;
+        m.array_marginal_cols = 10;
         m.record_latency(7, 3e-6);
         m.record_latency(7, 5e-6);
         let r = m.report("serve");
@@ -215,6 +240,9 @@ mod tests {
         assert!(r.contains("5 evictions"), "{r}");
         assert!(r.contains("1 negative hits"), "{r}");
         assert!(r.contains("tiered kernel 11/12 activations digital"), "{r}");
+        assert!(r.contains("6 masked"), "{r}");
+        assert!(r.contains("det-col fraction 90.0%"), "{r}");
+        assert!((m.array_det_fraction() - 0.9).abs() < 1e-12);
         let t = m.tenant_report();
         assert_eq!(t.len(), 1);
         assert!(t[0].starts_with("tenant 7: 2 programs"));

@@ -369,6 +369,9 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
             // a per-round delta)
             m.array_dual_activations = coord_metrics.array.dual_activations;
             m.array_digital_activations = coord_metrics.array.digital_activations;
+            m.array_masked_activations = coord_metrics.array.masked_activations;
+            m.array_det_cols = coord_metrics.array.det_cols;
+            m.array_marginal_cols = coord_metrics.array.marginal_cols;
             m.array_xval_mismatches = coord_metrics.array.xval_mismatches;
         }
 

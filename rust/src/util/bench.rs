@@ -124,9 +124,18 @@ impl Bench {
 /// machine-readable companion of the printed table, consumed by the perf
 /// trajectory (CI uploads `BENCH_hotpath.json`).
 pub fn to_json(stats: &[BenchStats]) -> String {
+    to_json_with_meta(stats, &[])
+}
+
+/// `to_json` plus trailing metric records `{"name", "value"}` — scalar
+/// side-channels of a bench run (e.g. the deterministic-column fraction
+/// of the masked tier) that regression tooling reads alongside the
+/// timings.
+pub fn to_json_with_meta(stats: &[BenchStats], meta: &[(&str, f64)]) -> String {
+    let total = stats.len() + meta.len();
     let mut s = String::from("[\n");
     for (i, b) in stats.iter().enumerate() {
-        let comma = if i + 1 == stats.len() { "" } else { "," };
+        let comma = if i + 1 == total { "" } else { "," };
         s.push_str(&format!(
             "  {{\"name\": \"{}\", \"ns_per_iter\": {:.3}, \"p10_ns\": {:.3}, \
              \"p90_ns\": {:.3}, \"iters\": {}}}{}\n",
@@ -135,6 +144,15 @@ pub fn to_json(stats: &[BenchStats]) -> String {
             b.p10_ns(),
             b.p90_ns(),
             b.iters_per_sample,
+            comma
+        ));
+    }
+    for (i, (name, value)) in meta.iter().enumerate() {
+        let comma = if stats.len() + i + 1 == total { "" } else { "," };
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"value\": {:.6}}}{}\n",
+            json_escape(name),
+            value,
             comma
         ));
     }
@@ -160,6 +178,15 @@ fn json_escape(s: &str) -> String {
 /// Write bench results to `path` as JSON (see [`to_json`]).
 pub fn write_json(path: &str, stats: &[BenchStats]) -> std::io::Result<()> {
     std::fs::write(path, to_json(stats))
+}
+
+/// Write bench results + scalar metrics (see [`to_json_with_meta`]).
+pub fn write_json_with_meta(
+    path: &str,
+    stats: &[BenchStats],
+    meta: &[(&str, f64)],
+) -> std::io::Result<()> {
+    std::fs::write(path, to_json_with_meta(stats, meta))
 }
 
 /// Optimization barrier. `std::hint::black_box` is stable since 1.66.
@@ -232,6 +259,20 @@ mod tests {
         write_json(path, &stats).unwrap();
         assert_eq!(std::fs::read_to_string(path).unwrap(), json);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn json_meta_records_appended() {
+        let stats = vec![BenchStats {
+            name: "a".into(),
+            iters_per_sample: 1,
+            samples_ns: vec![1.0],
+        }];
+        let j = to_json_with_meta(&stats, &[("det-fraction", 0.987654)]);
+        assert!(j.contains("\"name\": \"det-fraction\", \"value\": 0.987654"), "{j}");
+        assert!(j.trim_end().ends_with(']'));
+        // one separator between the bench record and the metric record
+        assert_eq!(j.matches("},").count(), 1);
     }
 
     #[test]

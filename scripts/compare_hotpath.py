@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Hotpath perf-trajectory gate.
+
+Compares a freshly produced BENCH_hotpath.json against the committed
+baseline and FAILS (exit 1) on a >20% regression of the digital-tier
+throughput metrics.  To stay machine-independent across CI runners, the
+gated metrics are the RATIO records the bench emits (digital-vs-lut
+speedup, whole-row-vs-per-word speedup, masked deterministic-column
+fraction), not absolute ns — absolute timings are reported for context
+only.
+
+Usage: compare_hotpath.py CURRENT.json BASELINE.json
+
+The first committed baseline is a conservative seed (values at the
+bench's own assertion floors, marked with a "seed-baseline" record);
+refresh it by copying a green CI run's BENCH_hotpath.json over the
+committed file.
+"""
+
+import json
+import sys
+
+# metric name -> max tolerated relative drop vs baseline
+GATED = {
+    "tier/speedup 64c [digital vs lut]": 0.20,
+    "row/speedup 1024c [whole-row vs per-word]": 0.20,
+    "row/det-fraction s20 [masked]": 0.20,
+}
+
+
+def load(path):
+    with open(path) as f:
+        records = json.load(f)
+    values = {}
+    timings = {}
+    for r in records:
+        if "value" in r:
+            values[r["name"]] = float(r["value"])
+        elif "ns_per_iter" in r:
+            timings[r["name"]] = float(r["ns_per_iter"])
+    return values, timings
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    cur_vals, cur_ns = load(sys.argv[1])
+    base_vals, base_ns = load(sys.argv[2])
+    seeded = "seed-baseline" in base_vals
+
+    failures = []
+    print(f"{'metric':<44} {'baseline':>10} {'current':>10} {'floor':>10}")
+    for name, drop in GATED.items():
+        if name not in base_vals:
+            print(f"{name:<44} {'-':>10} {cur_vals.get(name, float('nan')):>10.3f} (no baseline)")
+            continue
+        if name not in cur_vals:
+            failures.append(f"{name}: missing from current run")
+            continue
+        floor = base_vals[name] * (1.0 - drop)
+        ok = cur_vals[name] >= floor
+        print(
+            f"{name:<44} {base_vals[name]:>10.3f} {cur_vals[name]:>10.3f} "
+            f"{floor:>10.3f} {'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"{name}: {cur_vals[name]:.3f} < {floor:.3f} "
+                f"(baseline {base_vals[name]:.3f}, tolerance {drop:.0%})"
+            )
+
+    # absolute timings: context only (runners differ), never gate
+    shared = sorted(set(cur_ns) & set(base_ns))
+    if shared and not seeded:
+        print("\nabsolute timings (informational):")
+        for name in shared:
+            delta = (cur_ns[name] - base_ns[name]) / base_ns[name] * 100.0
+            print(f"  {name:<48} {base_ns[name]:>10.1f} -> {cur_ns[name]:>10.1f} ns ({delta:+.1f}%)")
+
+    if failures:
+        print("\nFAIL: digital-tier throughput regressed vs the committed baseline:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nhotpath trajectory ok" + (" (seed baseline)" if seeded else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
