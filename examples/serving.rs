@@ -11,6 +11,12 @@
 //!   (c) lower total modeled energy AND activation count,
 //! with every served output bit-identical to the naive path.
 //!
+//! The run doubles as the observability smoke: kernel trace events are
+//! enabled, two Prometheus scrapes of the global registry are written to
+//! `target/metrics_scrape{1,2}.prom` (CI's `metrics-smoke` step feeds
+//! them to `scripts/check_metrics.py`), and the flight recorder's tail
+//! lands in `target/serve_trace.jsonl`.
+//!
 //!     cargo run --release --example serving
 
 use std::sync::{Arc, Barrier};
@@ -119,7 +125,31 @@ fn run_wave(
     handles.into_iter().map(|h| h.join().expect("tenant thread")).collect()
 }
 
+/// Write one Prometheus scrape of the global registry and sanity-check
+/// the families the acceptance criteria name.
+fn write_scrape(path: &str) -> String {
+    let text = adra::observe::expose_text(adra::observe::global());
+    for family in [
+        "adra_serve_programs",
+        "adra_serve_rounds",
+        "adra_run_ops",
+        "adra_array_det_fraction",
+        "adra_planner_prediction_error",
+    ] {
+        assert!(text.contains(family), "scrape is missing family {family}:\n{text}");
+    }
+    assert!(text.contains("_bucket{"), "scrape has no histogram samples:\n{text}");
+    std::fs::create_dir_all("target").expect("create target/");
+    std::fs::write(path, &text).expect("write scrape");
+    text
+}
+
 fn main() {
+    // record per-activation kernel events for the trace export (off by
+    // default; the serve rounds here are far below ring capacity churn
+    // that would matter)
+    adra::observe::recorder().set_kernel_events(true);
+
     let mut cfg = SimConfig::square(256, SensingScheme::Current);
     cfg.word_bits = 32;
     cfg.max_batch = 256;
@@ -289,6 +319,13 @@ fn main() {
         m.activations
     );
 
+    // first observability scrape: the main wave's counters are published
+    let scrape1 = write_scrape("target/metrics_scrape1.prom");
+    println!(
+        "\nmetrics scrape 1 -> target/metrics_scrape1.prom ({} lines)",
+        scrape1.lines().count()
+    );
+
     // === part 2: the adaptive control plane under a heavy tenant ===
     println!("\n=== control plane: heavy-tenant flood, FIFO vs weighted fair ===");
     let scenario = heavy_tenant_scenario(&cfg, N_RECORDS, 2027, 16, 4);
@@ -406,6 +443,32 @@ fn main() {
     println!(
         "\nnegative cache: repeated empty filter served for free ({} negative hits)",
         nm.negative_hits
+    );
+
+    // second scrape after the flood + negative-cache runs: counters must
+    // have kept moving (check_metrics.py verifies monotonicity)
+    let scrape2 = write_scrape("target/metrics_scrape2.prom");
+    println!(
+        "metrics scrape 2 -> target/metrics_scrape2.prom ({} lines)",
+        scrape2.lines().count()
+    );
+
+    // flight-recorder tail: serve spans + kernel activation events
+    let rec = adra::observe::recorder();
+    let trace = rec.to_jsonl();
+    assert!(
+        trace.contains("\"kind\":\"span\"") || rec.dropped() > 0,
+        "trace must hold serve spans"
+    );
+    assert!(
+        trace.contains("\"kind\":\"kernel\""),
+        "kernel events were enabled; the tail must hold activation events"
+    );
+    std::fs::write("target/serve_trace.jsonl", &trace).expect("write trace");
+    println!(
+        "trace tail -> target/serve_trace.jsonl ({} events, {} dropped by the ring)",
+        trace.lines().count(),
+        rec.dropped()
     );
 
     println!("\nSERVING VALIDATION PASSED");

@@ -828,6 +828,7 @@ impl AdraEngine {
         if mismatch {
             stats.xval_mismatches += 1;
         }
+        crate::observe::recorder().record_xval(mismatch);
     }
 
     /// Shared packed-path bookkeeping for one activation over `[lo, hi)`
@@ -882,10 +883,21 @@ impl AdraEngine {
     ) -> Result<RowActivation, EngineError> {
         self.check_pair(row_a, row_b, lo, hi)?;
         self.note_dual_access(lo, hi);
+        // kernel-tier trace hook: pre-check the flag so the packed fast
+        // path pays one relaxed atomic load when tracing is off
+        let rec = crate::observe::recorder();
         if self.digital_ok || self.masked_ok {
             self.fill_planes(row_a, row_b, lo, hi)?;
             let marg = self.scratch.marginal_cols.len() as u64;
             self.packed_bookkeeping(row_a, row_b, lo, hi, marg);
+            if rec.kernel_enabled() {
+                let route = if self.scratch.planes_masked {
+                    crate::observe::KernelRoute::Masked
+                } else {
+                    crate::observe::KernelRoute::Digital
+                };
+                rec.record_kernel(route, row_a, row_b, hi - lo, marg as usize);
+            }
             if self.scratch.planes_consistent {
                 Ok(RowActivation::Packed)
             } else {
@@ -897,6 +909,14 @@ impl AdraEngine {
             }
         } else {
             self.analog_activate(row_a, row_b, lo, hi)?;
+            if rec.kernel_enabled() {
+                let route = if self.cfg.tier == crate::config::FidelityTier::Exact {
+                    crate::observe::KernelRoute::Exact
+                } else {
+                    crate::observe::KernelRoute::Analog
+                };
+                rec.record_kernel(route, row_a, row_b, hi - lo, hi - lo);
+            }
             Ok(RowActivation::Sense)
         }
     }

@@ -13,10 +13,16 @@
 //! sub   <shard> <rowA> <rowB> <word>
 //! cmp   <shard> <rowA> <rowB> <word>
 //! stats
+//! metrics [json]
+//! trace
 //! quit
 //! ```
 //!
-//! Responses are single lines: `ok <value...>` / `err <message>`.
+//! Responses are single lines: `ok <value...>` / `err <message>` —
+//! except `metrics` (Prometheus text or JSON scrape of the global
+//! observe registry, after publishing this coordinator's counters under
+//! `source="repl"`) and `trace` (the flight recorder's JSONL tail),
+//! which emit their multi-line payload and then a terminating `ok`.
 
 use std::io::{BufRead, Write};
 
@@ -144,6 +150,26 @@ pub fn serve_with_stats<R: BufRead, W: Write, F: Fn() -> Option<String>>(
             }
             continue;
         }
+        if trimmed == "metrics" || trimmed == "metrics json" {
+            let reg = crate::observe::global();
+            coord.metrics().publish(reg, &[("source", "repl")]);
+            let body = if trimmed.ends_with("json") {
+                crate::observe::expose_json(reg)
+            } else {
+                crate::observe::expose_text(reg)
+            };
+            output.write_all(body.as_bytes())?;
+            if !body.ends_with('\n') {
+                writeln!(output)?;
+            }
+            writeln!(output, "ok")?;
+            continue;
+        }
+        if trimmed == "trace" {
+            output.write_all(crate::observe::recorder().to_jsonl().as_bytes())?;
+            writeln!(output, "ok")?;
+            continue;
+        }
         match parse_line(trimmed) {
             Ok(None) => break,
             Ok(Some((shard, op))) => {
@@ -268,6 +294,26 @@ quit
         assert!(lines[1].contains("quota hits"), "{}", lines[1]);
         assert!(lines[1].contains("controller max_round"), "{}", lines[1]);
         assert!(lines[1].contains("evictions"), "{}", lines[1]);
+    }
+
+    #[test]
+    fn metrics_command_scrapes_the_global_registry() {
+        let c = coord();
+        c.call(0, CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 9 }).unwrap();
+        c.call(0, CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        let mut out = Vec::new();
+        serve(&c, "metrics\nmetrics json\ntrace\nquit\n".as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("# TYPE adra_run_ops counter"), "{text}");
+        assert!(text.contains("adra_run_ops{source=\"repl\"} 2"), "{text}");
+        assert!(
+            text.contains("adra_run_op_latency_ns_bucket{le=\"+Inf\",source=\"repl\"} 2")
+                || text.contains("adra_run_op_latency_ns_bucket{source=\"repl\",le=\"+Inf\"} 2"),
+            "{text}"
+        );
+        assert!(text.contains("\"name\":\"adra.run.ops\""), "json scrape: {text}");
+        // each multi-line payload terminates with a bare ok
+        assert!(text.lines().filter(|l| *l == "ok").count() >= 3, "{text}");
     }
 
     #[test]

@@ -25,6 +25,13 @@
 //!   (`serve::control`) adds weighted fair queueing with per-tenant
 //!   quotas, an EWMA-adaptive round size with a p95 target, and
 //!   size-aware LRU + negative-result caching.
+//! * **Observability (`observe`)** — the unified telemetry layer: a
+//!   thread-safe metric registry (counters / gauges / log-bucketed
+//!   histograms with stable dotted names and label sets), Prometheus
+//!   text-format + JSON exposition, and a trace-span flight recorder
+//!   over the serve pipeline and the kernel tier boundary.  The serve
+//!   queue, coordinator run metrics, array stats, and planner
+//!   predicted-vs-measured errors all publish into it.
 
 pub mod analysis;
 pub mod array;
@@ -36,6 +43,7 @@ pub mod energy;
 pub mod figures;
 pub mod logic;
 pub mod metrics;
+pub mod observe;
 pub mod planner;
 pub mod runtime;
 pub mod sensing;

@@ -53,8 +53,11 @@ impl LatencyHistogram {
         } else {
             (ns.log2().floor() as usize).min(self.buckets.len() - 1)
         };
-        self.buckets[idx] += 1;
-        self.count += 1;
+        // saturating: a soak run that fills a counter clamps at the cap
+        // instead of panicking in debug builds (overflow hygiene, see
+        // the u64::MAX-vicinity test)
+        self.buckets[idx] = self.buckets[idx].saturating_add(1);
+        self.count = self.count.saturating_add(1);
         self.sum_ns += ns;
         if ns > self.max_ns {
             self.max_ns = ns;
@@ -100,13 +103,23 @@ impl LatencyHistogram {
         self.max_ns
     }
 
+    /// Fold another histogram into this one (buckets, count, sum, max) —
+    /// how per-shard / per-tenant histograms aggregate into registry
+    /// snapshots.  Merging is exactly equivalent to having recorded both
+    /// sample streams into one histogram (pinned by test).
     pub fn merge(&mut self, other: &LatencyHistogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
-            *a += b;
+            *a = a.saturating_add(*b);
         }
-        self.count += other.count;
+        self.count = self.count.saturating_add(other.count);
         self.sum_ns += other.sum_ns;
         self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// Per-bucket counts, index-aligned with [`Self::bucket_bounds`] —
+    /// what `observe::Histogram::set_to_snapshot` ratchets against.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
     }
 }
 
@@ -187,6 +200,73 @@ impl RunMetrics {
             latency: self.model_latency.sum_ns() * 1e-9,
         }
     }
+
+    /// Publish this (cumulative) snapshot into a metric registry:
+    /// run counters, the modeled-latency histogram, and the kernel-tier
+    /// `ArrayStats` split (per-tier activation counters, det-fraction
+    /// gauge, xval counters).  Counters ratchet (`set_at_least`) so
+    /// re-publishing a newer snapshot of the same source is idempotent;
+    /// `labels` must identify the source (e.g. `queue="0"`) so distinct
+    /// coordinators don't collapse into one series.
+    pub fn publish(&self, reg: &crate::observe::Registry, labels: &[(&str, &str)]) {
+        reg.counter("adra.run.ops", "Operations executed (engine-charged).", labels)
+            .set_at_least(self.ops);
+        reg.counter("adra.run.errors", "Operations that returned an engine error.", labels)
+            .set_at_least(self.errors);
+        reg.gauge("adra.run.energy_nj", "Cumulative modeled energy (nJ).", labels)
+            .set(self.energy.total() * 1e9);
+        reg.histogram("adra.run.op_latency_ns", "Modeled per-op device latency (ns).", labels)
+            .set_to_snapshot(&self.model_latency);
+
+        let a = &self.array;
+        reg.counter("adra.array.writes", "Array word writes.", labels).set_at_least(a.writes);
+        reg.counter("adra.array.reads", "Array single-row reads.", labels).set_at_least(a.reads);
+        reg.counter(
+            "adra.array.half_selected_cols",
+            "Column accesses on half-selected words (scheme-1 pseudo-CiM columns).",
+            labels,
+        )
+        .set_at_least(a.half_selected_cols);
+        let with_tier = |tier: &'static str| -> Vec<(&str, &str)> {
+            let mut l = labels.to_vec();
+            l.push(("tier", tier));
+            l
+        };
+        const ACT_HELP: &str =
+            "Dual-row activations by serving tier (digital = packed plane, masked = \
+             packed majority + analog minority, analog = full analog pipeline).";
+        reg.counter("adra.array.activations", ACT_HELP, &with_tier("digital"))
+            .set_at_least(a.digital_activations);
+        reg.counter("adra.array.activations", ACT_HELP, &with_tier("masked"))
+            .set_at_least(a.masked_activations);
+        reg.counter("adra.array.activations", ACT_HELP, &with_tier("analog")).set_at_least(
+            a.dual_activations
+                .saturating_sub(a.digital_activations)
+                .saturating_sub(a.masked_activations),
+        );
+        reg.counter("adra.array.det_cols", "Columns served from the packed planes.", labels)
+            .set_at_least(a.det_cols);
+        reg.counter(
+            "adra.array.marginal_cols",
+            "Packed-path columns routed through the analog pipeline by the margin mask.",
+            labels,
+        )
+        .set_at_least(a.marginal_cols);
+        reg.gauge(
+            "adra.array.det_fraction",
+            "Fraction of packed-path columns served deterministically.",
+            labels,
+        )
+        .set(a.det_col_fraction());
+        reg.counter("adra.array.xval_checks", "Sampled digital-vs-analog cross-validation checks.", labels)
+            .set_at_least(a.xval_checks);
+        reg.counter(
+            "adra.array.xval_mismatches",
+            "Cross-validation divergences (must stay 0 on a calibrated configuration).",
+            labels,
+        )
+        .set_at_least(a.xval_mismatches);
+    }
 }
 
 /// Predicted-vs-measured cost comparison: the planner predicts a program's
@@ -229,6 +309,27 @@ impl PredictionReport {
     /// Are both errors within +-tol (e.g. 0.2 for 20%)?
     pub fn within(&self, tol: f64) -> bool {
         self.energy_error().abs() <= tol && self.latency_error().abs() <= tol
+    }
+
+    /// Publish this comparison into a registry: signed relative errors as
+    /// gauges (latest observation) and |error| histograms in ppm
+    /// (distribution over runs), labeled by op class — the persisted
+    /// calibration signal the adaptive cost model (ROADMAP open item 1)
+    /// consumes.
+    pub fn publish(&self, reg: &crate::observe::Registry, op_class: &str) {
+        const GAUGE_HELP: &str =
+            "Signed relative predicted-vs-measured cost error of the last run \
+             ((predicted - measured) / measured).";
+        const HIST_HELP: &str =
+            "Absolute predicted-vs-measured relative cost error per run, in ppm.";
+        for (kind, err) in
+            [("energy", self.energy_error()), ("latency", self.latency_error())]
+        {
+            let labels = [("kind", kind), ("op_class", op_class)];
+            reg.gauge("adra.planner.prediction_error", GAUGE_HELP, &labels).set(err);
+            reg.histogram("adra.planner.prediction_error_ppm", HIST_HELP, &labels)
+                .record(err.abs() * 1e6);
+        }
     }
 
     pub fn report(&self, label: &str) -> String {
@@ -339,6 +440,104 @@ mod tests {
             want[bucket] += 1;
         }
         assert_eq!(h.buckets, want);
+    }
+
+    /// Pin the merge contract: merging per-shard histograms must be
+    /// EXACTLY equivalent to recording every sample into one histogram —
+    /// same buckets, count, sum, max, and therefore identical
+    /// percentiles at every probed p.
+    #[test]
+    fn merge_matches_single_histogram_recording() {
+        let mut rng_state = 0x9e3779b97f4a7c15u64;
+        let mut next = || {
+            rng_state = rng_state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((rng_state >> 33) % 100_000) as f64 * 1e-9 // 0 .. 100 us
+        };
+        let mut shard_a = LatencyHistogram::default();
+        let mut shard_b = LatencyHistogram::default();
+        let mut shard_c = LatencyHistogram::default();
+        let mut single = LatencyHistogram::default();
+        for i in 0..3000 {
+            let s = next();
+            [&mut shard_a, &mut shard_b, &mut shard_c][i % 3].record(s);
+            single.record(s);
+        }
+        let mut merged = LatencyHistogram::default();
+        merged.merge(&shard_a);
+        merged.merge(&shard_b);
+        merged.merge(&shard_c);
+        assert_eq!(merged.buckets(), single.buckets());
+        assert_eq!(merged.count(), single.count());
+        assert!((merged.sum_ns() - single.sum_ns()).abs() < 1e-6 * single.sum_ns());
+        assert_eq!(merged.max_ns(), single.max_ns());
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            assert_eq!(
+                merged.percentile_ns(p),
+                single.percentile_ns(p),
+                "p{p} diverged between merged and single-histogram recording"
+            );
+        }
+    }
+
+    /// Overflow hygiene: counters at the u64::MAX vicinity clamp instead
+    /// of panicking in debug builds (long soak runs).
+    #[test]
+    fn record_and_merge_saturate_at_u64_max() {
+        let mut h = LatencyHistogram::default();
+        h.count = u64::MAX - 1;
+        h.buckets[0] = u64::MAX;
+        h.record(0.5e-9); // bucket 0 already full: clamps, count advances
+        assert_eq!(h.count, u64::MAX);
+        assert_eq!(h.buckets[0], u64::MAX);
+        h.record(0.5e-9); // count now full too: no panic, stays clamped
+        assert_eq!(h.count, u64::MAX);
+
+        let mut other = LatencyHistogram::default();
+        other.record(3e-9);
+        h.merge(&other);
+        assert_eq!(h.count, u64::MAX, "merge saturates");
+        assert_eq!(h.buckets[1], 1);
+    }
+
+    #[test]
+    fn run_metrics_publish_exposes_tier_split() {
+        let reg = crate::observe::Registry::new();
+        let mut m = RunMetrics::default();
+        m.record(&cost(2.0));
+        m.array.dual_activations = 10;
+        m.array.digital_activations = 6;
+        m.array.masked_activations = 3;
+        m.array.det_cols = 99;
+        m.array.marginal_cols = 1;
+        m.publish(&reg, &[("queue", "7")]);
+        let text = crate::observe::expose_text(&reg);
+        assert!(text.contains("adra_run_ops{queue=\"7\"} 1"), "{text}");
+        assert!(text.contains("adra_array_activations{queue=\"7\",tier=\"digital\"} 6"), "{text}");
+        assert!(text.contains("adra_array_activations{queue=\"7\",tier=\"masked\"} 3"), "{text}");
+        assert!(text.contains("adra_array_activations{queue=\"7\",tier=\"analog\"} 1"), "{text}");
+        assert!(text.contains("adra_array_det_fraction{queue=\"7\"} 0.99"), "{text}");
+        assert!(text.contains("adra_run_op_latency_ns_count{queue=\"7\"} 1"), "{text}");
+        // re-publishing the same snapshot is idempotent
+        m.publish(&reg, &[("queue", "7")]);
+        assert!(crate::observe::expose_text(&reg).contains("adra_run_ops{queue=\"7\"} 1"));
+    }
+
+    #[test]
+    fn prediction_report_publishes_per_class() {
+        let reg = crate::observe::Registry::new();
+        let meas = OpCost { energy: EnergyBreakdown { rbl: 100.0, ..Default::default() }, latency: 10.0 };
+        let pred = OpCost { energy: EnergyBreakdown { rbl: 110.0, ..Default::default() }, latency: 9.0 };
+        PredictionReport::new(pred, meas).publish(&reg, "dual");
+        let text = crate::observe::expose_text(&reg);
+        assert!(
+            text.contains("adra_planner_prediction_error{kind=\"energy\",op_class=\"dual\"} 0.1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("adra_planner_prediction_error{kind=\"latency\",op_class=\"dual\"} -0.1"),
+            "{text}"
+        );
+        assert!(text.contains("adra_planner_prediction_error_ppm_count"), "{text}");
     }
 
     #[test]

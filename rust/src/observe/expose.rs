@@ -1,0 +1,267 @@
+//! Prometheus text-format and JSON exposition of a [`Registry`] snapshot.
+//!
+//! The text format follows the Prometheus 0.0.4 exposition conventions:
+//! `# HELP` / `# TYPE` per family, dotted registry names sanitized to the
+//! `[a-zA-Z_:][a-zA-Z0-9_:]*` metric charset, label values escaped
+//! (`\\`, `\"`, `\n`), and histograms rendered as the
+//! `_bucket{le=...}` / `_sum` / `_count` triple with CUMULATIVE bucket
+//! counts and a closing `le="+Inf"` bucket equal to `_count`.
+
+use crate::metrics::LatencyHistogram;
+
+use super::registry::{MetricKind, Registry, Series};
+
+/// Sanitize a dotted registry name into the Prometheus metric charset.
+pub fn sanitize_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, ch) in name.chars().enumerate() {
+        let ok = ch.is_ascii_alphabetic() || ch == '_' || ch == ':' || (i > 0 && ch.is_ascii_digit());
+        out.push(if ok { ch } else { '_' });
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Escape a label value per the exposition format.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a HELP docstring (only `\\` and `\n` per the format).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render `{k="v",...}` (empty string for an empty label set), with an
+/// optional extra label appended (the histogram `le`).
+fn render_labels(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}=\"{}\"", sanitize_name(k), escape_label_value(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Format a sample value: integers render bare, floats via `{}` (which
+/// prints `inf`/`NaN` in Rust; map to the exposition spellings).
+fn render_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".into() } else { "-Inf".into() }
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// The `le` spelling of bucket `i`'s upper bound.
+fn le_bound(i: usize) -> String {
+    let (_, hi) = LatencyHistogram::bucket_bounds(i);
+    if hi.is_infinite() {
+        "+Inf".into()
+    } else {
+        format!("{}", hi as u64)
+    }
+}
+
+/// Render the registry in Prometheus text exposition format.
+pub fn expose_text(registry: &Registry) -> String {
+    let mut out = String::new();
+    for fam in registry.snapshot() {
+        let name = sanitize_name(&fam.name);
+        out.push_str(&format!("# HELP {name} {}\n", escape_help(&fam.help)));
+        out.push_str(&format!("# TYPE {name} {}\n", fam.kind.name()));
+        for (labels, series) in &fam.series {
+            match series {
+                Series::Counter(c) => {
+                    out.push_str(&format!(
+                        "{name}{} {}\n",
+                        render_labels(labels, None),
+                        c.get()
+                    ));
+                }
+                Series::Gauge(g) => {
+                    out.push_str(&format!(
+                        "{name}{} {}\n",
+                        render_labels(labels, None),
+                        render_f64(g.get())
+                    ));
+                }
+                Series::Histogram(h) => {
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, c) in counts.iter().enumerate() {
+                        cum = cum.saturating_add(*c);
+                        out.push_str(&format!(
+                            "{name}_bucket{} {cum}\n",
+                            render_labels(labels, Some(("le", &le_bound(i))))
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{name}_sum{} {}\n",
+                        render_labels(labels, None),
+                        render_f64(h.sum())
+                    ));
+                    out.push_str(&format!(
+                        "{name}_count{} {}\n",
+                        render_labels(labels, None),
+                        h.count()
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn json_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len() + 2);
+    for ch in v.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        // JSON has no Inf/NaN literals; encode as strings
+        format!("\"{v}\"")
+    }
+}
+
+/// Render the registry as a JSON snapshot (same content as the text
+/// exposition, machine-shaped: one object per family, one per series).
+pub fn expose_json(registry: &Registry) -> String {
+    let mut fams = Vec::new();
+    for fam in registry.snapshot() {
+        let mut series = Vec::new();
+        for (labels, s) in &fam.series {
+            let labels_json: Vec<String> = labels
+                .iter()
+                .map(|(k, v)| format!("\"{}\":\"{}\"", json_escape(k), json_escape(v)))
+                .collect();
+            let body = match s {
+                Series::Counter(c) => format!("\"value\":{}", c.get()),
+                Series::Gauge(g) => format!("\"value\":{}", json_f64(g.get())),
+                Series::Histogram(h) => {
+                    let buckets: Vec<String> =
+                        h.bucket_counts().iter().map(|c| c.to_string()).collect();
+                    format!(
+                        "\"count\":{},\"sum\":{},\"max\":{},\"buckets\":[{}]",
+                        h.count(),
+                        json_f64(h.sum()),
+                        json_f64(h.max()),
+                        buckets.join(",")
+                    )
+                }
+            };
+            series.push(format!(
+                "{{\"labels\":{{{}}},{body}}}",
+                labels_json.join(",")
+            ));
+        }
+        fams.push(format!(
+            "{{\"name\":\"{}\",\"kind\":\"{}\",\"help\":\"{}\",\"series\":[{}]}}",
+            json_escape(&fam.name),
+            fam.kind.name(),
+            json_escape(&fam.help),
+            series.join(",")
+        ));
+    }
+    format!("{{\"families\":[{}]}}", fams.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_sanitize_to_prometheus_charset() {
+        assert_eq!(sanitize_name("adra.serve.programs"), "adra_serve_programs");
+        assert_eq!(sanitize_name("adra.round-wall ns"), "adra_round_wall_ns");
+        assert_eq!(sanitize_name("9lives"), "_lives");
+        assert_eq!(sanitize_name("a9"), "a9");
+    }
+
+    #[test]
+    fn label_values_escape() {
+        assert_eq!(escape_label_value("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn text_format_counter_and_gauge() {
+        let r = Registry::new();
+        r.counter("adra.serve.programs", "Programs served.", &[("queue", "0")]).add(7);
+        r.gauge("adra.array.det_fraction", "Deterministic fraction.", &[]).set(0.5);
+        let text = expose_text(&r);
+        assert!(text.contains("# HELP adra_array_det_fraction Deterministic fraction.\n"));
+        assert!(text.contains("# TYPE adra_array_det_fraction gauge\n"));
+        assert!(text.contains("adra_array_det_fraction 0.5\n"));
+        assert!(text.contains("# TYPE adra_serve_programs counter\n"));
+        assert!(text.contains("adra_serve_programs{queue=\"0\"} 7\n"));
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_triple() {
+        let r = Registry::new();
+        let h = r.histogram("adra.t.lat_ns", "t", &[("tier", "digital")]);
+        h.record(1.0); // bucket 0, le="2"
+        h.record(3.0); // bucket 1, le="4"
+        let text = expose_text(&r);
+        assert!(text.contains("adra_t_lat_ns_bucket{tier=\"digital\",le=\"2\"} 1\n"), "{text}");
+        assert!(text.contains("adra_t_lat_ns_bucket{tier=\"digital\",le=\"4\"} 2\n"), "{text}");
+        assert!(text.contains("adra_t_lat_ns_bucket{tier=\"digital\",le=\"+Inf\"} 2\n"), "{text}");
+        assert!(text.contains("adra_t_lat_ns_sum{tier=\"digital\"} 4\n"), "{text}");
+        assert!(text.contains("adra_t_lat_ns_count{tier=\"digital\"} 2\n"), "{text}");
+    }
+
+    #[test]
+    fn json_snapshot_is_parseable_shape() {
+        let r = Registry::new();
+        r.counter("adra.x", "x\"quoted\"", &[("k", "v")]).inc();
+        r.histogram("adra.h", "h", &[]).record(5.0);
+        let json = expose_json(&r);
+        assert!(json.starts_with("{\"families\":["));
+        assert!(json.contains("\"name\":\"adra.x\""));
+        assert!(json.contains("\"x\\\"quoted\\\"\""));
+        assert!(json.contains("\"buckets\":["));
+    }
+}

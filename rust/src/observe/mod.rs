@@ -1,0 +1,71 @@
+//! Unified observability layer: metric registry, Prometheus-style
+//! exposition, and the trace-span flight recorder (DESIGN.md §11).
+//!
+//! Everything the stack measures flows through here so the scrape
+//! surface is one endpoint instead of N report strings:
+//!
+//! * [`registry`] — [`Registry`]: thread-safe families of atomic
+//!   [`Counter`]s, [`Gauge`]s, and log-bucketed [`Histogram`]s (same
+//!   bucket semantics as `metrics::LatencyHistogram`), keyed by stable
+//!   dotted names and label sets (`queue`, `tenant`, `shard`, `tier`,
+//!   `op_class`).
+//! * [`expose`] — [`expose_text`] (Prometheus text format 0.0.4) and
+//!   [`expose_json`] snapshots, surfaced through the REPL (`metrics`
+//!   command) and `examples/serving.rs`.
+//! * [`trace`] — [`FlightRecorder`]: a fixed-capacity ring buffer of
+//!   serve-pipeline spans (admit -> schedule -> coalesce -> fuse ->
+//!   execute -> cache) and kernel-tier activation events, exported as
+//!   JSONL for postmortems.
+//!
+//! Producers migrated onto the registry: `serve::ServeMetrics`
+//! (`publish`), the coordinator's `metrics::RunMetrics` and
+//! `array::ArrayStats` (`RunMetrics::publish`), the serve control plane
+//! (`FairScheduler` / `BatchController` counters ride the `ServeMetrics`
+//! publish), and the planner's predicted-vs-measured error, which
+//! `planner::Placement::assemble` records per op class into
+//! `adra.planner.prediction_error` — the persistent signal the future
+//! adaptive cost model (ROADMAP open item 1) reads.
+//!
+//! Observation only: nothing here alters modeled hardware costs or
+//! results — the serve/tier equivalence suites run bit-identical with
+//! instrumentation enabled.
+
+pub mod expose;
+pub mod registry;
+pub mod trace;
+
+pub use expose::{expose_json, expose_text, sanitize_name};
+pub use registry::{Counter, FamilySnapshot, Gauge, Histogram, LabelSet, MetricKind, Registry};
+pub use trace::{FlightRecorder, KernelRoute, Recorded, Stage, TraceEvent};
+
+use std::sync::OnceLock;
+
+/// The process-wide default registry — what the REPL and the examples
+/// scrape.  Producers default here; tests that need isolation construct
+/// their own [`Registry`].
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// The process-wide flight recorder (span events on, kernel events off
+/// by default — see `trace`).
+pub fn recorder() -> &'static FlightRecorder {
+    static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+    RECORDER.get_or_init(FlightRecorder::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_instances_are_stable() {
+        let a = global() as *const Registry;
+        let b = global() as *const Registry;
+        assert_eq!(a, b);
+        let c = recorder() as *const FlightRecorder;
+        let d = recorder() as *const FlightRecorder;
+        assert_eq!(c, d);
+    }
+}

@@ -1,0 +1,410 @@
+//! The metric registry: named families of atomic counters, gauges, and
+//! log-bucketed histograms, each series keyed by a sorted label set.
+//!
+//! Naming scheme (DESIGN.md §11): registry names are dotted
+//! (`adra.serve.programs`); exposition sanitizes them to the Prometheus
+//! character set (`adra_serve_programs`).  Label keys come from the small
+//! stable vocabulary the stack routes on — `queue`, `tenant`, `shard`,
+//! `tier`, `op_class`, `kind`, `source` — but the registry accepts any.
+//!
+//! Concurrency model: `Registry::{counter,gauge,histogram}` take a short
+//! mutex to get-or-create the series and hand back an `Arc` handle;
+//! producers on hot paths hold the handle and update it with plain atomic
+//! ops (no lock, no allocation).  All counter arithmetic saturates at
+//! `u64::MAX` — a soak run that wraps a counter must clamp, not panic in
+//! debug builds (see the `u64::MAX`-vicinity tests).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::LatencyHistogram;
+
+/// A sorted, owned label set — the series key within a family.
+pub type LabelSet = Vec<(String, String)>;
+
+/// Normalize a caller's label slice into the canonical sorted key.
+fn label_set(labels: &[(&str, &str)]) -> LabelSet {
+    let mut v: LabelSet = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    v.sort();
+    v
+}
+
+fn f64_update(cell: &AtomicU64, f: impl Fn(f64) -> f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = f(f64::from_bits(cur)).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Monotone counter.  `add` saturates; `set_at_least` ratchets toward a
+/// cumulative snapshot (publishing an absolute total is idempotent and
+/// can never move the counter backwards).
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        let mut cur = self.value.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(n);
+            match self
+                .value
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Ratchet to `v` if `v` is larger (snapshot publishing).
+    pub fn set_at_least(&self, v: u64) {
+        self.value.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-written-wins floating-point gauge.
+#[derive(Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: f64) {
+        f64_update(&self.bits, |cur| cur + v);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock-free histogram with `LatencyHistogram` bucket semantics: bucket 0
+/// covers [0, 2), bucket i >= 1 covers [2^i, 2^(i+1)), the last bucket is
+/// open-ended (`LatencyHistogram::bucket_bounds`).  Values are unitless
+/// to the bucketer; each family documents its unit in the name
+/// (`..._ns`, `..._ppm`).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: (0..LatencyHistogram::NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            max_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket_index(v: f64) -> usize {
+        if v < 1.0 {
+            0
+        } else {
+            (v.log2().floor() as usize).min(LatencyHistogram::NUM_BUCKETS - 1)
+        }
+    }
+
+    /// Record one sample (same bucketing as `LatencyHistogram::record`
+    /// applied to the raw value).
+    pub fn record(&self, v: f64) {
+        let idx = Self::bucket_index(v);
+        // saturating: see the module doc on overflow hygiene
+        self.buckets[idx].fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| {
+            Some(c.saturating_add(1))
+        })
+        .ok();
+        self.count
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| Some(c.saturating_add(1)))
+            .ok();
+        f64_update(&self.sum_bits, |cur| cur + v);
+        f64_update(&self.max_bits, |cur| cur.max(v));
+    }
+
+    /// Record a latency sample in seconds into nanosecond buckets.
+    pub fn record_seconds(&self, s: f64) {
+        self.record(s * 1e9);
+    }
+
+    /// Ratchet this histogram toward a CUMULATIVE `LatencyHistogram`
+    /// snapshot: per-bucket / count / sum / max all `fetch_max`.  Only
+    /// valid when `snap` itself is monotone over time for this series
+    /// (e.g. a coordinator's cumulative metrics) — re-publishing the same
+    /// snapshot is then idempotent instead of double-counting.
+    pub fn set_to_snapshot(&self, snap: &LatencyHistogram) {
+        for (cell, &b) in self.buckets.iter().zip(snap.buckets()) {
+            cell.fetch_max(b, Ordering::Relaxed);
+        }
+        self.count.fetch_max(snap.count(), Ordering::Relaxed);
+        f64_update(&self.sum_bits, |cur| cur.max(snap.sum_ns()));
+        f64_update(&self.max_bits, |cur| cur.max(snap.max_ns()));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Non-cumulative per-bucket counts, index-aligned with
+    /// `LatencyHistogram::bucket_bounds`.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// One series handle — what a family stores per label set.
+#[derive(Clone, Debug)]
+pub enum Series {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// The exposition kind of a family (every series in a family shares it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Family {
+    help: String,
+    kind: MetricKind,
+    series: BTreeMap<LabelSet, Series>,
+}
+
+/// Point-in-time view of a family, for exposition.
+pub struct FamilySnapshot {
+    pub name: String,
+    pub help: String,
+    pub kind: MetricKind,
+    /// (labels, live series handle) in deterministic label order.
+    pub series: Vec<(LabelSet, Series)>,
+}
+
+/// Thread-safe registry of metric families.  See the module doc for the
+/// naming scheme and concurrency model.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn series(
+        &self,
+        name: &str,
+        help: &str,
+        kind: MetricKind,
+        labels: &[(&str, &str)],
+    ) -> Series {
+        let key = label_set(labels);
+        let mut fams = self.families.lock().expect("registry lock");
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            series: BTreeMap::new(),
+        });
+        assert_eq!(
+            fam.kind, kind,
+            "metric family {name:?} registered as {} but requested as {}",
+            fam.kind.name(),
+            kind.name()
+        );
+        fam.series
+            .entry(key)
+            .or_insert_with(|| match kind {
+                MetricKind::Counter => Series::Counter(Arc::new(Counter::default())),
+                MetricKind::Gauge => Series::Gauge(Arc::new(Gauge::default())),
+                MetricKind::Histogram => Series::Histogram(Arc::new(Histogram::default())),
+            })
+            .clone()
+    }
+
+    /// Get-or-create a counter series; the handle is lock-free to update.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.series(name, help, MetricKind::Counter, labels) {
+            Series::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.series(name, help, MetricKind::Gauge, labels) {
+            Series::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        match self.series(name, help, MetricKind::Histogram, labels) {
+            Series::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Deterministically ordered snapshot of every family (name
+    /// ascending, label sets ascending) — what the expositions render.
+    pub fn snapshot(&self) -> Vec<FamilySnapshot> {
+        let fams = self.families.lock().expect("registry lock");
+        fams.iter()
+            .map(|(name, fam)| FamilySnapshot {
+                name: name.clone(),
+                help: fam.help.clone(),
+                kind: fam.kind,
+                series: fam.series.iter().map(|(k, s)| (k.clone(), s.clone())).collect(),
+            })
+            .collect()
+    }
+
+    /// Number of registered families.
+    pub fn family_count(&self) -> usize {
+        self.families.lock().expect("registry lock").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_histogram_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("adra.test.ops", "ops", &[("tenant", "3")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same (name, labels) -> same series; label order is normalized
+        let c2 = r.counter("adra.test.ops", "ops", &[("tenant", "3")]);
+        c2.inc();
+        assert_eq!(c.get(), 6);
+
+        let g = r.gauge("adra.test.frac", "fraction", &[]);
+        g.set(0.25);
+        g.add(0.5);
+        assert!((g.get() - 0.75).abs() < 1e-12);
+
+        let h = r.histogram("adra.test.lat_ns", "latency", &[]);
+        h.record_seconds(3e-9);
+        h.record(1000.0);
+        assert_eq!(h.count(), 2);
+        assert!((h.sum() - 1003.0).abs() < 1e-9);
+        assert_eq!(h.max(), 1000.0);
+        assert_eq!(r.family_count(), 3);
+    }
+
+    #[test]
+    fn label_order_is_normalized() {
+        let r = Registry::new();
+        let a = r.counter("m", "", &[("b", "2"), ("a", "1")]);
+        let b = r.counter("m", "", &[("a", "1"), ("b", "2")]);
+        a.inc();
+        assert_eq!(b.get(), 1, "different label orders must resolve to one series");
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as counter")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("m", "", &[]);
+        r.gauge("m", "", &[]);
+    }
+
+    #[test]
+    fn counter_saturates_at_u64_max() {
+        let c = Counter::default();
+        c.set_at_least(u64::MAX - 2);
+        c.add(1);
+        assert_eq!(c.get(), u64::MAX - 1);
+        c.add(10); // would overflow: clamps, never panics (debug builds too)
+        assert_eq!(c.get(), u64::MAX);
+        c.inc();
+        assert_eq!(c.get(), u64::MAX);
+        c.set_at_least(5); // ratchet can't move backwards
+        assert_eq!(c.get(), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_buckets_match_latency_histogram() {
+        let h = Histogram::default();
+        let mut reference = LatencyHistogram::default();
+        for ns in [0.25, 1.0, 2.0, 3.99, 64.0, 1e12] {
+            h.record(ns);
+            reference.record(ns * 1e-9);
+        }
+        assert_eq!(h.bucket_counts(), reference.buckets());
+        assert_eq!(h.count(), reference.count());
+    }
+
+    #[test]
+    fn snapshot_ratchet_is_idempotent() {
+        let mut lh = LatencyHistogram::default();
+        lh.record(5e-9);
+        lh.record(100e-9);
+        let h = Histogram::default();
+        h.set_to_snapshot(&lh);
+        h.set_to_snapshot(&lh); // re-publishing the same totals: no double count
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.bucket_counts(), lh.buckets());
+        lh.record(7e-9); // source advances monotonically
+        h.set_to_snapshot(&lh);
+        assert_eq!(h.count(), 3);
+    }
+}

@@ -1,0 +1,338 @@
+//! Trace spans and the flight recorder: a fixed-capacity ring buffer of
+//! recent pipeline events, exportable as JSONL for postmortems.
+//!
+//! Two event classes share the ring:
+//!
+//! * **Serve spans** — per-round stage timings through the pipeline
+//!   (`admit -> schedule -> coalesce -> fuse -> execute -> cache`) plus a
+//!   per-program `admit` span (queue wait).  On by default: the serve
+//!   scheduler runs per round, not per activation, so recording cost is
+//!   negligible.
+//! * **Kernel events** — one event per dual-row activation at the tier
+//!   boundary (digital / masked / analog / exact routing, span width,
+//!   marginal-column count) plus the sampled digital-vs-analog
+//!   cross-validation checks.  OFF by default — the packed kernel runs
+//!   millions of activations per second and the hotpath trajectory gate
+//!   must not pay a mutex per activation; a disabled recorder costs one
+//!   relaxed atomic load.
+//!
+//! The ring keeps the newest `capacity` events; older ones are dropped
+//! and counted (`dropped()`), so a postmortem export is always the tail
+//! of history, never a partial head.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Serve-pipeline stage of a span event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Queue wait: submission to round selection (per program).
+    Admit,
+    /// Round selection (WFQ/FIFO pass over the backlog).
+    Schedule,
+    /// Cross-program coalescing + write dedup + cache lookups.
+    Coalesce,
+    /// Fusion planning (annotation span: counts ride `ops`, the work is
+    /// executed inside the shard batches).
+    Fuse,
+    /// Shard batch execution through the pool.
+    Execute,
+    /// Result assembly + cache memoization.
+    Cache,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Admit => "admit",
+            Stage::Schedule => "schedule",
+            Stage::Coalesce => "coalesce",
+            Stage::Fuse => "fuse",
+            Stage::Execute => "execute",
+            Stage::Cache => "cache",
+        }
+    }
+}
+
+/// Which path served a dual-row activation at the kernel tier boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelRoute {
+    /// Whole span from the bit-packed shadow plane (`vt_sigma == 0`).
+    Digital,
+    /// Masked packed path: deterministic majority from the planes,
+    /// marginal minority through the exact backend.
+    Masked,
+    /// Analog pipeline (LUT / behavioral backends).
+    Analog,
+    /// Closed-form exact tier.
+    Exact,
+}
+
+impl KernelRoute {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelRoute::Digital => "digital",
+            KernelRoute::Masked => "masked",
+            KernelRoute::Analog => "analog",
+            KernelRoute::Exact => "exact",
+        }
+    }
+}
+
+/// One recorded event.  `t_us` is microseconds since the recorder was
+/// created (a process-relative monotonic clock, stable across export).
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    Span {
+        /// Round sequence number (0 for events outside a round).
+        round: u64,
+        /// Tenant id for per-program spans; `u64::MAX` for round-level.
+        tenant: u64,
+        stage: Stage,
+        wall_ns: u64,
+        /// Stage-specific magnitude: programs admitted, ops coalesced,
+        /// activations fused, ops executed, steps cached...
+        ops: u64,
+    },
+    Kernel {
+        route: KernelRoute,
+        row_a: u32,
+        row_b: u32,
+        /// Columns the activation spanned.
+        cols: u32,
+        /// Columns routed through the analog pipeline by the mask.
+        marginal_cols: u32,
+    },
+    /// Sampled digital-vs-analog cross-validation check.
+    Xval { mismatch: bool },
+}
+
+/// A sequenced, timestamped ring entry.
+#[derive(Clone, Debug)]
+pub struct Recorded {
+    pub seq: u64,
+    pub t_us: u64,
+    pub event: TraceEvent,
+}
+
+/// The fixed-capacity event ring.  See the module doc.
+pub struct FlightRecorder {
+    spans_on: AtomicBool,
+    kernel_on: AtomicBool,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    capacity: usize,
+    epoch: Instant,
+    ring: Mutex<VecDeque<Recorded>>,
+}
+
+/// Default ring capacity (events). ~100 rounds of serve spans or the
+/// last ~4k kernel activations.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+impl FlightRecorder {
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            spans_on: AtomicBool::new(true),
+            kernel_on: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            capacity: capacity.max(1),
+            epoch: Instant::now(),
+            ring: Mutex::new(VecDeque::with_capacity(capacity.max(1).min(4096))),
+        }
+    }
+
+    pub fn spans_enabled(&self) -> bool {
+        self.spans_on.load(Ordering::Relaxed)
+    }
+
+    pub fn kernel_enabled(&self) -> bool {
+        self.kernel_on.load(Ordering::Relaxed)
+    }
+
+    pub fn set_span_events(&self, on: bool) {
+        self.spans_on.store(on, Ordering::Relaxed);
+    }
+
+    pub fn set_kernel_events(&self, on: bool) {
+        self.kernel_on.store(on, Ordering::Relaxed);
+    }
+
+    fn push(&self, event: TraceEvent) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        let mut ring = self.ring.lock().expect("recorder lock");
+        if ring.len() >= self.capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(Recorded { seq, t_us, event });
+    }
+
+    /// Record a serve-pipeline span (no-op when span events are off).
+    pub fn record_span(&self, round: u64, tenant: Option<u64>, stage: Stage, wall_ns: u64, ops: u64) {
+        if !self.spans_enabled() {
+            return;
+        }
+        self.push(TraceEvent::Span {
+            round,
+            tenant: tenant.unwrap_or(u64::MAX),
+            stage,
+            wall_ns,
+            ops,
+        });
+    }
+
+    /// Record a kernel-tier activation event (no-op when kernel events
+    /// are off — callers should pre-check `kernel_enabled()` on hot
+    /// paths to skip argument marshalling too).
+    pub fn record_kernel(
+        &self,
+        route: KernelRoute,
+        row_a: usize,
+        row_b: usize,
+        cols: usize,
+        marginal_cols: usize,
+    ) {
+        if !self.kernel_enabled() {
+            return;
+        }
+        self.push(TraceEvent::Kernel {
+            route,
+            row_a: row_a as u32,
+            row_b: row_b as u32,
+            cols: cols as u32,
+            marginal_cols: marginal_cols as u32,
+        });
+    }
+
+    /// Record a sampled cross-validation check.
+    pub fn record_xval(&self, mismatch: bool) {
+        if !self.kernel_enabled() {
+            return;
+        }
+        self.push(TraceEvent::Xval { mismatch });
+    }
+
+    /// Events currently held (<= capacity).
+    pub fn len(&self) -> usize {
+        self.ring.lock().expect("recorder lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted by capacity pressure since creation/clear.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn clear(&self) {
+        self.ring.lock().expect("recorder lock").clear();
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// Copy of the ring, oldest first.
+    pub fn snapshot(&self) -> Vec<Recorded> {
+        self.ring.lock().expect("recorder lock").iter().cloned().collect()
+    }
+
+    /// Export the ring as JSONL (one JSON object per line, oldest first)
+    /// — the postmortem format `scripts/` and humans both read.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in self.snapshot() {
+            let body = match &r.event {
+                TraceEvent::Span { round, tenant, stage, wall_ns, ops } => {
+                    let tenant_field = if *tenant == u64::MAX {
+                        String::from("null")
+                    } else {
+                        tenant.to_string()
+                    };
+                    format!(
+                        "\"kind\":\"span\",\"round\":{round},\"tenant\":{tenant_field},\
+                         \"stage\":\"{}\",\"wall_ns\":{wall_ns},\"ops\":{ops}",
+                        stage.name()
+                    )
+                }
+                TraceEvent::Kernel { route, row_a, row_b, cols, marginal_cols } => format!(
+                    "\"kind\":\"kernel\",\"route\":\"{}\",\"row_a\":{row_a},\
+                     \"row_b\":{row_b},\"cols\":{cols},\"marginal_cols\":{marginal_cols}",
+                    route.name()
+                ),
+                TraceEvent::Xval { mismatch } => {
+                    format!("\"kind\":\"xval\",\"mismatch\":{mismatch}")
+                }
+            };
+            out.push_str(&format!("{{\"seq\":{},\"t_us\":{},{body}}}\n", r.seq, r.t_us));
+        }
+        out
+    }
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let r = FlightRecorder::with_capacity(3);
+        for i in 0..5u64 {
+            r.record_span(i, None, Stage::Execute, 10, 1);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let snap = r.snapshot();
+        // newest 3 survive, oldest first
+        assert_eq!(snap[0].seq, 2);
+        assert_eq!(snap[2].seq, 4);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn kernel_events_gate_on_flag() {
+        let r = FlightRecorder::with_capacity(8);
+        r.record_kernel(KernelRoute::Digital, 0, 1, 64, 0);
+        assert!(r.is_empty(), "kernel events default off");
+        r.set_kernel_events(true);
+        r.record_kernel(KernelRoute::Masked, 0, 1, 64, 3);
+        r.record_xval(false);
+        assert_eq!(r.len(), 2);
+        r.set_span_events(false);
+        r.record_span(1, Some(4), Stage::Admit, 5, 1);
+        assert_eq!(r.len(), 2, "span events gated independently");
+    }
+
+    #[test]
+    fn jsonl_export_shape() {
+        let r = FlightRecorder::with_capacity(8);
+        r.set_kernel_events(true);
+        r.record_span(7, Some(3), Stage::Coalesce, 1234, 9);
+        r.record_span(7, None, Stage::Execute, 50, 2);
+        r.record_kernel(KernelRoute::Digital, 2, 5, 256, 0);
+        r.record_xval(true);
+        let jsonl = r.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("\"kind\":\"span\"") && lines[0].contains("\"tenant\":3"));
+        assert!(lines[0].contains("\"stage\":\"coalesce\"") && lines[0].contains("\"ops\":9"));
+        assert!(lines[1].contains("\"tenant\":null"));
+        assert!(lines[2].contains("\"route\":\"digital\"") && lines[2].contains("\"cols\":256"));
+        assert!(lines[3].contains("\"kind\":\"xval\"") && lines[3].contains("\"mismatch\":true"));
+        for l in &lines {
+            assert!(l.starts_with('{') && l.ends_with('}'), "JSONL line shape: {l}");
+        }
+    }
+}

@@ -84,6 +84,22 @@ pub enum OpClass {
     Dual,
 }
 
+impl OpClass {
+    /// Every class, in table order (also the registry label order).
+    pub const ALL: [OpClass; 4] =
+        [OpClass::Read, OpClass::Write, OpClass::Commutative, OpClass::Dual];
+
+    /// Stable `op_class` label value in the observe registry.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpClass::Read => "read",
+            OpClass::Write => "write",
+            OpClass::Commutative => "commutative",
+            OpClass::Dual => "dual",
+        }
+    }
+}
+
 /// Classify a `CimOp` the same way the engines dispatch it.
 pub fn class_of(op: &CimOp) -> OpClass {
     match op {

@@ -17,7 +17,7 @@ use crate::energy::OpCost;
 use crate::logic::CompareResult;
 use crate::metrics::{PredictionReport, RunMetrics};
 
-use super::cost::PlanCostModel;
+use super::cost::{class_of, OpClass, PlanCostModel};
 use super::ir::{AggKind, IrOp, PlanError, Program};
 use super::lower::{lower, LoweredProgram};
 
@@ -244,6 +244,9 @@ impl Placement {
         let mut outputs: Vec<StepOutput> = self.program.ops.iter().map(empty_output).collect();
         let mut measured = OpCost::default();
         let mut ops_executed = 0usize;
+        // per-op-class predicted/measured accumulation over EXECUTED ops
+        // only (skipped = deduped/cached ops predicted nothing measurable)
+        let mut per_class = [(OpCost::default(), OpCost::default(), 0u64); 4];
 
         for (sp, results) in self.shards.iter().zip(&per_shard) {
             debug_assert_eq!(results.len(), sp.lowered.ops.len());
@@ -264,6 +267,11 @@ impl Placement {
                     };
                     measured = measured.then(&r.cost);
                     ops_executed += 1;
+                    let routed = &sp.lowered.ops[idx];
+                    let slot = &mut per_class[class_of(&routed.op) as usize];
+                    slot.0 = slot.0.then(&routed.predicted);
+                    slot.1 = slot.1.then(&r.cost);
+                    slot.2 += 1;
                     merge_result(
                         &mut outputs[global_ir],
                         sub_op,
@@ -276,6 +284,18 @@ impl Placement {
         }
 
         let prediction = PredictionReport::new(self.predicted, measured);
+        // publish the calibration signal the adaptive cost model reads:
+        // per-class errors plus the whole-program aggregate
+        if ops_executed > 0 {
+            let reg = crate::observe::global();
+            for class in OpClass::ALL {
+                let (pred, meas, n) = per_class[class as usize];
+                if n > 0 {
+                    PredictionReport::new(pred, meas).publish(reg, class.name());
+                }
+            }
+            prediction.publish(reg, "all");
+        }
         Ok(ExecutionReport {
             outputs,
             measured,

@@ -1,9 +1,25 @@
 //! Serving-layer observability: admission/round counters, coalescing and
 //! fusion effectiveness, cache hit rate, and per-tenant wall latency.
+//!
+//! `ServeMetrics` stays the scheduler's in-process accumulator (cheap to
+//! clone, rendered by `report`); [`ServeMetrics::publish`] mirrors it
+//! into the `observe` registry as the `adra.serve.*` families, which is
+//! what the Prometheus exposition scrapes.  All accumulation saturates
+//! at `u64::MAX` — overflow hygiene for soak runs (see the
+//! `u64::MAX`-vicinity test).
 
 use std::collections::HashMap;
 
+use crate::array::ArrayStats;
 use crate::metrics::LatencyHistogram;
+use crate::observe::Registry;
+
+use super::coalesce::RoundStats;
+
+#[inline]
+fn sat(counter: &mut u64, n: u64) {
+    *counter = counter.saturating_add(n);
+}
 
 /// Counters the `ServeQueue` scheduler maintains across rounds.
 #[derive(Clone, Debug, Default)]
@@ -75,6 +91,103 @@ pub struct ServeMetrics {
 impl ServeMetrics {
     pub fn record_latency(&mut self, tenant: usize, seconds: f64) {
         self.tenant_latency.entry(tenant).or_default().record(seconds);
+    }
+
+    /// Fold one executed round into the counters (saturating).
+    pub fn observe_round(
+        &mut self,
+        occupancy: u64,
+        st: &RoundStats,
+        quota_hits: u64,
+        deferred: u64,
+    ) {
+        sat(&mut self.rounds, 1);
+        sat(&mut self.programs, occupancy);
+        self.max_round_occupancy = self.max_round_occupancy.max(occupancy);
+        sat(&mut self.submitted_ops, st.submitted_ops);
+        sat(&mut self.coalesced_ops, st.coalesced_ops);
+        sat(&mut self.skipped_writes, st.skipped_writes);
+        sat(&mut self.cached_steps, st.cached_steps);
+        sat(&mut self.cache_misses, st.cache_misses);
+        sat(&mut self.negative_hits, st.negative_hits);
+        sat(&mut self.dual_ops, st.dual_ops);
+        sat(&mut self.activations, st.activations);
+        sat(&mut self.fused_followers, st.fused_followers);
+        sat(&mut self.cross_program_fused_ops, st.cross_program_fused_ops);
+        sat(&mut self.quota_hits, quota_hits);
+        sat(&mut self.deferred_programs, deferred);
+    }
+
+    /// Snapshot the batch controller's cumulative decision counters.
+    pub fn observe_controller(&mut self, grows: u64, shrinks: u64, holds: u64, max_round: u64) {
+        self.controller_grows = grows;
+        self.controller_shrinks = shrinks;
+        self.controller_holds = holds;
+        self.current_max_round = max_round;
+    }
+
+    /// Snapshot the engine-level per-tier activation split from the
+    /// pool's cumulative `ArrayStats`.
+    pub fn observe_array(&mut self, array: &ArrayStats) {
+        self.array_dual_activations = array.dual_activations;
+        self.array_digital_activations = array.digital_activations;
+        self.array_masked_activations = array.masked_activations;
+        self.array_det_cols = array.det_cols;
+        self.array_marginal_cols = array.marginal_cols;
+        self.array_xval_mismatches = array.xval_mismatches;
+    }
+
+    /// Mirror the counters into the registry as the `adra.serve.*`
+    /// families, labeled by queue instance.  Counters ratchet
+    /// (`set_at_least`) against this struct's cumulative totals, so the
+    /// publish is idempotent and exposition counters stay monotone; the
+    /// kernel-tier `array_*` snapshot is NOT published here — the
+    /// scheduler publishes the pool's `RunMetrics` (same source) into
+    /// the `adra.run.*` / `adra.array.*` families instead.
+    pub fn publish(&self, reg: &Registry, queue: &str) {
+        let l: [(&str, &str); 1] = [("queue", queue)];
+        for (name, help, value) in [
+            ("adra.serve.programs", "Programs admitted and answered.", self.programs),
+            ("adra.serve.rounds", "Coalescing rounds executed.", self.rounds),
+            ("adra.serve.submitted_ops", "Lowered ops before dedup/caching.", self.submitted_ops),
+            ("adra.serve.coalesced_ops", "Ops shipped to the worker pool.", self.coalesced_ops),
+            ("adra.serve.skipped_writes", "Writes dropped by content dedup.", self.skipped_writes),
+            ("adra.serve.cached_steps", "Query steps answered from the result cache.", self.cached_steps),
+            ("adra.serve.cache_misses", "Query steps that missed the cache.", self.cache_misses),
+            ("adra.serve.negative_hits", "Cache hits served by negative (empty-filter) entries.", self.negative_hits),
+            ("adra.serve.dual_ops", "Dual-row ops shipped (fusion candidates).", self.dual_ops),
+            ("adra.serve.fused_activations", "Asymmetric activations issued by fused batches.", self.activations),
+            ("adra.serve.fused_followers", "Dual ops served as followers of a latched activation.", self.fused_followers),
+            ("adra.serve.cross_program_fused_ops", "Followers riding another program's activation.", self.cross_program_fused_ops),
+            ("adra.serve.invalidating_writes", "Content-changing record writes.", self.invalidating_writes),
+            ("adra.serve.quota_hits", "Rounds where a tenant exhausted its fair-share quota.", self.quota_hits),
+            ("adra.serve.deferred_programs", "Programs left pending at round admission close.", self.deferred_programs),
+            ("adra.serve.controller_grows", "Adaptive max_round grow decisions.", self.controller_grows),
+            ("adra.serve.controller_shrinks", "Adaptive max_round shrink decisions.", self.controller_shrinks),
+            ("adra.serve.controller_holds", "Adaptive max_round hold decisions.", self.controller_holds),
+            ("adra.serve.cache_evictions", "Live cache entries evicted under pressure.", self.cache_evictions),
+            ("adra.serve.cache_swept", "Stale cache entries reclaimed by the sweep.", self.cache_swept),
+        ] {
+            reg.counter(name, help, &l).set_at_least(value);
+        }
+        for (name, help, value) in [
+            ("adra.serve.max_round_occupancy", "Largest observed round occupancy.", self.max_round_occupancy as f64),
+            ("adra.serve.current_max_round", "The controller's current round-size ceiling.", self.current_max_round as f64),
+            ("adra.serve.batch_occupancy", "Mean programs per round.", self.batch_occupancy()),
+            ("adra.serve.cache_hit_rate", "Fraction of query steps answered from the cache.", self.cache_hit_rate()),
+            ("adra.serve.fused_share", "Fraction of shipped dual ops served as followers.", self.fused_share()),
+        ] {
+            reg.gauge(name, help, &l).set(value);
+        }
+        for (tenant, h) in &self.tenant_latency {
+            let t = tenant.to_string();
+            reg.histogram(
+                "adra.serve.tenant_wall_ns",
+                "Submission-to-reply wall latency per tenant (ns).",
+                &[("queue", queue), ("tenant", &t)],
+            )
+            .set_to_snapshot(h);
+        }
     }
 
     /// Mean programs per round.
@@ -246,6 +359,60 @@ mod tests {
         let t = m.tenant_report();
         assert_eq!(t.len(), 1);
         assert!(t[0].starts_with("tenant 7: 2 programs"));
+    }
+
+    /// Overflow hygiene: round accumulation at the u64::MAX vicinity
+    /// clamps instead of panicking in debug builds (soak runs).
+    #[test]
+    fn observe_round_saturates_at_u64_max() {
+        let mut m = ServeMetrics::default();
+        m.programs = u64::MAX - 1;
+        m.submitted_ops = u64::MAX;
+        m.rounds = u64::MAX;
+        let st = RoundStats {
+            submitted_ops: 100,
+            coalesced_ops: 90,
+            dual_ops: 5,
+            ..Default::default()
+        };
+        m.observe_round(8, &st, u64::MAX, 3);
+        m.observe_round(8, &st, u64::MAX, 3); // second round: everything clamped
+        assert_eq!(m.programs, u64::MAX);
+        assert_eq!(m.submitted_ops, u64::MAX);
+        assert_eq!(m.rounds, u64::MAX);
+        assert_eq!(m.quota_hits, u64::MAX);
+        assert_eq!(m.coalesced_ops, 180, "unclamped counters still accumulate");
+        assert_eq!(m.deferred_programs, 6);
+    }
+
+    #[test]
+    fn publish_mirrors_counters_into_registry() {
+        let reg = crate::observe::Registry::new();
+        let mut m = ServeMetrics::default();
+        let st = RoundStats {
+            submitted_ops: 10,
+            coalesced_ops: 7,
+            cached_steps: 3,
+            cache_misses: 1,
+            ..Default::default()
+        };
+        m.observe_round(2, &st, 1, 4);
+        m.observe_controller(5, 2, 9, 16);
+        m.record_latency(3, 2e-6);
+        m.publish(&reg, "0");
+        m.publish(&reg, "0"); // idempotent: totals unchanged
+        let text = crate::observe::expose_text(&reg);
+        assert!(text.contains("adra_serve_programs{queue=\"0\"} 2"), "{text}");
+        assert!(text.contains("adra_serve_rounds{queue=\"0\"} 1"), "{text}");
+        assert!(text.contains("adra_serve_submitted_ops{queue=\"0\"} 10"), "{text}");
+        assert!(text.contains("adra_serve_quota_hits{queue=\"0\"} 1"), "{text}");
+        assert!(text.contains("adra_serve_controller_grows{queue=\"0\"} 5"), "{text}");
+        assert!(text.contains("adra_serve_current_max_round{queue=\"0\"} 16"), "{text}");
+        assert!(text.contains("adra_serve_cache_hit_rate{queue=\"0\"} 0.75"), "{text}");
+        assert!(
+            text.contains("adra_serve_tenant_wall_ns_count{queue=\"0\",tenant=\"3\"} 1"),
+            "{text}"
+        );
     }
 
     #[test]

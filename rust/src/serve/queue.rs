@@ -9,6 +9,7 @@
 //! the same backpressure-free design as `coordinator::pool`, one layer
 //! up.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -19,6 +20,7 @@ use crate::config::SimConfig;
 use crate::coordinator::RouteError;
 use crate::energy::OpCost;
 use crate::metrics::RunMetrics;
+use crate::observe::{self, Stage};
 use crate::planner::{
     place, planned_coordinator, ExecError, Executor, Objective, OpClass, PlanCostModel,
     PlanError, Placement, Program, StepOutput,
@@ -140,12 +142,19 @@ impl Ticket {
     }
 }
 
+/// Monotone id source distinguishing queue instances in the registry
+/// (the `queue` label): several queues can live in one process (tests,
+/// the example's FIFO-vs-fair comparison) and their counters must not
+/// collapse into one series.
+static QUEUE_SEQ: AtomicU64 = AtomicU64::new(0);
+
 /// The serving front door.  `Send + Sync`: submit from any thread.
 pub struct ServeQueue {
     tx: Option<Sender<Admission>>,
     handle: Option<JoinHandle<()>>,
     metrics: Arc<Mutex<ServeMetrics>>,
     n_records: usize,
+    id: u64,
 }
 
 impl ServeQueue {
@@ -155,11 +164,17 @@ impl ServeQueue {
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let m2 = metrics.clone();
         let n_records = config.n_records;
+        let id = QUEUE_SEQ.fetch_add(1, Ordering::Relaxed);
         let handle = std::thread::Builder::new()
             .name("adra-serve".into())
-            .spawn(move || scheduler(config, rx, m2))
+            .spawn(move || scheduler(config, rx, m2, id))
             .expect("spawn serve scheduler");
-        Self { tx: Some(tx), handle: Some(handle), metrics, n_records }
+        Self { tx: Some(tx), handle: Some(handle), metrics, n_records, id }
+    }
+
+    /// This queue's `queue` label value in the observe registry.
+    pub fn instance(&self) -> u64 {
+        self.id
     }
 
     /// Admit a tenant's program; returns a ticket to wait on.
@@ -195,7 +210,12 @@ impl Drop for ServeQueue {
     }
 }
 
-fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<ServeMetrics>>) {
+fn scheduler(
+    config: ServeConfig,
+    rx: Receiver<Admission>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    queue_id: u64,
+) {
     let ServeConfig {
         cfg,
         shards,
@@ -223,6 +243,19 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
     let mut backlog: FairScheduler<Admission> = FairScheduler::new(admission);
     let mut round_no: u64 = 0;
     let mut open = true;
+
+    // observability: every counter this scheduler maintains is mirrored
+    // into the global registry under the queue label, and each pipeline
+    // stage records a trace span (observation only — no control flow or
+    // modeled cost reads anything published here)
+    let qlabel = queue_id.to_string();
+    let reg = observe::global();
+    let rec = observe::recorder();
+    let round_wall = reg.histogram(
+        "adra.serve.round_wall_ns",
+        "Observed wall time per coalescing round (ns).",
+        &[("queue", &qlabel)],
+    );
 
     while open || !backlog.is_empty() {
         // batch window: block for work only when the backlog is dry,
@@ -252,6 +285,7 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
 
         // round selection: WFQ (or FIFO) over the backlog, sized by the
         // adaptive controller, weighted by the latency histograms
+        let schedule_start = Instant::now();
         let weights = {
             let m = metrics.lock().expect("metrics lock");
             service_weights(&m.tenant_latency)
@@ -263,11 +297,25 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
             continue;
         }
         round_no += 1;
+        rec.record_span(
+            round_no,
+            None,
+            Stage::Schedule,
+            schedule_start.elapsed().as_nanos() as u64,
+            admitted.len() as u64,
+        );
         let round_start = Instant::now();
 
         // place each program; planning failures answer immediately
         let mut round: Vec<(Admission, Placement)> = Vec::with_capacity(admitted.len());
         for a in admitted {
+            rec.record_span(
+                round_no,
+                Some(a.tenant as u64),
+                Stage::Admit,
+                a.submitted.elapsed().as_nanos() as u64,
+                1,
+            );
             match place(&a.program, &cfg, shards, &model) {
                 Ok(p) => round.push((a, p)),
                 Err(e) => {
@@ -281,9 +329,22 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
         let occupancy = round.len();
 
         let placements: Vec<&Placement> = round.iter().map(|(_, p)| p).collect();
+        let coalesce_start = Instant::now();
         let coalesced = coalesce_round(&placements, &mut state, &mut cache, fuse);
+        rec.record_span(
+            round_no,
+            None,
+            Stage::Coalesce,
+            coalesce_start.elapsed().as_nanos() as u64,
+            coalesced.stats.coalesced_ops,
+        );
+        // fusion is planned during coalescing and executed inside the
+        // shard batches; its span is an annotation carrying the forecast
+        // activation count
+        rec.record_span(round_no, None, Stage::Fuse, 0, coalesced.stats.activations);
 
         // execute every shard batch in parallel, fused when routing allows
+        let execute_start = Instant::now();
         let coord_ref = &coord;
         let shard_results: Vec<Result<Vec<Result<CimResult, EngineError>>, RouteError>> =
             std::thread::scope(|s| {
@@ -305,6 +366,13 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
                     .map(|h| h.join().expect("serve shard thread panicked"))
                     .collect()
             });
+        rec.record_span(
+            round_no,
+            None,
+            Stage::Execute,
+            execute_start.elapsed().as_nanos() as u64,
+            coalesced.shard_batches.iter().map(|b| b.ops.len() as u64).sum(),
+        );
 
         let mut results: Vec<Vec<Result<CimResult, EngineError>>> =
             Vec::with_capacity(shard_results.len());
@@ -339,43 +407,28 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
         }
 
         // close the control loop on this round's observed wall time
-        controller.observe(round_start.elapsed().as_secs_f64(), occupancy);
+        let round_wall_s = round_start.elapsed().as_secs_f64();
+        controller.observe(round_wall_s, occupancy);
+        round_wall.record(round_wall_s * 1e9);
 
         let coord_metrics: RunMetrics = coord.metrics();
         {
             let mut m = metrics.lock().expect("metrics lock");
-            m.rounds += 1;
-            m.programs += occupancy as u64;
-            m.max_round_occupancy = m.max_round_occupancy.max(occupancy as u64);
-            let st = &coalesced.stats;
-            m.submitted_ops += st.submitted_ops;
-            m.coalesced_ops += st.coalesced_ops;
-            m.skipped_writes += st.skipped_writes;
-            m.cached_steps += st.cached_steps;
-            m.cache_misses += st.cache_misses;
-            m.negative_hits += st.negative_hits;
-            m.dual_ops += st.dual_ops;
-            m.activations += st.activations;
-            m.fused_followers += st.fused_followers;
-            m.cross_program_fused_ops += st.cross_program_fused_ops;
+            m.observe_round(occupancy as u64, &coalesced.stats, selection.quota_hits, selection.deferred);
             m.invalidating_writes = state.invalidating_writes;
-            m.quota_hits += selection.quota_hits;
-            m.deferred_programs += selection.deferred;
-            m.controller_grows = controller.grows;
-            m.controller_shrinks = controller.shrinks;
-            m.controller_holds = controller.holds;
-            m.current_max_round = controller.max_round() as u64;
+            m.observe_controller(
+                controller.grows,
+                controller.shrinks,
+                controller.holds,
+                controller.max_round() as u64,
+            );
             // engine-level per-tier activation split (pool snapshot, not
             // a per-round delta)
-            m.array_dual_activations = coord_metrics.array.dual_activations;
-            m.array_digital_activations = coord_metrics.array.digital_activations;
-            m.array_masked_activations = coord_metrics.array.masked_activations;
-            m.array_det_cols = coord_metrics.array.det_cols;
-            m.array_marginal_cols = coord_metrics.array.marginal_cols;
-            m.array_xval_mismatches = coord_metrics.array.xval_mismatches;
+            m.observe_array(&coord_metrics.array);
         }
 
         // assemble per program, splice cached outputs, memoize fresh ones
+        let cache_start = Instant::now();
         for (((a, placement), per_shard), pa) in
             round.into_iter().zip(slots).zip(&coalesced.programs)
         {
@@ -411,14 +464,25 @@ fn scheduler(config: ServeConfig, rx: Receiver<Admission>, metrics: Arc<Mutex<Se
             let _ = a.reply.send(reply);
         }
 
+        rec.record_span(
+            round_no,
+            None,
+            Stage::Cache,
+            cache_start.elapsed().as_nanos() as u64,
+            coalesced.stats.cached_steps,
+        );
+
         // post-insert cache counters (inserts above may have evicted);
         // negative hits instead accumulate per round from RoundStats —
-        // lookups only happen during coalescing
+        // lookups only happen during coalescing; then mirror everything
+        // into the registry so a scrape taken between rounds is current
         {
             let mut m = metrics.lock().expect("metrics lock");
             m.cache_evictions = cache.evictions;
             m.cache_swept = cache.swept;
+            m.publish(reg, &qlabel);
         }
+        coord_metrics.publish(reg, &[("queue", &qlabel)]);
     }
 }
 

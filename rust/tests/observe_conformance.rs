@@ -1,0 +1,319 @@
+//! Observability conformance: Prometheus text-format invariants of
+//! `observe::expose_text`, concurrency properties of the registry, and
+//! the end-to-end guarantee that a served workload populates the global
+//! registry with the serve / kernel / planner families the acceptance
+//! criteria name.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use adra::config::{SensingScheme, SimConfig};
+use adra::observe::{self, expose_text, FlightRecorder, Registry, Stage};
+use adra::planner::Objective;
+use adra::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeQueue};
+use adra::workload::analytics_scenario;
+
+/// Split one exposition sample line into (series-with-labels, value).
+fn split_sample(line: &str) -> (&str, f64) {
+    let sp = line.rfind(' ').expect("sample line has a value");
+    let v = line[sp + 1..].trim();
+    let value = match v {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        _ => v.parse().unwrap_or_else(|e| panic!("bad value {v:?} in {line:?}: {e}")),
+    };
+    (&line[..sp], value)
+}
+
+/// The metric-name charset the format requires: `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+fn assert_valid_metric_name(name: &str) {
+    let mut chars = name.chars();
+    let first = chars.next().expect("non-empty metric name");
+    assert!(
+        first.is_ascii_alphabetic() || first == '_' || first == ':',
+        "bad leading char in metric name {name:?}"
+    );
+    for c in chars {
+        assert!(
+            c.is_ascii_alphanumeric() || c == '_' || c == ':',
+            "bad char {c:?} in metric name {name:?}"
+        );
+    }
+}
+
+/// Structural walk of an exposition: every family has HELP then TYPE
+/// then samples; names are in-charset; histogram triples are consistent.
+/// Returns (family -> type) and the flat (series, value) samples.
+fn validate_exposition(text: &str) -> (HashMap<String, String>, Vec<(String, f64)>) {
+    let mut kinds: HashMap<String, String> = HashMap::new();
+    let mut helped: HashMap<String, bool> = HashMap::new();
+    let mut samples = Vec::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().expect("HELP names a family");
+            assert_valid_metric_name(name);
+            assert!(
+                !helped.contains_key(name),
+                "family {name} emitted HELP twice — families must be contiguous"
+            );
+            helped.insert(name.to_string(), true);
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().expect("TYPE names a family");
+            let kind = it.next().expect("TYPE has a kind");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown TYPE {kind} for {name}"
+            );
+            assert!(helped.contains_key(name), "TYPE for {name} must follow its HELP");
+            kinds.insert(name.to_string(), kind.to_string());
+        } else if !line.is_empty() {
+            let (series, value) = split_sample(line);
+            let name = series.split('{').next().unwrap();
+            assert_valid_metric_name(name);
+            // every sample belongs to a declared family (histograms via
+            // their _bucket/_sum/_count suffixes)
+            let family = ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|s| {
+                    name.strip_suffix(s).filter(|f| kinds.get(*f) == Some(&"histogram".into()))
+                })
+                .unwrap_or(name);
+            assert!(kinds.contains_key(family), "sample {series} has no TYPE declaration");
+            samples.push((series.to_string(), value));
+        }
+    }
+    // histogram triples: cumulative buckets, le="+Inf" == _count
+    for (family, kind) in &kinds {
+        if kind != "histogram" {
+            continue;
+        }
+        // group buckets by their full label set minus `le`
+        let mut by_series: HashMap<String, Vec<(String, f64)>> = HashMap::new();
+        for (series, value) in &samples {
+            if let Some(rest) = series.strip_prefix(&format!("{family}_bucket")) {
+                let le_start = rest.find("le=\"").expect("bucket sample carries le");
+                let le_end = rest[le_start + 4..].find('"').unwrap() + le_start + 4;
+                let le = rest[le_start + 4..le_end].to_string();
+                // key: labels with the le pair removed, normalized to the
+                // spelling the _sum/_count samples use
+                let key = format!("{}{}", &rest[..le_start], &rest[le_end + 1..])
+                    .replace(",}", "}")
+                    .replace("{,", "{")
+                    .replace("{}", "");
+                by_series.entry(key).or_default().push((le, *value));
+            }
+        }
+        assert!(!by_series.is_empty(), "histogram {family} emitted no buckets");
+        for (key, buckets) in by_series {
+            let mut prev = 0.0;
+            for (le, v) in &buckets {
+                assert!(
+                    *v >= prev,
+                    "{family} buckets must be cumulative: le={le} fell to {v} (key {key})"
+                );
+                prev = *v;
+            }
+            let (last_le, last_v) = buckets.last().unwrap();
+            assert_eq!(last_le, "+Inf", "{family} must close with le=\"+Inf\"");
+            let count_series = format!("{family}_count{key}");
+            let count = samples
+                .iter()
+                .find(|(s, _)| *s == count_series)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("histogram {family} is missing {count_series}"));
+            assert_eq!(*last_v, count, "{family}: le=+Inf bucket must equal _count (key {key})");
+        }
+    }
+    (kinds, samples)
+}
+
+#[test]
+fn exposition_format_conforms() {
+    let r = Registry::new();
+    r.counter("adra.test.ops", "Ops with a \"quoted\" help\nand newline.", &[("tenant", "a\"b\\c")])
+        .add(3);
+    r.gauge("adra.test.ratio", "A ratio.", &[]).set(0.375);
+    let h = r.histogram("adra.test.lat_ns", "Latency.", &[("tier", "digital")]);
+    h.record(1.0);
+    h.record(3.0);
+    h.record(1e18); // lands in the open-ended last bucket
+    let text = expose_text(&r);
+
+    // label escaping: backslash and quote escaped, help newline escaped
+    assert!(text.contains("tenant=\"a\\\"b\\\\c\""), "{text}");
+    assert!(text.contains("# HELP adra_test_ops Ops with a \"quoted\" help\\nand newline."));
+    let (kinds, samples) = validate_exposition(&text);
+    assert_eq!(kinds.get("adra_test_ops").map(String::as_str), Some("counter"));
+    assert_eq!(kinds.get("adra_test_ratio").map(String::as_str), Some("gauge"));
+    assert_eq!(kinds.get("adra_test_lat_ns").map(String::as_str), Some("histogram"));
+    // the +Inf bucket carries all 3 samples even with the huge outlier
+    assert!(samples
+        .iter()
+        .any(|(s, v)| s.contains("adra_test_lat_ns_bucket") && s.contains("le=\"+Inf\"") && *v == 3.0));
+    assert!(samples.iter().any(|(s, v)| s == "adra_test_lat_ns_count{tier=\"digital\"}" && *v == 3.0));
+}
+
+#[test]
+fn exposition_handles_non_finite_and_fractional_values() {
+    let r = Registry::new();
+    r.gauge("adra.test.inf", "inf", &[]).set(f64::INFINITY);
+    r.gauge("adra.test.ninf", "ninf", &[]).set(f64::NEG_INFINITY);
+    r.gauge("adra.test.nan", "nan", &[]).set(f64::NAN);
+    r.gauge("adra.test.frac", "frac", &[]).set(-2.5);
+    let text = expose_text(&r);
+    assert!(text.contains("adra_test_inf +Inf\n"), "{text}");
+    assert!(text.contains("adra_test_ninf -Inf\n"), "{text}");
+    assert!(text.contains("adra_test_nan NaN\n"), "{text}");
+    assert!(text.contains("adra_test_frac -2.5\n"), "{text}");
+}
+
+/// N threads x M increments == N*M, for the counter's saturating CAS and
+/// the histogram's per-bucket atomics.
+#[test]
+fn concurrent_increments_are_lossless() {
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 10_000;
+    let r = Arc::new(Registry::new());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                // every thread get-or-creates the same series handles
+                let c = r.counter("adra.test.concurrent", "c", &[]);
+                let h = r.histogram("adra.test.concurrent_h", "h", &[]);
+                let g = r.gauge("adra.test.concurrent_g", "g", &[]);
+                for i in 0..PER_THREAD {
+                    c.inc();
+                    h.record((t as u64 * PER_THREAD + i) as f64 % 1000.0);
+                    g.add(1.0);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = (THREADS as u64) * PER_THREAD;
+    assert_eq!(r.counter("adra.test.concurrent", "c", &[]).get(), total);
+    let h = r.histogram("adra.test.concurrent_h", "h", &[]);
+    assert_eq!(h.count(), total);
+    assert_eq!(h.bucket_counts().iter().sum::<u64>(), total);
+    // gauge adds go through a CAS loop: also lossless
+    let g = r.gauge("adra.test.concurrent_g", "g", &[]).get();
+    assert!((g - total as f64).abs() < 1e-6, "gauge {g} vs {total}");
+}
+
+#[test]
+fn registry_counters_saturate_under_snapshot_publishing() {
+    let r = Registry::new();
+    let c = r.counter("adra.test.sat", "s", &[]);
+    c.set_at_least(u64::MAX - 1);
+    c.add(100); // clamps
+    assert_eq!(c.get(), u64::MAX);
+    c.set_at_least(7); // ratchet never regresses
+    assert_eq!(c.get(), u64::MAX);
+    let text = expose_text(&r);
+    assert!(text.contains(&format!("adra_test_sat {}", u64::MAX)), "{text}");
+}
+
+/// Serving a workload end-to-end populates the global registry with the
+/// serve, run/array (kernel tier), and planner prediction families, and
+/// the flight recorder holds the round's pipeline spans.
+#[test]
+fn served_workload_populates_global_registry_and_recorder() {
+    let mut cfg = SimConfig::square(64, SensingScheme::Current);
+    cfg.word_bits = 8;
+    cfg.max_batch = 16;
+    let queue = ServeQueue::start(ServeConfig {
+        cfg: cfg.clone(),
+        shards: 2,
+        objective: Objective::Edp,
+        n_records: 48,
+        max_round: 8,
+        cache_capacity: 64,
+        admission: AdmissionPolicy::Fair,
+        batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
+    });
+    let qid = queue.instance().to_string();
+    let s = analytics_scenario(&cfg, 48, 3);
+    for _ in 0..2 {
+        queue.submit(1, s.program.clone()).unwrap().wait().unwrap();
+    }
+    // joining the scheduler thread guarantees the final round's registry
+    // publish has landed before we scrape
+    drop(queue);
+
+    let text = expose_text(observe::global());
+    let qsel = format!("queue=\"{qid}\"");
+    for family in [
+        "adra_serve_programs",
+        "adra_serve_rounds",
+        "adra_serve_cache_hit_rate",
+        "adra_run_ops",
+        "adra_array_activations",
+        "adra_array_det_fraction",
+        "adra_planner_prediction_error",
+        "adra_planner_prediction_error_ppm",
+        "adra_serve_tenant_wall_ns",
+        "adra_serve_round_wall_ns",
+    ] {
+        assert!(text.contains(family), "missing family {family}:\n{text}");
+    }
+    // this queue's own series exist under its instance label
+    assert!(text.contains(&format!("adra_serve_programs{{{qsel}}} 2")), "{text}");
+    assert!(
+        text.contains(&format!("adra_serve_tenant_wall_ns_count{{{qsel},tenant=\"1\"}} 2")),
+        "{text}"
+    );
+    // the planner published per-class errors incl. the dual class ADRA
+    // exists for, and the tables are exact so the error gauge reads ~0
+    assert!(text.contains("kind=\"energy\",op_class=\"dual\""), "{text}");
+    assert!(text.contains("op_class=\"all\""), "{text}");
+    let dual_err = observe::global()
+        .gauge(
+            "adra.planner.prediction_error",
+            "Signed relative predicted-vs-measured cost error of the last run \
+             ((predicted - measured) / measured).",
+            &[("kind", "energy"), ("op_class", "dual")],
+        )
+        .get();
+    assert!(dual_err.abs() < 1e-6, "exact tables must predict dual ops: {dual_err}");
+    // and the whole scrape stays structurally valid
+    validate_exposition(&text);
+
+    // the scheduler recorded pipeline spans for the rounds it ran
+    let events = observe::recorder().snapshot();
+    let stages: Vec<&'static str> = events
+        .iter()
+        .filter_map(|r| match &r.event {
+            observe::TraceEvent::Span { stage, .. } => Some(stage.name()),
+            _ => None,
+        })
+        .collect();
+    for want in ["admit", "schedule", "coalesce", "fuse", "execute", "cache"] {
+        assert!(stages.contains(&want), "missing {want} span in {stages:?}");
+    }
+    let jsonl = observe::recorder().to_jsonl();
+    assert!(jsonl.contains("\"stage\":\"execute\""), "{jsonl}");
+}
+
+#[test]
+fn flight_recorder_ring_drops_oldest_and_counts() {
+    let r = FlightRecorder::with_capacity(4);
+    for i in 0..10u64 {
+        r.record_span(i, None, Stage::Execute, i * 10, 1);
+    }
+    assert_eq!(r.len(), 4);
+    assert_eq!(r.dropped(), 6);
+    let snap = r.snapshot();
+    assert_eq!(snap.first().unwrap().seq, 6, "oldest surviving event");
+    assert_eq!(snap.last().unwrap().seq, 9, "newest event");
+    // export is the tail, oldest first, one JSON object per line
+    let jsonl = r.to_jsonl();
+    assert_eq!(jsonl.lines().count(), 4);
+    for line in jsonl.lines() {
+        assert!(line.starts_with("{\"seq\":") && line.ends_with('}'), "{line}");
+    }
+}

@@ -1,0 +1,175 @@
+#!/usr/bin/env python3
+"""Prometheus-exposition smoke checker for the observability layer.
+
+Validates two consecutive scrapes of `adra::observe::expose_text` (as
+written by `cargo run --release --example serving` to
+target/metrics_scrape1.prom / target/metrics_scrape2.prom):
+
+  1. parse: every sample line is `name{labels} value`, names match the
+     Prometheus charset, every sample belongs to a family that declared
+     # HELP and # TYPE;
+  2. coverage: the scrape is non-empty and the required serve / planner /
+     kernel families are all present;
+  3. histogram triples: cumulative `_bucket` series are non-decreasing in
+     `le`, end in `le="+Inf"`, and the +Inf bucket equals `_count`;
+  4. monotonicity: every counter series in scrape 1 is <= its value in
+     scrape 2 (counters only ratchet; series may appear between scrapes
+     but must never vanish or decrease).
+
+Usage: check_metrics.py SCRAPE1 SCRAPE2
+
+Exit 0 on success, 1 with a list of violations otherwise.
+"""
+
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+SAMPLE_RE = re.compile(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{.*\})?\s+(\S+)$")
+
+REQUIRED_FAMILIES = [
+    "adra_serve_programs",
+    "adra_serve_rounds",
+    "adra_run_ops",
+    "adra_array_det_fraction",
+    "adra_planner_prediction_error",
+]
+
+
+def parse_value(raw):
+    if raw == "+Inf":
+        return float("inf")
+    if raw == "-Inf":
+        return float("-inf")
+    return float(raw)  # handles NaN spelling too
+
+
+def parse(path, errors):
+    """Return (families: name -> type, samples: series -> value)."""
+    helps, types, samples = {}, {}, {}
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.rstrip("\n")
+            if not line:
+                continue
+            where = f"{path}:{lineno}"
+            if line.startswith("# HELP "):
+                helps[line.split(" ", 3)[2]] = True
+                continue
+            if line.startswith("# TYPE "):
+                parts = line.split(" ")
+                types[parts[2]] = parts[3]
+                continue
+            if line.startswith("#"):
+                continue
+            m = SAMPLE_RE.match(line)
+            if not m:
+                errors.append(f"{where}: unparseable sample line: {line!r}")
+                continue
+            name, labels, raw = m.group(1), m.group(2) or "", m.group(3)
+            if not NAME_RE.match(name):
+                errors.append(f"{where}: invalid metric name {name!r}")
+            family = name
+            for suffix in ("_bucket", "_sum", "_count"):
+                base = name[: -len(suffix)] if name.endswith(suffix) else None
+                if base and types.get(base) == "histogram":
+                    family = base
+                    break
+            if family not in types:
+                errors.append(f"{where}: sample {name!r} has no # TYPE declaration")
+            if family not in helps:
+                errors.append(f"{where}: sample {name!r} has no # HELP declaration")
+            try:
+                samples[name + labels] = parse_value(raw)
+            except ValueError:
+                errors.append(f"{where}: bad sample value {raw!r}")
+    return types, samples
+
+
+def le_of(series):
+    m = re.search(r'le="([^"]*)"', series)
+    return m.group(1) if m else None
+
+
+def strip_le(series):
+    key = re.sub(r',?le="[^"]*"', "", series)
+    return key.replace("{}", "")
+
+
+def check_histograms(path, types, samples, errors):
+    for family, kind in types.items():
+        if kind != "histogram":
+            continue
+        # group bucket series by their non-le label key
+        groups = {}
+        for series, value in samples.items():
+            if series.split("{")[0] == family + "_bucket":
+                labels = series[len(family) + len("_bucket"):]
+                groups.setdefault(strip_le(labels), []).append((series, value))
+        if not groups:
+            errors.append(f"{path}: histogram {family} has no _bucket samples")
+        for key, buckets in groups.items():
+            inf = [v for s, v in buckets if le_of(s) == "+Inf"]
+            if not inf:
+                errors.append(f"{path}: {family}{key or ''} missing le=\"+Inf\" bucket")
+                continue
+            finite = sorted(
+                ((float(le_of(s)), v) for s, v in buckets if le_of(s) != "+Inf")
+            )
+            ordered = [v for _, v in finite] + inf
+            if any(a > b for a, b in zip(ordered, ordered[1:])):
+                errors.append(f"{path}: {family}{key or ''} buckets not cumulative")
+            count_series = (family + "_count" + key) if key else (family + "_count")
+            count = samples.get(count_series)
+            if count is None:
+                errors.append(f"{path}: {family}{key or ''} missing _count sample")
+            elif count != inf[0]:
+                errors.append(
+                    f"{path}: {family}{key or ''} _count {count} != +Inf bucket {inf[0]}"
+                )
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    errors = []
+    types1, samples1 = parse(sys.argv[1], errors)
+    types2, samples2 = parse(sys.argv[2], errors)
+
+    for path, types, samples in ((sys.argv[1], types1, samples1), (sys.argv[2], types2, samples2)):
+        if not samples:
+            errors.append(f"{path}: scrape has no samples at all")
+        for family in REQUIRED_FAMILIES:
+            if family not in types:
+                errors.append(f"{path}: required family {family} missing")
+        check_histograms(path, types, samples, errors)
+
+    # counters only ratchet: scrape1 series must persist and not decrease
+    counters1 = {
+        s: v for s, v in samples1.items() if types1.get(s.split("{")[0]) == "counter"
+    }
+    checked = 0
+    for series, v1 in counters1.items():
+        v2 = samples2.get(series)
+        if v2 is None:
+            errors.append(f"counter series vanished between scrapes: {series}")
+        elif v2 < v1:
+            errors.append(f"counter went backwards: {series} {v1} -> {v2}")
+        else:
+            checked += 1
+
+    if errors:
+        print(f"check_metrics: FAIL ({len(errors)} violations)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(
+        f"check_metrics: ok — {len(types2)} families, {len(samples2)} samples, "
+        f"{checked} counter series monotone across scrapes"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

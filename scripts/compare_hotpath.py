@@ -41,6 +41,42 @@ def load(path):
     return values, timings
 
 
+def fmt(v, width=10, digits=3):
+    """One table cell: '-' for a missing side, fixed-point otherwise."""
+    if v is None:
+        return f"{'-':>{width}}"
+    return f"{v:>{width}.{digits}f}"
+
+
+def delta_table(title, base, cur, digits=3):
+    """Per-metric delta table over the UNION of both runs' metrics.
+
+    Metrics present on only one side render with '-' and a warning
+    instead of raising — new bench records (or retired ones) must be able
+    to land without breaking the gate script.
+    """
+    union = sorted(set(base) | set(cur))
+    if not union:
+        return []
+    warnings = []
+    print(f"\n{title}:")
+    print(f"  {'metric':<48} {'baseline':>10} {'current':>10} {'delta':>9}")
+    for name in union:
+        b, c = base.get(name), cur.get(name)
+        if b is None or c is None:
+            side = "baseline" if b is None else "current"
+            warnings.append(f"{name}: only in one run (missing from {side})")
+            delta = f"{'n/a':>9}"
+        elif b != 0:
+            delta = f"{(c - b) / b * 100.0:>+8.1f}%"
+        else:
+            delta = f"{'n/a':>9}"
+        print(f"  {name:<48} {fmt(b, digits=digits)} {fmt(c, digits=digits)} {delta}")
+    for w in warnings:
+        print(f"  warn: {w}")
+    return warnings
+
+
 def main():
     if len(sys.argv) != 3:
         print(__doc__)
@@ -70,13 +106,11 @@ def main():
                 f"(baseline {base_vals[name]:.3f}, tolerance {drop:.0%})"
             )
 
-    # absolute timings: context only (runners differ), never gate
-    shared = sorted(set(cur_ns) & set(base_ns))
-    if shared and not seeded:
-        print("\nabsolute timings (informational):")
-        for name in shared:
-            delta = (cur_ns[name] - base_ns[name]) / base_ns[name] * 100.0
-            print(f"  {name:<48} {base_ns[name]:>10.1f} -> {cur_ns[name]:>10.1f} ns ({delta:+.1f}%)")
+    # full per-metric delta tables (informational; one-sided metrics warn)
+    delta_table("ratio / value records", base_vals, cur_vals)
+    if not seeded:
+        # absolute timings: context only (runners differ), never gate
+        delta_table("absolute timings (ns/iter, informational)", base_ns, cur_ns, digits=1)
 
     if failures:
         print("\nFAIL: digital-tier throughput regressed vs the committed baseline:")
