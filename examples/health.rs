@@ -1,0 +1,252 @@
+//! End-to-end health-engine demo: a heavy-tenant flood provably trips
+//! the p95 SLO-burn and quota-starvation rules.
+//!
+//! The serve scheduler samples the global registry into the global
+//! `SeriesStore` every round (`sample_every = 1`) and evaluates the
+//! standard rule set; this example additionally runs a LOCAL
+//! `HealthEngine` with deliberately tight thresholds (an SLO no real
+//! round can meet) so the demo deterministically produces warn/critical
+//! transitions, alerts in the flight recorder, and `adra.health.status`
+//! movement between two scrapes.
+//!
+//! Artifacts (CI's `health-smoke` job consumes all three):
+//!   target/health_scrape1.prom   scrape after the warmup wave
+//!   target/health_scrape2.prom   scrape after the flood + wear demo
+//!   target/health_trace.jsonl    flight-recorder tail incl. alert events
+//!
+//!     cargo run --release --example health
+
+use adra::array::WearLeveler;
+use adra::config::{SensingScheme, SimConfig};
+use adra::observe::{Direction, HealthEngine, HealthRule, RuleState, Signal, Transition};
+use adra::planner::StepOutput;
+use adra::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeQueue};
+use adra::workload::heavy_tenant_scenario;
+
+const N_RECORDS: usize = 256;
+const SHARDS: usize = 2;
+const HEAVY_BURST: usize = 16;
+const LIGHT_TENANTS: usize = 4;
+
+/// Write one Prometheus scrape of the global registry and sanity-check
+/// the families the health pipeline must expose.
+fn write_scrape(path: &str, families: &[&str]) -> String {
+    let text = adra::observe::expose_text(adra::observe::global());
+    for family in families {
+        assert!(text.contains(family), "scrape is missing family {family}:\n{text}");
+    }
+    std::fs::create_dir_all("target").expect("create target/");
+    std::fs::write(path, &text).expect("write scrape");
+    text
+}
+
+/// The demo rule set: same signal shapes as the standard rules, but with
+/// an SLO (200 ns round wall) and a starvation ceiling no flood-facing
+/// queue can honour — so the transitions are deterministic, not a bet on
+/// runner speed.
+fn flood_rules() -> Vec<HealthRule> {
+    vec![
+        HealthRule {
+            name: "flood_round_wall_slo_burn".to_string(),
+            signal: Signal::SloBurn {
+                name: "adra.serve.round_wall_ns".to_string(),
+                labels: Vec::new(),
+                slo_ns: 200.0,
+                budget: 0.05,
+                fast: 4,
+                slow: 8,
+            },
+            direction: Direction::Above,
+            warn: 1.0,
+            critical: 4.0,
+            sustain_up: 2,
+            sustain_down: 4,
+        },
+        HealthRule {
+            name: "flood_quota_starvation".to_string(),
+            signal: Signal::WindowRatio {
+                num: "adra.serve.deferred_programs".to_string(),
+                num_labels: Vec::new(),
+                den: "adra.serve.programs".to_string(),
+                den_labels: Vec::new(),
+                window: 8,
+            },
+            direction: Direction::Above,
+            warn: 0.25,
+            critical: 1.0,
+            sustain_up: 2,
+            sustain_down: 4,
+        },
+    ]
+}
+
+fn main() {
+    let mut cfg = SimConfig::square(256, SensingScheme::Current);
+    cfg.word_bits = 32;
+
+    println!("=== health engine under a heavy-tenant flood ===");
+    println!(
+        "{HEAVY_BURST}-program flood + {LIGHT_TENANTS} light tenants, {N_RECORDS} records, \
+         {SHARDS} shards, max_round 4 (tiny on purpose: every round defers)\n"
+    );
+
+    // the tiny round quota is the starvation forcing function: the flood
+    // is always bigger than one round, so deferrals pile up every round
+    let queue = ServeQueue::start(ServeConfig {
+        cfg: cfg.clone(),
+        shards: SHARDS,
+        objective: adra::planner::Objective::Edp,
+        n_records: N_RECORDS,
+        max_round: 4,
+        cache_capacity: 4096,
+        admission: AdmissionPolicy::Fair,
+        batch: BatchPolicy::Static,
+        sample_every: 1,
+    });
+
+    // wear demo, part 1: a write-hot accumulator row on shard 0, levelled
+    // and published so `adra.array.writes{source="endurance"}` exists in
+    // BOTH scrapes (check_metrics.py verifies it ratchets between them)
+    let mut leveler = WearLeveler::new(cfg.rows, 1_000_000, 64);
+    for _ in 0..500 {
+        leveler.on_write(0);
+    }
+    leveler.publish(adra::observe::global(), "0");
+
+    // warmup wave: two distinct programs so serve/run/planner families
+    // are all published before the first scrape
+    let warm = heavy_tenant_scenario(&cfg, N_RECORDS, 2028, 2, 0);
+    for (t, p) in &warm.submissions {
+        queue.submit(*t, p.clone()).expect("admit").wait().expect("serve");
+    }
+    let scrape1 = write_scrape(
+        "target/health_scrape1.prom",
+        &[
+            "adra_serve_programs",
+            "adra_serve_round_wall_ns",
+            "adra_observe_overhead_ns",
+            "adra_health_status",
+            "adra_run_ops",
+            "adra_array_writes",
+        ],
+    );
+    println!(
+        "scrape 1 (post-warmup) -> target/health_scrape1.prom ({} lines)",
+        scrape1.lines().count()
+    );
+
+    // --- the flood, with a local tight-threshold engine ticking as
+    // results stream back (the monitor's view evolves round by round) ---
+    let mut engine = HealthEngine::new();
+    for rule in flood_rules() {
+        engine.add_rule(rule);
+    }
+    let scenario = heavy_tenant_scenario(&cfg, N_RECORDS, 2029, HEAVY_BURST, LIGHT_TENANTS);
+    let tickets: Vec<_> = scenario
+        .submissions
+        .iter()
+        .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+        .collect();
+
+    let mut transitions: Vec<Transition> = Vec::new();
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let rep = ticket.wait().expect("serve");
+        assert_eq!(
+            rep.outputs[scenario.filter_step],
+            StepOutput::Matches(scenario.expected_matches[i].clone()),
+            "served output diverged from host ground truth (submission {i})"
+        );
+        for tr in engine.evaluate(
+            adra::observe::series(),
+            adra::observe::global(),
+            adra::observe::recorder(),
+        ) {
+            println!(
+                "  alert: {} {} -> {} (value {:.3})",
+                tr.rule,
+                tr.from.name(),
+                tr.to.name(),
+                tr.value
+            );
+            transitions.push(tr);
+        }
+    }
+    let m = queue.metrics();
+    println!(
+        "\nflood served: {} programs / {} rounds, {} deferrals, p95 round wall {:.1} us",
+        m.programs,
+        m.rounds,
+        m.deferred_programs,
+        m.p95_ns_excluding(usize::MAX) / 1e3
+    );
+
+    println!("\n{}", engine.report());
+
+    // --- the acceptance criteria, asserted ---
+    assert!(
+        !transitions.is_empty(),
+        "the flood must commit at least one health transition"
+    );
+    for rule in ["flood_round_wall_slo_burn", "flood_quota_starvation"] {
+        let state = engine.state_of(rule).expect("rule exists");
+        assert!(
+            state >= RuleState::Warn,
+            "{rule} must be at least warn after the flood, got {}",
+            state.name()
+        );
+        assert!(
+            transitions.iter().any(|t| t.rule == rule && t.to >= RuleState::Warn),
+            "{rule} must have committed a warn/critical transition"
+        );
+    }
+    assert!(engine.overall() >= RuleState::Warn);
+    assert!(engine.transition_count() as usize >= transitions.len());
+
+    // wear demo, part 2: more writes, republished — the counter must
+    // ratchet between the scrapes
+    for _ in 0..500 {
+        leveler.on_write(0);
+    }
+    leveler.publish(adra::observe::global(), "0");
+    println!(
+        "wear demo: {} total writes, {} remaps, imbalance {:.2}",
+        leveler.tracker().total_writes(),
+        leveler.remaps(),
+        leveler.tracker().imbalance()
+    );
+
+    let scrape2 = write_scrape(
+        "target/health_scrape2.prom",
+        &[
+            "adra_serve_programs",
+            "adra_serve_round_wall_ns",
+            "adra_observe_overhead_ns",
+            "adra_health_status",
+            "adra_health_transitions",
+            "adra_array_writes",
+        ],
+    );
+    println!(
+        "scrape 2 (post-flood) -> target/health_scrape2.prom ({} lines)",
+        scrape2.lines().count()
+    );
+
+    // alerts must round-trip through the JSONL export
+    let trace = adra::observe::recorder().to_jsonl();
+    assert!(
+        trace.contains("\"kind\":\"alert\""),
+        "flight recorder must hold the committed alerts:\n{trace}"
+    );
+    assert!(
+        trace.contains("flood_round_wall_slo_burn") && trace.contains("flood_quota_starvation"),
+        "both demo rules must appear in the exported alerts"
+    );
+    std::fs::write("target/health_trace.jsonl", &trace).expect("write trace");
+    println!(
+        "trace tail -> target/health_trace.jsonl ({} events, {} alerts)",
+        trace.lines().count(),
+        trace.matches("\"kind\":\"alert\"").count()
+    );
+
+    println!("\nHEALTH VALIDATION PASSED");
+}

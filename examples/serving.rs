@@ -135,6 +135,9 @@ fn write_scrape(path: &str) -> String {
         "adra_run_ops",
         "adra_array_det_fraction",
         "adra_planner_prediction_error",
+        "adra_serve_round_wall_ns",
+        "adra_observe_overhead_ns",
+        "adra_health_status",
     ] {
         assert!(text.contains(family), "scrape is missing family {family}:\n{text}");
     }
@@ -195,6 +198,7 @@ fn main() {
         cache_capacity: 4096,
         admission: AdmissionPolicy::Fair,
         batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
+        sample_every: 1,
     }));
     let t0 = Instant::now();
     let wave = run_wave(&queue, &fp, &dp, REPEATS);
@@ -344,6 +348,7 @@ fn main() {
             cache_capacity: 4096,
             admission,
             batch,
+            sample_every: 1,
         });
         // the adversarial pattern: the whole flood is queued before any
         // light tenant's program, exactly as a burst arrives in practice

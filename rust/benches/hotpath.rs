@@ -264,6 +264,43 @@ fn main() {
         }));
     }
 
+    // ---- observability self-metering: one serve-round telemetry tick
+    // (registry snapshot -> series store -> standard-rule health
+    // evaluation) on a registry shaped like a live two-queue serve
+    // process.  Gated as a ratio against the exact-tier engine op so the
+    // gate is machine-independent: telemetry must stay cheap relative to
+    // the work it observes.
+    let tick_ns = {
+        use adra::observe::{standard_engine, Registry, SeriesStore};
+        let reg = Registry::new();
+        for q in ["0", "1"] {
+            let l = [("queue", q)];
+            reg.counter("adra.serve.programs", "Programs admitted and answered.", &l).add(128);
+            reg.counter("adra.serve.deferred_programs", "Deferred at admission close.", &l)
+                .add(64);
+            reg.counter("adra.serve.rounds", "Executed rounds.", &l).add(32);
+            reg.gauge("adra.serve.cache_hit_rate", "Cache hit rate.", &l).set(0.4);
+            let h = reg.histogram("adra.serve.round_wall_ns", "Round wall (ns).", &l);
+            for i in 0..64u32 {
+                h.record(1000.0 * (i + 1) as f64);
+            }
+        }
+        reg.gauge("adra.array.det_fraction", "Deterministic column fraction.", &[]).set(0.97);
+        let store = SeriesStore::with_capacity(64);
+        let mut engine = standard_engine();
+        let stats = b.run("observe/sample+health tick", || {
+            store.sample(&reg);
+            engine.evaluate(&store, &reg, adra::observe::recorder())
+        });
+        let ns = stats.median_ns();
+        all.push(stats);
+        ns
+    };
+    println!(
+        "observe tick: {tick_ns:.0} ns/round ({:.1}x under the exact-tier 64-col op)",
+        exact_ns / tick_ns
+    );
+
     bench::write_json_with_meta(
         "BENCH_hotpath.json",
         &all,
@@ -271,6 +308,7 @@ fn main() {
             ("row/det-fraction s20 [masked]", det_fraction),
             ("row/speedup 1024c [whole-row vs per-word]", row_speedup_1024),
             ("tier/speedup 64c [digital vs lut]", lut_ns / digital_ns),
+            ("observe/tick ratio [exact-op vs sample+health]", exact_ns / tick_ns),
         ],
     )
     .expect("write BENCH_hotpath.json");

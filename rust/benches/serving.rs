@@ -97,6 +97,7 @@ fn main() {
             cache_capacity: 4096,
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
+            sample_every: 1,
         }));
         let barrier = Arc::new(Barrier::new(tenants));
         let t1 = Instant::now();
@@ -181,6 +182,7 @@ fn fairness_bench(cfg: &SimConfig) {
             cache_capacity: 4096,
             admission,
             batch,
+            sample_every: 1,
         });
         // queue the whole flood ahead of the light tenants, then wait —
         // the adversarial arrival order both policies must digest

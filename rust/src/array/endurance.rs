@@ -9,6 +9,8 @@
 
 use std::collections::HashMap;
 
+use crate::observe::Registry;
+
 /// Wear state of an array bank.
 #[derive(Clone, Debug)]
 pub struct WearTracker {
@@ -56,6 +58,28 @@ impl WearTracker {
 
     pub fn is_worn_out(&self) -> bool {
         self.max_wear() >= self.endurance
+    }
+
+    /// Mirror wear state into the registry under a `shard` label
+    /// (`source="endurance"` keeps these rows distinct from the
+    /// engine-level `adra.array.writes` series published by
+    /// `RunMetrics`).  Counters ratchet so re-publishing cumulative
+    /// totals is idempotent; the `array_wear_rate` health rule watches
+    /// the write counter (ROADMAP item 5b pre-work).
+    pub fn publish(&self, reg: &Registry, shard: &str) {
+        let l: [(&str, &str); 2] = [("shard", shard), ("source", "endurance")];
+        reg.counter("adra.array.writes", "Array write operations.", &l)
+            .set_at_least(self.total_writes());
+        reg.gauge("adra.array.wear_max", "Program/erase cycles on the hottest row.", &l)
+            .set_at_least(self.max_wear() as f64);
+        reg.gauge("adra.array.wear_imbalance", "Hottest-row wear over mean wear (1.0 = level).", &l)
+            .set(self.imbalance());
+        reg.gauge(
+            "adra.array.lifetime_remaining",
+            "Remaining endurance fraction of the worst row.",
+            &l,
+        )
+        .set(self.lifetime_remaining());
     }
 }
 
@@ -118,6 +142,17 @@ impl WearLeveler {
 
     fn is_mapped_target(&self, phys: usize) -> bool {
         self.map.values().any(|&v| v == phys)
+    }
+
+    /// Publish the tracker's wear state plus the remap counter.
+    pub fn publish(&self, reg: &Registry, shard: &str) {
+        self.tracker.publish(reg, shard);
+        reg.counter(
+            "adra.array.wear_remaps",
+            "Wear-leveling row remaps (each implies a data migration).",
+            &[("shard", shard), ("source", "endurance")],
+        )
+        .set_at_least(self.remaps);
     }
 }
 
@@ -187,6 +222,28 @@ mod tests {
         }
         assert_eq!(l.remaps(), 0, "uniform workload must not remap");
         assert!((l.tracker().imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn publish_mirrors_wear_into_registry() {
+        let reg = Registry::new();
+        let mut l = WearLeveler::new(8, 1_000, 10);
+        for _ in 0..100 {
+            l.on_write(0);
+        }
+        l.publish(&reg, "3");
+        l.publish(&reg, "3"); // idempotent ratchet
+        let text = crate::observe::expose_text(&reg);
+        assert!(
+            text.contains("adra_array_writes{shard=\"3\",source=\"endurance\"} 100"),
+            "{text}"
+        );
+        assert!(text.contains("adra_array_wear_remaps{shard=\"3\",source=\"endurance\"}"), "{text}");
+        assert!(text.contains("adra_array_wear_imbalance{shard=\"3\",source=\"endurance\"}"), "{text}");
+        assert!(
+            text.contains("adra_array_lifetime_remaining{shard=\"3\",source=\"endurance\"}"),
+            "{text}"
+        );
     }
 
     #[test]

@@ -14,15 +14,19 @@
 //! cmp   <shard> <rowA> <rowB> <word>
 //! stats
 //! metrics [json]
-//! trace
+//! health
+//! trace [clear | cap <n>]
 //! quit
 //! ```
 //!
 //! Responses are single lines: `ok <value...>` / `err <message>` —
 //! except `metrics` (Prometheus text or JSON scrape of the global
 //! observe registry, after publishing this coordinator's counters under
-//! `source="repl"`) and `trace` (the flight recorder's JSONL tail),
-//! which emit their multi-line payload and then a terminating `ok`.
+//! `source="repl"`), `trace` (the flight recorder's JSONL tail), and
+//! `health` (samples the global series store, evaluates the health
+//! rules, prints the per-rule report), which emit their multi-line
+//! payload and then a terminating `ok`.  `trace clear` empties the
+//! ring; `trace cap <n>` resizes it (postmortem depth).
 
 use std::io::{BufRead, Write};
 
@@ -165,9 +169,37 @@ pub fn serve_with_stats<R: BufRead, W: Write, F: Fn() -> Option<String>>(
             writeln!(output, "ok")?;
             continue;
         }
+        if trimmed == "health" {
+            // same publish-then-derive path the serve scheduler runs:
+            // the report reflects this coordinator's latest counters
+            let reg = crate::observe::global();
+            coord.metrics().publish(reg, &[("source", "repl")]);
+            let store = crate::observe::series();
+            store.sample(reg);
+            let mut engine = crate::observe::health().lock().expect("health lock");
+            engine.evaluate(store, reg, crate::observe::recorder());
+            output.write_all(engine.report().as_bytes())?;
+            writeln!(output, "ok")?;
+            continue;
+        }
         if trimmed == "trace" {
             output.write_all(crate::observe::recorder().to_jsonl().as_bytes())?;
             writeln!(output, "ok")?;
+            continue;
+        }
+        if trimmed == "trace clear" {
+            crate::observe::recorder().clear();
+            writeln!(output, "ok")?;
+            continue;
+        }
+        if let Some(arg) = trimmed.strip_prefix("trace cap") {
+            match arg.trim().parse::<usize>() {
+                Ok(n) if n > 0 => {
+                    crate::observe::recorder().set_capacity(n);
+                    writeln!(output, "ok {}", crate::observe::recorder().capacity())?;
+                }
+                _ => writeln!(output, "err trace cap: expected a positive integer")?,
+            }
             continue;
         }
         match parse_line(trimmed) {
@@ -273,6 +305,7 @@ quit
             cache_capacity: 64,
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
+            sample_every: 1,
         });
         let s = analytics_scenario(&cfg, 24, 1);
         queue.submit(0, s.program).unwrap().wait().unwrap();
@@ -314,6 +347,35 @@ quit
         assert!(text.contains("\"name\":\"adra.run.ops\""), "json scrape: {text}");
         // each multi-line payload terminates with a bare ok
         assert!(text.lines().filter(|l| *l == "ok").count() >= 3, "{text}");
+    }
+
+    #[test]
+    fn health_command_prints_rule_report() {
+        let c = coord();
+        c.call(0, CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 1 }).unwrap();
+        let mut out = Vec::new();
+        serve(&c, "health\nquit\n".as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("overall:"), "{text}");
+        assert!(text.contains("round_wall_slo_burn"), "standard rules listed: {text}");
+        assert!(text.contains("tenant_quota_starvation"), "{text}");
+        assert!(text.lines().any(|l| l == "ok"), "{text}");
+    }
+
+    #[test]
+    fn trace_cap_knob_parses_and_rejects() {
+        let c = coord();
+        let before = crate::observe::recorder().capacity();
+        let script = format!("trace cap 8192\ntrace cap zero\ntrace clear\ntrace cap {before}\nquit\n");
+        let mut out = Vec::new();
+        serve(&c, script.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "ok 8192");
+        assert!(lines[1].starts_with("err trace cap"), "{}", lines[1]);
+        assert_eq!(lines[2], "ok", "trace clear acknowledges");
+        assert_eq!(lines[3], format!("ok {before}"), "capacity restored");
+        assert_eq!(crate::observe::recorder().capacity(), before);
     }
 
     #[test]

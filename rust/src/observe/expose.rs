@@ -142,7 +142,10 @@ pub fn expose_text(registry: &Registry) -> String {
     out
 }
 
-fn json_escape(v: &str) -> String {
+/// Escape a string for embedding in hand-rendered JSON (the exposition
+/// and the trace JSONL share this — serde-free, so label/rule values
+/// containing quotes or newlines still round-trip).
+pub fn json_escape(v: &str) -> String {
     let mut out = String::with_capacity(v.len() + 2);
     for ch in v.chars() {
         match ch {
@@ -158,7 +161,9 @@ fn json_escape(v: &str) -> String {
     out
 }
 
-fn json_f64(v: f64) -> String {
+/// Render an f64 as a JSON value (Inf/NaN become strings — JSON has no
+/// literals for them).
+pub fn json_f64(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
     } else {

@@ -1,0 +1,699 @@
+//! Declarative health rules over the [`SeriesStore`]: windowed signals,
+//! warn/critical thresholds, hysteresis, and alert emission.
+//!
+//! A [`HealthRule`] names a [`Signal`] (a windowed derivation over one
+//! or more matching series), a [`Direction`] (which side of the
+//! threshold is bad), warn/critical levels, and sustain counts.  The
+//! [`HealthEngine`] evaluates every rule against the store, applies
+//! hysteresis — a target state must repeat for `sustain_up`
+//! (escalation) or `sustain_down` (clearing) consecutive evaluations
+//! before the rule transitions — and on each transition:
+//!
+//! * records [`TraceEvent::Alert`] into the flight recorder
+//!   (unconditionally — alerts bypass the span/kernel gates),
+//! * bumps the `adra.health.transitions` counter,
+//! * and re-publishes the `adra.health.status{rule}` gauge
+//!   (0 = ok, 1 = warn, 2 = critical) so scrapes carry current state.
+//!
+//! Hysteresis gives the testable no-flapping bound: a signal that
+//! oscillates around a threshold every evaluation never accumulates a
+//! sustain streak, so a sustained excursion produces EXACTLY ONE
+//! transition in each direction.
+//!
+//! A signal that cannot be computed (cold ring, zero denominator, no
+//! window samples) evaluates to `None` and the rule HOLDS — streaks
+//! freeze rather than decay toward ok, so warmup can neither fire nor
+//! clear an alert.
+
+use std::sync::Mutex;
+
+use super::registry::Registry;
+use super::series::{
+    counter_delta, counter_rate, delta_p95_ns, ewma_slope, gauge_ewma, violation_fraction,
+    SeriesStore,
+};
+use super::trace::FlightRecorder;
+
+/// Rule state, ordered by severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleState {
+    Ok,
+    Warn,
+    Critical,
+}
+
+impl RuleState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleState::Ok => "ok",
+            RuleState::Warn => "warn",
+            RuleState::Critical => "critical",
+        }
+    }
+
+    /// The `adra.health.status` gauge encoding.
+    pub fn as_gauge(&self) -> f64 {
+        match self {
+            RuleState::Ok => 0.0,
+            RuleState::Warn => 1.0,
+            RuleState::Critical => 2.0,
+        }
+    }
+}
+
+/// Which side of the threshold is unhealthy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Larger is worse (rates, burn, starvation).
+    Above,
+    /// Smaller is worse (hit rates, margins).
+    Below,
+}
+
+/// Owned label filter for a signal (series whose labels are a superset
+/// match — see [`SeriesStore::matching`]).
+pub type LabelFilter = Vec<(String, String)>;
+
+fn as_refs(labels: &LabelFilter) -> Vec<(&str, &str)> {
+    labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect()
+}
+
+/// A windowed derivation over the store.  Windows are trailing point
+/// counts (one point per serve round at the default cadence).
+#[derive(Clone, Debug)]
+pub enum Signal {
+    /// Per-second rate of a counter, SUMMED across matching series
+    /// (e.g. mismatches across every tier).
+    CounterRate { name: String, labels: LabelFilter, window: usize },
+    /// EWMA of a gauge over the window.  Across matching series the
+    /// worst one wins (direction-aware: `Above` takes the max EWMA,
+    /// `Below` the min).  `abs` smooths magnitudes — signed errors
+    /// (planner prediction error) must not cancel.
+    GaugeEwma { name: String, labels: LabelFilter, window: usize, alpha: f64, abs: bool },
+    /// Per-second slope of the EWMA-smoothed gauge (drift detector);
+    /// worst matching series wins, direction-aware like `GaugeEwma`.
+    GaugeEwmaSlope { name: String, labels: LabelFilter, window: usize, alpha: f64, abs: bool },
+    /// `delta(num) / delta(den)` over the window, both deltas summed
+    /// across their matching series.  `None` when the denominator
+    /// didn't move — a quiet window is not a collapsed ratio.
+    WindowRatio {
+        num: String,
+        num_labels: LabelFilter,
+        den: String,
+        den_labels: LabelFilter,
+        window: usize,
+    },
+    /// Windowed p95 (ns) from histogram bucket deltas; worst matching
+    /// series wins (p95 is only ever used with `Above`).
+    P95Ns { name: String, labels: LabelFilter, window: usize },
+    /// SLO burn rate: fraction of window samples over `slo_ns`, divided
+    /// by the error `budget`, taken over BOTH a fast and a slow window
+    /// and combined with `min` — the multiwindow burn-rate idiom: the
+    /// fast window gives reaction speed, the slow window vetoes blips,
+    /// and both must burn for the rule to see > 1.
+    SloBurn {
+        name: String,
+        labels: LabelFilter,
+        slo_ns: f64,
+        budget: f64,
+        fast: usize,
+        slow: usize,
+    },
+}
+
+impl Signal {
+    /// Combine per-series results so the WORST series drives the rule.
+    fn worst(vals: impl Iterator<Item = f64>, direction: Direction) -> Option<f64> {
+        match direction {
+            Direction::Above => vals.fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v)))),
+            Direction::Below => vals.fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.min(v)))),
+        }
+    }
+
+    /// Evaluate against the store; `None` means "cannot judge yet".
+    pub fn eval(&self, store: &SeriesStore, direction: Direction) -> Option<f64> {
+        match self {
+            Signal::CounterRate { name, labels, window } => {
+                let mut total = 0.0;
+                let mut any = false;
+                for (_, pts) in store.matching(name, &as_refs(labels)) {
+                    if let Some(r) = counter_rate(&pts, *window) {
+                        total += r;
+                        any = true;
+                    }
+                }
+                any.then_some(total)
+            }
+            Signal::GaugeEwma { name, labels, window, alpha, abs } => Self::worst(
+                store
+                    .matching(name, &as_refs(labels))
+                    .iter()
+                    .filter_map(|(_, pts)| gauge_ewma(pts, *window, *alpha, *abs)),
+                direction,
+            ),
+            Signal::GaugeEwmaSlope { name, labels, window, alpha, abs } => Self::worst(
+                store
+                    .matching(name, &as_refs(labels))
+                    .iter()
+                    .filter_map(|(_, pts)| ewma_slope(pts, *window, *alpha, *abs)),
+                direction,
+            ),
+            Signal::WindowRatio { num, num_labels, den, den_labels, window } => {
+                let sum_delta = |name: &str, labels: &LabelFilter| -> u64 {
+                    store
+                        .matching(name, &as_refs(labels))
+                        .iter()
+                        .filter_map(|(_, pts)| counter_delta(pts, *window))
+                        .sum()
+                };
+                let d = sum_delta(den, den_labels);
+                if d == 0 {
+                    return None;
+                }
+                Some(sum_delta(num, num_labels) as f64 / d as f64)
+            }
+            Signal::P95Ns { name, labels, window } => Self::worst(
+                store
+                    .matching(name, &as_refs(labels))
+                    .iter()
+                    .filter_map(|(_, pts)| delta_p95_ns(pts, *window)),
+                direction,
+            ),
+            Signal::SloBurn { name, labels, slo_ns, budget, fast, slow } => {
+                let burn = |window: usize| -> Option<f64> {
+                    Self::worst(
+                        store
+                            .matching(name, &as_refs(labels))
+                            .iter()
+                            .filter_map(|(_, pts)| violation_fraction(pts, window, *slo_ns)),
+                        Direction::Above,
+                    )
+                    .map(|f| f / budget.max(1e-12))
+                };
+                Some(burn(*fast)?.min(burn(*slow)?))
+            }
+        }
+    }
+}
+
+/// One declarative rule.  `warn`/`critical` are thresholds on the
+/// signal value in `direction`; `sustain_up`/`sustain_down` are the
+/// consecutive-evaluation streaks hysteresis requires to escalate /
+/// clear.
+#[derive(Clone, Debug)]
+pub struct HealthRule {
+    pub name: String,
+    pub signal: Signal,
+    pub direction: Direction,
+    pub warn: f64,
+    pub critical: f64,
+    pub sustain_up: u32,
+    pub sustain_down: u32,
+}
+
+impl HealthRule {
+    /// The state this rule's thresholds assign to `value` (before
+    /// hysteresis).
+    fn classify(&self, value: f64) -> RuleState {
+        let breached = |threshold: f64| match self.direction {
+            Direction::Above => value >= threshold,
+            Direction::Below => value <= threshold,
+        };
+        if breached(self.critical) {
+            RuleState::Critical
+        } else if breached(self.warn) {
+            RuleState::Warn
+        } else {
+            RuleState::Ok
+        }
+    }
+}
+
+/// A committed state change, also emitted as `TraceEvent::Alert`.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub rule: String,
+    pub from: RuleState,
+    pub to: RuleState,
+    pub value: f64,
+}
+
+struct RuleRuntime {
+    rule: HealthRule,
+    state: RuleState,
+    /// The state the current streak is accumulating toward.
+    pending: RuleState,
+    streak: u32,
+    last_value: Option<f64>,
+}
+
+/// Evaluates rules, applies hysteresis, emits alerts.  Single-threaded
+/// by design — the global instance lives behind a `Mutex` and is
+/// evaluated from the serve scheduler thread and the REPL.
+#[derive(Default)]
+pub struct HealthEngine {
+    rules: Vec<RuleRuntime>,
+    transitions: u64,
+}
+
+impl HealthEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_rule(&mut self, rule: HealthRule) {
+        let state = RuleState::Ok;
+        self.rules.push(RuleRuntime { rule, state, pending: state, streak: 0, last_value: None });
+    }
+
+    pub fn rule_count(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// Total committed transitions since construction.
+    pub fn transition_count(&self) -> u64 {
+        self.transitions
+    }
+
+    /// Current state of a rule by name.
+    pub fn state_of(&self, name: &str) -> Option<RuleState> {
+        self.rules.iter().find(|r| r.rule.name == name).map(|r| r.state)
+    }
+
+    /// Worst state across all rules (the one-line health summary).
+    pub fn overall(&self) -> RuleState {
+        self.rules.iter().map(|r| r.state).max().unwrap_or(RuleState::Ok)
+    }
+
+    /// Evaluate every rule once.  Commits hysteresis-approved
+    /// transitions, records alerts into `recorder`, publishes
+    /// `adra.health.*` into `registry`, and returns the transitions.
+    pub fn evaluate(
+        &mut self,
+        store: &SeriesStore,
+        registry: &Registry,
+        recorder: &FlightRecorder,
+    ) -> Vec<Transition> {
+        let mut out = Vec::new();
+        for rt in &mut self.rules {
+            if let Some(value) = rt.rule.signal.eval(store, rt.rule.direction) {
+                rt.last_value = Some(value);
+                let target = rt.rule.classify(value);
+                if target == rt.state {
+                    // back in line with the committed state: abandon any
+                    // half-accumulated excursion
+                    rt.pending = rt.state;
+                    rt.streak = 0;
+                } else {
+                    if target == rt.pending {
+                        rt.streak += 1;
+                    } else {
+                        rt.pending = target;
+                        rt.streak = 1;
+                    }
+                    let required = if target > rt.state {
+                        rt.rule.sustain_up
+                    } else {
+                        rt.rule.sustain_down
+                    };
+                    if rt.streak >= required.max(1) {
+                        let tr = Transition {
+                            rule: rt.rule.name.clone(),
+                            from: rt.state,
+                            to: target,
+                            value,
+                        };
+                        rt.state = target;
+                        rt.pending = target;
+                        rt.streak = 0;
+                        self.transitions += 1;
+                        recorder.record_alert(&tr.rule, tr.from.name(), tr.to.name(), value);
+                        registry
+                            .counter(
+                                "adra.health.transitions",
+                                "Committed health-rule state transitions.",
+                                &[("rule", &tr.rule)],
+                            )
+                            .inc();
+                        out.push(tr);
+                    }
+                }
+            }
+            // always republish current state so every scrape carries it
+            registry
+                .gauge(
+                    "adra.health.status",
+                    "Health-rule state: 0=ok, 1=warn, 2=critical.",
+                    &[("rule", &rt.rule.name)],
+                )
+                .set(rt.state.as_gauge());
+        }
+        out
+    }
+
+    /// Human-readable report (the REPL `health` command).
+    pub fn report(&self) -> String {
+        let mut out = format!("overall: {}\n", self.overall().name());
+        for rt in &self.rules {
+            let value = rt
+                .last_value
+                .map(|v| format!("{v:.4}"))
+                .unwrap_or_else(|| "-".to_string());
+            let pending = if rt.streak > 0 {
+                format!("  pending {} ({}x)", rt.pending.name(), rt.streak)
+            } else {
+                String::new()
+            };
+            out.push_str(&format!(
+                "  {:<28} {:<8} value={value}{pending}\n",
+                rt.rule.name,
+                rt.state.name()
+            ));
+        }
+        out
+    }
+}
+
+fn owned(labels: &[(&str, &str)]) -> LabelFilter {
+    labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+/// The standard ADRA rule set over the metric families the stack
+/// publishes (DESIGN.md §12).  Windows are serve rounds at the default
+/// `sample_every = 1` cadence.
+pub fn standard_rules() -> Vec<HealthRule> {
+    vec![
+        // Digital-tier guard: sampled digital-vs-analog cross-validation
+        // mismatches per check.  Any sustained nonzero rate says the
+        // margin masks are stale (PAPER.md §IV).
+        HealthRule {
+            name: "xval_mismatch_ratio".into(),
+            signal: Signal::WindowRatio {
+                num: "adra.array.xval_mismatches".into(),
+                num_labels: owned(&[]),
+                den: "adra.array.xval_checks".into(),
+                den_labels: owned(&[]),
+                window: 8,
+            },
+            direction: Direction::Above,
+            warn: 1e-4,
+            critical: 1e-2,
+            sustain_up: 2,
+            sustain_down: 4,
+        },
+        // Drift detector on the deterministic-column fraction: a falling
+        // EWMA means variation is eating the digital fast path.
+        HealthRule {
+            name: "det_col_fraction_drift".into(),
+            signal: Signal::GaugeEwmaSlope {
+                name: "adra.array.det_fraction".into(),
+                labels: owned(&[]),
+                window: 16,
+                alpha: 0.3,
+                abs: false,
+            },
+            direction: Direction::Below,
+            warn: -0.01,
+            critical: -0.05,
+            sustain_up: 2,
+            sustain_down: 4,
+        },
+        // Serving cache effectiveness collapse.
+        HealthRule {
+            name: "cache_hit_rate".into(),
+            signal: Signal::GaugeEwma {
+                name: "adra.serve.cache_hit_rate".into(),
+                labels: owned(&[]),
+                window: 8,
+                alpha: 0.5,
+                abs: false,
+            },
+            direction: Direction::Below,
+            warn: 0.10,
+            critical: 0.01,
+            sustain_up: 3,
+            sustain_down: 4,
+        },
+        // p95 round-wall SLO burn, fast/slow dual window.  slo_ns/budget
+        // mirror the batch controller's target_p95 (serve::BatchController).
+        HealthRule {
+            name: "round_wall_slo_burn".into(),
+            signal: Signal::SloBurn {
+                name: "adra.serve.round_wall_ns".into(),
+                labels: owned(&[]),
+                slo_ns: 2e6,
+                budget: 0.05,
+                fast: 4,
+                slow: 16,
+            },
+            direction: Direction::Above,
+            warn: 1.0,
+            critical: 4.0,
+            sustain_up: 2,
+            sustain_down: 4,
+        },
+        // Planner model drift, per op class: the worst |prediction
+        // error| EWMA across every `{kind, op_class}` series of the
+        // signed relative-error gauge.  This is the exact series the
+        // adaptive cost model (ROADMAP item 1) reads.
+        HealthRule {
+            name: "planner_prediction_drift".into(),
+            signal: Signal::GaugeEwma {
+                name: "adra.planner.prediction_error".into(),
+                labels: owned(&[]),
+                window: 16,
+                alpha: 0.3,
+                abs: true,
+            },
+            direction: Direction::Above,
+            warn: 0.25,
+            critical: 0.75,
+            sustain_up: 3,
+            sustain_down: 4,
+        },
+        // Tenant quota starvation: fraction of admissions deferred by
+        // quota clamping.
+        HealthRule {
+            name: "tenant_quota_starvation".into(),
+            signal: Signal::WindowRatio {
+                num: "adra.serve.deferred_programs".into(),
+                num_labels: owned(&[]),
+                den: "adra.serve.programs".into(),
+                den_labels: owned(&[]),
+                window: 8,
+            },
+            direction: Direction::Above,
+            warn: 0.5,
+            critical: 2.0,
+            sustain_up: 2,
+            sustain_down: 4,
+        },
+        // Wear-rate stub (ROADMAP item 5b pre-work): watches the shard
+        // write-rate published by `array::endurance`.  Thresholds are
+        // deliberately lax placeholders until wear-aware serving defines
+        // real budgets; the rule exists so the series and the plumbing
+        // are exercised now.
+        HealthRule {
+            name: "array_wear_rate".into(),
+            signal: Signal::CounterRate {
+                name: "adra.array.writes".into(),
+                labels: owned(&[("source", "endurance")]),
+                window: 16,
+            },
+            direction: Direction::Above,
+            warn: 1e9,
+            critical: 1e12,
+            sustain_up: 4,
+            sustain_down: 4,
+        },
+    ]
+}
+
+/// A fresh engine loaded with [`standard_rules`].
+pub fn standard_engine() -> HealthEngine {
+    let mut e = HealthEngine::new();
+    for r in standard_rules() {
+        e.add_rule(r);
+    }
+    e
+}
+
+/// Global engine guard type (see `observe::health()`).
+pub type SharedHealthEngine = Mutex<HealthEngine>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::series::SampleValue;
+
+    fn gauge_rule(warn: f64, critical: f64, up: u32, down: u32) -> HealthRule {
+        HealthRule {
+            name: "t".into(),
+            signal: Signal::GaugeEwma {
+                name: "g".into(),
+                labels: vec![],
+                window: 0,
+                alpha: 1.0,
+                abs: false,
+            },
+            direction: Direction::Above,
+            warn,
+            critical,
+            sustain_up: up,
+            sustain_down: down,
+        }
+    }
+
+    /// Feed one gauge value and evaluate once.
+    fn step(
+        engine: &mut HealthEngine,
+        store: &SeriesStore,
+        t: &mut u64,
+        v: f64,
+    ) -> Vec<Transition> {
+        *t += 1;
+        store.ingest("g", &[], *t, SampleValue::Gauge(v));
+        let reg = Registry::new();
+        let rec = FlightRecorder::with_capacity(16);
+        engine.evaluate(store, &reg, &rec)
+    }
+
+    #[test]
+    fn sustained_breach_transitions_exactly_once() {
+        let store = SeriesStore::with_capacity(32);
+        let mut e = HealthEngine::new();
+        e.add_rule(gauge_rule(1.0, 10.0, 2, 2));
+        let mut t = 0;
+        assert!(step(&mut e, &store, &mut t, 0.5).is_empty());
+        assert!(step(&mut e, &store, &mut t, 2.0).is_empty(), "streak 1 < sustain_up");
+        let tr = step(&mut e, &store, &mut t, 2.0);
+        assert_eq!(tr.len(), 1);
+        assert_eq!((tr[0].from, tr[0].to), (RuleState::Ok, RuleState::Warn));
+        // still breached: NO further transitions (the no-flapping bound)
+        for _ in 0..5 {
+            assert!(step(&mut e, &store, &mut t, 2.0).is_empty());
+        }
+        assert_eq!(e.state_of("t"), Some(RuleState::Warn));
+        assert_eq!(e.transition_count(), 1);
+    }
+
+    #[test]
+    fn flapping_input_never_transitions() {
+        let store = SeriesStore::with_capacity(64);
+        let mut e = HealthEngine::new();
+        e.add_rule(gauge_rule(1.0, 10.0, 2, 2));
+        let mut t = 0;
+        for i in 0..20 {
+            let v = if i % 2 == 0 { 2.0 } else { 0.5 }; // oscillates every eval
+            assert!(step(&mut e, &store, &mut t, v).is_empty(), "eval {i}");
+        }
+        assert_eq!(e.state_of("t"), Some(RuleState::Ok));
+        assert_eq!(e.transition_count(), 0);
+    }
+
+    #[test]
+    fn escalation_clearing_and_hysteresis_asymmetry() {
+        let store = SeriesStore::with_capacity(64);
+        let mut e = HealthEngine::new();
+        e.add_rule(gauge_rule(1.0, 10.0, 1, 3)); // instant up, slow down
+        let mut t = 0;
+        let tr = step(&mut e, &store, &mut t, 50.0);
+        assert_eq!((tr[0].from, tr[0].to), (RuleState::Ok, RuleState::Critical), "multi-level jump");
+        // de-escalating to warn needs sustain_down=3
+        assert!(step(&mut e, &store, &mut t, 2.0).is_empty());
+        assert!(step(&mut e, &store, &mut t, 2.0).is_empty());
+        let tr = step(&mut e, &store, &mut t, 2.0);
+        assert_eq!((tr[0].from, tr[0].to), (RuleState::Critical, RuleState::Warn));
+        // a blip back to critical resets the clear streak
+        assert!(step(&mut e, &store, &mut t, 0.1).is_empty());
+        assert!(step(&mut e, &store, &mut t, 0.1).is_empty());
+        let tr = step(&mut e, &store, &mut t, 50.0); // sustain_up=1: fires at once
+        assert_eq!((tr[0].from, tr[0].to), (RuleState::Warn, RuleState::Critical));
+    }
+
+    #[test]
+    fn no_data_holds_state_and_streak() {
+        let store = SeriesStore::with_capacity(64);
+        let mut e = HealthEngine::new();
+        e.add_rule(gauge_rule(1.0, 10.0, 2, 2));
+        let reg = Registry::new();
+        let rec = FlightRecorder::with_capacity(16);
+        // empty store: eval returns None, rule holds at ok with no panic
+        assert!(e.evaluate(&store, &reg, &rec).is_empty());
+        assert_eq!(e.state_of("t"), Some(RuleState::Ok));
+        let mut t = 0;
+        step(&mut e, &store, &mut t, 2.0); // streak 1
+        // series goes quiet (no new points): streak freezes, then resumes
+        assert!(e.evaluate(&store, &reg, &rec).len() <= 1);
+    }
+
+    #[test]
+    fn alerts_and_status_gauges_are_published() {
+        let store = SeriesStore::with_capacity(16);
+        let mut e = HealthEngine::new();
+        e.add_rule(gauge_rule(1.0, 10.0, 1, 1));
+        let reg = Registry::new();
+        let rec = FlightRecorder::with_capacity(16);
+        store.ingest("g", &[], 1, SampleValue::Gauge(5.0));
+        let tr = e.evaluate(&store, &reg, &rec);
+        assert_eq!(tr.len(), 1);
+        assert_eq!(rec.len(), 1, "alert recorded in the flight recorder");
+        assert!(rec.to_jsonl().contains("\"kind\":\"alert\""));
+        let status = reg.gauge("adra.health.status", "", &[("rule", "t")]);
+        assert_eq!(status.get(), 1.0);
+        let transitions = reg.counter("adra.health.transitions", "", &[("rule", "t")]);
+        assert_eq!(transitions.get(), 1);
+        assert_eq!(e.overall(), RuleState::Warn);
+        assert!(e.report().contains("warn"));
+    }
+
+    #[test]
+    fn below_direction_and_window_ratio_none_on_quiet_denominator() {
+        let store = SeriesStore::with_capacity(16);
+        // hit-rate collapse style rule
+        let rule = HealthRule {
+            name: "ratio".into(),
+            signal: Signal::WindowRatio {
+                num: "n".into(),
+                num_labels: vec![],
+                den: "d".into(),
+                den_labels: vec![],
+                window: 4,
+            },
+            direction: Direction::Above,
+            warn: 0.5,
+            critical: 0.9,
+            sustain_up: 1,
+            sustain_down: 1,
+        };
+        // denominator flat => None => no transition ever
+        store.ingest("n", &[], 1, SampleValue::Counter(0));
+        store.ingest("d", &[], 1, SampleValue::Counter(10));
+        store.ingest("n", &[], 2, SampleValue::Counter(100));
+        store.ingest("d", &[], 2, SampleValue::Counter(10));
+        assert_eq!(rule.signal.eval(&store, Direction::Above), None);
+        // denominator moves => ratio computes
+        store.ingest("n", &[], 3, SampleValue::Counter(130));
+        store.ingest("d", &[], 3, SampleValue::Counter(60));
+        let v = rule.signal.eval(&store, Direction::Above).unwrap();
+        assert!((v - 2.6).abs() < 1e-12, "{v}");
+    }
+
+    #[test]
+    fn standard_rules_cover_the_issue_set() {
+        let e = standard_engine();
+        assert_eq!(e.rule_count(), 7);
+        for name in [
+            "xval_mismatch_ratio",
+            "det_col_fraction_drift",
+            "cache_hit_rate",
+            "round_wall_slo_burn",
+            "planner_prediction_drift",
+            "tenant_quota_starvation",
+            "array_wear_rate",
+        ] {
+            assert!(e.state_of(name).is_some(), "missing standard rule {name}");
+        }
+        assert_eq!(e.overall(), RuleState::Ok);
+    }
+}

@@ -14,8 +14,16 @@
 //!   command) and `examples/serving.rs`.
 //! * [`trace`] — [`FlightRecorder`]: a fixed-capacity ring buffer of
 //!   serve-pipeline spans (admit -> schedule -> coalesce -> fuse ->
-//!   execute -> cache) and kernel-tier activation events, exported as
-//!   JSONL for postmortems.
+//!   execute -> cache), kernel-tier activation events, and health-rule
+//!   alerts, exported as JSONL for postmortems.
+//! * [`series`] — [`SeriesStore`]: a bounded ring of registry samples
+//!   per metric series (one point per serve round), plus the pure
+//!   windowed derivations (rates, EWMAs, drift slopes, histogram-delta
+//!   percentiles) built on it.
+//! * [`health`] — [`HealthEngine`]: declarative [`HealthRule`]s over
+//!   the series store (SLO burn, drift, starvation...), with hysteresis
+//!   bounding flapping; transitions alert into the recorder and publish
+//!   `adra.health.status{rule}` back into the registry.
 //!
 //! Producers migrated onto the registry: `serve::ServeMetrics`
 //! (`publish`), the coordinator's `metrics::RunMetrics` and
@@ -31,14 +39,21 @@
 //! instrumentation enabled.
 
 pub mod expose;
+pub mod health;
 pub mod registry;
+pub mod series;
 pub mod trace;
 
 pub use expose::{expose_json, expose_text, sanitize_name};
+pub use health::{
+    standard_engine, standard_rules, Direction, HealthEngine, HealthRule, RuleState, Signal,
+    Transition,
+};
 pub use registry::{Counter, FamilySnapshot, Gauge, Histogram, LabelSet, MetricKind, Registry};
+pub use series::{SamplePoint, SampleValue, SeriesStore};
 pub use trace::{FlightRecorder, KernelRoute, Recorded, Stage, TraceEvent};
 
-use std::sync::OnceLock;
+use std::sync::{Mutex, OnceLock};
 
 /// The process-wide default registry — what the REPL and the examples
 /// scrape.  Producers default here; tests that need isolation construct
@@ -55,6 +70,22 @@ pub fn recorder() -> &'static FlightRecorder {
     RECORDER.get_or_init(FlightRecorder::default)
 }
 
+/// The process-wide time-series store the serve scheduler samples into
+/// each round and the health engine reads (see `series`).
+pub fn series() -> &'static SeriesStore {
+    static SERIES: OnceLock<SeriesStore> = OnceLock::new();
+    SERIES.get_or_init(SeriesStore::default)
+}
+
+/// The process-wide health engine, preloaded with the standard ADRA
+/// rule set (`health::standard_rules`).  Behind a mutex: evaluation
+/// mutates hysteresis streaks and is called from the serve scheduler
+/// thread and the REPL.
+pub fn health() -> &'static Mutex<HealthEngine> {
+    static HEALTH: OnceLock<Mutex<HealthEngine>> = OnceLock::new();
+    HEALTH.get_or_init(|| Mutex::new(standard_engine()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -67,5 +98,9 @@ mod tests {
         let c = recorder() as *const FlightRecorder;
         let d = recorder() as *const FlightRecorder;
         assert_eq!(c, d);
+        let e = series() as *const SeriesStore;
+        let f = series() as *const SeriesStore;
+        assert_eq!(e, f);
+        assert!(health().lock().unwrap().rule_count() >= 7, "standard rules preloaded");
     }
 }

@@ -102,6 +102,16 @@ impl Gauge {
         f64_update(&self.bits, |cur| cur + v);
     }
 
+    /// Ratchet to `v` if `v` is larger — the gauge analogue of
+    /// [`Counter::set_at_least`], for publishing running maxima (e.g.
+    /// `max_round_occupancy`) from concurrent snapshots: the result is
+    /// the max over every publisher regardless of interleaving.  NaN is
+    /// ignored (`f64::max` discards it), so a poisoned sample can never
+    /// wedge the ratchet.
+    pub fn set_at_least(&self, v: f64) {
+        f64_update(&self.bits, |cur| cur.max(v));
+    }
+
     pub fn get(&self) -> f64 {
         f64::from_bits(self.bits.load(Ordering::Relaxed))
     }
@@ -348,6 +358,17 @@ mod tests {
         assert!((h.sum() - 1003.0).abs() < 1e-9);
         assert_eq!(h.max(), 1000.0);
         assert_eq!(r.family_count(), 3);
+    }
+
+    #[test]
+    fn gauge_ratchets_and_ignores_nan() {
+        let g = Gauge::default();
+        g.set_at_least(2.5);
+        g.set_at_least(1.0); // can't move backwards
+        assert_eq!(g.get(), 2.5);
+        g.set_at_least(f64::NAN); // ignored, never wedges the cell
+        g.set_at_least(3.0);
+        assert_eq!(g.get(), 3.0);
     }
 
     #[test]

@@ -1,0 +1,451 @@
+//! Fixed-capacity time-series store over [`Registry`] snapshots, plus
+//! the pure windowed derivations the health engine consumes.
+//!
+//! A [`SeriesStore`] keeps the last `capacity` sample points per metric
+//! series (a ring per `(name, labels)` key).  `sample()` walks a
+//! registry snapshot and appends one point per series; the serve
+//! scheduler calls it once per round (`ServeConfig::sample_every`) and
+//! the REPL / examples call it at whatever cadence they like.  Points
+//! carry the raw cumulative values — counters, gauge readings, full
+//! histogram state — so every derivation is a *pure function over a
+//! window of points*, recomputable after the fact and trivially
+//! unit-testable via [`SeriesStore::ingest`].
+//!
+//! Windows are specified in POINTS (trailing sample count), not wall
+//! time: the serve loop samples per round, so "the last 8 rounds" is the
+//! natural unit, and tests stay deterministic with synthetic timestamps.
+//! Rates and slopes still divide by the wall-time delta between the
+//! window's endpoints (`t_us`), so their units are per-second.
+//!
+//! Why cumulative points instead of pre-derived rates: the adaptive cost
+//! model (ROADMAP item 1) and the health rules want *different* windows
+//! over the *same* history; storing raw points lets each consumer pick
+//! its own.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::metrics::LatencyHistogram;
+
+use super::registry::{LabelSet, Registry, Series};
+
+/// One sampled value: the cumulative state of a series at an instant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(f64),
+    /// Full cumulative histogram state; derivations subtract two points
+    /// to get the distribution of *just the window*.
+    Histogram { count: u64, sum: f64, buckets: Vec<u64> },
+}
+
+/// A timestamped sample.  `t_us` is microseconds since the store's
+/// epoch (monotonic, process-relative).
+#[derive(Clone, Debug)]
+pub struct SamplePoint {
+    pub t_us: u64,
+    pub value: SampleValue,
+}
+
+/// Default ring depth per series: at one sample per serve round this is
+/// ~512 rounds of history, far beyond the widest standard rule window.
+pub const DEFAULT_CAPACITY: usize = 512;
+
+/// The store: a bounded ring of [`SamplePoint`]s per `(name, labels)`.
+pub struct SeriesStore {
+    epoch: Instant,
+    capacity: usize,
+    inner: Mutex<BTreeMap<(String, LabelSet), VecDeque<SamplePoint>>>,
+}
+
+impl Default for SeriesStore {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+impl SeriesStore {
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            epoch: Instant::now(),
+            capacity: capacity.max(2),
+            inner: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Ring depth per series.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of distinct series currently tracked.
+    pub fn series_count(&self) -> usize {
+        self.inner.lock().expect("series lock").len()
+    }
+
+    /// Total points held across all series.
+    pub fn point_count(&self) -> usize {
+        self.inner.lock().expect("series lock").values().map(|r| r.len()).sum()
+    }
+
+    fn push(&self, key: (String, LabelSet), point: SamplePoint) {
+        let mut inner = self.inner.lock().expect("series lock");
+        let ring = inner.entry(key).or_default();
+        while ring.len() >= self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(point);
+    }
+
+    /// Sample every series in `registry` at "now".  One point per
+    /// series; cheap relative to a scrape (no string rendering).
+    pub fn sample(&self, registry: &Registry) {
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        for fam in registry.snapshot() {
+            for (labels, series) in &fam.series {
+                let value = match series {
+                    Series::Counter(c) => SampleValue::Counter(c.get()),
+                    Series::Gauge(g) => SampleValue::Gauge(g.get()),
+                    Series::Histogram(h) => SampleValue::Histogram {
+                        count: h.count(),
+                        sum: h.sum(),
+                        buckets: h.bucket_counts(),
+                    },
+                };
+                self.push((fam.name.clone(), labels.clone()), SamplePoint { t_us, value });
+            }
+        }
+    }
+
+    /// Inject a synthetic point (tests and offline replay): same ring
+    /// semantics as `sample`, caller controls the clock.
+    pub fn ingest(&self, name: &str, labels: &[(&str, &str)], t_us: u64, value: SampleValue) {
+        let mut key: LabelSet =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        key.sort();
+        self.push((name.to_string(), key), SamplePoint { t_us, value });
+    }
+
+    /// All series under `name` whose label set is a SUPERSET of
+    /// `labels` (so `&[]` matches every series of the family, and
+    /// `&[("op_class", "dual")]` matches regardless of other labels).
+    /// Points are oldest-first.
+    pub fn matching(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> Vec<(LabelSet, Vec<SamplePoint>)> {
+        let inner = self.inner.lock().expect("series lock");
+        inner
+            .iter()
+            .filter(|((n, ls), _)| {
+                n == name
+                    && labels
+                        .iter()
+                        .all(|(k, v)| ls.iter().any(|(lk, lv)| lk == k && lv == v))
+            })
+            .map(|((_, ls), ring)| (ls.clone(), ring.iter().cloned().collect()))
+            .collect()
+    }
+
+    /// Drop all history (REPL / test hygiene).
+    pub fn clear(&self) {
+        self.inner.lock().expect("series lock").clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Windowed derivations: pure functions over oldest-first point slices.
+// `window` is a trailing POINT count; a window of `n` uses the last
+// `n + 1` points (n deltas).  All return `None` when the slice cannot
+// support the computation — under-populated ring, zero wall-time delta,
+// wrong sample kind — so rules skip rather than misfire during warmup.
+// ---------------------------------------------------------------------------
+
+/// The trailing `n + 1` points (n intervals), or fewer if the ring is
+/// still filling.
+fn tail(points: &[SamplePoint], window: usize) -> &[SamplePoint] {
+    let take = (window + 1).min(points.len());
+    &points[points.len() - take..]
+}
+
+fn as_counter(p: &SamplePoint) -> Option<u64> {
+    match p.value {
+        SampleValue::Counter(v) => Some(v),
+        _ => None,
+    }
+}
+
+fn as_gauge(p: &SamplePoint) -> Option<f64> {
+    match p.value {
+        SampleValue::Gauge(v) => Some(v),
+        _ => None,
+    }
+}
+
+fn dt_seconds(first: &SamplePoint, last: &SamplePoint) -> Option<f64> {
+    let dt = last.t_us.saturating_sub(first.t_us) as f64 * 1e-6;
+    if dt > 0.0 { Some(dt) } else { None }
+}
+
+/// Increase of a cumulative counter over the window (saturating: a
+/// counter reset to a smaller value reads as zero delta, not underflow).
+pub fn counter_delta(points: &[SamplePoint], window: usize) -> Option<u64> {
+    let w = tail(points, window);
+    if w.len() < 2 {
+        return None;
+    }
+    Some(as_counter(w.last()?)?.saturating_sub(as_counter(w.first()?)?))
+}
+
+/// Counter rate over the window, per second.
+pub fn counter_rate(points: &[SamplePoint], window: usize) -> Option<f64> {
+    let w = tail(points, window);
+    if w.len() < 2 {
+        return None;
+    }
+    let delta = as_counter(w.last()?)?.saturating_sub(as_counter(w.first()?)?);
+    Some(delta as f64 / dt_seconds(w.first()?, w.last()?)?)
+}
+
+/// Exponentially-weighted moving average of a gauge over the window
+/// (seeded at the window's first value; `alpha` is the new-sample
+/// weight).  `abs` smooths `|v|` — signed errors must not cancel.
+pub fn gauge_ewma(points: &[SamplePoint], window: usize, alpha: f64, abs: bool) -> Option<f64> {
+    let w = tail(points, window);
+    let mut vals = w.iter().filter_map(as_gauge).map(|v| if abs { v.abs() } else { v });
+    let mut ewma = vals.next()?;
+    for v in vals {
+        ewma += alpha * (v - ewma);
+    }
+    Some(ewma)
+}
+
+/// Min and max of a gauge over the window.
+pub fn gauge_min_max(points: &[SamplePoint], window: usize) -> Option<(f64, f64)> {
+    let w = tail(points, window);
+    let mut it = w.iter().filter_map(as_gauge);
+    let first = it.next()?;
+    let (mut lo, mut hi) = (first, first);
+    for v in it {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    Some((lo, hi))
+}
+
+/// Drift detector: per-second slope of the EWMA-smoothed gauge across
+/// the window — `(smoothed_end - start) / dt`.  Smoothing first means a
+/// single noisy sample cannot fake a drift; a sustained trend survives
+/// it.
+pub fn ewma_slope(points: &[SamplePoint], window: usize, alpha: f64, abs: bool) -> Option<f64> {
+    let w = tail(points, window);
+    if w.len() < 2 {
+        return None;
+    }
+    let mut vals = w.iter().filter_map(as_gauge).map(|v| if abs { v.abs() } else { v });
+    let start = vals.next()?;
+    let mut ewma = start;
+    for v in vals {
+        ewma += alpha * (v - ewma);
+    }
+    Some((ewma - start) / dt_seconds(w.first()?, w.last()?)?)
+}
+
+/// Bucket-wise increase of a cumulative histogram over the window:
+/// `(delta_count, delta_buckets)`.
+fn histogram_delta(points: &[SamplePoint], window: usize) -> Option<(u64, Vec<u64>)> {
+    let w = tail(points, window);
+    if w.len() < 2 {
+        return None;
+    }
+    let (first, last) = (w.first()?, w.last()?);
+    match (&first.value, &last.value) {
+        (
+            SampleValue::Histogram { count: c0, buckets: b0, .. },
+            SampleValue::Histogram { count: c1, buckets: b1, .. },
+        ) => {
+            let buckets: Vec<u64> = b1
+                .iter()
+                .zip(b0.iter())
+                .map(|(n, o)| n.saturating_sub(*o))
+                .collect();
+            Some((c1.saturating_sub(*c0), buckets))
+        }
+        _ => None,
+    }
+}
+
+/// p95 of the samples recorded DURING the window, from histogram bucket
+/// deltas.  Resolution is the log-bucket grid: returns the upper bound
+/// of the bucket holding the 95th percentile (the open-ended last bucket
+/// reports its lower bound).  `None` if no samples landed in the window.
+pub fn delta_p95_ns(points: &[SamplePoint], window: usize) -> Option<f64> {
+    let (count, buckets) = histogram_delta(points, window)?;
+    if count == 0 {
+        return None;
+    }
+    let target = (count as f64 * 0.95).ceil() as u64;
+    let mut cum = 0u64;
+    for (i, b) in buckets.iter().enumerate() {
+        cum = cum.saturating_add(*b);
+        if cum >= target {
+            let (lo, hi) = LatencyHistogram::bucket_bounds(i);
+            return Some(if hi.is_finite() { hi } else { lo });
+        }
+    }
+    None
+}
+
+/// Fraction of window samples that violated `threshold_ns`, from bucket
+/// deltas.  Conservative: a bucket that STRADDLES the threshold counts
+/// fully as violating (its upper bound exceeds the threshold), so this
+/// over-reports rather than under-reports SLO burn.
+pub fn violation_fraction(points: &[SamplePoint], window: usize, threshold_ns: f64) -> Option<f64> {
+    let (count, buckets) = histogram_delta(points, window)?;
+    if count == 0 {
+        return None;
+    }
+    let mut violating = 0u64;
+    for (i, b) in buckets.iter().enumerate() {
+        let (lo, hi) = LatencyHistogram::bucket_bounds(i);
+        if hi > threshold_ns || (hi.is_infinite() && lo >= threshold_ns) {
+            violating = violating.saturating_add(*b);
+        }
+    }
+    Some(violating as f64 / count as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counter_points(vals: &[(u64, u64)]) -> Vec<SamplePoint> {
+        vals.iter()
+            .map(|&(t_us, v)| SamplePoint { t_us, value: SampleValue::Counter(v) })
+            .collect()
+    }
+
+    fn gauge_points(vals: &[(u64, f64)]) -> Vec<SamplePoint> {
+        vals.iter()
+            .map(|&(t_us, v)| SamplePoint { t_us, value: SampleValue::Gauge(v) })
+            .collect()
+    }
+
+    #[test]
+    fn store_rings_per_series_and_matches_label_supersets() {
+        let s = SeriesStore::with_capacity(3);
+        for i in 0..5u64 {
+            s.ingest("adra.x", &[("queue", "0")], i * 1000, SampleValue::Counter(i));
+        }
+        s.ingest("adra.x", &[("queue", "1")], 0, SampleValue::Counter(9));
+        s.ingest("adra.y", &[], 0, SampleValue::Gauge(1.0));
+        assert_eq!(s.series_count(), 3);
+
+        let m = s.matching("adra.x", &[("queue", "0")]);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].1.len(), 3, "ring keeps the newest `capacity` points");
+        assert_eq!(m[0].1[0].value, SampleValue::Counter(2), "oldest kept point");
+
+        assert_eq!(s.matching("adra.x", &[]).len(), 2, "empty filter matches the family");
+        assert!(s.matching("adra.x", &[("queue", "7")]).is_empty());
+        assert!(s.matching("adra.z", &[]).is_empty());
+        s.clear();
+        assert_eq!(s.point_count(), 0);
+    }
+
+    #[test]
+    fn sample_walks_a_registry() {
+        let r = Registry::new();
+        r.counter("adra.c", "c", &[("queue", "0")]).add(5);
+        r.gauge("adra.g", "g", &[]).set(0.5);
+        r.histogram("adra.h", "h", &[]).record(100.0);
+        let s = SeriesStore::with_capacity(8);
+        s.sample(&r);
+        r.counter("adra.c", "c", &[("queue", "0")]).add(2);
+        s.sample(&r);
+        assert_eq!(s.series_count(), 3);
+        let pts = &s.matching("adra.c", &[])[0].1;
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].value, SampleValue::Counter(7));
+        match &s.matching("adra.h", &[])[0].1[0].value {
+            SampleValue::Histogram { count, buckets, .. } => {
+                assert_eq!(*count, 1);
+                assert_eq!(buckets.iter().sum::<u64>(), 1);
+            }
+            other => panic!("expected histogram point, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn counter_rate_and_delta() {
+        // 100 increments over 2 seconds (window endpoints), sampled every 500ms
+        let pts = counter_points(&[(0, 0), (500_000, 10), (1_000_000, 50), (2_000_000, 100)]);
+        assert_eq!(counter_delta(&pts, 3), Some(100));
+        assert_eq!(counter_delta(&pts, 1), Some(50));
+        let r = counter_rate(&pts, 3).unwrap();
+        assert!((r - 50.0).abs() < 1e-9, "{r}");
+        // under-populated / degenerate inputs
+        assert_eq!(counter_rate(&pts[..1], 4), None);
+        assert_eq!(counter_rate(&counter_points(&[(5, 1), (5, 9)]), 1), None, "zero dt");
+        // reset (value went down) clamps to zero, never underflows
+        assert_eq!(counter_delta(&counter_points(&[(0, 100), (1_000, 3)]), 1), Some(0));
+    }
+
+    #[test]
+    fn gauge_ewma_minmax_and_slope() {
+        let flat = gauge_points(&[(0, 0.8), (1_000_000, 0.8), (2_000_000, 0.8)]);
+        assert!((gauge_ewma(&flat, 2, 0.5, false).unwrap() - 0.8).abs() < 1e-12);
+        assert_eq!(ewma_slope(&flat, 2, 0.5, false), Some(0.0));
+
+        let rising = gauge_points(&[(0, 0.0), (1_000_000, 1.0), (2_000_000, 2.0)]);
+        // ewma: 0 -> 0.5 -> 1.25; slope = 1.25 / 2s
+        let e = gauge_ewma(&rising, 2, 0.5, false).unwrap();
+        assert!((e - 1.25).abs() < 1e-12, "{e}");
+        let s = ewma_slope(&rising, 2, 0.5, false).unwrap();
+        assert!((s - 0.625).abs() < 1e-12, "{s}");
+        assert_eq!(gauge_min_max(&rising, 2), Some((0.0, 2.0)));
+
+        // abs mode: signed errors must not cancel
+        let signed = gauge_points(&[(0, -1.0), (1_000_000, 1.0)]);
+        assert!((gauge_ewma(&signed, 1, 0.5, true).unwrap() - 1.0).abs() < 1e-12);
+        assert_eq!(gauge_ewma(&signed, 1, 1.0, false), Some(1.0));
+
+        // window restricts history: a long-flat series with a recent step
+        let step = gauge_points(&[(0, 0.0), (1, 0.0), (2, 0.0), (1_000_000, 5.0), (2_000_000, 5.0)]);
+        assert!((gauge_ewma(&step, 1, 1.0, false).unwrap() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_delta_percentile_and_violations() {
+        let mk = |t_us: u64, counts: &[(usize, u64)]| {
+            let mut buckets = vec![0u64; LatencyHistogram::NUM_BUCKETS];
+            let mut total = 0;
+            for &(i, n) in counts {
+                buckets[i] += n;
+                total += n;
+            }
+            SamplePoint {
+                t_us,
+                value: SampleValue::Histogram { count: total, sum: 0.0, buckets },
+            }
+        };
+        // window adds 95 samples in bucket 4 ([16,32)) and 5 in bucket 10
+        // ([1024,2048)) => p95 falls exactly at the bucket-4 boundary
+        let pts = vec![mk(0, &[(2, 7)]), mk(1_000_000, &[(2, 7), (4, 95), (10, 5)])];
+        assert_eq!(delta_p95_ns(&pts, 1), Some(32.0));
+        // threshold 512ns: only the 5 bucket-10 samples violate
+        let vf = violation_fraction(&pts, 1, 512.0).unwrap();
+        assert!((vf - 0.05).abs() < 1e-12, "{vf}");
+        // straddling bucket counts as violating (conservative)
+        let vf = violation_fraction(&pts, 1, 20.0).unwrap();
+        assert!((vf - 1.0).abs() < 1e-12, "threshold inside bucket 4 counts the bucket: {vf}");
+        // empty window
+        let flat = vec![mk(0, &[(2, 7)]), mk(1_000_000, &[(2, 7)])];
+        assert_eq!(delta_p95_ns(&flat, 1), None);
+        assert_eq!(violation_fraction(&flat, 1, 1.0), None);
+        // kind mismatch
+        assert_eq!(delta_p95_ns(&counter_points(&[(0, 0), (1, 5)]), 1), None);
+    }
+}

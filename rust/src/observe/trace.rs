@@ -21,9 +21,11 @@
 //! of history, never a partial head.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+use super::expose::{json_escape, json_f64};
 
 /// Serve-pipeline stage of a span event.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,6 +109,19 @@ pub enum TraceEvent {
     },
     /// Sampled digital-vs-analog cross-validation check.
     Xval { mismatch: bool },
+    /// A health-rule state transition (`observe::health`).  Alerts are
+    /// recorded unconditionally — they are rare by construction
+    /// (hysteresis bounds flapping) and are exactly what a postmortem
+    /// export exists to capture.
+    Alert {
+        /// The rule's name (free-form: escaped on export).
+        rule: String,
+        /// States as `RuleState::name()` (`ok` / `warn` / `critical`).
+        from: &'static str,
+        to: &'static str,
+        /// The signal value that drove the transition.
+        value: f64,
+    },
 }
 
 /// A sequenced, timestamped ring entry.
@@ -123,7 +138,9 @@ pub struct FlightRecorder {
     kernel_on: AtomicBool,
     seq: AtomicU64,
     dropped: AtomicU64,
-    capacity: usize,
+    /// Runtime-adjustable (`set_capacity`): postmortem depth is a knob,
+    /// not a rebuild.
+    capacity: AtomicUsize,
     epoch: Instant,
     ring: Mutex<VecDeque<Recorded>>,
 }
@@ -139,9 +156,27 @@ impl FlightRecorder {
             kernel_on: AtomicBool::new(false),
             seq: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
-            capacity: capacity.max(1),
+            capacity: AtomicUsize::new(capacity.max(1)),
             epoch: Instant::now(),
             ring: Mutex::new(VecDeque::with_capacity(capacity.max(1).min(4096))),
+        }
+    }
+
+    /// Current ring capacity (events).
+    pub fn capacity(&self) -> usize {
+        self.capacity.load(Ordering::Relaxed)
+    }
+
+    /// Resize the ring (REPL `trace cap <n>`).  Shrinking drops the
+    /// oldest events immediately (counted in `dropped()`); growing takes
+    /// effect on the next push.
+    pub fn set_capacity(&self, capacity: usize) {
+        let capacity = capacity.max(1);
+        self.capacity.store(capacity, Ordering::Relaxed);
+        let mut ring = self.ring.lock().expect("recorder lock");
+        while ring.len() > capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -164,8 +199,9 @@ impl FlightRecorder {
     fn push(&self, event: TraceEvent) {
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
         let t_us = self.epoch.elapsed().as_micros() as u64;
+        let capacity = self.capacity.load(Ordering::Relaxed);
         let mut ring = self.ring.lock().expect("recorder lock");
-        if ring.len() >= self.capacity {
+        while ring.len() >= capacity {
             ring.pop_front();
             self.dropped.fetch_add(1, Ordering::Relaxed);
         }
@@ -215,6 +251,18 @@ impl FlightRecorder {
             return;
         }
         self.push(TraceEvent::Xval { mismatch });
+    }
+
+    /// Record a health-rule state transition.  Unconditional: alerts are
+    /// rare (hysteresis bounds flapping) and are the one event class a
+    /// postmortem must never miss.
+    pub fn record_alert(&self, rule: &str, from: &'static str, to: &'static str, value: f64) {
+        self.push(TraceEvent::Alert {
+            rule: rule.to_string(),
+            from,
+            to,
+            value,
+        });
     }
 
     /// Events currently held (<= capacity).
@@ -267,6 +315,12 @@ impl FlightRecorder {
                 TraceEvent::Xval { mismatch } => {
                     format!("\"kind\":\"xval\",\"mismatch\":{mismatch}")
                 }
+                TraceEvent::Alert { rule, from, to, value } => format!(
+                    "\"kind\":\"alert\",\"rule\":\"{}\",\"from\":\"{from}\",\
+                     \"to\":\"{to}\",\"value\":{}",
+                    json_escape(rule),
+                    json_f64(*value)
+                ),
             };
             out.push_str(&format!("{{\"seq\":{},\"t_us\":{},{body}}}\n", r.seq, r.t_us));
         }
@@ -313,6 +367,49 @@ mod tests {
         r.set_span_events(false);
         r.record_span(1, Some(4), Stage::Admit, 5, 1);
         assert_eq!(r.len(), 2, "span events gated independently");
+    }
+
+    #[test]
+    fn capacity_knob_shrinks_and_grows() {
+        let r = FlightRecorder::with_capacity(8);
+        for i in 0..8u64 {
+            r.record_span(i, None, Stage::Execute, 1, 1);
+        }
+        assert_eq!(r.capacity(), 8);
+        r.set_capacity(3);
+        assert_eq!(r.capacity(), 3);
+        assert_eq!(r.len(), 3, "shrink trims oldest immediately");
+        assert_eq!(r.dropped(), 5);
+        let snap = r.snapshot();
+        assert_eq!(snap[0].seq, 5, "newest survive a shrink");
+        r.set_capacity(16);
+        for i in 8..20u64 {
+            r.record_span(i, None, Stage::Execute, 1, 1);
+        }
+        assert_eq!(r.len(), 15, "grow takes effect on the next push");
+        r.set_capacity(0);
+        assert_eq!(r.capacity(), 1, "capacity floors at 1");
+    }
+
+    #[test]
+    fn alerts_record_unconditionally_and_escape_in_jsonl() {
+        let r = FlightRecorder::with_capacity(8);
+        r.set_span_events(false);
+        r.set_kernel_events(false);
+        r.record_alert("slo\"burn\nfast", "ok", "warn", 1.5);
+        r.record_alert("quota", "warn", "critical", f64::INFINITY);
+        assert_eq!(r.len(), 2, "alerts ignore the span/kernel gates");
+        let jsonl = r.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(
+            lines[0].contains("\"rule\":\"slo\\\"burn\\nfast\""),
+            "quotes/newlines in rule names must round-trip: {}",
+            lines[0]
+        );
+        assert!(lines[0].contains("\"from\":\"ok\"") && lines[0].contains("\"to\":\"warn\""));
+        assert!(lines[0].contains("\"value\":1.5"));
+        assert!(lines[1].contains("\"value\":\"inf\""), "{}", lines[1]);
     }
 
     #[test]

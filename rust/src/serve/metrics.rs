@@ -170,12 +170,20 @@ impl ServeMetrics {
         ] {
             reg.counter(name, help, &l).set_at_least(value);
         }
+        // max occupancy is a running maximum: ratchet so concurrent
+        // publishers can never move it backwards
+        reg.gauge(
+            "adra.serve.max_round_occupancy",
+            "Largest observed round occupancy.",
+            &l,
+        )
+        .set_at_least(self.max_round_occupancy as f64);
         for (name, help, value) in [
-            ("adra.serve.max_round_occupancy", "Largest observed round occupancy.", self.max_round_occupancy as f64),
             ("adra.serve.current_max_round", "The controller's current round-size ceiling.", self.current_max_round as f64),
             ("adra.serve.batch_occupancy", "Mean programs per round.", self.batch_occupancy()),
             ("adra.serve.cache_hit_rate", "Fraction of query steps answered from the cache.", self.cache_hit_rate()),
             ("adra.serve.fused_share", "Fraction of shipped dual ops served as followers.", self.fused_share()),
+            ("adra.serve.deferral_ratio", "Deferred programs per admitted program (quota starvation signal).", self.deferral_ratio()),
         ] {
             reg.gauge(name, help, &l).set(value);
         }
@@ -215,6 +223,17 @@ impl ServeMetrics {
             0.0
         } else {
             self.fused_followers as f64 / self.dual_ops as f64
+        }
+    }
+
+    /// Deferred programs per admitted program — the quota-starvation
+    /// signal the health engine watches (> 1 means the backlog defers
+    /// more work each round than it serves).
+    pub fn deferral_ratio(&self) -> f64 {
+        if self.programs == 0 {
+            0.0
+        } else {
+            self.deferred_programs as f64 / self.programs as f64
         }
     }
 
@@ -323,9 +342,11 @@ mod tests {
         m.cache_misses = 1;
         m.dual_ops = 10;
         m.fused_followers = 5;
+        m.deferred_programs = 18;
         assert!((m.batch_occupancy() - 3.0).abs() < 1e-12);
         assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
         assert!((m.fused_share() - 0.5).abs() < 1e-12);
+        assert!((m.deferral_ratio() - 1.5).abs() < 1e-12);
     }
 
     #[test]
@@ -409,6 +430,12 @@ mod tests {
         assert!(text.contains("adra_serve_controller_grows{queue=\"0\"} 5"), "{text}");
         assert!(text.contains("adra_serve_current_max_round{queue=\"0\"} 16"), "{text}");
         assert!(text.contains("adra_serve_cache_hit_rate{queue=\"0\"} 0.75"), "{text}");
+        assert!(text.contains("adra_serve_deferral_ratio{queue=\"0\"} 2"), "{text}");
+        // the occupancy ratchet survives a stale publisher
+        let stale = ServeMetrics::default();
+        stale.publish(&reg, "0");
+        let text = crate::observe::expose_text(&reg);
+        assert!(text.contains("adra_serve_max_round_occupancy{queue=\"0\"} 2"), "{text}");
         assert!(
             text.contains("adra_serve_tenant_wall_ns_count{queue=\"0\",tenant=\"3\"} 1"),
             "{text}"

@@ -56,6 +56,11 @@ pub struct ServeConfig {
     pub admission: AdmissionPolicy,
     /// How `max_round` is governed.
     pub batch: BatchPolicy,
+    /// Sample the registry into the global `observe::series()` store
+    /// (and evaluate the health rules) every N rounds; `0` disables
+    /// per-round sampling.  Observation only — results and modeled
+    /// costs are bit-identical at any setting.
+    pub sample_every: u64,
 }
 
 impl ServeConfig {
@@ -69,6 +74,7 @@ impl ServeConfig {
             cache_capacity: 1024,
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
+            sample_every: 1,
         }
     }
 }
@@ -225,6 +231,7 @@ fn scheduler(
         cache_capacity,
         admission,
         batch,
+        sample_every,
     } = config;
     let coord = planned_coordinator(&cfg, shards, objective);
     let model = PlanCostModel::new(&cfg, objective);
@@ -254,6 +261,14 @@ fn scheduler(
     let round_wall = reg.histogram(
         "adra.serve.round_wall_ns",
         "Observed wall time per coalescing round (ns).",
+        &[("queue", &qlabel)],
+    );
+    // self-metering: what the observer itself costs per round (publish
+    // + series sample + health evaluation), gated in CI by the
+    // observe-overhead ratio in BENCH_hotpath.json
+    let observe_overhead = reg.histogram(
+        "adra.observe.overhead_ns",
+        "Per-round cost of registry publish + series sampling + health evaluation (ns).",
         &[("queue", &qlabel)],
     );
 
@@ -476,6 +491,7 @@ fn scheduler(
         // negative hits instead accumulate per round from RoundStats —
         // lookups only happen during coalescing; then mirror everything
         // into the registry so a scrape taken between rounds is current
+        let observe_start = Instant::now();
         {
             let mut m = metrics.lock().expect("metrics lock");
             m.cache_evictions = cache.evictions;
@@ -483,6 +499,18 @@ fn scheduler(
             m.publish(reg, &qlabel);
         }
         coord_metrics.publish(reg, &[("queue", &qlabel)]);
+        // time-series sampling + health evaluation at the configured
+        // cadence: the published state above becomes one point per
+        // series, and rule transitions alert into the recorder
+        if sample_every > 0 && round_no % sample_every == 0 {
+            let store = observe::series();
+            store.sample(reg);
+            observe::health()
+                .lock()
+                .expect("health lock")
+                .evaluate(store, reg, rec);
+        }
+        observe_overhead.record(observe_start.elapsed().as_nanos() as f64);
     }
 }
 
@@ -588,6 +616,7 @@ mod tests {
             cache_capacity: 64,
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
+            sample_every: 1,
         });
         let rep = q.submit(0, s.program.clone()).unwrap().wait().unwrap();
         assert_eq!(rep.outputs, naive.outputs);

@@ -1,0 +1,268 @@
+//! Health-pipeline property suite: the concurrency contracts the
+//! telemetry layer leans on (ratcheting publishers, saturating merges)
+//! plus deterministic rule trajectories over synthetic series.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use adra::metrics::LatencyHistogram;
+use adra::observe::{
+    Direction, FlightRecorder, HealthEngine, HealthRule, Registry, RuleState, SampleValue,
+    SeriesStore, Signal,
+};
+use adra::util::rng::Rng;
+
+const THREADS: usize = 8;
+const ITERS: usize = 2000;
+
+/// `set_at_least` under contention is a lock-free max: the final value
+/// equals the maximum ever published, and a concurrent reader only ever
+/// observes a non-decreasing sequence.
+#[test]
+fn gauge_ratchet_is_monotone_under_contention() {
+    let reg = Registry::new();
+    let gauge = reg.gauge("test.ratchet", "ratchet under contention", &[]);
+    let done = Arc::new(AtomicBool::new(false));
+
+    let reader = {
+        let gauge = gauge.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut last = f64::NEG_INFINITY;
+            while !done.load(Ordering::Acquire) {
+                let v = gauge.get();
+                assert!(v >= last, "ratchet went backwards: {last} -> {v}");
+                last = v;
+            }
+        })
+    };
+
+    let mut expected_max = 0.0f64;
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let mut rng = Rng::new(42 + t as u64);
+            let mut local_max = 0.0f64;
+            let gauge = &gauge;
+            for _ in 0..ITERS {
+                local_max = local_max.max(rng.below(1 << 20) as f64);
+            }
+            expected_max = expected_max.max(local_max);
+            s.spawn(move || {
+                let mut rng = Rng::new(42 + t as u64);
+                for _ in 0..ITERS {
+                    gauge.set_at_least(rng.below(1 << 20) as f64);
+                }
+            });
+        }
+    });
+    done.store(true, Ordering::Release);
+    reader.join().expect("reader");
+    assert_eq!(gauge.get(), expected_max, "final value is the global max");
+}
+
+#[test]
+fn counter_ratchet_is_monotone_under_contention() {
+    let reg = Registry::new();
+    let counter = reg.counter("test.ratchet", "ratchet under contention", &[]);
+    let mut expected_max = 0u64;
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let mut rng = Rng::new(7 + t as u64);
+            for _ in 0..ITERS {
+                expected_max = expected_max.max(rng.below(1 << 30));
+            }
+            let counter = &counter;
+            s.spawn(move || {
+                let mut rng = Rng::new(7 + t as u64);
+                for _ in 0..ITERS {
+                    counter.set_at_least(rng.below(1 << 30));
+                }
+            });
+        }
+    });
+    assert_eq!(counter.get(), expected_max);
+    // a stale republish afterwards must not move it
+    counter.set_at_least(expected_max / 2);
+    assert_eq!(counter.get(), expected_max);
+}
+
+/// Merging two separately-recorded histograms is exactly equivalent to
+/// recording both streams into one.
+#[test]
+fn histogram_merge_matches_single_stream() {
+    let mut rng = Rng::new(99);
+    let samples: Vec<f64> = (0..500).map(|_| rng.below(1 << 24) as f64 * 1e-9).collect();
+    let mut one = LatencyHistogram::default();
+    let (mut a, mut b) = (LatencyHistogram::default(), LatencyHistogram::default());
+    for (i, &s) in samples.iter().enumerate() {
+        one.record(s);
+        if i % 2 == 0 { a.record(s) } else { b.record(s) }
+    }
+    a.merge(&b);
+    assert_eq!(a.count(), one.count());
+    assert_eq!(a.buckets(), one.buckets());
+    assert_eq!(a.max_ns(), one.max_ns());
+    assert!((a.sum_ns() - one.sum_ns()).abs() < 1e-6 * one.sum_ns().max(1.0));
+    for p in [50.0, 95.0, 99.0] {
+        assert_eq!(a.percentile_ns(p), one.percentile_ns(p));
+    }
+}
+
+/// Repeated self-merge doubles the counts; past 64 doublings every
+/// count pins at `u64::MAX` instead of wrapping, and the histogram
+/// stays queryable.
+#[test]
+fn histogram_merge_saturates_at_u64_max() {
+    let mut h = LatencyHistogram::default();
+    h.record(100e-9);
+    for _ in 0..70 {
+        let snapshot = h.clone();
+        h.merge(&snapshot);
+    }
+    assert_eq!(h.count(), u64::MAX, "count saturates");
+    assert_eq!(h.buckets().iter().copied().max(), Some(u64::MAX), "bucket saturates");
+    assert!(h.percentile_ns(95.0).is_finite());
+    assert!(h.mean_ns() >= 0.0);
+}
+
+/// Ingest one synthetic scrape of a round-wall histogram: `clean` new
+/// samples in bucket 3 ([8, 16) ns) and `slow` in bucket 10
+/// ([1024, 2048) ns), as cumulative totals.
+struct HistFeed {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    t_us: u64,
+}
+
+impl HistFeed {
+    fn new() -> Self {
+        Self { buckets: vec![0; LatencyHistogram::NUM_BUCKETS], count: 0, sum: 0.0, t_us: 0 }
+    }
+
+    fn push(&mut self, store: &SeriesStore, clean: u64, slow: u64) {
+        self.buckets[3] += clean;
+        self.buckets[10] += slow;
+        self.count += clean + slow;
+        self.sum += clean as f64 * 12.0 + slow as f64 * 1500.0;
+        self.t_us += 1_000_000;
+        store.ingest(
+            "adra.serve.round_wall_ns",
+            &[("queue", "0")],
+            self.t_us,
+            SampleValue::Histogram {
+                count: self.count,
+                sum: self.sum,
+                buckets: self.buckets.clone(),
+            },
+        );
+    }
+}
+
+fn burn_signal() -> Signal {
+    Signal::SloBurn {
+        name: "adra.serve.round_wall_ns".to_string(),
+        labels: Vec::new(),
+        slo_ns: 512.0,
+        budget: 0.25,
+        fast: 2,
+        slow: 8,
+    }
+}
+
+/// The dual-window burn is the MIN of the fast and slow windows: a burst
+/// that saturates the fast window alone cannot raise the combined burn
+/// past what the slow window admits.
+#[test]
+fn slo_burn_requires_both_windows() {
+    let store = SeriesStore::with_capacity(32);
+    let mut feed = HistFeed::new();
+    let signal = burn_signal();
+
+    // 9 clean scrapes: burn is 0 on both windows
+    for _ in 0..9 {
+        feed.push(&store, 10, 0);
+    }
+    assert_eq!(signal.eval(&store, Direction::Above), Some(0.0));
+
+    // 2 all-violating scrapes: fast window burns 1.0/0.25 = 4.0, but the
+    // slow window has seen 20 slow of 80 -> 0.25/0.25 = 1.0; min wins
+    feed.push(&store, 0, 10);
+    feed.push(&store, 0, 10);
+    let v = signal.eval(&store, Direction::Above).expect("burn");
+    assert!((v - 1.0).abs() < 1e-9, "slow window must veto the burst: {v}");
+
+    // sustained violation: the slow window catches up and the combined
+    // burn reaches the fast window's 4.0
+    for _ in 0..8 {
+        feed.push(&store, 0, 10);
+    }
+    let v = signal.eval(&store, Direction::Above).expect("burn");
+    assert!((v - 4.0).abs() < 1e-9, "sustained burn must read full: {v}");
+}
+
+/// End-to-end trajectory through a `HealthEngine`: the burn rule stays
+/// quiet through the burst, escalates only once under sustained
+/// violation, and clears with down-hysteresis once the signal recovers.
+#[test]
+fn burn_rule_trajectory_over_synthetic_series() {
+    let store = SeriesStore::with_capacity(64);
+    let reg = Registry::new();
+    let rec = FlightRecorder::with_capacity(64);
+    let mut engine = HealthEngine::new();
+    engine.add_rule(HealthRule {
+        name: "round_wall_slo_burn".to_string(),
+        signal: burn_signal(),
+        direction: Direction::Above,
+        warn: 1.5,
+        critical: 3.0,
+        sustain_up: 2,
+        sustain_down: 3,
+    });
+    let mut feed = HistFeed::new();
+    let mut committed = Vec::new();
+    let mut tick = |feed: &mut HistFeed,
+                    engine: &mut HealthEngine,
+                    committed: &mut Vec<(RuleState, RuleState)>,
+                    clean: u64,
+                    slow: u64| {
+        feed.push(&store, clean, slow);
+        for tr in engine.evaluate(&store, &reg, &rec) {
+            committed.push((tr.from, tr.to));
+        }
+    };
+
+    // warmup + short burst: below warn, nothing commits
+    for _ in 0..9 {
+        tick(&mut feed, &mut engine, &mut committed, 10, 0);
+    }
+    tick(&mut feed, &mut engine, &mut committed, 0, 10);
+    tick(&mut feed, &mut engine, &mut committed, 0, 10);
+    assert!(committed.is_empty(), "burst alone must not alert: {committed:?}");
+    assert_eq!(engine.state_of("round_wall_slo_burn"), Some(RuleState::Ok));
+
+    // sustained violation: the slow window fills up gradually, so the
+    // engine commits exactly one escalation per severity level — no
+    // flapping, no repeats
+    for _ in 0..10 {
+        tick(&mut feed, &mut engine, &mut committed, 0, 10);
+    }
+    assert_eq!(
+        committed,
+        vec![(RuleState::Ok, RuleState::Warn), (RuleState::Warn, RuleState::Critical)],
+        "one committed transition per excursion level"
+    );
+    assert_eq!(engine.state_of("round_wall_slo_burn"), Some(RuleState::Critical));
+
+    // recovery: clean scrapes flush the windows; down-hysteresis holds
+    // for `sustain_down` evaluations, then a single clear commits
+    for _ in 0..12 {
+        tick(&mut feed, &mut engine, &mut committed, 10, 0);
+    }
+    assert_eq!(committed.len(), 3, "recovery commits once: {committed:?}");
+    assert_eq!(committed[2], (RuleState::Critical, RuleState::Ok));
+    assert_eq!(engine.transition_count(), 3);
+    // every committed transition landed in the recorder as an alert event
+    let jsonl = rec.to_jsonl();
+    assert_eq!(jsonl.matches("\"kind\":\"alert\"").count(), 3, "{jsonl}");
+}

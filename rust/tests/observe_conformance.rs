@@ -235,6 +235,7 @@ fn served_workload_populates_global_registry_and_recorder() {
         cache_capacity: 64,
         admission: AdmissionPolicy::Fair,
         batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
+        sample_every: 1,
     });
     let qid = queue.instance().to_string();
     let s = analytics_scenario(&cfg, 48, 3);

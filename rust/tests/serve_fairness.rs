@@ -53,6 +53,7 @@ fn prop_heavy_flood_cannot_starve_light_tenants() {
             cache_capacity: 512,
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 50e-3 },
+            sample_every: 1,
         });
         // submit the whole adversarial pattern before waiting on anything
         let tickets: Vec<_> = s
@@ -125,6 +126,7 @@ fn prop_single_tenant_stream_identical_under_eviction_pressure() {
             cache_capacity: 4, // tiny: force LRU evictions mid-stream
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 1e-3 },
+            sample_every: 1,
         });
         let tickets: Vec<_> = programs
             .iter()
@@ -197,6 +199,7 @@ fn fifo_static_policies_remain_available_and_correct() {
         cache_capacity: 256,
         admission: AdmissionPolicy::Fifo,
         batch: BatchPolicy::Static,
+        sample_every: 1,
     });
     let tickets: Vec<_> = programs
         .iter()

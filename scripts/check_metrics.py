@@ -11,10 +11,12 @@ target/metrics_scrape1.prom / target/metrics_scrape2.prom):
   2. coverage: the scrape is non-empty and the required serve / planner /
      kernel families are all present;
   3. histogram triples: cumulative `_bucket` series are non-decreasing in
-     `le`, end in `le="+Inf"`, and the +Inf bucket equals `_count`;
+     `le`, end in `le="+Inf"`, the +Inf bucket equals `_count`, and the
+     `_sum` is present, non-negative, and zero whenever `_count` is zero;
   4. monotonicity: every counter series in scrape 1 is <= its value in
      scrape 2 (counters only ratchet; series may appear between scrapes
-     but must never vanish or decrease).
+     but must never vanish or decrease) — histogram `_count`/`_bucket`
+     series are cumulative and held to the same bar.
 
 Usage: check_metrics.py SCRAPE1 SCRAPE2
 
@@ -33,6 +35,9 @@ REQUIRED_FAMILIES = [
     "adra_run_ops",
     "adra_array_det_fraction",
     "adra_planner_prediction_error",
+    "adra_serve_round_wall_ns",
+    "adra_observe_overhead_ns",
+    "adra_health_status",
 ]
 
 
@@ -127,6 +132,18 @@ def check_histograms(path, types, samples, errors):
                 errors.append(
                     f"{path}: {family}{key or ''} _count {count} != +Inf bucket {inf[0]}"
                 )
+            # sum/count consistency: a histogram that never observed must
+            # report a zero sum, and a latency sum can never be negative
+            sum_series = (family + "_sum" + key) if key else (family + "_sum")
+            total = samples.get(sum_series)
+            if total is None:
+                errors.append(f"{path}: {family}{key or ''} missing _sum sample")
+            elif total < 0:
+                errors.append(f"{path}: {family}{key or ''} _sum {total} is negative")
+            elif count == 0 and total != 0:
+                errors.append(
+                    f"{path}: {family}{key or ''} _sum {total} nonzero with _count 0"
+                )
 
 
 def main():
@@ -145,10 +162,19 @@ def main():
                 errors.append(f"{path}: required family {family} missing")
         check_histograms(path, types, samples, errors)
 
-    # counters only ratchet: scrape1 series must persist and not decrease
-    counters1 = {
-        s: v for s, v in samples1.items() if types1.get(s.split("{")[0]) == "counter"
-    }
+    # counters only ratchet: scrape1 series must persist and not decrease.
+    # Histogram _count and _bucket series are cumulative too, so they are
+    # held to the same bar.
+    def ratchets(series):
+        name = series.split("{")[0]
+        if types1.get(name) == "counter":
+            return True
+        for suffix in ("_count", "_bucket"):
+            if name.endswith(suffix) and types1.get(name[: -len(suffix)]) == "histogram":
+                return True
+        return False
+
+    counters1 = {s: v for s, v in samples1.items() if ratchets(s)}
     checked = 0
     for series, v1 in counters1.items():
         v2 = samples2.get(series)
