@@ -1,0 +1,201 @@
+//! End-to-end calibration-loop demo: a deliberately mis-calibrated cost
+//! model is corrected by measured op costs, flips routing to the
+//! measured optimum, persists its learned snapshot, and then seeds a
+//! live serve queue from that snapshot after a simulated restart.
+//!
+//! Under scheme 1 (voltage, precharged read bit-line) ADRA dual ops
+//! really cost ~1.21x the baseline's energy (Fig. 6), so the honest
+//! Energy-objective routing sends dual ops to the baseline executor.
+//! The demo starts from a table that underprices ADRA dual energy 2x —
+//! the planner wrongly routes dual -> ADRA until the calibration loop
+//! walks the correction factor up and commits the flip.
+//!
+//! Artifacts (CI's `calibration-smoke` job consumes all three):
+//!   target/calibration.json           the learned snapshot
+//!   target/calibration_scrape1.prom   scrape after the first serve wave
+//!   target/calibration_scrape2.prom   scrape after the second wave
+//!
+//!     cargo run --release --example calibration
+
+use adra::config::{SensingScheme, SimConfig};
+use adra::planner::{
+    place_calibrated, planned_coordinator, CalibratedCostModel, CalibrationStore, Executor,
+    Objective, OpClass, PlanCostModel, StepOutput,
+};
+use adra::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeQueue};
+use adra::workload::heavy_tenant_scenario;
+use adra::workload::programs::analytics_scenario;
+
+const N_RECORDS: usize = 160;
+const SHARDS: usize = 2;
+const MAX_ROUNDS: usize = 20;
+const SNAPSHOT: &str = "target/calibration.json";
+
+/// Write one Prometheus scrape of the global registry and sanity-check
+/// the families the calibration pipeline must expose.
+fn write_scrape(path: &str, families: &[&str]) -> String {
+    let text = adra::observe::expose_text(adra::observe::global());
+    for family in families {
+        assert!(text.contains(family), "scrape is missing family {family}:\n{text}");
+    }
+    std::fs::create_dir_all("target").expect("create target/");
+    std::fs::write(path, &text).expect("write scrape");
+    text
+}
+
+fn main() {
+    let mut cfg = SimConfig::square(256, SensingScheme::VoltagePrecharged);
+    cfg.word_bits = 32;
+
+    // --- part 1: the convergence loop on the raw planner/coordinator ---
+    let honest = PlanCostModel::new(&cfg, Objective::Energy);
+    let lying_adra = honest.adra().scaled_class(OpClass::Dual, 0.5, 1.0);
+    let lying =
+        PlanCostModel::with_tables(Objective::Energy, lying_adra, honest.baseline().clone());
+    println!("=== calibration loop on a 2x-underpriced ADRA dual table ===");
+    println!(
+        "honest routing: dual -> {}   mis-calibrated routing: dual -> {}\n",
+        honest.choose_class(OpClass::Dual).executor.name(),
+        lying.choose_class(OpClass::Dual).executor.name()
+    );
+    assert_eq!(honest.choose_class(OpClass::Dual).executor, Executor::Baseline);
+    assert_eq!(lying.choose_class(OpClass::Dual).executor, Executor::Adra);
+
+    // EDP workers natively route dual -> ADRA, so the bad plan is what
+    // actually runs on the array until the loop pins it away
+    let coord = planned_coordinator(&cfg, SHARDS, Objective::Edp);
+    let mut cal = CalibratedCostModel::new(lying, SHARDS);
+    let s = analytics_scenario(&cfg, N_RECORDS, 4242);
+
+    let mut flip_round = None;
+    for round in 1..=MAX_ROUNDS {
+        let pl = place_calibrated(&s.program, &cfg, SHARDS, &cal).expect("place");
+        let rep = pl.execute(&coord).expect("execute");
+        assert_eq!(
+            rep.outputs[s.filter_step],
+            StepOutput::Matches(s.expected_matches.clone()),
+            "answers are routing-invariant (round {round})"
+        );
+        if cal.absorb(&rep.samples) {
+            cal.sync_routing(&coord);
+            flip_round.get_or_insert(round);
+        }
+        let f = cal.store().factor(0, OpClass::Dual, Executor::Adra);
+        println!(
+            "round {round:>2}: adra dual factor x{:.3}  error EWMA {:.4}  routing {}{}",
+            f.energy,
+            cal.store().class_error(OpClass::Dual).unwrap_or(0.0),
+            cal.choose_class(0, OpClass::Dual).name(),
+            if flip_round == Some(round) { "  <-- flip committed" } else { "" }
+        );
+    }
+    let flip = flip_round.expect("sustained honest measurements must flip routing");
+    assert!(flip >= 3, "no flip before the sustain hysteresis: {flip}");
+    for shard in 0..SHARDS {
+        assert_eq!(cal.choose_class(shard, OpClass::Dual), Executor::Baseline);
+    }
+    let err = cal.store().class_error(OpClass::Dual).expect("dual error tracked");
+    assert!(err < 0.1, "error EWMA converged: {err}");
+
+    // the pin reached the workers: the plan now predicts the measured
+    // cost exactly
+    let pl = place_calibrated(&s.program, &cfg, SHARDS, &cal).expect("place");
+    let rep = pl.execute(&coord).expect("execute");
+    assert!(rep.prediction.within(1e-6), "{}", rep.prediction.report("calibrated"));
+    println!(
+        "\nflip committed at round {flip}; post-flip {}",
+        rep.prediction.report("calibrated")
+    );
+    cal.publish(adra::observe::global());
+
+    // --- part 2: persistence across a simulated restart ---
+    std::fs::create_dir_all("target").expect("create target/");
+    cal.store().save(std::path::Path::new(SNAPSHOT)).expect("save snapshot");
+    let loaded = CalibrationStore::load(std::path::Path::new(SNAPSHOT));
+    assert!(!loaded.is_empty(), "snapshot round-trips");
+    assert_eq!(loaded.committed(0, OpClass::Dual), Some(Executor::Baseline));
+    println!("snapshot -> {SNAPSHOT} ({} bytes)\n", cal.store().to_json().len());
+
+    // --- part 3: the snapshot seeds a live serve queue ("restart") ---
+    println!("=== serve queue seeded from the snapshot ===");
+    let shared: adra::planner::SharedCalibration = std::sync::Arc::default();
+    let queue = ServeQueue::start(ServeConfig {
+        cfg: cfg.clone(),
+        shards: SHARDS,
+        objective: Objective::Energy,
+        n_records: N_RECORDS,
+        max_round: 8,
+        cache_capacity: 4096,
+        admission: AdmissionPolicy::Fair,
+        batch: BatchPolicy::Static,
+        sample_every: 1,
+        calibrate_every: 1,
+        // the shared handle starts empty, so the queue falls back to the
+        // snapshot on disk — the restart path — and then mirrors its
+        // evolving store back into the handle after every absorb
+        calibration_path: Some(SNAPSHOT.into()),
+        calibration: Some(shared.clone()),
+    });
+
+    for (wave, seed) in [(1u32, 91u64), (2, 92)] {
+        let scenario = heavy_tenant_scenario(&cfg, N_RECORDS, seed, 3, 2);
+        let tickets: Vec<_> = scenario
+            .submissions
+            .iter()
+            .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+            .collect();
+        for (i, ticket) in tickets.into_iter().enumerate() {
+            let rep = ticket.wait().expect("serve");
+            assert_eq!(
+                rep.outputs[scenario.filter_step],
+                StepOutput::Matches(scenario.expected_matches[i].clone()),
+                "served output diverged from host ground truth (wave {wave}, submission {i})"
+            );
+        }
+        let scrape = write_scrape(
+            &format!("target/calibration_scrape{wave}.prom"),
+            &[
+                "adra_serve_programs",
+                "adra_serve_tenant_energy",
+                "adra_planner_calibration",
+                "adra_planner_calibration_distortion",
+                "adra_planner_prediction_error",
+                "adra_run_ops",
+                "adra_health_status",
+            ],
+        );
+        println!(
+            "wave {wave} served -> target/calibration_scrape{wave}.prom ({} lines)",
+            scrape.lines().count()
+        );
+    }
+
+    // the queue loaded the snapshot, kept absorbing honest samples, and
+    // mirrored its store into the shared handle without un-flipping
+    let mirrored = shared.lock().expect("calibration lock").clone();
+    assert!(!mirrored.is_empty(), "queue mirrors its store into the shared handle");
+    for shard in 0..SHARDS {
+        assert_eq!(
+            mirrored.committed(shard, OpClass::Dual),
+            Some(Executor::Baseline),
+            "honest serving must not un-flip the committed routing"
+        );
+    }
+    assert!(
+        mirrored.max_distortion() < 4.0,
+        "factors stay inside the clamp band: {}",
+        mirrored.max_distortion()
+    );
+    let reloaded = CalibrationStore::load(std::path::Path::new(SNAPSHOT));
+    assert!(!reloaded.is_empty(), "the queue keeps the on-disk snapshot fresh");
+    assert_eq!(reloaded.committed(0, OpClass::Dual), Some(Executor::Baseline));
+    let m = queue.metrics();
+    println!(
+        "\nserved {} programs / {} rounds; mirrored store: {} ",
+        m.programs,
+        m.rounds,
+        mirrored.report().lines().last().unwrap_or("").trim()
+    );
+
+    println!("\nCALIBRATION VALIDATION PASSED");
+}

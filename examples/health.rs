@@ -102,6 +102,9 @@ fn main() {
         admission: AdmissionPolicy::Fair,
         batch: BatchPolicy::Static,
         sample_every: 1,
+        calibrate_every: 1,
+        calibration_path: None,
+        calibration: None,
     });
 
     // wear demo, part 1: a write-hot accumulator row on shard 0, levelled

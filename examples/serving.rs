@@ -199,6 +199,9 @@ fn main() {
         admission: AdmissionPolicy::Fair,
         batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
         sample_every: 1,
+        calibrate_every: 1,
+        calibration_path: None,
+        calibration: None,
     }));
     let t0 = Instant::now();
     let wave = run_wave(&queue, &fp, &dp, REPEATS);
@@ -349,6 +352,9 @@ fn main() {
             admission,
             batch,
             sample_every: 1,
+            calibrate_every: 1,
+            calibration_path: None,
+            calibration: None,
         });
         // the adversarial pattern: the whole flood is queued before any
         // light tenant's program, exactly as a burst arrives in practice

@@ -98,6 +98,9 @@ fn main() {
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
             sample_every: 1,
+            calibrate_every: 1,
+            calibration_path: None,
+            calibration: None,
         }));
         let barrier = Arc::new(Barrier::new(tenants));
         let t1 = Instant::now();
@@ -183,6 +186,9 @@ fn fairness_bench(cfg: &SimConfig) {
             admission,
             batch,
             sample_every: 1,
+            calibrate_every: 1,
+            calibration_path: None,
+            calibration: None,
         });
         // queue the whole flood ahead of the light tenants, then wait —
         // the adversarial arrival order both policies must digest

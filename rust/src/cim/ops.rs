@@ -176,6 +176,15 @@ pub trait Engine: Send {
         None
     }
 
+    /// Override per-op-class routing (calibration actuator).  Indexed by
+    /// `planner::OpClass as usize`; `Some(executor)` pins that class,
+    /// `None` restores the engine's own choice.  Engines without a
+    /// routing decision (single-executor engines) ignore it — only
+    /// routed engines like `planner::PlannedEngine` override this.
+    fn set_routing(&mut self, forced: [Option<crate::planner::Executor>; 4]) {
+        let _ = forced;
+    }
+
     /// Engine label for metrics/reporting.
     fn name(&self) -> &'static str;
 }

@@ -27,6 +27,10 @@ enum WorkerMsg {
     FusedBatch(Vec<Request>, Sender<Vec<Response>>),
     /// Collect a metrics snapshot.
     Stats(Sender<RunMetrics>),
+    /// Override the engine's per-op-class routing (`Engine::set_routing`)
+    /// — the calibration loop's actuator.  Fire-and-forget: the channel
+    /// is FIFO, so the override lands before any later batch.
+    SetRouting([Option<crate::planner::Executor>; 4]),
 }
 
 struct Worker {
@@ -183,6 +187,26 @@ impl Coordinator {
         Ok(resps.into_iter().map(|r| r.result).collect())
     }
 
+    /// Push a per-op-class routing override to one shard's engine
+    /// (`Engine::set_routing`).  Fire-and-forget: the per-worker channel
+    /// is FIFO, so the override is applied before any batch submitted
+    /// after this call returns.  Engines without a routing knob (the
+    /// default `Engine` impl) silently ignore it.
+    pub fn set_routing(
+        &self,
+        array_id: usize,
+        forced: [Option<crate::planner::Executor>; 4],
+    ) -> Result<(), RouteError> {
+        let worker = self
+            .workers
+            .get(array_id)
+            .ok_or(RouteError::UnknownArray(array_id))?;
+        worker
+            .tx
+            .send(WorkerMsg::SetRouting(forced))
+            .map_err(|_| RouteError::ShuttingDown)
+    }
+
     /// Aggregate metrics across all workers.
     pub fn metrics(&self) -> RunMetrics {
         let mut total = RunMetrics::default();
@@ -301,6 +325,10 @@ fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: 
             Ok(WorkerMsg::Work(req, tx)) => batch.push((req, tx)),
             Ok(WorkerMsg::Batch(reqs, tx)) => group_reply = Some((reqs, tx, false)),
             Ok(WorkerMsg::FusedBatch(reqs, tx)) => group_reply = Some((reqs, tx, true)),
+            Ok(WorkerMsg::SetRouting(forced)) => {
+                engine.set_routing(forced);
+                continue;
+            }
         }
         // grouped fast path: execute the whole group, one reply message
         if let Some((reqs, tx, fused)) = group_reply {
@@ -314,6 +342,19 @@ fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: 
                 Ok(WorkerMsg::Work(req, tx)) => batch.push((req, tx)),
                 Ok(WorkerMsg::Stats(tx)) => {
                     let _ = tx.send(snapshot(&*engine, &metrics));
+                }
+                Ok(WorkerMsg::SetRouting(forced)) => {
+                    // singles gathered so far arrived before the override;
+                    // flush them first so routing changes in arrival order
+                    for (req, rtx) in batch.drain(..) {
+                        let result = engine.execute(&req.op);
+                        match &result {
+                            Ok(r) => metrics.record(&r.cost),
+                            Err(_) => metrics.record_error(),
+                        }
+                        let _ = rtx.send(Response { id: req.id, result });
+                    }
+                    engine.set_routing(forced);
                 }
                 Ok(msg @ WorkerMsg::Batch(..)) | Ok(msg @ WorkerMsg::FusedBatch(..)) => {
                     // execute inline to preserve arrival order: first
@@ -562,6 +603,60 @@ mod tests {
             coord.call_batch_fused(0, &ops).unwrap_err(),
             RouteError::ShuttingDown
         );
+    }
+
+    /// Routing overrides reach the worker's engine and apply before any
+    /// batch submitted after `set_routing` returns (FIFO channel).
+    #[test]
+    fn routing_override_reaches_worker_engine() {
+        use crate::planner::{Executor, OpClass, PlannedEngine};
+        use std::sync::atomic::AtomicUsize;
+
+        static PINS_SEEN: AtomicUsize = AtomicUsize::new(0);
+        struct SpyEngine;
+        impl Engine for SpyEngine {
+            fn execute(&mut self, _op: &CimOp) -> Result<CimResult, EngineError> {
+                Err(EngineError::Unsupported("spy".into()))
+            }
+            fn set_routing(&mut self, forced: [Option<Executor>; 4]) {
+                PINS_SEEN.store(
+                    forced.iter().filter(|p| p.is_some()).count(),
+                    Ordering::SeqCst,
+                );
+            }
+            fn name(&self) -> &'static str {
+                "spy"
+            }
+        }
+
+        let cfg = cfg();
+        let coord = Coordinator::new(&cfg, 1, |_| Box::new(SpyEngine) as Box<dyn Engine>);
+        let mut forced = [None; 4];
+        forced[OpClass::Dual as usize] = Some(Executor::Baseline);
+        coord.set_routing(0, forced).unwrap();
+        // a subsequent round-trip guarantees the override was processed
+        let _ = coord.call(0, CimOp::Read(WordAddr { row: 0, word: 0 }));
+        assert_eq!(PINS_SEEN.load(Ordering::SeqCst), 1);
+        assert!(matches!(
+            coord.set_routing(9, forced),
+            Err(RouteError::UnknownArray(9))
+        ));
+
+        // and a PlannedEngine actually honors the pin end-to-end
+        let cfg3 = cfg.clone();
+        let coord2 = Coordinator::new(&cfg, 1, move |_| {
+            Box::new(PlannedEngine::new(&cfg3, crate::planner::Objective::Energy))
+                as Box<dyn Engine>
+        });
+        coord2.set_routing(0, forced).unwrap();
+        coord2
+            .call(0, CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 9 })
+            .unwrap();
+        coord2
+            .call(0, CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 4 })
+            .unwrap();
+        let r = coord2.call(0, CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert_eq!(r.value, CimValue::Diff(5), "pinned routing preserves semantics");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! stats
 //! metrics [json]
 //! health
+//! calibration [reset]
 //! trace [clear | cap <n>]
 //! quit
 //! ```
@@ -24,9 +25,12 @@
 //! observe registry, after publishing this coordinator's counters under
 //! `source="repl"`), `trace` (the flight recorder's JSONL tail), and
 //! `health` (samples the global series store, evaluates the health
-//! rules, prints the per-rule report), which emit their multi-line
-//! payload and then a terminating `ok`.  `trace clear` empties the
-//! ring; `trace cap <n>` resizes it (postmortem depth).
+//! rules, prints the per-rule report), and `calibration` (the shared
+//! calibration store's factor/routing table — what any serve queue in
+//! this process mirrors after each absorb; `calibration reset` clears
+//! it back to the analytic tables), which emit their multi-line payload
+//! and then a terminating `ok`.  `trace clear` empties the ring;
+//! `trace cap <n>` resizes it (postmortem depth).
 
 use std::io::{BufRead, Write};
 
@@ -182,6 +186,20 @@ pub fn serve_with_stats<R: BufRead, W: Write, F: Fn() -> Option<String>>(
             writeln!(output, "ok")?;
             continue;
         }
+        if trimmed == "calibration" {
+            let store = crate::planner::calibrate::shared().lock().expect("calibration lock");
+            writeln!(output, "{}", store.report())?;
+            writeln!(output, "ok")?;
+            continue;
+        }
+        if trimmed == "calibration reset" {
+            crate::planner::calibrate::shared()
+                .lock()
+                .expect("calibration lock")
+                .clear();
+            writeln!(output, "ok")?;
+            continue;
+        }
         if trimmed == "trace" {
             output.write_all(crate::observe::recorder().to_jsonl().as_bytes())?;
             writeln!(output, "ok")?;
@@ -306,6 +324,9 @@ quit
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
             sample_every: 1,
+            calibrate_every: 1,
+            calibration_path: None,
+            calibration: None,
         });
         let s = analytics_scenario(&cfg, 24, 1);
         queue.submit(0, s.program).unwrap().wait().unwrap();
@@ -360,6 +381,23 @@ quit
         assert!(text.contains("round_wall_slo_burn"), "standard rules listed: {text}");
         assert!(text.contains("tenant_quota_starvation"), "{text}");
         assert!(text.lines().any(|l| l == "ok"), "{text}");
+    }
+
+    #[test]
+    fn calibration_command_reports_shared_store() {
+        let c = coord();
+        // Reset first: other tests in this process may have populated the
+        // shared store, and the empty-store banner is the only output that
+        // is deterministic under parallel test execution.
+        let mut out = Vec::new();
+        serve(&c, "calibration reset\ncalibration\nquit\n".as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(
+            text.contains("calibration: empty (analytic tables in effect)"),
+            "{text}"
+        );
+        // reset's ok + calibration's ok
+        assert!(text.lines().filter(|l| *l == "ok").count() >= 2, "{text}");
     }
 
     #[test]

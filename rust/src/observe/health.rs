@@ -488,6 +488,27 @@ pub fn standard_rules() -> Vec<HealthRule> {
             sustain_up: 2,
             sustain_down: 4,
         },
+        // Calibration runaway: the worst correction-factor distortion
+        // max(f, 1/f) the adaptive cost model is applying
+        // (`planner::calibrate`).  Factors live in [0.25, 4]; a
+        // sustained EWMA near the clamp edge means the analytic tables
+        // are off by more than calibration should be papering over —
+        // fix the model, don't trust the patch.
+        HealthRule {
+            name: "calibration_runaway".into(),
+            signal: Signal::GaugeEwma {
+                name: "adra.planner.calibration_distortion".into(),
+                labels: owned(&[]),
+                window: 16,
+                alpha: 0.3,
+                abs: false,
+            },
+            direction: Direction::Above,
+            warn: 2.5,
+            critical: 3.9,
+            sustain_up: 3,
+            sustain_down: 4,
+        },
         // Wear-rate stub (ROADMAP item 5b pre-work): watches the shard
         // write-rate published by `array::endurance`.  Thresholds are
         // deliberately lax placeholders until wear-aware serving defines
@@ -682,7 +703,7 @@ mod tests {
     #[test]
     fn standard_rules_cover_the_issue_set() {
         let e = standard_engine();
-        assert_eq!(e.rule_count(), 7);
+        assert_eq!(e.rule_count(), 8);
         for name in [
             "xval_mismatch_ratio",
             "det_col_fraction_drift",
@@ -690,6 +711,7 @@ mod tests {
             "round_wall_slo_burn",
             "planner_prediction_drift",
             "tenant_quota_starvation",
+            "calibration_runaway",
             "array_wear_rate",
         ] {
             assert!(e.state_of(name).is_some(), "missing standard rule {name}");

@@ -241,16 +241,26 @@ pub fn gauge_min_max(points: &[SamplePoint], window: usize) -> Option<(f64, f64)
 /// it.
 pub fn ewma_slope(points: &[SamplePoint], window: usize, alpha: f64, abs: bool) -> Option<f64> {
     let w = tail(points, window);
-    if w.len() < 2 {
+    // the EWMA folds gauge points only, so the slope denominator must be
+    // the gauge sub-series' span — mixed-type series (counters sampled
+    // into the same window) must not dilate dt
+    let gauges: Vec<&SamplePoint> = w
+        .iter()
+        .filter(|p| matches!(p.value, SampleValue::Gauge(_)))
+        .collect();
+    if gauges.len() < 2 {
         return None;
     }
-    let mut vals = w.iter().filter_map(as_gauge).map(|v| if abs { v.abs() } else { v });
+    let mut vals = gauges
+        .iter()
+        .filter_map(|p| as_gauge(p))
+        .map(|v| if abs { v.abs() } else { v });
     let start = vals.next()?;
     let mut ewma = start;
     for v in vals {
         ewma += alpha * (v - ewma);
     }
-    Some((ewma - start) / dt_seconds(w.first()?, w.last()?)?)
+    Some((ewma - start) / dt_seconds(gauges.first()?, gauges.last()?)?)
 }
 
 /// Bucket-wise increase of a cumulative histogram over the window:
@@ -299,22 +309,34 @@ pub fn delta_p95_ns(points: &[SamplePoint], window: usize) -> Option<f64> {
 }
 
 /// Fraction of window samples that violated `threshold_ns`, from bucket
-/// deltas.  Conservative: a bucket that STRADDLES the threshold counts
-/// fully as violating (its upper bound exceeds the threshold), so this
-/// over-reports rather than under-reports SLO burn.
+/// deltas.  Buckets entirely above the threshold (`lo >= threshold`)
+/// count fully; a bucket that straddles the threshold is apportioned
+/// linearly by the fraction of its span above the threshold (samples are
+/// assumed uniform within a bucket).  The open-ended last bucket counts
+/// fully whenever it overlaps the threshold — there is no finite span to
+/// apportion, so it stays conservative.
 pub fn violation_fraction(points: &[SamplePoint], window: usize, threshold_ns: f64) -> Option<f64> {
     let (count, buckets) = histogram_delta(points, window)?;
     if count == 0 {
         return None;
     }
-    let mut violating = 0u64;
+    let mut violating = 0.0f64;
     for (i, b) in buckets.iter().enumerate() {
         let (lo, hi) = LatencyHistogram::bucket_bounds(i);
-        if hi > threshold_ns || (hi.is_infinite() && lo >= threshold_ns) {
-            violating = violating.saturating_add(*b);
+        if lo >= threshold_ns {
+            // fully above the threshold
+            violating += *b as f64;
+        } else if hi > threshold_ns {
+            if hi.is_finite() {
+                // straddling bucket: apportion by span above threshold
+                violating += *b as f64 * (hi - threshold_ns) / (hi - lo);
+            } else {
+                // open-ended tail overlapping the threshold: conservative
+                violating += *b as f64;
+            }
         }
     }
-    Some(violating as f64 / count as f64)
+    Some((violating / count as f64).clamp(0.0, 1.0))
 }
 
 #[cfg(test)]
@@ -438,14 +460,69 @@ mod tests {
         // threshold 512ns: only the 5 bucket-10 samples violate
         let vf = violation_fraction(&pts, 1, 512.0).unwrap();
         assert!((vf - 0.05).abs() < 1e-12, "{vf}");
-        // straddling bucket counts as violating (conservative)
+        // threshold mid-bucket: bucket 4 ([16,32)) straddles 20ns, so its
+        // 95 samples are apportioned by the span above the threshold
+        // (12/16 of them), plus the 5 fully-violating bucket-10 samples
         let vf = violation_fraction(&pts, 1, 20.0).unwrap();
-        assert!((vf - 1.0).abs() < 1e-12, "threshold inside bucket 4 counts the bucket: {vf}");
+        let expect = (95.0 * (32.0 - 20.0) / (32.0 - 16.0) + 5.0) / 100.0;
+        assert!((vf - expect).abs() < 1e-12, "mid-bucket apportionment: {vf} vs {expect}");
+        // threshold exactly on a bucket edge: the whole bucket violates
+        let vf = violation_fraction(&pts, 1, 16.0).unwrap();
+        assert!((vf - 1.0).abs() < 1e-12, "{vf}");
         // empty window
         let flat = vec![mk(0, &[(2, 7)]), mk(1_000_000, &[(2, 7)])];
         assert_eq!(delta_p95_ns(&flat, 1), None);
         assert_eq!(violation_fraction(&flat, 1, 1.0), None);
         // kind mismatch
         assert_eq!(delta_p95_ns(&counter_points(&[(0, 0), (1, 5)]), 1), None);
+    }
+
+    #[test]
+    fn violation_fraction_open_ended_tail_counts_fully() {
+        let mk = |t_us: u64, counts: &[(usize, u64)]| {
+            let mut buckets = vec![0u64; LatencyHistogram::NUM_BUCKETS];
+            let mut total = 0;
+            for &(i, n) in counts {
+                buckets[i] += n;
+                total += n;
+            }
+            SamplePoint {
+                t_us,
+                value: SampleValue::Histogram { count: total, sum: 0.0, buckets },
+            }
+        };
+        let last = LatencyHistogram::NUM_BUCKETS - 1;
+        let (lo, hi) = LatencyHistogram::bucket_bounds(last);
+        assert!(hi.is_infinite());
+        let pts = vec![mk(0, &[]), mk(1_000_000, &[(last, 4), (2, 4)])];
+        // threshold inside the open-ended bucket: no finite span to
+        // apportion, all 4 tail samples count (conservative)
+        let vf = violation_fraction(&pts, 1, lo * 2.0).unwrap();
+        assert!((vf - 0.5).abs() < 1e-12, "{vf}");
+    }
+
+    #[test]
+    fn ewma_slope_ignores_interleaved_counter_points() {
+        // gauge samples at t=0 and t=1s rise 0 -> 1; a counter point at
+        // t=9s shares the series (mixed-type window).  dt must span the
+        // GAUGE samples (1s), not the whole window (9s).
+        let pts = vec![
+            SamplePoint { t_us: 0, value: SampleValue::Gauge(0.0) },
+            SamplePoint { t_us: 1_000_000, value: SampleValue::Gauge(1.0) },
+            SamplePoint { t_us: 9_000_000, value: SampleValue::Counter(7) },
+        ];
+        let s = ewma_slope(&pts, 2, 1.0, false).unwrap();
+        assert!((s - 1.0).abs() < 1e-12, "slope must use gauge-sample dt: {s}");
+
+        // counter-only series has no gauge pair -> None, not a panic
+        let counters = counter_points(&[(0, 1), (1_000_000, 2), (2_000_000, 3)]);
+        assert_eq!(ewma_slope(&counters, 2, 0.5, false), None);
+
+        // a single gauge among counters is still insufficient
+        let one = vec![
+            SamplePoint { t_us: 0, value: SampleValue::Counter(1) },
+            SamplePoint { t_us: 1_000_000, value: SampleValue::Gauge(0.5) },
+        ];
+        assert_eq!(ewma_slope(&one, 1, 0.5, false), None);
     }
 }

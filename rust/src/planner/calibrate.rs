@@ -1,0 +1,916 @@
+//! The calibration actuator: closes the loop from measured op costs back
+//! into the planner's price tables and routing (ROADMAP item 1).
+//!
+//! PRs 6–7 built the *measurement* side — `Placement::assemble` publishes
+//! per-op-class prediction error to the observe registry and the series
+//! store keeps its windowed EWMA — but the tables stayed purely analytic.
+//! This module is the missing actuator, shaped like optd's
+//! `AdaptiveCostModel` + `RuntimeAdaptionStorage`: a base analytic
+//! [`PlanCostModel`] wrapped by runtime-adaption storage keyed by
+//! (shard, op class, executor).
+//!
+//! The loop, per serve round (or per `Placement` run):
+//!
+//! ```text
+//!   assemble() samples --> CalibratedCostModel::absorb
+//!        |                       |
+//!   measured/predicted     EWMA factor store (clamped [0.25, 4])
+//!   cost ratios                  |
+//!                          preferred executor per (shard, class)
+//!                                |  sustain-streak hysteresis
+//!                          committed routing pins
+//!                                |
+//!              per-shard effective PlanCostModels (scaled tables)
+//!                 |                         |
+//!       place_calibrated lowering   Coordinator::set_routing
+//!                                   (workers honor the flip)
+//! ```
+//!
+//! Safety properties:
+//! * factors are EWMA-folded (`ALPHA`) and clamped to
+//!   [`CalibrationFactor::MIN`], [`CalibrationFactor::MAX`] — a single
+//!   wild run cannot blow up a price;
+//! * routing follows the *committed* decision, which flips only after
+//!   the scaled-score preference disagrees for `sustain` consecutive
+//!   absorbs — a single noisy run cannot flip routing;
+//! * with exact tables (the repo default) measured == predicted, factors
+//!   stay ~1.0 and behavior is bit-identical to the analytic model.
+//!
+//! [`CalibrationStore::save`]/[`load`] persist the learned factors and
+//! committed routing as a small hand-rolled JSON snapshot (the crate is
+//! serde-free), so a restarted daemon keeps its corrections; a corrupt
+//! or missing snapshot falls back to the analytic tables.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::coordinator::Coordinator;
+use crate::energy::OpCost;
+use crate::observe::Registry;
+
+use super::cost::{Executor, Objective, OpClass, PlanCostModel};
+use super::ir::{PlanError, Program};
+use super::place::{place_with, Placement};
+use crate::config::SimConfig;
+
+/// New-sample weight of the factor EWMA.
+const ALPHA: f64 = 0.3;
+
+/// One run's predicted-vs-measured aggregate for one
+/// (shard, op class, executor) cell — produced by
+/// `Placement::assemble`, consumed by [`CalibratedCostModel::absorb`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibrationSample {
+    pub shard: usize,
+    pub op_class: OpClass,
+    pub executor: Executor,
+    /// Summed predicted cost of the executed ops (from the lowering's
+    /// effective model — i.e. already carrying the current factors).
+    pub predicted: OpCost,
+    /// Summed engine-charged cost of the same ops.
+    pub measured: OpCost,
+    pub ops: u64,
+}
+
+/// EWMA correction factor for one (shard, op class, executor) cell:
+/// the multiplier that maps the ANALYTIC table price to the measured
+/// price.  1.0 = the table is exact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibrationFactor {
+    pub energy: f64,
+    pub latency: f64,
+    /// Absorbed runs (not ops) behind this estimate.
+    pub samples: u64,
+}
+
+impl CalibrationFactor {
+    /// Clamp band: a correction can at most quarter or quadruple a
+    /// price.  Anything drifting past the band is a modeling bug, not a
+    /// calibration target — the `calibration_runaway` health rule warns
+    /// near the edge.
+    pub const MIN: f64 = 0.25;
+    pub const MAX: f64 = 4.0;
+
+    fn fold(&mut self, target_energy: f64, target_latency: f64) {
+        self.energy = (self.energy + ALPHA * (target_energy - self.energy))
+            .clamp(Self::MIN, Self::MAX);
+        self.latency = (self.latency + ALPHA * (target_latency - self.latency))
+            .clamp(Self::MIN, Self::MAX);
+        self.samples += 1;
+    }
+
+    /// The larger of the factor's distortion ratios: max(f, 1/f) over
+    /// both dimensions.  1.0 = no correction.
+    pub fn distortion(&self) -> f64 {
+        let d = |f: f64| if f >= 1.0 { f } else { 1.0 / f };
+        d(self.energy).max(d(self.latency))
+    }
+}
+
+impl Default for CalibrationFactor {
+    fn default() -> Self {
+        Self { energy: 1.0, latency: 1.0, samples: 0 }
+    }
+}
+
+fn executor_index(e: Executor) -> usize {
+    match e {
+        Executor::Adra => 0,
+        Executor::Baseline => 1,
+    }
+}
+
+fn executor_from_index(i: usize) -> Option<Executor> {
+    match i {
+        0 => Some(Executor::Adra),
+        1 => Some(Executor::Baseline),
+        _ => None,
+    }
+}
+
+fn executor_from_name(name: &str) -> Option<Executor> {
+    match name {
+        "adra" => Some(Executor::Adra),
+        "baseline" => Some(Executor::Baseline),
+        _ => None,
+    }
+}
+
+fn class_from_name(name: &str) -> Option<OpClass> {
+    OpClass::ALL.into_iter().find(|c| c.name() == name)
+}
+
+/// The runtime-adaption storage: learned correction factors plus the
+/// committed routing decisions, persistable as a JSON snapshot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CalibrationStore {
+    /// (shard, op class index, executor index) -> factor.
+    factors: BTreeMap<(usize, usize, usize), CalibrationFactor>,
+    /// (shard, op class index) -> committed executor (the routing pin).
+    committed: BTreeMap<(usize, usize), Executor>,
+    /// (shard, op class index) -> (candidate executor, disagreement
+    /// streak).  Volatile — not persisted: a restart re-earns the flip.
+    pending: BTreeMap<(usize, usize), (Executor, u32)>,
+    /// Per-op-class EWMA of |measured/predicted - 1| (energy), over the
+    /// EFFECTIVE (calibrated) predictions — the convergence witness.
+    error_ewma: BTreeMap<usize, f64>,
+}
+
+impl CalibrationStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn factor(&self, shard: usize, class: OpClass, executor: Executor) -> CalibrationFactor {
+        self.factors
+            .get(&(shard, class as usize, executor_index(executor)))
+            .copied()
+            .unwrap_or_default()
+    }
+
+    pub fn committed(&self, shard: usize, class: OpClass) -> Option<Executor> {
+        self.committed.get(&(shard, class as usize)).copied()
+    }
+
+    /// The per-class prediction-error EWMA (energy), if any run was
+    /// absorbed for the class.
+    pub fn class_error(&self, class: OpClass) -> Option<f64> {
+        self.error_ewma.get(&(class as usize)).copied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.factors.is_empty() && self.committed.is_empty()
+    }
+
+    /// Worst distortion across every stored factor (1.0 when empty).
+    pub fn max_distortion(&self) -> f64 {
+        self.factors.values().map(|f| f.distortion()).fold(1.0, f64::max)
+    }
+
+    pub fn clear(&mut self) {
+        *self = Self::default();
+    }
+
+    /// Human-readable table for the REPL `calibration` command.
+    pub fn report(&self) -> String {
+        if self.is_empty() {
+            return "calibration: empty (analytic tables in effect)".to_string();
+        }
+        let mut out = String::from("calibration factors (measured/analytic):\n");
+        for (&(shard, ci, ei), f) in &self.factors {
+            let class = OpClass::ALL[ci];
+            let exec = executor_from_index(ei).expect("stored executor index");
+            out.push_str(&format!(
+                "  shard {shard} {:<11} {:<8} energy x{:.3} latency x{:.3} ({} runs)\n",
+                class.name(),
+                exec.name(),
+                f.energy,
+                f.latency,
+                f.samples
+            ));
+        }
+        for (&(shard, ci), exec) in &self.committed {
+            out.push_str(&format!(
+                "  routing: shard {shard} {} -> {}\n",
+                OpClass::ALL[ci].name(),
+                exec.name()
+            ));
+        }
+        for (&ci, err) in &self.error_ewma {
+            out.push_str(&format!(
+                "  error EWMA {}: {:.4}\n",
+                OpClass::ALL[ci].name(),
+                err
+            ));
+        }
+        out.push_str(&format!("  max distortion: {:.3}", self.max_distortion()));
+        out
+    }
+
+    // ---- persistence (hand-rolled JSON; the crate is serde-free) ----
+
+    /// Serialize factors + committed routing.  Streaks are volatile and
+    /// deliberately dropped: a restarted daemon must re-earn any flip.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\"version\":1,\"factors\":[");
+        for (i, (&(shard, ci, ei), f)) in self.factors.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"shard\":{shard},\"op_class\":\"{}\",\"executor\":\"{}\",\
+                 \"energy\":{:.17},\"latency\":{:.17},\"samples\":{}}}",
+                OpClass::ALL[ci].name(),
+                executor_from_index(ei).expect("stored executor index").name(),
+                f.energy,
+                f.latency,
+                f.samples
+            ));
+        }
+        s.push_str("],\"committed\":[");
+        for (i, (&(shard, ci), exec)) in self.committed.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"shard\":{shard},\"op_class\":\"{}\",\"executor\":\"{}\"}}",
+                OpClass::ALL[ci].name(),
+                exec.name()
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Parse a snapshot; `None` on anything malformed (caller falls back
+    /// to the analytic tables).
+    pub fn from_json(text: &str) -> Option<Self> {
+        if (json_num(text, "version")? - 1.0).abs() > 1e-9 {
+            return None;
+        }
+        let mut store = Self::default();
+        for obj in json_array_objects(text, "factors")? {
+            let shard = json_num(&obj, "shard")? as usize;
+            let class = class_from_name(&json_str(&obj, "op_class")?)?;
+            let exec = executor_from_name(&json_str(&obj, "executor")?)?;
+            let energy = json_num(&obj, "energy")?;
+            let latency = json_num(&obj, "latency")?;
+            let samples = json_num(&obj, "samples")? as u64;
+            if !energy.is_finite() || !latency.is_finite() {
+                return None;
+            }
+            store.factors.insert(
+                (shard, class as usize, executor_index(exec)),
+                CalibrationFactor {
+                    energy: energy.clamp(CalibrationFactor::MIN, CalibrationFactor::MAX),
+                    latency: latency.clamp(CalibrationFactor::MIN, CalibrationFactor::MAX),
+                    samples,
+                },
+            );
+        }
+        for obj in json_array_objects(text, "committed")? {
+            let shard = json_num(&obj, "shard")? as usize;
+            let class = class_from_name(&json_str(&obj, "op_class")?)?;
+            let exec = executor_from_name(&json_str(&obj, "executor")?)?;
+            store.committed.insert((shard, class as usize), exec);
+        }
+        Some(store)
+    }
+
+    /// Load a snapshot; a missing or corrupt file yields the empty store
+    /// (pure analytic fallback), never an error.
+    pub fn load(path: &Path) -> Self {
+        std::fs::read_to_string(path)
+            .ok()
+            .and_then(|t| Self::from_json(&t))
+            .unwrap_or_default()
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json())
+    }
+}
+
+// ---- minimal JSON field scanners (flat objects, string/number values) ----
+
+/// The raw text after `"key":`, if present.
+fn json_value_after<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = text.find(&pat)?;
+    Some(text[at + pat.len()..].trim_start())
+}
+
+fn json_num(text: &str, key: &str) -> Option<f64> {
+    let rest = json_value_after(text, key)?;
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn json_str(text: &str, key: &str) -> Option<String> {
+    let rest = json_value_after(text, key)?;
+    let rest = rest.strip_prefix('"')?;
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+/// The `{...}` objects inside the flat array at `"key": [...]` (no
+/// nested objects or strings containing braces — true for our format).
+fn json_array_objects(text: &str, key: &str) -> Option<Vec<String>> {
+    let rest = json_value_after(text, key)?;
+    let rest = rest.strip_prefix('[')?;
+    let body = &rest[..rest.find(']')?];
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in body.char_indices() {
+        match c {
+            '{' => {
+                if depth == 0 {
+                    start = i;
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth = depth.checked_sub(1)?;
+                if depth == 0 {
+                    out.push(body[start..=i].to_string());
+                }
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 {
+        return None;
+    }
+    Some(out)
+}
+
+/// Process-global shared store handle: the REPL's `calibration`
+/// commands and long-lived daemons read/reset through this; serve
+/// queues mirror their store into it after every absorb.
+pub type SharedCalibration = Arc<Mutex<CalibrationStore>>;
+
+static SHARED: OnceLock<SharedCalibration> = OnceLock::new();
+
+/// The process-global [`SharedCalibration`] cell.
+pub fn shared() -> &'static SharedCalibration {
+    SHARED.get_or_init(|| Arc::new(Mutex::new(CalibrationStore::new())))
+}
+
+/// The adaptive cost model: a base analytic [`PlanCostModel`] wrapped by
+/// the runtime-adaption store, exposing one EFFECTIVE model per shard
+/// (scaled tables + committed routing pins).
+#[derive(Clone, Debug)]
+pub struct CalibratedCostModel {
+    base: PlanCostModel,
+    store: CalibrationStore,
+    shards: usize,
+    /// Routing flips commit only after this many consecutive absorbs
+    /// prefer the same non-committed executor.
+    sustain: u32,
+    effective: Vec<PlanCostModel>,
+}
+
+impl CalibratedCostModel {
+    /// Default flip hysteresis: three consecutive disagreeing absorbs.
+    pub const DEFAULT_SUSTAIN: u32 = 3;
+
+    pub fn new(base: PlanCostModel, shards: usize) -> Self {
+        Self::with_store(base, shards, CalibrationStore::new())
+    }
+
+    /// Wrap `base` with a pre-loaded store (e.g. a persisted snapshot).
+    pub fn with_store(base: PlanCostModel, shards: usize, store: CalibrationStore) -> Self {
+        let mut m = Self {
+            base,
+            store,
+            shards: shards.max(1),
+            sustain: Self::DEFAULT_SUSTAIN,
+            effective: Vec::new(),
+        };
+        m.rebuild();
+        m
+    }
+
+    pub fn set_sustain(&mut self, sustain: u32) {
+        self.sustain = sustain.max(1);
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.base.objective
+    }
+
+    pub fn base(&self) -> &PlanCostModel {
+        &self.base
+    }
+
+    pub fn store(&self) -> &CalibrationStore {
+        &self.store
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The effective model for one shard (scaled tables + routing pin).
+    pub fn shard_model(&self, shard: usize) -> &PlanCostModel {
+        &self.effective[shard.min(self.effective.len() - 1)]
+    }
+
+    /// The effective routing decision for one (shard, class).
+    pub fn choose_class(&self, shard: usize, class: OpClass) -> Executor {
+        self.shard_model(shard).choose_class(class).executor
+    }
+
+    /// Whether the fused dual datapath applies: every shard's dual ops
+    /// route to ADRA under the current calibration.
+    pub fn fuse_dual_on_adra(&self) -> bool {
+        (0..self.shards).all(|s| self.choose_class(s, OpClass::Dual) == Executor::Adra)
+    }
+
+    /// Fold one run's samples into the store: EWMA the correction
+    /// factors, advance the flip hysteresis, rebuild the effective
+    /// models.  Returns `true` when any committed routing changed (the
+    /// caller should re-sync worker routing).
+    pub fn absorb(&mut self, samples: &[CalibrationSample]) -> bool {
+        let mut touched: Vec<(usize, usize)> = Vec::new();
+        // per-class error accumulation for the convergence EWMA
+        let mut class_err: BTreeMap<usize, (f64, f64)> = BTreeMap::new();
+        for s in samples {
+            if s.ops == 0 {
+                continue;
+            }
+            let pe = s.predicted.energy.total();
+            let pl = s.predicted.latency;
+            if pe <= 0.0 || pl <= 0.0 {
+                continue;
+            }
+            let ratio_e = s.measured.energy.total() / pe;
+            let ratio_l = s.measured.latency / pl;
+            if !ratio_e.is_finite() || !ratio_l.is_finite() {
+                continue;
+            }
+            let key = (s.shard, s.op_class as usize, executor_index(s.executor));
+            let f = self.store.factors.entry(key).or_default();
+            // `predicted` already carries the current factor, so the new
+            // TOTAL factor target is current * (measured / predicted)
+            f.fold(f.energy * ratio_e, f.latency * ratio_l);
+            if !touched.contains(&(s.shard, s.op_class as usize)) {
+                touched.push((s.shard, s.op_class as usize));
+            }
+            let e = class_err.entry(s.op_class as usize).or_insert((0.0, 0.0));
+            e.0 += s.measured.energy.total();
+            e.1 += pe;
+        }
+        for (ci, (meas, pred)) in class_err {
+            let err = (meas / pred - 1.0).abs();
+            let slot = self.store.error_ewma.entry(ci).or_insert(err);
+            *slot += ALPHA * (err - *slot);
+        }
+
+        // hysteresis: the scaled-score preference must disagree with the
+        // committed decision for `sustain` consecutive absorbs to flip
+        let mut flipped = false;
+        for (shard, ci) in touched {
+            let class = OpClass::ALL[ci];
+            let preferred = self.preferred(shard, class);
+            let committed = *self
+                .store
+                .committed
+                .entry((shard, ci))
+                .or_insert_with(|| self.base.choose_class(class).executor);
+            if preferred == committed {
+                self.store.pending.remove(&(shard, ci));
+                continue;
+            }
+            let entry = self.store.pending.entry((shard, ci)).or_insert((preferred, 0));
+            if entry.0 != preferred {
+                *entry = (preferred, 0);
+            }
+            entry.1 += 1;
+            if entry.1 >= self.sustain {
+                self.store.committed.insert((shard, ci), preferred);
+                self.store.pending.remove(&(shard, ci));
+                flipped = true;
+            }
+        }
+        self.rebuild();
+        flipped
+    }
+
+    /// What the scaled (factor-corrected, UNpinned) tables prefer for
+    /// one (shard, class) — the hysteresis candidate.
+    fn preferred(&self, shard: usize, class: OpClass) -> Executor {
+        let m = self.scaled_model(shard, false);
+        m.choose_class(class).executor
+    }
+
+    /// Build one shard's model from the base tables scaled by the
+    /// stored factors; `pin` additionally applies committed routing.
+    fn scaled_model(&self, shard: usize, pin: bool) -> PlanCostModel {
+        let mut adra = self.base.adra().clone();
+        let mut baseline = self.base.baseline().clone();
+        for class in OpClass::ALL {
+            let fa = self.store.factor(shard, class, Executor::Adra);
+            adra = adra.scaled_class(class, fa.energy, fa.latency);
+            let fb = self.store.factor(shard, class, Executor::Baseline);
+            baseline = baseline.scaled_class(class, fb.energy, fb.latency);
+        }
+        let mut m = PlanCostModel::with_tables(self.base.objective, adra, baseline);
+        if pin {
+            for class in OpClass::ALL {
+                if let Some(exec) = self.store.committed(shard, class) {
+                    m.pin_class(class, Some(exec));
+                }
+            }
+        }
+        m
+    }
+
+    fn rebuild(&mut self) {
+        let models: Vec<PlanCostModel> =
+            (0..self.shards).map(|s| self.scaled_model(s, true)).collect();
+        self.effective = models;
+    }
+
+    /// Replace the store wholesale (REPL `calibration reset` path).
+    pub fn reset(&mut self) {
+        self.store.clear();
+        self.rebuild();
+    }
+
+    /// Push the committed routing pins down to the coordinator's
+    /// workers so their `PlannedEngine`s dispatch the way the
+    /// calibrated plan was priced.  Fire-and-forget is safe: per-worker
+    /// channels are FIFO, so the pins land before any later batch.
+    pub fn sync_routing(&self, coord: &Coordinator) {
+        for shard in 0..self.shards {
+            let mut forced = [None; 4];
+            for class in OpClass::ALL {
+                forced[class as usize] = self.store.committed(shard, class);
+            }
+            // a shard the coordinator doesn't have is simply skipped
+            let _ = coord.set_routing(shard, forced);
+        }
+    }
+
+    /// Publish the factor gauges + the runaway-watch distortion gauge.
+    pub fn publish(&self, reg: &Registry) {
+        for (&(shard, ci, ei), f) in &self.store.factors {
+            let shard_s = shard.to_string();
+            let class = OpClass::ALL[ci].name();
+            let exec = executor_from_index(ei).expect("stored executor index").name();
+            for (kind, v) in [("energy", f.energy), ("latency", f.latency)] {
+                reg.gauge(
+                    "adra.planner.calibration",
+                    "runtime correction factor (measured/analytic) per shard/class/executor",
+                    &[
+                        ("op_class", class),
+                        ("shard", shard_s.as_str()),
+                        ("executor", exec),
+                        ("kind", kind),
+                    ],
+                )
+                .set(v);
+            }
+        }
+        reg.gauge(
+            "adra.planner.calibration_distortion",
+            "worst calibration factor distortion max(f, 1/f); 1.0 = analytic",
+            &[],
+        )
+        .set(self.store.max_distortion());
+        for (&ci, err) in &self.store.error_ewma {
+            reg.gauge(
+                "adra.planner.calibration_error",
+                "EWMA of |measured/predicted - 1| (energy) under calibration",
+                &[("op_class", OpClass::ALL[ci].name())],
+            )
+            .set(*err);
+        }
+    }
+}
+
+/// Shard-aware placement through the calibrated model: shard `i` is
+/// lowered with `cal.shard_model(i)` so both prices and routing carry
+/// that shard's learned corrections.
+pub fn place_calibrated(
+    program: &Program,
+    cfg: &SimConfig,
+    shards: usize,
+    cal: &CalibratedCostModel,
+) -> Result<Placement, PlanError> {
+    place_with(program, cfg, shards, |s| cal.shard_model(s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SensingScheme, SimConfig};
+    use crate::energy::EnergyBreakdown;
+
+    fn base(scheme: SensingScheme, objective: Objective) -> PlanCostModel {
+        PlanCostModel::new(&SimConfig::square(1024, scheme), objective)
+    }
+
+    fn cost(energy: f64, latency: f64) -> OpCost {
+        OpCost { energy: EnergyBreakdown { rbl: energy, ..Default::default() }, latency }
+    }
+
+    fn sample(
+        shard: usize,
+        class: OpClass,
+        executor: Executor,
+        predicted: OpCost,
+        measured: OpCost,
+    ) -> CalibrationSample {
+        CalibrationSample { shard, op_class: class, executor, predicted, measured, ops: 8 }
+    }
+
+    #[test]
+    fn exact_tables_leave_factors_and_routing_untouched() {
+        let mut cal = CalibratedCostModel::new(base(SensingScheme::Current, Objective::Edp), 2);
+        let p = cost(1.0, 1.0);
+        for _ in 0..5 {
+            let flipped = cal.absorb(&[sample(0, OpClass::Dual, Executor::Adra, p, p)]);
+            assert!(!flipped);
+        }
+        let f = cal.store().factor(0, OpClass::Dual, Executor::Adra);
+        assert!((f.energy - 1.0).abs() < 1e-12 && (f.latency - 1.0).abs() < 1e-12);
+        assert_eq!(cal.choose_class(0, OpClass::Dual), Executor::Adra);
+        assert!(cal.fuse_dual_on_adra());
+        assert!(cal.store().class_error(OpClass::Dual).unwrap() < 1e-12);
+    }
+
+    #[test]
+    fn factors_converge_to_measured_ratio_and_stay_clamped() {
+        let mut cal = CalibratedCostModel::new(base(SensingScheme::Current, Objective::Edp), 1);
+        // measured energy is consistently 2x the (current effective)
+        // prediction; note absorb rebuilds the effective model, so the
+        // sample's predicted must track the evolving factor — emulate a
+        // real loop by pricing through the shard model each round
+        for _ in 0..64 {
+            let table = cal.shard_model(0).adra().dual.cost;
+            let meas_base = cal.base().adra().dual.cost;
+            let measured = OpCost {
+                energy: meas_base.energy.scale(2.0),
+                latency: meas_base.latency,
+            };
+            cal.absorb(&[sample(0, OpClass::Dual, Executor::Adra, table, measured)]);
+        }
+        let f = cal.store().factor(0, OpClass::Dual, Executor::Adra);
+        assert!((f.energy - 2.0).abs() < 1e-3, "factor converges to 2.0: {}", f.energy);
+        assert!((f.latency - 1.0).abs() < 1e-6);
+        // the convergence witness: error EWMA has shrunk to ~0
+        assert!(cal.store().class_error(OpClass::Dual).unwrap() < 0.02);
+
+        // a wild run cannot leave the clamp band
+        let table = cal.shard_model(0).adra().dual.cost;
+        let wild = OpCost { energy: table.energy.scale(1e6), latency: table.latency * 1e6 };
+        cal.absorb(&[sample(0, OpClass::Dual, Executor::Adra, table, wild)]);
+        let f = cal.store().factor(0, OpClass::Dual, Executor::Adra);
+        assert!(f.energy <= CalibrationFactor::MAX && f.latency <= CalibrationFactor::MAX);
+    }
+
+    /// Synthetic tables with controlled dual prices (every other class
+    /// priced 1.0 on both executors) — makes the preference boundary
+    /// exact so the hysteresis timing is deterministic.
+    fn synth(adra_dual: f64, baseline_dual: f64) -> PlanCostModel {
+        use super::super::cost::{CostTable, TableCost};
+        let mk = |e: f64| TableCost { cost: cost(e, 1.0), accesses: 1 };
+        let adra = CostTable {
+            executor: Executor::Adra,
+            read: mk(1.0),
+            write: mk(1.0),
+            commutative: mk(1.0),
+            dual: mk(adra_dual),
+        };
+        let baseline = CostTable {
+            executor: Executor::Baseline,
+            read: mk(1.0),
+            write: mk(1.0),
+            commutative: mk(1.0),
+            dual: mk(baseline_dual),
+        };
+        PlanCostModel::with_tables(Objective::Energy, adra, baseline)
+    }
+
+    /// One drift round: measured energy is `k` times the current
+    /// effective prediction (latency agrees).
+    fn drift_round(cal: &mut CalibratedCostModel, k: f64) -> bool {
+        let predicted = cal.shard_model(0).adra().dual.cost;
+        let measured = OpCost { energy: predicted.energy.scale(k), latency: predicted.latency };
+        cal.absorb(&[sample(0, OpClass::Dual, Executor::Adra, predicted, measured)])
+    }
+
+    #[test]
+    fn routing_flips_only_after_sustain_threshold() {
+        // analytic tables say ADRA dual (1.0) beats baseline (3.0);
+        // every measured round says ADRA really costs 8x its prediction,
+        // which slams the factor past the boundary in one fold
+        let mut cal = CalibratedCostModel::new(synth(1.0, 3.0), 1);
+        cal.set_sustain(3);
+        let mut flip_round = None;
+        for round in 1..=6 {
+            let flipped = drift_round(&mut cal, 8.0);
+            let routed = cal.choose_class(0, OpClass::Dual);
+            if flipped {
+                assert!(flip_round.is_none(), "at most one flip");
+                flip_round = Some(round);
+            }
+            if flip_round.is_none() {
+                assert_eq!(
+                    routed,
+                    Executor::Adra,
+                    "round {round}: committed routing holds until sustain"
+                );
+            } else {
+                assert_eq!(routed, Executor::Baseline, "round {round}");
+            }
+        }
+        assert_eq!(flip_round, Some(3), "flip commits exactly at the sustain threshold");
+        assert!(!cal.fuse_dual_on_adra(), "fusion follows the calibrated routing");
+        assert_eq!(cal.store().committed(0, OpClass::Dual), Some(Executor::Baseline));
+    }
+
+    #[test]
+    fn agreeing_round_resets_the_flip_streak() {
+        let mut cal = CalibratedCostModel::new(synth(1.0, 3.0), 1);
+        cal.set_sustain(3);
+        // round 1: slam -> factor 3.1, preference disagrees (streak 1)
+        assert!(!drift_round(&mut cal, 8.0));
+        assert_eq!(cal.choose_class(0, OpClass::Dual), Executor::Adra);
+        // round 2: measurement matches the ANALYTIC price again -> the
+        // factor decays under the boundary, preference agrees, streak
+        // resets
+        let predicted = cal.shard_model(0).adra().dual.cost;
+        assert!(!cal.absorb(&[sample(
+            0,
+            OpClass::Dual,
+            Executor::Adra,
+            predicted,
+            cost(1.0, 1.0),
+        )]));
+        // rounds 3-4: drift resumes; had the streak NOT reset, round 4
+        // would commit the flip
+        assert!(!drift_round(&mut cal, 8.0));
+        assert!(!drift_round(&mut cal, 8.0), "round 4 must not flip — the streak was reset");
+        assert_eq!(cal.choose_class(0, OpClass::Dual), Executor::Adra);
+        // round 5 completes a fresh 3-round streak
+        assert!(drift_round(&mut cal, 8.0));
+        assert_eq!(cal.choose_class(0, OpClass::Dual), Executor::Baseline);
+    }
+
+    /// The paper-grounded scenario: scheme 1 + Energy objective, where
+    /// the TRUE optimum for dual ops is the baseline (Fig. 6: ADRA costs
+    /// ~1.21x the baseline's energy).  A base model that underprices
+    /// ADRA dual energy wrongly routes dual -> ADRA; honest measurements
+    /// walk the factor up until routing converges to the measured
+    /// optimum.
+    #[test]
+    fn gradual_drift_flips_routing_to_measured_optimum() {
+        let honest = base(SensingScheme::VoltagePrecharged, Objective::Energy);
+        assert_eq!(honest.choose_class(OpClass::Dual).executor, Executor::Baseline);
+        let lying_adra = honest.adra().scaled_class(OpClass::Dual, 0.5, 1.0);
+        let lying =
+            PlanCostModel::with_tables(Objective::Energy, lying_adra, honest.baseline().clone());
+        assert_eq!(lying.choose_class(OpClass::Dual).executor, Executor::Adra);
+
+        let mut cal = CalibratedCostModel::new(lying, 1);
+        cal.set_sustain(3);
+        let mut flip_round = None;
+        for round in 1..=16 {
+            let predicted = cal.shard_model(0).adra().dual.cost;
+            let measured = honest.adra().dual.cost; // the hardware doesn't lie
+            if cal.absorb(&[sample(0, OpClass::Dual, Executor::Adra, predicted, measured)]) {
+                flip_round = Some(round);
+                break;
+            }
+        }
+        let flip = flip_round.expect("sustained honest drift must flip routing");
+        assert!(flip >= 3, "no flip before the sustain threshold: {flip}");
+        assert_eq!(cal.choose_class(0, OpClass::Dual), Executor::Baseline);
+        // and the correction converged toward the real 2x energy ratio
+        let f = cal.store().factor(0, OpClass::Dual, Executor::Adra);
+        assert!(f.energy > 1.5, "factor walked toward 2.0: {}", f.energy);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_factors_and_routing() {
+        let mut cal = CalibratedCostModel::new(base(SensingScheme::Current, Objective::Edp), 3);
+        let p = cost(4.0, 2.0);
+        let m = cost(6.0, 2.5);
+        cal.absorb(&[
+            sample(0, OpClass::Dual, Executor::Adra, p, m),
+            sample(2, OpClass::Commutative, Executor::Baseline, p, cost(2.0, 1.0)),
+        ]);
+        let store = cal.store().clone();
+        assert!(!store.is_empty());
+
+        let dir = std::env::temp_dir().join(format!("adra_cal_{}", std::process::id()));
+        let path = dir.join("snapshot.json");
+        store.save(&path).expect("save snapshot");
+        let loaded = CalibrationStore::load(&path);
+        for shard in 0..3 {
+            for class in OpClass::ALL {
+                for exec in [Executor::Adra, Executor::Baseline] {
+                    let a = store.factor(shard, class, exec);
+                    let b = loaded.factor(shard, class, exec);
+                    assert!((a.energy - b.energy).abs() < 1e-12, "{shard} {class:?} {exec:?}");
+                    assert!((a.latency - b.latency).abs() < 1e-12);
+                    assert_eq!(a.samples, b.samples);
+                }
+                assert_eq!(store.committed(shard, class), loaded.committed(shard, class));
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_or_corrupt_snapshot_falls_back_to_analytic() {
+        let missing = CalibrationStore::load(Path::new("/nonexistent/adra/cal.json"));
+        assert!(missing.is_empty());
+
+        let dir = std::env::temp_dir().join(format!("adra_cal_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, text) in [
+            ("truncated.json", "{\"version\":1,\"factors\":[{\"shard\":0,"),
+            ("not_json.json", "hello world"),
+            ("wrong_version.json", "{\"version\":9,\"factors\":[],\"committed\":[]}"),
+            (
+                "nan.json",
+                "{\"version\":1,\"factors\":[{\"shard\":0,\"op_class\":\"dual\",\
+                 \"executor\":\"adra\",\"energy\":NaN,\"latency\":1.0,\"samples\":1}],\
+                 \"committed\":[]}",
+            ),
+        ] {
+            let p = dir.join(name);
+            std::fs::write(&p, text).unwrap();
+            let loaded = CalibrationStore::load(&p);
+            assert!(loaded.is_empty(), "{name} must fall back to the analytic store");
+        }
+        // a loaded out-of-band factor is clamped into the safety band
+        let p = dir.join("outband.json");
+        std::fs::write(
+            &p,
+            "{\"version\":1,\"factors\":[{\"shard\":0,\"op_class\":\"dual\",\
+             \"executor\":\"adra\",\"energy\":99.0,\"latency\":0.001,\"samples\":2}],\
+             \"committed\":[]}",
+        )
+        .unwrap();
+        let f = CalibrationStore::load(&p).factor(0, OpClass::Dual, Executor::Adra);
+        assert_eq!(f.energy, CalibrationFactor::MAX);
+        assert_eq!(f.latency, CalibrationFactor::MIN);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restored_store_keeps_committed_routing_without_new_samples() {
+        let honest = base(SensingScheme::VoltagePrecharged, Objective::Energy);
+        let lying_adra = honest.adra().scaled_class(OpClass::Dual, 0.5, 1.0);
+        let lying =
+            PlanCostModel::with_tables(Objective::Energy, lying_adra, honest.baseline().clone());
+        let mut cal = CalibratedCostModel::new(lying.clone(), 1);
+        cal.set_sustain(2);
+        for _ in 0..4 {
+            let predicted = cal.shard_model(0).adra().dual.cost;
+            let measured = honest.adra().dual.cost;
+            cal.absorb(&[sample(0, OpClass::Dual, Executor::Adra, predicted, measured)]);
+        }
+        assert_eq!(cal.choose_class(0, OpClass::Dual), Executor::Baseline);
+        // "restart": a fresh wrapper around the same (persisted) store
+        let restored = CalibratedCostModel::with_store(lying, 1, cal.store().clone());
+        assert_eq!(
+            restored.choose_class(0, OpClass::Dual),
+            Executor::Baseline,
+            "committed routing survives the restart"
+        );
+    }
+}

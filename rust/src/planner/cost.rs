@@ -173,6 +173,22 @@ impl CostTable {
             OpClass::Dual => self.dual,
         }
     }
+
+    /// A copy of this table with one class's energy and latency scaled by
+    /// runtime correction factors.  Accesses are untouched — calibration
+    /// corrects prices, never the access-count accounting.
+    pub fn scaled_class(&self, class: OpClass, energy_k: f64, latency_k: f64) -> Self {
+        let mut t = self.clone();
+        let row = match class {
+            OpClass::Read => &mut t.read,
+            OpClass::Write => &mut t.write,
+            OpClass::Commutative => &mut t.commutative,
+            OpClass::Dual => &mut t.dual,
+        };
+        row.cost.energy = row.cost.energy.scale(energy_k);
+        row.cost.latency *= latency_k;
+        t
+    }
 }
 
 /// The planner's routing decision for one op.
@@ -244,11 +260,17 @@ impl TierCostModel {
 
     /// Expected host cost of one `width`-column dual-row activation:
     /// packed word ops for the whole span plus analog evaluation of the
-    /// expected marginal minority.
+    /// expected marginal minority.  A fully-analog blend
+    /// (`cell_det_fraction == 0`) never fills the packed plane, so the
+    /// packed-word term is charged only when the packed path engages.
     pub fn activation_host_cost(&self, width: usize) -> f64 {
-        let words = ((width + 63) / 64) as f64;
         let marginal = (1.0 - self.column_det_fraction()) * width as f64;
-        words * self.packed_word_cost + marginal * self.analog_col_cost
+        let packed = if self.cell_det_fraction > 0.0 {
+            (((width + 63) / 64) as f64) * self.packed_word_cost
+        } else {
+            0.0
+        };
+        packed + marginal * self.analog_col_cost
     }
 }
 
@@ -262,6 +284,12 @@ pub struct PlanCostModel {
     /// Host-side tier cost (per-column-fraction digital/analog blend);
     /// advisory — never feeds the modeled-hardware routing above.
     tier: TierCostModel,
+    /// Per-class routing pins, indexed by `OpClass as usize`.  `None`
+    /// (the default everywhere) keeps score-based routing; `Some` forces
+    /// the executor regardless of the score comparison.  The calibration
+    /// layer (`planner::calibrate`) uses pins to hold a committed routing
+    /// decision steady under hysteresis.
+    pinned: [Option<Executor>; 4],
 }
 
 impl PlanCostModel {
@@ -272,17 +300,39 @@ impl PlanCostModel {
     }
 
     pub fn from_model(model: &EnergyModel, objective: Objective) -> Self {
+        Self::with_tables(objective, CostTable::adra(model), CostTable::baseline(model))
+    }
+
+    /// Build a model directly from price tables (no score re-derivation,
+    /// no config).  This is how the calibration layer builds per-shard
+    /// effective models with runtime-scaled tables, and how tests inject
+    /// deliberately mis-calibrated prices.
+    pub fn with_tables(objective: Objective, adra: CostTable, baseline: CostTable) -> Self {
         Self {
             objective,
-            adra: CostTable::adra(model),
-            baseline: CostTable::baseline(model),
+            adra,
+            baseline,
             // callers without a SimConfig get the clean-digital blend
             tier: TierCostModel {
                 cell_det_fraction: 1.0,
                 packed_word_cost: TierCostModel::PACKED_WORD_COST,
                 analog_col_cost: TierCostModel::ANALOG_COL_COST,
             },
+            pinned: [None; 4],
         }
+    }
+
+    /// Pin (or unpin, with `None`) the routing decision for one op
+    /// class.  Pinned classes bypass the score comparison in
+    /// [`choose_class`] but keep reporting the pinned executor's table
+    /// price, so predictions stay honest.
+    pub fn pin_class(&mut self, class: OpClass, executor: Option<Executor>) {
+        self.pinned[class as usize] = executor;
+    }
+
+    /// The current pin for one op class (`None` = score-based routing).
+    pub fn pinned_class(&self, class: OpClass) -> Option<Executor> {
+        self.pinned[class as usize]
     }
 
     /// The host-side tier cost model (per-column-fraction blend).
@@ -317,6 +367,13 @@ impl PlanCostModel {
     /// per op; reporting/UI should call this rather than re-deriving the
     /// score comparison).
     pub fn choose_class(&self, class: OpClass) -> Decision {
+        if let Some(executor) = self.pinned[class as usize] {
+            let cost = match executor {
+                Executor::Adra => self.adra.price_class(class),
+                Executor::Baseline => self.baseline.price_class(class),
+            };
+            return Decision { executor, cost };
+        }
         let a = self.adra.price_class(class);
         let b = self.baseline.price_class(class);
         if self.objective.score(&a.cost) <= self.objective.score(&b.cost) {
@@ -472,6 +529,47 @@ mod tests {
         cfg.mask_policy = MaskPolicy::Write;
         cfg.tier = crate::config::FidelityTier::Lut;
         assert_eq!(TierCostModel::from_config(&cfg).cell_det_fraction, 0.0);
+    }
+
+    /// Regression: a fully-analog blend must not be charged the packed
+    /// word term — the packed path never engages, so the host cost is
+    /// exactly `width * analog_col_cost`.
+    #[test]
+    fn fully_analog_blend_skips_packed_word_term() {
+        let analog = TierCostModel {
+            cell_det_fraction: 0.0,
+            packed_word_cost: 1.0,
+            analog_col_cost: 40.0,
+        };
+        let got = analog.activation_host_cost(1024);
+        assert!(
+            (got - 1024.0 * 40.0).abs() < 1e-9,
+            "pure-analog cost must carry no packed term: {got}"
+        );
+        // any engaged packed fraction pays for the whole-span word ops
+        let engaged = TierCostModel { cell_det_fraction: 0.5, ..analog };
+        let want = 16.0 + (1.0 - 0.25) * 1024.0 * 40.0;
+        assert!((engaged.activation_host_cost(1024) - want).abs() < 1e-9);
+    }
+
+    /// Routing pins bypass the score comparison (calibration hysteresis
+    /// holds a committed decision through noisy rounds) but report the
+    /// pinned executor's honest table price.
+    #[test]
+    fn pinned_class_overrides_score_based_routing() {
+        let mut m = model(SensingScheme::Current, Objective::Edp);
+        assert_eq!(m.pinned_class(OpClass::Dual), None);
+        assert_eq!(m.choose(&op_sub()).executor, Executor::Adra);
+
+        m.pin_class(OpClass::Dual, Some(Executor::Baseline));
+        let d = m.choose(&op_sub());
+        assert_eq!(d.executor, Executor::Baseline);
+        assert_eq!(d.cost, m.baseline().price_class(OpClass::Dual), "pinned price is honest");
+        // other classes keep score-based routing
+        assert_eq!(m.choose_class(OpClass::Read).executor, Executor::Adra);
+
+        m.pin_class(OpClass::Dual, None);
+        assert_eq!(m.choose(&op_sub()).executor, Executor::Adra, "unpin restores scoring");
     }
 
     #[test]

@@ -81,6 +81,16 @@ impl Engine for PlannedEngine {
         Some(results)
     }
 
+    /// Calibrated routing override: pin each op class to the executor the
+    /// calibration loop committed (`None` restores score-based choice), so
+    /// this engine dispatches the way the calibrated plan was priced.
+    fn set_routing(&mut self, forced: [Option<Executor>; 4]) {
+        use super::cost::OpClass;
+        for class in [OpClass::Read, OpClass::Write, OpClass::Commutative, OpClass::Dual] {
+            self.model.pin_class(class, forced[class as usize]);
+        }
+    }
+
     fn array_stats(&self) -> Option<crate::array::ArrayStats> {
         // both halves touch real array state; report the sum so the pool
         // sees every access (the baseline mirror's writes included)

@@ -26,12 +26,17 @@
 //!        +---- PlanCostModel -----+--- PredictionReport <-- metrics
 //! ```
 
+pub mod calibrate;
 pub mod cost;
 pub mod engine;
 pub mod ir;
 pub mod lower;
 pub mod place;
 
+pub use calibrate::{
+    place_calibrated, CalibratedCostModel, CalibrationFactor, CalibrationSample,
+    CalibrationStore, SharedCalibration,
+};
 pub use cost::{
     class_of, CostTable, Decision, Executor, Objective, OpClass, PlanCostModel, TableCost,
     TierCostModel,
@@ -39,4 +44,6 @@ pub use cost::{
 pub use engine::{planned_coordinator, PlannedEngine};
 pub use ir::{AggKind, IrOp, Layout, PlanError, Predicate, Program, RecordRange, ScratchRow};
 pub use lower::{lower, LoweredProgram, RoutedOp, StepSpan};
-pub use place::{place, ExecError, ExecutionReport, Placement, Reduction, ShardPlan, StepOutput};
+pub use place::{
+    place, place_with, ExecError, ExecutionReport, Placement, Reduction, ShardPlan, StepOutput,
+};

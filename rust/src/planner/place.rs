@@ -59,6 +59,22 @@ pub fn place(
     shards: usize,
     model: &PlanCostModel,
 ) -> Result<Placement, PlanError> {
+    place_with(program, cfg, shards, |_| model)
+}
+
+/// Placement with a per-shard cost model: the calibration layer lowers
+/// each shard's slice through that shard's runtime-corrected effective
+/// model (`planner::calibrate::place_calibrated`); `place` is the
+/// constant-model special case.
+pub fn place_with<'a, F>(
+    program: &Program,
+    cfg: &SimConfig,
+    shards: usize,
+    model_of: F,
+) -> Result<Placement, PlanError>
+where
+    F: Fn(usize) -> &'a PlanCostModel,
+{
     if shards == 0 {
         return Err(PlanError::Empty("0 shards".into()));
     }
@@ -84,7 +100,7 @@ pub fn place(
                 ir_map.push(ir_index);
             }
         }
-        let lowered = lower(&sub, cfg, model)?;
+        let lowered = lower(&sub, cfg, model_of(shard))?;
         plans.push(ShardPlan { shard, record_offset: lo, program: sub, lowered, ir_map });
     }
     let mut predicted = OpCost::default();
@@ -195,6 +211,10 @@ pub struct ExecutionReport {
     /// The coordinator's cumulative metrics snapshot after the run.
     pub coordinator_metrics: RunMetrics,
     pub ops_executed: usize,
+    /// Per-(shard, op class, executor) predicted-vs-measured aggregates
+    /// over this run's EXECUTED ops — the calibration loop's input
+    /// signal (`planner::calibrate::CalibratedCostModel::absorb`).
+    pub samples: Vec<crate::planner::calibrate::CalibrationSample>,
 }
 
 impl Placement {
@@ -247,6 +267,9 @@ impl Placement {
         // per-op-class predicted/measured accumulation over EXECUTED ops
         // only (skipped = deduped/cached ops predicted nothing measurable)
         let mut per_class = [(OpCost::default(), OpCost::default(), 0u64); 4];
+        // finer-grained accumulation for the calibration loop: keyed by
+        // (shard, class, executor) so corrections stay shard-local
+        let mut samples: Vec<crate::planner::calibrate::CalibrationSample> = Vec::new();
 
         for (sp, results) in self.shards.iter().zip(&per_shard) {
             debug_assert_eq!(results.len(), sp.lowered.ops.len());
@@ -268,10 +291,28 @@ impl Placement {
                     measured = measured.then(&r.cost);
                     ops_executed += 1;
                     let routed = &sp.lowered.ops[idx];
-                    let slot = &mut per_class[class_of(&routed.op) as usize];
+                    let class = class_of(&routed.op);
+                    let slot = &mut per_class[class as usize];
                     slot.0 = slot.0.then(&routed.predicted);
                     slot.1 = slot.1.then(&r.cost);
                     slot.2 += 1;
+                    match samples.iter_mut().find(|s| {
+                        s.shard == sp.shard && s.op_class == class && s.executor == routed.executor
+                    }) {
+                        Some(s) => {
+                            s.predicted = s.predicted.then(&routed.predicted);
+                            s.measured = s.measured.then(&r.cost);
+                            s.ops += 1;
+                        }
+                        None => samples.push(crate::planner::calibrate::CalibrationSample {
+                            shard: sp.shard,
+                            op_class: class,
+                            executor: routed.executor,
+                            predicted: routed.predicted,
+                            measured: r.cost,
+                            ops: 1,
+                        }),
+                    }
                     merge_result(
                         &mut outputs[global_ir],
                         sub_op,
@@ -302,6 +343,7 @@ impl Placement {
             prediction,
             coordinator_metrics,
             ops_executed,
+            samples,
         })
     }
 }

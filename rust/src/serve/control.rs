@@ -13,10 +13,13 @@
 //!   Per-tenant FIFO order is always preserved (bit-identity with that
 //!   tenant's sequential program order depends on it); only the
 //!   interleaving ACROSS tenants changes.  Weights come from the
-//!   per-tenant latency histograms `ServeMetrics` keeps
-//!   ([`service_weights`]): a tenant whose served-program share exceeds
-//!   the fair share has its weight scaled down, so its virtual time
-//!   advances faster and it cedes slots.
+//!   RECENT service window ([`ServiceWindow`] + [`service_weights`]):
+//!   per-round deltas of each tenant's served-program count and modeled
+//!   energy (calibrated, see `planner::calibrate`) are EWMA-folded, and
+//!   a tenant whose windowed share of either exceeds the fair share has
+//!   its weight scaled down, so its virtual time advances faster and it
+//!   cedes slots — while an ex-heavy tenant's depressed weight decays
+//!   back to 1.0 as its window empties.
 //! * [`BatchController`] — an EWMA controller over observed round wall
 //!   time with a p95 latency target.  While rounds saturate the current
 //!   ceiling, wall above target shrinks `max_round` one step (smaller
@@ -62,19 +65,113 @@ pub struct RoundAdmission<T> {
     pub deferred: u64,
 }
 
-/// Admission weights from the per-tenant latency histograms: each
-/// tenant's share of served programs (histogram count) above the fair
-/// share scales its weight below 1.0, clamped to [0.25, 1.0].  Tenants
-/// with no history default to 1.0 at the call site.
-pub fn service_weights(latency: &HashMap<usize, LatencyHistogram>) -> HashMap<usize, f64> {
-    let total: u64 = latency.values().map(|h| h.count()).sum();
-    if total == 0 || latency.len() < 2 {
+/// Windowed per-tenant service accounting behind [`service_weights`].
+///
+/// The histograms in `ServeMetrics` are CUMULATIVE, so dividing by
+/// `h.count()` weighted tenants by their lifetime history: an ex-heavy
+/// tenant stayed depressed forever.  This window keeps, per tenant, the
+/// delta since the last round (the same counter-delta derivation the
+/// `SeriesStore` uses) folded into an EWMA, so only *recent* service
+/// share moves the weight and a reformed tenant decays back to 1.0.
+#[derive(Debug, Default)]
+pub struct ServiceWindow {
+    /// Last cumulative (programs, energy) snapshot per tenant.
+    last: HashMap<usize, (u64, f64)>,
+    /// EWMA of the per-round (programs, energy) deltas per tenant.
+    recent: HashMap<usize, (f64, f64)>,
+    alpha: f64,
+}
+
+impl ServiceWindow {
+    /// Default new-sample weight: heavy history decays below the 0.25
+    /// clamp's reach within a handful of quiet rounds.
+    const ALPHA: f64 = 0.5;
+
+    pub fn new() -> Self {
+        Self::with_alpha(Self::ALPHA)
+    }
+
+    pub fn with_alpha(alpha: f64) -> Self {
+        Self { last: HashMap::new(), recent: HashMap::new(), alpha: alpha.clamp(0.01, 1.0) }
+    }
+
+    /// Fold one round's cumulative snapshots (per-tenant latency
+    /// histograms + modeled energy totals) into the window.  The first
+    /// observation of a tenant seeds its EWMA at the full delta, so a
+    /// flood registers immediately.
+    pub fn observe(
+        &mut self,
+        latency: &HashMap<usize, LatencyHistogram>,
+        energy: &HashMap<usize, f64>,
+    ) {
+        for (&t, h) in latency {
+            let cum_p = h.count();
+            let cum_e = energy.get(&t).copied().unwrap_or(0.0);
+            let (last_p, last_e) = self.last.get(&t).copied().unwrap_or((0, 0.0));
+            let dp = cum_p.saturating_sub(last_p) as f64;
+            let de = (cum_e - last_e).max(0.0);
+            self.last.insert(t, (cum_p, cum_e));
+            match self.recent.get_mut(&t) {
+                Some((rp, re)) => {
+                    *rp += self.alpha * (dp - *rp);
+                    *re += self.alpha * (de - *re);
+                }
+                None => {
+                    self.recent.insert(t, (dp, de));
+                }
+            }
+        }
+    }
+
+    /// The tenant's recent served-program EWMA (testing/reporting).
+    pub fn recent_programs(&self, tenant: usize) -> f64 {
+        self.recent.get(&tenant).map(|&(p, _)| p).unwrap_or(0.0)
+    }
+}
+
+/// Admission weights from the RECENT per-tenant service window: a tenant
+/// whose windowed share of served programs — or of calibrated modeled
+/// energy, whichever is more dominant — exceeds the fair share has its
+/// weight scaled down, clamped to [0.25, 1.0].  Tenants with no recent
+/// service recover full weight as their window decays; tenants with no
+/// history default to 1.0 at the call site.
+pub fn service_weights(
+    window: &mut ServiceWindow,
+    latency: &HashMap<usize, LatencyHistogram>,
+    energy: &HashMap<usize, f64>,
+) -> HashMap<usize, f64> {
+    window.observe(latency, energy);
+    let n = latency.len();
+    if n < 2 {
         return latency.keys().map(|&t| (t, 1.0)).collect();
     }
-    let fair = total as f64 / latency.len() as f64;
-    latency
+    let recent: Vec<(usize, f64, f64)> = latency
+        .keys()
+        .map(|&t| {
+            let (p, e) = window.recent.get(&t).copied().unwrap_or((0.0, 0.0));
+            (t, p, e)
+        })
+        .collect();
+    let total_p: f64 = recent.iter().map(|&(_, p, _)| p).sum();
+    let total_e: f64 = recent.iter().map(|&(_, _, e)| e).sum();
+    if total_p <= f64::EPSILON {
+        return latency.keys().map(|&t| (t, 1.0)).collect();
+    }
+    let fair_p = total_p / n as f64;
+    let fair_e = total_e / n as f64;
+    recent
         .iter()
-        .map(|(&t, h)| (t, (fair / h.count().max(1) as f64).clamp(0.25, 1.0)))
+        .map(|&(t, p, e)| {
+            let wp = (fair_p / p.max(f64::EPSILON)).clamp(0.25, 1.0);
+            let w = if total_e > f64::EPSILON {
+                wp.min((fair_e / e.max(f64::EPSILON)).clamp(0.25, 1.0))
+            } else {
+                wp
+            };
+            // EWMA residue never reaches exactly zero; a near-neutral
+            // weight snaps to 1.0 so a reformed tenant fully recovers
+            (t, if w >= 0.98 { 1.0 } else { w })
+        })
         .collect()
 }
 
@@ -557,17 +654,76 @@ mod tests {
             lat.entry(1).or_default().record(1e-3);
         }
         lat.entry(2).or_default().record(1e-3);
-        let w = service_weights(&lat);
+        let mut win = ServiceWindow::new();
+        let w = service_weights(&mut win, &lat, &HashMap::new());
         assert!(w[&0] < w[&1], "{w:?}");
         assert_eq!(w[&1], 1.0, "fair-share tenants keep full weight");
         assert_eq!(w[&2], 1.0);
         assert!(w[&0] >= 0.25, "clamped");
         // degenerate cases: empty and single-tenant maps are all-neutral
-        assert!(service_weights(&HashMap::new()).is_empty());
+        assert!(service_weights(&mut ServiceWindow::new(), &HashMap::new(), &HashMap::new())
+            .is_empty());
         let mut solo = HashMap::new();
         for _ in 0..9 {
             solo.entry(4usize).or_default().record(1e-3);
         }
-        assert_eq!(service_weights(&solo)[&4], 1.0);
+        assert_eq!(service_weights(&mut ServiceWindow::new(), &solo, &HashMap::new())[&4], 1.0);
+    }
+
+    /// Regression for the lifetime-count bug: a tenant that WAS heavy
+    /// but stops flooding must recover weight 1.0 as its window decays —
+    /// cumulative history alone can never depress it again.
+    #[test]
+    fn reformed_heavy_tenant_recovers_full_weight() {
+        use crate::metrics::LatencyHistogram;
+        let mut lat: HashMap<usize, LatencyHistogram> = HashMap::new();
+        let mut win = ServiceWindow::new();
+
+        // round 1: tenant 0 floods (50 programs), tenant 1 serves 2
+        for _ in 0..50 {
+            lat.entry(0).or_default().record(1e-3);
+        }
+        for _ in 0..2 {
+            lat.entry(1).or_default().record(1e-3);
+        }
+        let w = service_weights(&mut win, &lat, &HashMap::new());
+        // fair share is 26 of 52; the flooder took 50 -> weight ~0.52
+        assert!(w[&0] < 0.6, "flooding tenant is depressed: {w:?}");
+        assert_eq!(w[&1], 1.0);
+
+        // later rounds: both tenants serve 1 program each — the flood is
+        // history, but the CUMULATIVE counts stay wildly lopsided (51+ vs
+        // 3+); the lifetime-count bug kept tenant 0 at the floor forever
+        let mut recovered = Vec::new();
+        for _ in 0..12 {
+            lat.entry(0).or_default().record(1e-3);
+            lat.entry(1).or_default().record(1e-3);
+            recovered = vec![service_weights(&mut win, &lat, &HashMap::new())];
+        }
+        let w = recovered.pop().unwrap();
+        assert_eq!(w[&0], 1.0, "reformed tenant must recover full weight: {w:?}");
+        assert_eq!(w[&1], 1.0);
+    }
+
+    /// The energy dimension: equal program counts but lopsided modeled
+    /// energy scales the energy-heavy tenant down.
+    #[test]
+    fn energy_share_depresses_equal_program_tenants() {
+        use crate::metrics::LatencyHistogram;
+        let mut lat: HashMap<usize, LatencyHistogram> = HashMap::new();
+        for t in 0..2usize {
+            for _ in 0..4 {
+                lat.entry(t).or_default().record(1e-3);
+            }
+        }
+        let mut energy = HashMap::new();
+        energy.insert(0usize, 100.0);
+        energy.insert(1usize, 1.0);
+        let w = service_weights(&mut ServiceWindow::new(), &lat, &energy);
+        assert!(w[&0] < 1.0, "energy-dominant tenant is scaled down: {w:?}");
+        assert_eq!(w[&1], 1.0, "light-energy tenant keeps full weight");
+        // without the energy signal the same counts are perfectly fair
+        let w = service_weights(&mut ServiceWindow::new(), &lat, &HashMap::new());
+        assert_eq!((w[&0], w[&1]), (1.0, 1.0));
     }
 }

@@ -86,11 +86,21 @@ pub struct ServeMetrics {
     pub array_xval_mismatches: u64,
     /// Submission-to-reply wall latency per tenant.
     pub tenant_latency: HashMap<usize, LatencyHistogram>,
+    /// Cumulative modeled (calibrated) energy charged per tenant — the
+    /// second service dimension `service_weights` windows.
+    pub tenant_energy: HashMap<usize, f64>,
 }
 
 impl ServeMetrics {
     pub fn record_latency(&mut self, tenant: usize, seconds: f64) {
         self.tenant_latency.entry(tenant).or_default().record(seconds);
+    }
+
+    /// Fold one served program into the tenant's latency histogram AND
+    /// its cumulative modeled-energy total.
+    pub fn record_service(&mut self, tenant: usize, seconds: f64, energy: f64) {
+        self.record_latency(tenant, seconds);
+        *self.tenant_energy.entry(tenant).or_insert(0.0) += energy.max(0.0);
     }
 
     /// Fold one executed round into the counters (saturating).
@@ -195,6 +205,15 @@ impl ServeMetrics {
                 &[("queue", queue), ("tenant", &t)],
             )
             .set_to_snapshot(h);
+        }
+        for (tenant, e) in &self.tenant_energy {
+            let t = tenant.to_string();
+            reg.gauge(
+                "adra.serve.tenant_energy",
+                "Cumulative modeled (calibrated) energy charged per tenant.",
+                &[("queue", queue), ("tenant", &t)],
+            )
+            .set(*e);
         }
     }
 
@@ -419,7 +438,10 @@ mod tests {
         };
         m.observe_round(2, &st, 1, 4);
         m.observe_controller(5, 2, 9, 16);
-        m.record_latency(3, 2e-6);
+        m.record_service(3, 2e-6, 1.5);
+        m.record_service(3, 2e-6, 1.0);
+        assert_eq!(m.tenant_latency[&3].count(), 2);
+        assert!((m.tenant_energy[&3] - 2.5).abs() < 1e-12);
         m.publish(&reg, "0");
         m.publish(&reg, "0"); // idempotent: totals unchanged
         let text = crate::observe::expose_text(&reg);
@@ -437,7 +459,11 @@ mod tests {
         let text = crate::observe::expose_text(&reg);
         assert!(text.contains("adra_serve_max_round_occupancy{queue=\"0\"} 2"), "{text}");
         assert!(
-            text.contains("adra_serve_tenant_wall_ns_count{queue=\"0\",tenant=\"3\"} 1"),
+            text.contains("adra_serve_tenant_wall_ns_count{queue=\"0\",tenant=\"3\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("adra_serve_tenant_energy{queue=\"0\",tenant=\"3\"} 2.5"),
             "{text}"
         );
     }

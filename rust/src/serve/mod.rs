@@ -52,7 +52,7 @@ pub use cache::{key_for, CacheKey, QueryKind, ResultCache, TableState};
 pub use coalesce::{coalesce_round, CoalescedRound, ProgramActions, RoundStats, ShardBatch, StepAction};
 pub use control::{
     service_weights, AdmissionPolicy, BatchController, BatchPolicy, FairScheduler,
-    RoundAdmission,
+    RoundAdmission, ServiceWindow,
 };
 pub use metrics::ServeMetrics;
 pub use queue::{ServeConfig, ServeError, ServeQueue, ServeReport, Ticket};

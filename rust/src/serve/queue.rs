@@ -22,14 +22,15 @@ use crate::energy::OpCost;
 use crate::metrics::RunMetrics;
 use crate::observe::{self, Stage};
 use crate::planner::{
-    place, planned_coordinator, ExecError, Executor, Objective, OpClass, PlanCostModel,
-    PlanError, Placement, Program, StepOutput,
+    calibrate, place_calibrated, planned_coordinator, CalibratedCostModel, CalibrationSample,
+    CalibrationStore, ExecError, Objective, PlanCostModel, PlanError, Placement, Program,
+    SharedCalibration, StepOutput,
 };
 
 use super::cache::{ResultCache, TableState};
 use super::coalesce::{coalesce_round, StepAction};
 use super::control::{
-    service_weights, AdmissionPolicy, BatchController, BatchPolicy, FairScheduler,
+    service_weights, AdmissionPolicy, BatchController, BatchPolicy, FairScheduler, ServiceWindow,
 };
 use super::metrics::ServeMetrics;
 
@@ -61,6 +62,19 @@ pub struct ServeConfig {
     /// per-round sampling.  Observation only — results and modeled
     /// costs are bit-identical at any setting.
     pub sample_every: u64,
+    /// Absorb each round's predicted-vs-measured samples into the
+    /// calibrated cost model every N rounds; `0` disables calibration
+    /// entirely (pure analytic tables, the pre-calibration behavior).
+    pub calibrate_every: u64,
+    /// Persist the calibration store to this path after every absorb
+    /// (and seed it from there at startup), so a restarted queue keeps
+    /// its learned corrections.
+    pub calibration_path: Option<std::path::PathBuf>,
+    /// Externally-owned store handle: seeded from at startup (when
+    /// non-empty) and mirrored into after every absorb.  `None` mirrors
+    /// into the process-global `planner::calibrate::shared()` cell
+    /// instead (what the REPL's `calibration` commands read).
+    pub calibration: Option<SharedCalibration>,
 }
 
 impl ServeConfig {
@@ -75,6 +89,9 @@ impl ServeConfig {
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
             sample_every: 1,
+            calibrate_every: 1,
+            calibration_path: None,
+            calibration: None,
         }
     }
 }
@@ -232,15 +249,26 @@ fn scheduler(
         admission,
         batch,
         sample_every,
+        calibrate_every,
+        calibration_path,
+        calibration,
     } = config;
     let coord = planned_coordinator(&cfg, shards, objective);
-    let model = PlanCostModel::new(&cfg, objective);
-    // the fused path forces dual ops onto the ADRA engine; honor the
-    // routing objective by fusing only when the cost model routes dual
-    // ops there anyway (it routes them to the baseline under the energy
-    // objective on voltage scheme 1 — fusing would cost MORE energy).
-    // Dedup and caching stay on either way; they are objective-neutral.
-    let fuse = model.choose_class(OpClass::Dual).executor == Executor::Adra;
+    // the calibrated cost model: analytic tables wrapped by the runtime
+    // correction store — seeded from the shared handle (a warm daemon)
+    // when it has content, else from the persisted snapshot, else empty
+    // (factors 1.0 == pure analytic behavior)
+    let seed_store = calibration
+        .as_ref()
+        .map(|s| s.lock().expect("calibration lock").clone())
+        .filter(|s| !s.is_empty())
+        .or_else(|| calibration_path.as_deref().map(CalibrationStore::load))
+        .unwrap_or_default();
+    let mut cal =
+        CalibratedCostModel::with_store(PlanCostModel::new(&cfg, objective), shards, seed_store);
+    // restored routing pins must reach the workers before the first round
+    cal.sync_routing(&coord);
+    let mut service_window = ServiceWindow::new();
     let mut state = TableState::new(&cfg, n_records);
     let mut cache = ResultCache::new(cache_capacity);
     let mut controller = match batch {
@@ -303,7 +331,7 @@ fn scheduler(
         let schedule_start = Instant::now();
         let weights = {
             let m = metrics.lock().expect("metrics lock");
-            service_weights(&m.tenant_latency)
+            service_weights(&mut service_window, &m.tenant_latency, &m.tenant_energy)
         };
         let selection = backlog
             .next_round(controller.max_round(), |t| weights.get(&t).copied().unwrap_or(1.0));
@@ -331,7 +359,7 @@ fn scheduler(
                 a.submitted.elapsed().as_nanos() as u64,
                 1,
             );
-            match place(&a.program, &cfg, shards, &model) {
+            match place_calibrated(&a.program, &cfg, shards, &cal) {
                 Ok(p) => round.push((a, p)),
                 Err(e) => {
                     let _ = a.reply.send(Err(ServeError::Plan(e)));
@@ -343,6 +371,14 @@ fn scheduler(
         }
         let occupancy = round.len();
 
+        // the fused path forces dual ops onto the ADRA engine; honor the
+        // CALIBRATED routing by fusing only when every shard's dual ops
+        // route there anyway (the analytic model routes them to the
+        // baseline under the energy objective on voltage scheme 1, and
+        // calibration can flip the decision either way at runtime —
+        // force-fusing against it would cost MORE energy).  Dedup and
+        // caching stay on either way; they are objective-neutral.
+        let fuse = cal.fuse_dual_on_adra();
         let placements: Vec<&Placement> = round.iter().map(|(_, p)| p).collect();
         let coalesce_start = Instant::now();
         let coalesced = coalesce_round(&placements, &mut state, &mut cache, fuse);
@@ -444,6 +480,7 @@ fn scheduler(
 
         // assemble per program, splice cached outputs, memoize fresh ones
         let cache_start = Instant::now();
+        let mut round_samples: Vec<CalibrationSample> = Vec::new();
         for (((a, placement), per_shard), pa) in
             round.into_iter().zip(slots).zip(&coalesced.programs)
         {
@@ -451,6 +488,7 @@ fn scheduler(
                 Err(ExecError::Route(r)) => Err(ServeError::Route(r)),
                 Err(other) => Err(ServeError::Engine(other.to_string())),
                 Ok(mut rep) => {
+                    round_samples.append(&mut rep.samples);
                     for (g, action) in pa.actions.iter().enumerate() {
                         match action {
                             StepAction::Cached(out) => rep.outputs[g] = out.clone(),
@@ -464,7 +502,7 @@ fn scheduler(
                     metrics
                         .lock()
                         .expect("metrics lock")
-                        .record_latency(a.tenant, wall);
+                        .record_service(a.tenant, wall, rep.measured.energy.total());
                     Ok(ServeReport {
                         outputs: rep.outputs,
                         measured: rep.measured,
@@ -486,6 +524,25 @@ fn scheduler(
             cache_start.elapsed().as_nanos() as u64,
             coalesced.stats.cached_steps,
         );
+
+        // close the calibration loop: fold this round's predicted-vs-
+        // measured samples into the correction store, re-sync worker
+        // routing on a committed flip, persist the snapshot, and mirror
+        // the store into the shared handle the REPL reads.  With exact
+        // tables this is a no-op (factors stay 1.0) — see the
+        // `exact_tables` invariance tests.
+        if calibrate_every > 0 && round_no % calibrate_every == 0 && !round_samples.is_empty() {
+            let flipped = cal.absorb(&round_samples);
+            if flipped {
+                cal.sync_routing(&coord);
+            }
+            cal.publish(reg);
+            if let Some(p) = &calibration_path {
+                let _ = cal.store().save(p);
+            }
+            let mirror = calibration.as_ref().unwrap_or_else(|| calibrate::shared());
+            *mirror.lock().expect("calibration lock") = cal.store().clone();
+        }
 
         // post-insert cache counters (inserts above may have evicted);
         // negative hits instead accumulate per round from RoundStats —
@@ -518,7 +575,7 @@ fn scheduler(
 mod tests {
     use super::*;
     use crate::config::SensingScheme;
-    use crate::planner::StepOutput;
+    use crate::planner::{place, StepOutput};
     use crate::workload::analytics_scenario;
 
     fn cfg() -> SimConfig {
@@ -617,6 +674,9 @@ mod tests {
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
             sample_every: 1,
+            calibrate_every: 1,
+            calibration_path: None,
+            calibration: None,
         });
         let rep = q.submit(0, s.program.clone()).unwrap().wait().unwrap();
         assert_eq!(rep.outputs, naive.outputs);

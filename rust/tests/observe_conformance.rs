@@ -236,6 +236,9 @@ fn served_workload_populates_global_registry_and_recorder() {
         admission: AdmissionPolicy::Fair,
         batch: BatchPolicy::Adaptive { target_p95: 2e-3 },
         sample_every: 1,
+        calibrate_every: 1,
+        calibration_path: None,
+        calibration: None,
     });
     let qid = queue.instance().to_string();
     let s = analytics_scenario(&cfg, 48, 3);

@@ -54,6 +54,9 @@ fn prop_heavy_flood_cannot_starve_light_tenants() {
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 50e-3 },
             sample_every: 1,
+            calibrate_every: 1,
+            calibration_path: None,
+            calibration: None,
         });
         // submit the whole adversarial pattern before waiting on anything
         let tickets: Vec<_> = s
@@ -127,6 +130,9 @@ fn prop_single_tenant_stream_identical_under_eviction_pressure() {
             admission: AdmissionPolicy::Fair,
             batch: BatchPolicy::Adaptive { target_p95: 1e-3 },
             sample_every: 1,
+            calibrate_every: 1,
+            calibration_path: None,
+            calibration: None,
         });
         let tickets: Vec<_> = programs
             .iter()
@@ -200,6 +206,9 @@ fn fifo_static_policies_remain_available_and_correct() {
         admission: AdmissionPolicy::Fifo,
         batch: BatchPolicy::Static,
         sample_every: 1,
+        calibrate_every: 1,
+        calibration_path: None,
+        calibration: None,
     });
     let tickets: Vec<_> = programs
         .iter()
