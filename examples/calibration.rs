@@ -135,6 +135,12 @@ fn main() {
         // evolving store back into the handle after every absorb
         calibration_path: Some(SNAPSHOT.into()),
         calibration: Some(shared.clone()),
+        store_dir: None,
+        checkpoint_every: 32,
+        route_retries: 2,
+        retry_backoff_ms: 1,
+        wear_spare_rows: 0,
+        wear_migrate_threshold: 1024,
     });
 
     for (wave, seed) in [(1u32, 91u64), (2, 92)] {

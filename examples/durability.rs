@@ -1,0 +1,223 @@
+//! End-to-end durability demo: a chaos-injected flood (worker deaths,
+//! latency spikes, accelerated endurance drift) is served correctly and
+//! journaled to a checksummed snapshot + WAL store; the process then
+//! simulates a kill by dropping the queue mid-life and proves a fresh
+//! queue over the same directory recovers the array bit-identically
+//! before serving its first round.
+//!
+//! A local tight-threshold health engine ticks while the flood drains so
+//! the run deterministically commits alert transitions into the flight
+//! recorder — the exported trace is the CI job's alert artifact.
+//!
+//! Artifacts (CI's `durability-smoke` job consumes all three):
+//!   target/durability_scrape1.prom   scrape after the chaos flood
+//!   target/durability_scrape2.prom   scrape after the kill + recovery
+//!   target/durability_trace.jsonl    flight-recorder tail incl. alerts
+//!
+//!     cargo run --release --example durability
+
+use adra::config::{SensingScheme, SimConfig};
+use adra::faults::{self, FaultSpec};
+use adra::observe::{Direction, HealthEngine, HealthRule, RuleState, Signal, Transition};
+use adra::planner::StepOutput;
+use adra::serve::{BatchPolicy, ServeConfig, ServeQueue};
+use adra::workload::heavy_tenant_scenario;
+use adra::workload::programs::analytics_scenario;
+
+const N_RECORDS: usize = 192;
+const SHARDS: usize = 2;
+const HEAVY_BURST: usize = 14;
+const LIGHT_TENANTS: usize = 3;
+const STORE_DIR: &str = "target/durability_store";
+
+/// Write one Prometheus scrape of the global registry and sanity-check
+/// the families the durability pipeline must expose.
+fn write_scrape(path: &str, families: &[&str]) -> String {
+    let text = adra::observe::expose_text(adra::observe::global());
+    for family in families {
+        assert!(text.contains(family), "scrape is missing family {family}:\n{text}");
+    }
+    std::fs::create_dir_all("target").expect("create target/");
+    std::fs::write(path, &text).expect("write scrape");
+    text
+}
+
+fn durable_config(cfg: &SimConfig) -> ServeConfig {
+    let mut sc = ServeConfig::new(cfg.clone(), SHARDS, N_RECORDS);
+    sc.max_round = 6;
+    sc.batch = BatchPolicy::Adaptive { target_p95: 2e-3 };
+    sc.sample_every = 1;
+    sc.calibrate_every = 1;
+    sc.store_dir = Some(STORE_DIR.into());
+    sc.checkpoint_every = 4;
+    sc.route_retries = 3;
+    sc.retry_backoff_ms = 1;
+    sc.wear_spare_rows = 8;
+    sc.wear_migrate_threshold = 2000;
+    sc
+}
+
+/// One deliberately unmeetable SLO so the chaos flood deterministically
+/// commits alert transitions (same technique as the health demo).
+fn tight_rules() -> Vec<HealthRule> {
+    vec![HealthRule {
+        name: "durability_round_wall_slo_burn".to_string(),
+        signal: Signal::SloBurn {
+            name: "adra.serve.round_wall_ns".to_string(),
+            labels: Vec::new(),
+            slo_ns: 200.0,
+            budget: 0.05,
+            fast: 4,
+            slow: 8,
+        },
+        direction: Direction::Above,
+        warn: 1.0,
+        critical: 4.0,
+        sustain_up: 2,
+        sustain_down: 4,
+    }]
+}
+
+fn main() {
+    let mut cfg = SimConfig::square(256, SensingScheme::Current);
+    cfg.word_bits = 32;
+    let _ = std::fs::remove_dir_all(STORE_DIR);
+
+    println!("=== chaos flood against a durable serve queue ===");
+    let spec = "seed=77 death=200 death-max=2 spike=150 spike-ns=30000000 wear=50";
+    faults::install(FaultSpec::parse(spec).expect("valid spec"));
+    println!("fault spec installed: {spec}");
+    println!(
+        "{HEAVY_BURST}-program flood + {LIGHT_TENANTS} light tenants, {N_RECORDS} records, \
+         {SHARDS} shards, WAL + checkpoint every 4 rounds\n"
+    );
+
+    let mut engine = HealthEngine::new();
+    for rule in tight_rules() {
+        engine.add_rule(rule);
+    }
+    let mut transitions: Vec<Transition> = Vec::new();
+
+    let pre_kill = {
+        let queue = ServeQueue::start(durable_config(&cfg));
+        for wave in 0..2u64 {
+            let scenario =
+                heavy_tenant_scenario(&cfg, N_RECORDS, 8_800 + wave, HEAVY_BURST, LIGHT_TENANTS);
+            let tickets: Vec<_> = scenario
+                .submissions
+                .iter()
+                .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+                .collect();
+            for (i, ticket) in tickets.into_iter().enumerate() {
+                let rep = ticket.wait().expect("served despite injected chaos");
+                assert_eq!(
+                    rep.outputs[scenario.filter_step],
+                    StepOutput::Matches(scenario.expected_matches[i].clone()),
+                    "chaos may slow wave {wave} submission {i}, never corrupt it"
+                );
+                for tr in engine.evaluate(
+                    adra::observe::series(),
+                    adra::observe::global(),
+                    adra::observe::recorder(),
+                ) {
+                    println!(
+                        "  alert: {} {} -> {} (value {:.3})",
+                        tr.rule,
+                        tr.from.name(),
+                        tr.to.name(),
+                        tr.value
+                    );
+                    transitions.push(tr);
+                }
+            }
+            println!("wave {wave} served bit-identically under chaos");
+        }
+
+        // ground truth for the recovery proof: serve a full analytics
+        // program, keep its answers, kill the queue
+        let s = analytics_scenario(&cfg, N_RECORDS, 4_117);
+        let rep = queue.submit(0, s.program.clone()).expect("admit").wait().expect("serve");
+        assert_eq!(rep.outputs[s.filter_step], StepOutput::Matches(s.expected_matches.clone()));
+
+        let m = queue.metrics();
+        println!("\npre-kill metrics: {}", m.report());
+        assert!(
+            m.worker_respawns >= 1,
+            "the injected deaths must have killed (and respawned) a worker"
+        );
+        assert!(m.spike_shrinks >= 1, "the 30ms spikes must have shrunk the round");
+        assert!(m.wear_migrations >= 1, "accelerated wear must have migrated a hot row");
+        (s, rep)
+        // queue dropped here: the simulated kill — no explicit snapshot,
+        // recovery rides the last checkpoint + WAL tail
+    };
+    faults::clear();
+    println!("\nqueue killed (dropped); fault injector disarmed");
+
+    let scrape1 = write_scrape(
+        "target/durability_scrape1.prom",
+        &[
+            "adra_serve_programs",
+            "adra_serve_worker_respawns",
+            "adra_serve_wear_migrations",
+            "adra_serve_spike_shrinks",
+            "adra_store_wal_records",
+            "adra_store_snapshot_bytes",
+            "adra_store_checkpoints",
+            "adra_faults_injected",
+            "adra_health_status",
+        ],
+    );
+    println!("scrape 1 (post-flood) -> target/durability_scrape1.prom ({} lines)", scrape1.lines().count());
+
+    // --- the restart: a fresh queue over the same directory must replay
+    // snapshot + WAL into fresh arrays before its first round ---
+    println!("\n=== restart over {STORE_DIR} ===");
+    let queue = ServeQueue::start(durable_config(&cfg));
+    let (s, pre_rep) = pre_kill;
+    let mut query_only = s.program.clone();
+    query_only.ops.remove(0); // drop the Load: recovered contents answer
+    let rep = queue.submit(0, query_only).expect("admit").wait().expect("serve after restart");
+    assert_eq!(
+        rep.outputs[s.filter_step - 1],
+        pre_rep.outputs[s.filter_step],
+        "the recovered array must answer exactly like the pre-kill one"
+    );
+    let m = queue.metrics();
+    assert_eq!(m.recoveries, 1, "startup recovery must have fired exactly once");
+    println!("recovery verified: query-only replay matches the pre-kill answers");
+    println!("post-restart metrics: {}", m.report());
+
+    let scrape2 = write_scrape(
+        "target/durability_scrape2.prom",
+        &[
+            "adra_serve_recoveries",
+            "adra_store_wal_records",
+            "adra_store_replay_ns",
+            "adra_store_snapshot_bytes",
+            "adra_health_status",
+        ],
+    );
+    println!("scrape 2 (post-recovery) -> target/durability_scrape2.prom ({} lines)", scrape2.lines().count());
+
+    // --- the alert-trace artifact ---
+    assert!(!transitions.is_empty(), "the flood must commit at least one health transition");
+    assert!(
+        engine.state_of("durability_round_wall_slo_burn").expect("rule exists")
+            >= RuleState::Warn,
+        "the tight SLO must be burning after a 30ms-spike flood"
+    );
+    let trace = adra::observe::recorder().to_jsonl();
+    assert!(
+        trace.contains("\"kind\":\"alert\"") && trace.contains("durability_round_wall_slo_burn"),
+        "flight recorder must hold the committed alerts:\n{trace}"
+    );
+    std::fs::write("target/durability_trace.jsonl", &trace).expect("write trace");
+    println!(
+        "trace tail -> target/durability_trace.jsonl ({} events, {} alerts)",
+        trace.lines().count(),
+        trace.matches("\"kind\":\"alert\"").count()
+    );
+
+    println!("\nDURABILITY VALIDATION PASSED");
+}

@@ -105,6 +105,12 @@ fn main() {
         calibrate_every: 1,
         calibration_path: None,
         calibration: None,
+        store_dir: None,
+        checkpoint_every: 32,
+        route_retries: 2,
+        retry_backoff_ms: 1,
+        wear_spare_rows: 0,
+        wear_migrate_threshold: 1024,
     });
 
     // wear demo, part 1: a write-hot accumulator row on shard 0, levelled

@@ -202,6 +202,12 @@ fn main() {
         calibrate_every: 1,
         calibration_path: None,
         calibration: None,
+        store_dir: None,
+        checkpoint_every: 32,
+        route_retries: 2,
+        retry_backoff_ms: 1,
+        wear_spare_rows: 0,
+        wear_migrate_threshold: 1024,
     }));
     let t0 = Instant::now();
     let wave = run_wave(&queue, &fp, &dp, REPEATS);
@@ -355,6 +361,12 @@ fn main() {
             calibrate_every: 1,
             calibration_path: None,
             calibration: None,
+            store_dir: None,
+            checkpoint_every: 32,
+            route_retries: 2,
+            retry_backoff_ms: 1,
+            wear_spare_rows: 0,
+            wear_migrate_threshold: 1024,
         });
         // the adversarial pattern: the whole flood is queued before any
         // light tenant's program, exactly as a burst arrives in practice

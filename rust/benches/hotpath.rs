@@ -301,6 +301,29 @@ fn main() {
         exact_ns / tick_ns
     );
 
+    // ---- fault-injection happy path: with no spec installed the pool's
+    // per-op guard is one relaxed atomic load (`faults::active`).  Gated
+    // as a ratio against the digital engine op so the gate is machine-
+    // independent: the disarmed guard must stay far cheaper than the
+    // cheapest real op it fronts — the "zero happy-path overhead" claim
+    // of the chaos layer, held by CI.
+    let guard_ns = {
+        adra::faults::clear();
+        let stats = b.run("faults/active disarmed", || black_box(adra::faults::active()));
+        let ns = stats.median_ns().max(1e-3); // clamp: sub-picosecond medians are timer noise
+        all.push(stats);
+        ns
+    };
+    println!(
+        "faults guard: {guard_ns:.2} ns disarmed ({:.1}x under the digital 64-col op)",
+        digital_ns / guard_ns
+    );
+    assert!(
+        digital_ns / guard_ns >= 5.0,
+        "disarmed fault guard is no longer negligible: {guard_ns:.2} ns vs digital op \
+         {digital_ns:.1} ns"
+    );
+
     bench::write_json_with_meta(
         "BENCH_hotpath.json",
         &all,
@@ -309,6 +332,7 @@ fn main() {
             ("row/speedup 1024c [whole-row vs per-word]", row_speedup_1024),
             ("tier/speedup 64c [digital vs lut]", lut_ns / digital_ns),
             ("observe/tick ratio [exact-op vs sample+health]", exact_ns / tick_ns),
+            ("faults/overhead ratio [digital-op vs disarmed-guard]", digital_ns / guard_ns),
         ],
     )
     .expect("write BENCH_hotpath.json");

@@ -101,6 +101,12 @@ fn main() {
             calibrate_every: 1,
             calibration_path: None,
             calibration: None,
+            store_dir: None,
+            checkpoint_every: 32,
+            route_retries: 2,
+            retry_backoff_ms: 1,
+            wear_spare_rows: 0,
+            wear_migrate_threshold: 1024,
         }));
         let barrier = Arc::new(Barrier::new(tenants));
         let t1 = Instant::now();
@@ -189,6 +195,12 @@ fn fairness_bench(cfg: &SimConfig) {
             calibrate_every: 1,
             calibration_path: None,
             calibration: None,
+            store_dir: None,
+            checkpoint_every: 32,
+            route_retries: 2,
+            retry_backoff_ms: 1,
+            wear_spare_rows: 0,
+            wear_migrate_threshold: 1024,
         });
         // queue the whole flood ahead of the light tenants, then wait —
         // the adversarial arrival order both policies must digest

@@ -29,8 +29,40 @@ impl WearTracker {
         self.writes_per_row[row] += 1;
     }
 
+    /// Record `n` writes at once (serve-side accounting batches per
+    /// round; fault injection's endurance-drift acceleration multiplies
+    /// `n`).
+    pub fn note_writes(&mut self, row: usize, n: u64) {
+        self.writes_per_row[row] += n;
+    }
+
     pub fn writes(&self, row: usize) -> u64 {
         self.writes_per_row[row]
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Raw per-row counters (the durable store checkpoints these).
+    pub fn counts(&self) -> &[u64] {
+        &self.writes_per_row
+    }
+
+    /// Restore counters from a checkpoint.  Row counts beyond the
+    /// tracker's geometry are dropped; missing rows stay at zero.
+    pub fn seed_counts(&mut self, counts: &[u64]) {
+        for (row, &n) in counts.iter().take(self.rows).enumerate() {
+            self.writes_per_row[row] = n;
+        }
+    }
+
+    /// The least-worn row among `candidates` (`None` when empty).
+    pub fn coldest_of<I: IntoIterator<Item = usize>>(&self, candidates: I) -> Option<usize> {
+        candidates
+            .into_iter()
+            .filter(|&r| r < self.rows)
+            .min_by_key(|&r| (self.writes_per_row[r], r))
     }
 
     pub fn max_wear(&self) -> u64 {
@@ -173,6 +205,23 @@ mod tests {
         assert!(t.imbalance() > 3.0);
         assert!(!t.is_worn_out());
         assert!((t.lifetime_remaining() - 0.99).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counts_round_trip_and_batched_notes() {
+        let mut t = WearTracker::new(4, 1000);
+        t.note_writes(2, 7);
+        t.note_write(2);
+        assert_eq!(t.counts(), &[0, 0, 8, 0]);
+        let mut restored = WearTracker::new(4, 1000);
+        restored.seed_counts(t.counts());
+        assert_eq!(restored.counts(), t.counts());
+        // geometry mismatch: extra rows dropped, missing stay zero
+        let mut small = WearTracker::new(2, 1000);
+        small.seed_counts(&[5, 6, 7]);
+        assert_eq!(small.counts(), &[5, 6]);
+        assert_eq!(t.coldest_of([2usize, 1, 3]), Some(1), "ties break low");
+        assert_eq!(t.coldest_of(Vec::<usize>::new()), None);
     }
 
     #[test]

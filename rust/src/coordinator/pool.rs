@@ -43,28 +43,71 @@ pub struct Coordinator {
     workers: Vec<Worker>,
     next_id: AtomicU64,
     cfg: SimConfig,
+    /// Retained engine factory so a dead shard can be respawned with a
+    /// fresh engine ([`Coordinator::respawn`] — the fault-recovery path).
+    factory: Mutex<Box<dyn FnMut(usize) -> Box<dyn Engine> + Send>>,
+    /// Workers respawned over this coordinator's lifetime.
+    respawns: AtomicU64,
 }
 
 impl Coordinator {
     /// Build with `shards` independent array shards, each served by one
     /// worker thread running `make_engine(shard_idx)`.
-    pub fn new<F>(cfg: &SimConfig, shards: usize, mut make_engine: F) -> Self
+    pub fn new<F>(cfg: &SimConfig, shards: usize, make_engine: F) -> Self
     where
-        F: FnMut(usize) -> Box<dyn Engine>,
+        F: FnMut(usize) -> Box<dyn Engine> + Send + 'static,
     {
         assert!(shards > 0);
         let max_batch = cfg.max_batch;
+        let mut make_engine: Box<dyn FnMut(usize) -> Box<dyn Engine> + Send> =
+            Box::new(make_engine);
         let mut workers = Vec::with_capacity(shards);
         for shard in 0..shards {
             let (tx, rx) = channel::<WorkerMsg>();
             let engine = make_engine(shard);
             let handle = std::thread::Builder::new()
                 .name(format!("adra-worker-{shard}"))
-                .spawn(move || worker_loop(engine, rx, max_batch))
+                .spawn(move || worker_loop(shard, engine, rx, max_batch))
                 .expect("spawn worker");
             workers.push(Worker { tx, handle: Some(handle) });
         }
-        Self { workers, next_id: AtomicU64::new(0), cfg: cfg.clone() }
+        Self {
+            workers,
+            next_id: AtomicU64::new(0),
+            cfg: cfg.clone(),
+            factory: Mutex::new(make_engine),
+            respawns: AtomicU64::new(0),
+        }
+    }
+
+    /// Tear down one shard's worker (dead or alive) and start a fresh one
+    /// with a new engine from the retained factory.  The new engine's
+    /// array starts from reset — the caller owns replaying contents into
+    /// it (the serve scheduler replays from its durable `TableState`).
+    pub fn respawn(&mut self, shard: usize) -> Result<(), RouteError> {
+        let max_batch = self.cfg.max_batch;
+        let engine = {
+            let mut make = self.factory.lock().expect("engine factory");
+            (*make)(shard)
+        };
+        let w = self.workers.get_mut(shard).ok_or(RouteError::UnknownArray(shard))?;
+        let (tx, rx) = channel::<WorkerMsg>();
+        drop(std::mem::replace(&mut w.tx, tx));
+        if let Some(h) = w.handle.take() {
+            let _ = h.join();
+        }
+        let handle = std::thread::Builder::new()
+            .name(format!("adra-worker-{shard}"))
+            .spawn(move || worker_loop(shard, engine, rx, max_batch))
+            .map_err(|_| RouteError::ShuttingDown)?;
+        w.handle = Some(handle);
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Workers respawned over this coordinator's lifetime.
+    pub fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
     }
 
     /// Coordinator over ADRA engines (the default deployment).
@@ -268,15 +311,43 @@ impl std::fmt::Display for CallError {
 
 impl std::error::Error for CallError {}
 
+/// Poll the fault injector once per request about to execute on `shard`.
+/// Returns `false` when an injected worker death fires — the caller must
+/// exit its loop WITHOUT replying, so pending reply channels drop and the
+/// router surfaces `RouteError::ShuttingDown` (the same signature a real
+/// worker crash has).  Latency spikes sleep in place.  One relaxed atomic
+/// load when injection is disarmed — the zero-overhead happy path.
+#[inline]
+fn faults_allow(shard: usize, n: usize) -> bool {
+    if !crate::faults::active() {
+        return true;
+    }
+    for _ in 0..n {
+        match crate::faults::on_worker_op(shard) {
+            crate::faults::WorkerFault::None => {}
+            crate::faults::WorkerFault::Delay(ns) => {
+                std::thread::sleep(std::time::Duration::from_nanos(ns));
+            }
+            crate::faults::WorkerFault::Die => return false,
+        }
+    }
+    true
+}
+
 /// Execute one request group on the worker's engine — through
 /// `Engine::execute_fused` when `fused` is set and the engine supports
-/// it, sequentially otherwise — recording metrics per result.
+/// it, sequentially otherwise — recording metrics per result.  `None`
+/// means an injected death fired: the group dies un-replied.
 fn run_group(
+    shard: usize,
     engine: &mut dyn Engine,
     reqs: Vec<Request>,
     fused: bool,
     metrics: &mut RunMetrics,
-) -> Vec<Response> {
+) -> Option<Vec<Response>> {
+    if !faults_allow(shard, reqs.len()) {
+        return None;
+    }
     let results: Vec<Result<CimResult, EngineError>> = if fused {
         let ops: Vec<CimOp> = reqs.iter().map(|r| r.op).collect();
         match engine.execute_fused(&ops) {
@@ -287,16 +358,18 @@ fn run_group(
         reqs.iter().map(|r| engine.execute(&r.op)).collect()
     };
     debug_assert_eq!(results.len(), reqs.len());
-    reqs.into_iter()
-        .zip(results)
-        .map(|(req, result)| {
-            match &result {
-                Ok(r) => metrics.record(&r.cost),
-                Err(_) => metrics.record_error(),
-            }
-            Response { id: req.id, result }
-        })
-        .collect()
+    Some(
+        reqs.into_iter()
+            .zip(results)
+            .map(|(req, result)| {
+                match &result {
+                    Ok(r) => metrics.record(&r.cost),
+                    Err(_) => metrics.record_error(),
+                }
+                Response { id: req.id, result }
+            })
+            .collect(),
+    )
 }
 
 /// Metrics snapshot with the engine's array counters attached (per-tier
@@ -310,7 +383,31 @@ fn snapshot(engine: &dyn Engine, metrics: &RunMetrics) -> RunMetrics {
     m
 }
 
-fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: usize) {
+/// Execute gathered single requests in arrival order.  Returns `false`
+/// when an injected death fires mid-flush — undrained requests are
+/// dropped un-replied (the `Drain` guard clears the whole range), and
+/// the caller must exit the worker loop.
+fn flush_singles(
+    shard: usize,
+    engine: &mut dyn Engine,
+    metrics: &mut RunMetrics,
+    batch: &mut Vec<(Request, Sender<Response>)>,
+) -> bool {
+    for (req, tx) in batch.drain(..) {
+        if !faults_allow(shard, 1) {
+            return false;
+        }
+        let result = engine.execute(&req.op);
+        match &result {
+            Ok(r) => metrics.record(&r.cost),
+            Err(_) => metrics.record_error(),
+        }
+        let _ = tx.send(Response { id: req.id, result });
+    }
+    true
+}
+
+fn worker_loop(shard: usize, mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: usize) {
     let mut metrics = RunMetrics::default();
     let mut batch: Vec<(Request, Sender<Response>)> = Vec::with_capacity(max_batch);
     loop {
@@ -332,8 +429,12 @@ fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: 
         }
         // grouped fast path: execute the whole group, one reply message
         if let Some((reqs, tx, fused)) = group_reply {
-            let resps = run_group(&mut *engine, reqs, fused, &mut metrics);
-            let _ = tx.send(resps);
+            match run_group(shard, &mut *engine, reqs, fused, &mut metrics) {
+                Some(resps) => {
+                    let _ = tx.send(resps);
+                }
+                None => return, // injected death: die un-replied
+            }
             continue;
         }
         // opportunistically drain up to max_batch single requests
@@ -346,47 +447,36 @@ fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg>, max_batch: 
                 Ok(WorkerMsg::SetRouting(forced)) => {
                     // singles gathered so far arrived before the override;
                     // flush them first so routing changes in arrival order
-                    for (req, rtx) in batch.drain(..) {
-                        let result = engine.execute(&req.op);
-                        match &result {
-                            Ok(r) => metrics.record(&r.cost),
-                            Err(_) => metrics.record_error(),
-                        }
-                        let _ = rtx.send(Response { id: req.id, result });
+                    if !flush_singles(shard, &mut *engine, &mut metrics, &mut batch) {
+                        return;
                     }
                     engine.set_routing(forced);
                 }
                 Ok(msg @ WorkerMsg::Batch(..)) | Ok(msg @ WorkerMsg::FusedBatch(..)) => {
                     // execute inline to preserve arrival order: first
                     // flush the singles gathered so far, then the group
-                    for (req, rtx) in batch.drain(..) {
-                        let result = engine.execute(&req.op);
-                        match &result {
-                            Ok(r) => metrics.record(&r.cost),
-                            Err(_) => metrics.record_error(),
-                        }
-                        let _ = rtx.send(Response { id: req.id, result });
+                    if !flush_singles(shard, &mut *engine, &mut metrics, &mut batch) {
+                        return;
                     }
                     let (reqs, tx, fused) = match msg {
                         WorkerMsg::Batch(reqs, tx) => (reqs, tx, false),
                         WorkerMsg::FusedBatch(reqs, tx) => (reqs, tx, true),
                         _ => unreachable!(),
                     };
-                    let resps = run_group(&mut *engine, reqs, fused, &mut metrics);
-                    let _ = tx.send(resps);
+                    match run_group(shard, &mut *engine, reqs, fused, &mut metrics) {
+                        Some(resps) => {
+                            let _ = tx.send(resps);
+                        }
+                        None => return,
+                    }
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => break,
             }
         }
         // execute in arrival order (linearizes the shard)
-        for (req, tx) in batch.drain(..) {
-            let result = engine.execute(&req.op);
-            match &result {
-                Ok(r) => metrics.record(&r.cost),
-                Err(_) => metrics.record_error(),
-            }
-            let _ = tx.send(Response { id: req.id, result });
+        if !flush_singles(shard, &mut *engine, &mut metrics, &mut batch) {
+            return;
         }
     }
 }
@@ -657,6 +747,54 @@ mod tests {
             .unwrap();
         let r = coord2.call(0, CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
         assert_eq!(r.value, CimValue::Diff(5), "pinned routing preserves semantics");
+    }
+
+    /// `respawn` replaces a (live or dead) worker with a fresh engine
+    /// from the retained factory; serving resumes on a reset array.
+    /// (Injected-death recovery end-to-end is in `tests/durability.rs` —
+    /// arming the process-global injector would perturb parallel tests.)
+    #[test]
+    fn respawn_replaces_worker_with_fresh_engine() {
+        let cfg = cfg();
+        let mut coord = Coordinator::adra(&cfg, 2);
+        coord
+            .call(0, CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 7 })
+            .unwrap();
+        coord.respawn(0).unwrap();
+        assert_eq!(coord.respawns(), 1);
+        // fresh engine: the pre-respawn write is gone (replay is the
+        // serve layer's job), and the shard serves again
+        let r = coord.call(0, CimOp::Read(WordAddr { row: 0, word: 0 })).unwrap();
+        assert_eq!(r.value, CimValue::Word(0));
+        coord
+            .call(0, CimOp::Write { addr: WordAddr { row: 0, word: 0 }, value: 40 })
+            .unwrap();
+        coord
+            .call(0, CimOp::Write { addr: WordAddr { row: 1, word: 0 }, value: 15 })
+            .unwrap();
+        let r = coord.call(0, CimOp::Sub { row_a: 0, row_b: 1, word: 0 }).unwrap();
+        assert_eq!(r.value, CimValue::Diff(25));
+        // untouched shards are unaffected
+        assert!(matches!(coord.respawn(9), Err(RouteError::UnknownArray(9))));
+    }
+
+    /// With injection compiled in but DISARMED, batches execute exactly
+    /// as before — the acceptance criterion's zero-overhead happy path.
+    #[test]
+    fn disarmed_faults_do_not_perturb_execution() {
+        let cfg = cfg();
+        let coord = Coordinator::adra(&cfg, 1);
+        let mut mirror = AdraEngine::new(&cfg);
+        let mut gen = WorkloadGen::new(&cfg, OpMix::balanced(), 55);
+        let ops = gen.batch(100);
+        for (op, got) in ops.iter().zip(coord.call_batch(0, &ops).unwrap()) {
+            let want = mirror.execute(op);
+            match (got, want) {
+                (Ok(g), Ok(w)) => assert_eq!(g.value, w.value),
+                (Err(_), Err(_)) => {}
+                (g, w) => panic!("divergence on {op:?}: {g:?} vs {w:?}"),
+            }
+        }
     }
 
     #[test]

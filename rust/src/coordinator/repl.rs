@@ -17,6 +17,9 @@
 //! health
 //! calibration [reset]
 //! trace [clear | cap <n>]
+//! faults [<spec> | off]
+//! snapshot <dir>
+//! restore <dir>
 //! quit
 //! ```
 //!
@@ -31,6 +34,15 @@
 //! it back to the analytic tables), which emit their multi-line payload
 //! and then a terminating `ok`.  `trace clear` empties the ring;
 //! `trace cap <n>` resizes it (postmortem depth).
+//!
+//! `faults` manages the process-global deterministic fault injector
+//! (`crate::faults`): `faults` alone prints the active spec (or `off`),
+//! `faults off` disarms it, and `faults <spec>` installs a parsed
+//! [`FaultSpec`](crate::faults::FaultSpec) (e.g. `faults death=40
+//! death-max=2 spike=16 spike-ns=500000`).  `snapshot <dir>` and
+//! `restore <dir>` drive the attached serving layer's durable store
+//! (see [`serve_with_queue`]); without an attached queue they report
+//! `err`.
 
 use std::io::{BufRead, Write};
 
@@ -141,8 +153,32 @@ pub fn serve<R: BufRead, W: Write>(
 pub fn serve_with_stats<R: BufRead, W: Write, F: Fn() -> Option<String>>(
     coord: &Coordinator,
     input: R,
+    output: W,
+    extra_stats: F,
+) -> std::io::Result<u64> {
+    serve_session(coord, input, output, extra_stats, None)
+}
+
+/// Like [`serve_with_stats`], with a serving layer attached: `snapshot
+/// <dir>` and `restore <dir>` round-trip the queue's durable state
+/// through [`snapshot_to`](crate::serve::ServeQueue::snapshot_to) /
+/// [`restore_from`](crate::serve::ServeQueue::restore_from).
+pub fn serve_with_queue<R: BufRead, W: Write, F: Fn() -> Option<String>>(
+    coord: &Coordinator,
+    input: R,
+    output: W,
+    extra_stats: F,
+    queue: &crate::serve::ServeQueue,
+) -> std::io::Result<u64> {
+    serve_session(coord, input, output, extra_stats, Some(queue))
+}
+
+fn serve_session<R: BufRead, W: Write, F: Fn() -> Option<String>>(
+    coord: &Coordinator,
+    input: R,
     mut output: W,
     extra_stats: F,
+    queue: Option<&crate::serve::ServeQueue>,
 ) -> std::io::Result<u64> {
     let mut served = 0;
     for line in input.lines() {
@@ -217,6 +253,59 @@ pub fn serve_with_stats<R: BufRead, W: Write, F: Fn() -> Option<String>>(
                     writeln!(output, "ok {}", crate::observe::recorder().capacity())?;
                 }
                 _ => writeln!(output, "err trace cap: expected a positive integer")?,
+            }
+            continue;
+        }
+        if trimmed == "faults" {
+            match crate::faults::spec() {
+                Some(s) => writeln!(output, "ok {}", s.render())?,
+                None => writeln!(output, "ok off")?,
+            }
+            continue;
+        }
+        if trimmed == "faults off" {
+            crate::faults::clear();
+            writeln!(output, "ok off")?;
+            continue;
+        }
+        if let Some(arg) = trimmed.strip_prefix("faults ") {
+            match crate::faults::FaultSpec::parse(arg) {
+                Ok(spec) => {
+                    let rendered = spec.render();
+                    crate::faults::install(spec);
+                    writeln!(output, "ok {rendered}")?;
+                }
+                Err(e) => writeln!(output, "err faults: {e}")?,
+            }
+            continue;
+        }
+        if trimmed == "snapshot" || trimmed.starts_with("snapshot ") {
+            let dir = trimmed.strip_prefix("snapshot").unwrap_or("").trim();
+            if dir.is_empty() {
+                writeln!(output, "err snapshot: expected <dir>")?;
+            } else {
+                match queue {
+                    None => writeln!(output, "err snapshot: no serving layer attached")?,
+                    Some(q) => match q.snapshot_to(dir) {
+                        Ok(()) => writeln!(output, "ok {dir}")?,
+                        Err(e) => writeln!(output, "err snapshot: {e}")?,
+                    },
+                }
+            }
+            continue;
+        }
+        if trimmed == "restore" || trimmed.starts_with("restore ") {
+            let dir = trimmed.strip_prefix("restore").unwrap_or("").trim();
+            if dir.is_empty() {
+                writeln!(output, "err restore: expected <dir>")?;
+            } else {
+                match queue {
+                    None => writeln!(output, "err restore: no serving layer attached")?,
+                    Some(q) => match q.restore_from(dir) {
+                        Ok(()) => writeln!(output, "ok {dir}")?,
+                        Err(e) => writeln!(output, "err restore: {e}")?,
+                    },
+                }
             }
             continue;
         }
@@ -327,6 +416,12 @@ quit
             calibrate_every: 1,
             calibration_path: None,
             calibration: None,
+            store_dir: None,
+            checkpoint_every: 32,
+            route_retries: 2,
+            retry_backoff_ms: 1,
+            wear_spare_rows: 0,
+            wear_migrate_threshold: 1024,
         });
         let s = analytics_scenario(&cfg, 24, 1);
         queue.submit(0, s.program).unwrap().wait().unwrap();
@@ -414,6 +509,71 @@ quit
         assert_eq!(lines[2], "ok", "trace clear acknowledges");
         assert_eq!(lines[3], format!("ok {before}"), "capacity restored");
         assert_eq!(crate::observe::recorder().capacity(), before);
+    }
+
+    /// Only the non-mutating `faults` paths run here: install-based
+    /// round-trips live in `tests/durability.rs` where the global
+    /// injector is serialized behind `faults::test_lock()`.
+    #[test]
+    fn faults_and_store_commands_reject_bad_input() {
+        let c = coord();
+        let script = "faults death=zero\nsnapshot\nrestore\nsnapshot /tmp/x\nrestore /tmp/x\nquit\n";
+        let mut out = Vec::new();
+        serve(&c, script.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].starts_with("err faults: death"), "{}", lines[0]);
+        assert!(lines[1].starts_with("err snapshot: expected <dir>"), "{}", lines[1]);
+        assert!(lines[2].starts_with("err restore: expected <dir>"), "{}", lines[2]);
+        // no serving layer attached on the plain serve() entry point
+        assert!(lines[3].starts_with("err snapshot: no serving layer"), "{}", lines[3]);
+        assert!(lines[4].starts_with("err restore: no serving layer"), "{}", lines[4]);
+    }
+
+    #[test]
+    fn snapshot_and_restore_drive_the_attached_queue() {
+        use crate::planner::Objective;
+        use crate::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeQueue};
+        use crate::workload::analytics_scenario;
+
+        let mut cfg = SimConfig::square(64, SensingScheme::Current);
+        cfg.word_bits = 8;
+        let queue = ServeQueue::start(ServeConfig {
+            cfg: cfg.clone(),
+            shards: 2,
+            objective: Objective::Edp,
+            n_records: 24,
+            max_round: 8,
+            cache_capacity: 64,
+            admission: AdmissionPolicy::Fifo,
+            batch: BatchPolicy::Static,
+            sample_every: 0,
+            calibrate_every: 0,
+            calibration_path: None,
+            calibration: None,
+            store_dir: None,
+            checkpoint_every: 0,
+            route_retries: 2,
+            retry_backoff_ms: 1,
+            wear_spare_rows: 0,
+            wear_migrate_threshold: 1024,
+        });
+        let s = analytics_scenario(&cfg, 24, 7);
+        queue.submit(0, s.program).unwrap().wait().unwrap();
+
+        let dir = std::env::temp_dir().join(format!("adra_repl_snap_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_string_lossy().into_owned();
+        let c = coord();
+        let script = format!("snapshot {dir_s}\nrestore {dir_s}\nquit\n");
+        let mut out = Vec::new();
+        serve_with_queue(&c, script.as_bytes(), &mut out, || None, &queue).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], format!("ok {dir_s}"), "{text}");
+        assert_eq!(lines[1], format!("ok {dir_s}"), "{text}");
+        assert_eq!(queue.metrics().recoveries, 1, "restore counts as a recovery");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

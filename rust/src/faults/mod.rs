@@ -1,0 +1,323 @@
+//! Deterministic, seeded fault injection for the durability/chaos suite.
+//!
+//! A process-global injector threads four fault families through the
+//! stack (ISSUE 9, ROADMAP item 5):
+//!
+//! * **worker death** — the coordinator's worker loop exits mid-batch
+//!   after a configured number of ops on a shard, so the serve scheduler
+//!   must detect the `RouteError`, respawn the worker, replay durable
+//!   contents, and retry (`serve::queue`);
+//! * **latency spikes** — a configured stall is injected before every
+//!   Nth op, exercising the batch controller's multiplicative decrease;
+//! * **endurance-drift acceleration** — wear accounting multiplies every
+//!   observed write by `wear_factor`, compressing a months-long soak
+//!   into one test run;
+//! * **storage corruption** — WAL records and snapshots get seeded byte
+//!   flips as they are written, which the store's checksums must detect
+//!   and recover from (`store::DurableStore`).
+//!
+//! The happy path pays exactly ONE relaxed atomic load per hook
+//! ([`active`] is `false` unless a spec is installed); everything else
+//! lives behind that branch.  Injection points are deterministic given a
+//! spec: per-shard op counters drive death/spike schedules, and byte
+//! flips come from a `SplitMix64` stream seeded by `FaultSpec::seed`, so
+//! a failing chaos run replays exactly.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::rng::SplitMix64;
+
+/// Most shards any one process realistically runs; per-shard fault
+/// counters index `shard % MAX_SHARDS`.
+const MAX_SHARDS: usize = 64;
+
+/// What faults to inject and when.  All schedules are deterministic
+/// counters, not probabilities, so tests replay bit-identically.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Seed for the corruption byte-flip stream.
+    pub seed: u64,
+    /// Kill a worker after every Nth op it executes (per shard).
+    pub death_every: Option<u64>,
+    /// Total worker deaths to inject before the death schedule disarms
+    /// (bounds chaos so bounded retries can win).
+    pub death_max: u64,
+    /// Stall before every Nth op (per shard).
+    pub spike_every: Option<u64>,
+    /// Stall duration in nanoseconds.
+    pub spike_ns: u64,
+    /// Multiply wear accounting by this factor (endurance drift).
+    pub wear_factor: u64,
+    /// Flip a byte in every Nth WAL record as it is encoded.
+    pub corrupt_wal_every: Option<u64>,
+    /// Flip a byte in the next snapshot written, then disarm.
+    pub corrupt_snapshot: bool,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self {
+            seed: 0xFA_017,
+            death_every: None,
+            death_max: 1,
+            spike_every: None,
+            spike_ns: 1_000_000,
+            wear_factor: 1,
+            corrupt_wal_every: None,
+            corrupt_snapshot: false,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse a space-separated `key=value` spec string (the REPL `faults`
+    /// command).  Keys: `seed=N`, `death=N` (every Nth op),
+    /// `death-max=N`, `spike=N` (every Nth op), `spike-ns=N`, `wear=N`
+    /// (factor), `corrupt-wal=N`, `corrupt-snapshot`.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut spec = Self::default();
+        for tok in text.split_whitespace() {
+            let (key, val) = match tok.split_once('=') {
+                Some((k, v)) => (k, Some(v)),
+                None => (tok, None),
+            };
+            let num = || -> Result<u64, String> {
+                val.ok_or_else(|| format!("{key}: missing value"))?
+                    .parse::<u64>()
+                    .map_err(|e| format!("{key}: {e}"))
+            };
+            match key {
+                "seed" => spec.seed = num()?,
+                "death" => spec.death_every = Some(num()?.max(1)),
+                "death-max" => spec.death_max = num()?,
+                "spike" => spec.spike_every = Some(num()?.max(1)),
+                "spike-ns" => spec.spike_ns = num()?,
+                "wear" => spec.wear_factor = num()?.max(1),
+                "corrupt-wal" => spec.corrupt_wal_every = Some(num()?.max(1)),
+                "corrupt-snapshot" => spec.corrupt_snapshot = true,
+                other => return Err(format!("unknown fault key {other:?}")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// One-line human-readable rendering (REPL `faults` with no args).
+    pub fn render(&self) -> String {
+        let mut parts = vec![format!("seed={}", self.seed)];
+        if let Some(n) = self.death_every {
+            parts.push(format!("death={n} death-max={}", self.death_max));
+        }
+        if let Some(n) = self.spike_every {
+            parts.push(format!("spike={n} spike-ns={}", self.spike_ns));
+        }
+        if self.wear_factor > 1 {
+            parts.push(format!("wear={}", self.wear_factor));
+        }
+        if let Some(n) = self.corrupt_wal_every {
+            parts.push(format!("corrupt-wal={n}"));
+        }
+        if self.corrupt_snapshot {
+            parts.push("corrupt-snapshot".into());
+        }
+        parts.join(" ")
+    }
+}
+
+/// Action a worker must take before executing its next op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerFault {
+    None,
+    /// Exit the worker loop without replying (callers see
+    /// `RouteError::ShuttingDown`).
+    Die,
+    /// Stall for this many nanoseconds, then execute normally.
+    Delay(u64),
+}
+
+struct Injector {
+    spec: FaultSpec,
+    rng: SplitMix64,
+    deaths_injected: u64,
+    wal_records_seen: u64,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static INJECTOR: Mutex<Option<Injector>> = Mutex::new(None);
+// Per-shard op counters live outside the mutex: the worker hot path
+// under an installed spec bumps its own cell without contending on the
+// injector lock unless a schedule actually fires.
+static SHARD_OPS: [AtomicU64; MAX_SHARDS] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const Z: AtomicU64 = AtomicU64::new(0);
+    [Z; MAX_SHARDS]
+};
+
+/// Whether any fault spec is installed.  The ONLY cost fault injection
+/// adds to the happy path: one relaxed load, false by default
+/// (bench-gated in `BENCH_hotpath.json`).
+#[inline(always)]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Install a spec (replacing any previous one) and arm the hooks.
+pub fn install(spec: FaultSpec) {
+    let seed = spec.seed;
+    *INJECTOR.lock().expect("faults lock") = Some(Injector {
+        spec,
+        rng: SplitMix64::new(seed ^ 0xC0_22_0F_AA),
+        deaths_injected: 0,
+        wal_records_seen: 0,
+    });
+    for c in &SHARD_OPS {
+        c.store(0, Ordering::Relaxed);
+    }
+    ACTIVE.store(true, Ordering::Relaxed);
+}
+
+/// Disarm and forget the installed spec.
+pub fn clear() {
+    ACTIVE.store(false, Ordering::Relaxed);
+    *INJECTOR.lock().expect("faults lock") = None;
+}
+
+/// The currently installed spec, if any.
+pub fn spec() -> Option<FaultSpec> {
+    INJECTOR.lock().expect("faults lock").as_ref().map(|i| i.spec.clone())
+}
+
+fn count_injection(kind: &str) {
+    crate::observe::global()
+        .counter("adra.faults.injected", "Faults injected by the chaos layer.", &[("kind", kind)])
+        .inc();
+}
+
+/// Worker-loop hook: what (if anything) to inject before the next op on
+/// `shard`.  Call only when [`active`] — the caller owns the fast-path
+/// branch.
+pub fn on_worker_op(shard: usize) -> WorkerFault {
+    let n = SHARD_OPS[shard % MAX_SHARDS].fetch_add(1, Ordering::Relaxed) + 1;
+    let mut guard = INJECTOR.lock().expect("faults lock");
+    let Some(inj) = guard.as_mut() else { return WorkerFault::None };
+    if let Some(every) = inj.spec.death_every {
+        if n % every == 0 && inj.deaths_injected < inj.spec.death_max {
+            inj.deaths_injected += 1;
+            drop(guard);
+            count_injection("worker_death");
+            return WorkerFault::Die;
+        }
+    }
+    if let Some(every) = inj.spec.spike_every {
+        if n % every == 0 {
+            let ns = inj.spec.spike_ns;
+            drop(guard);
+            count_injection("latency_spike");
+            return WorkerFault::Delay(ns);
+        }
+    }
+    WorkerFault::None
+}
+
+/// Endurance-drift hook: how many device cycles one observed write
+/// charges.  1 when no spec is installed.
+pub fn wear_factor() -> u64 {
+    if !active() {
+        return 1;
+    }
+    INJECTOR
+        .lock()
+        .expect("faults lock")
+        .as_ref()
+        .map(|i| i.spec.wear_factor)
+        .unwrap_or(1)
+}
+
+/// Storage hook: maybe flip a byte in an encoded WAL record (AFTER its
+/// checksum was computed, so the corruption is detectable).  Returns
+/// `true` when a flip was injected.
+pub fn corrupt_wal(buf: &mut [u8]) -> bool {
+    if !active() || buf.is_empty() {
+        return false;
+    }
+    let mut guard = INJECTOR.lock().expect("faults lock");
+    let Some(inj) = guard.as_mut() else { return false };
+    inj.wal_records_seen += 1;
+    let Some(every) = inj.spec.corrupt_wal_every else { return false };
+    if inj.wal_records_seen % every != 0 {
+        return false;
+    }
+    let at = (inj.rng.next_u64() as usize) % buf.len();
+    buf[at] ^= 0x5A;
+    drop(guard);
+    count_injection("wal_corruption");
+    true
+}
+
+/// Storage hook: maybe flip a byte in an encoded snapshot, then disarm
+/// (one torn snapshot per spec).  Returns `true` when a flip was
+/// injected.
+pub fn corrupt_snapshot(buf: &mut [u8]) -> bool {
+    if !active() || buf.is_empty() {
+        return false;
+    }
+    let mut guard = INJECTOR.lock().expect("faults lock");
+    let Some(inj) = guard.as_mut() else { return false };
+    if !inj.spec.corrupt_snapshot {
+        return false;
+    }
+    inj.spec.corrupt_snapshot = false;
+    let at = (inj.rng.next_u64() as usize) % buf.len();
+    buf[at] ^= 0x5A;
+    drop(guard);
+    count_injection("snapshot_corruption");
+    true
+}
+
+/// Serializes tests that install process-global fault specs — the
+/// injector is shared state, so chaos tests across modules (pool, store,
+/// serve queue, this one) must not overlap.  Test infrastructure, not
+/// serving API.
+#[doc(hidden)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_by_default_and_hooks_are_noops() {
+        let _g = test_lock();
+        clear();
+        assert!(!active());
+        assert_eq!(wear_factor(), 1);
+        let mut buf = vec![7u8; 16];
+        assert!(!corrupt_wal(&mut buf));
+        assert!(!corrupt_snapshot(&mut buf));
+        assert!(buf.iter().all(|&b| b == 7));
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        let s = FaultSpec::parse("seed=9 death=64 death-max=2 spike=16 spike-ns=500 wear=8 corrupt-wal=3 corrupt-snapshot").unwrap();
+        assert_eq!(s.seed, 9);
+        assert_eq!(s.death_every, Some(64));
+        assert_eq!(s.death_max, 2);
+        assert_eq!(s.spike_every, Some(16));
+        assert_eq!(s.spike_ns, 500);
+        assert_eq!(s.wear_factor, 8);
+        assert_eq!(s.corrupt_wal_every, Some(3));
+        assert!(s.corrupt_snapshot);
+        let rendered = s.render();
+        assert!(rendered.contains("death=64"), "{rendered}");
+        assert!(FaultSpec::parse("frob=1").is_err());
+        assert!(FaultSpec::parse("death").is_err());
+    }
+
+    // Schedule/corruption behavior under an INSTALLED spec is covered by
+    // `tests/durability.rs`: the injector is process-global, so arming
+    // it here would perturb unrelated lib tests running in parallel.
+}

@@ -40,6 +40,7 @@ pub mod config;
 pub mod coordinator;
 pub mod device;
 pub mod energy;
+pub mod faults;
 pub mod figures;
 pub mod logic;
 pub mod metrics;
@@ -48,5 +49,6 @@ pub mod planner;
 pub mod runtime;
 pub mod sensing;
 pub mod serve;
+pub mod store;
 pub mod util;
 pub mod workload;

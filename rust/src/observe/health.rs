@@ -509,11 +509,15 @@ pub fn standard_rules() -> Vec<HealthRule> {
             sustain_up: 3,
             sustain_down: 4,
         },
-        // Wear-rate stub (ROADMAP item 5b pre-work): watches the shard
-        // write-rate published by `array::endurance`.  Thresholds are
-        // deliberately lax placeholders until wear-aware serving defines
-        // real budgets; the rule exists so the series and the plumbing
-        // are exercised now.
+        // Array wear rate: aggregate write throughput across every
+        // shard's endurance tracker (the per-shard `adra.array.writes`
+        // counters the serve loop publishes each sample).  Budgets are
+        // sized against low-end HZO FeFET endurance (~1e5 cycles): at
+        // 5e4 writes/s a focused workload burns a hot row's whole
+        // cycle budget in seconds unless wear steering spreads it
+        // (warn — check `adra.array.wear_imbalance` and the migration
+        // counter), and a sustained 5e6 writes/s means leveling has
+        // lost and the array is being consumed (critical).
         HealthRule {
             name: "array_wear_rate".into(),
             signal: Signal::CounterRate {
@@ -522,9 +526,9 @@ pub fn standard_rules() -> Vec<HealthRule> {
                 window: 16,
             },
             direction: Direction::Above,
-            warn: 1e9,
-            critical: 1e12,
-            sustain_up: 4,
+            warn: 5e4,
+            critical: 5e6,
+            sustain_up: 3,
             sustain_down: 4,
         },
     ]
@@ -698,6 +702,51 @@ mod tests {
         store.ingest("d", &[], 3, SampleValue::Counter(60));
         let v = rule.signal.eval(&store, Direction::Above).unwrap();
         assert!((v - 2.6).abs() < 1e-12, "{v}");
+    }
+
+    /// The wear rule's budgets against realistic aggregate write
+    /// rates: background serving is quiet, a hot tenant breaches warn,
+    /// a flood (leveling lost) escalates to critical once the trailing
+    /// window turns over.
+    #[test]
+    fn array_wear_rate_rule_escalates_on_hot_writes() {
+        let store = SeriesStore::with_capacity(64);
+        let mut e = HealthEngine::new();
+        e.add_rule(
+            standard_rules()
+                .into_iter()
+                .find(|r| r.name == "array_wear_rate")
+                .expect("standard wear rule"),
+        );
+        let reg = Registry::new();
+        let rec = FlightRecorder::with_capacity(64);
+        let labels: &[(&str, &str)] = &[("source", "endurance"), ("shard", "0")];
+        let mut t = 0u64; // microseconds; one sample per second
+        let mut total = 0u64;
+        // healthy background: 1k writes/s
+        for _ in 0..6 {
+            t += 1_000_000;
+            total += 1_000;
+            store.ingest("adra.array.writes", labels, t, SampleValue::Counter(total));
+            assert!(e.evaluate(&store, &reg, &rec).is_empty());
+        }
+        assert_eq!(e.state_of("array_wear_rate"), Some(RuleState::Ok));
+        // hot tenant: 1M writes/s — above warn (5e4), below critical
+        for _ in 0..4 {
+            t += 1_000_000;
+            total += 1_000_000;
+            store.ingest("adra.array.writes", labels, t, SampleValue::Counter(total));
+            e.evaluate(&store, &reg, &rec);
+        }
+        assert_eq!(e.state_of("array_wear_rate"), Some(RuleState::Warn));
+        // flood: 20M writes/s — critical once the windowed rate clears 5e6
+        for _ in 0..8 {
+            t += 1_000_000;
+            total += 20_000_000;
+            store.ingest("adra.array.writes", labels, t, SampleValue::Counter(total));
+            e.evaluate(&store, &reg, &rec);
+        }
+        assert_eq!(e.state_of("array_wear_rate"), Some(RuleState::Critical));
     }
 
     #[test]

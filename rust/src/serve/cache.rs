@@ -21,6 +21,7 @@ use std::collections::HashMap;
 use crate::cim::BoolFn;
 use crate::config::SimConfig;
 use crate::planner::{AggKind, IrOp, Predicate, RecordRange, ScratchRow, StepOutput};
+use crate::store::{TableImage, WalOp};
 
 /// What the serving layer knows about the shared table's contents.
 #[derive(Clone, Debug)]
@@ -38,6 +39,9 @@ pub struct TableState {
     epoch: u64,
     /// Content-changing record writes observed (cache-invalidating).
     pub invalidating_writes: u64,
+    /// When armed, every content-changing write is journaled here for
+    /// the durable store's WAL (`None` = journaling off, zero cost).
+    journal: Option<Vec<WalOp>>,
 }
 
 impl TableState {
@@ -55,6 +59,7 @@ impl TableState {
             scratch: Vec::new(),
             epoch: 0,
             invalidating_writes: 0,
+            journal: None,
         }
     }
 
@@ -74,6 +79,9 @@ impl TableState {
         self.epoch += 1;
         self.versions[slot] = self.epoch;
         self.invalidating_writes += 1;
+        if let Some(j) = &mut self.journal {
+            j.push(WalOp::Record { slot: slot as u64, value: v, version: self.epoch });
+        }
         false
     }
 
@@ -88,12 +96,27 @@ impl TableState {
             return true;
         }
         self.scratch[idx] = Some(v);
+        if let Some(j) = &mut self.journal {
+            j.push(WalOp::Scratch { idx: idx as u64, value: v });
+        }
         false
     }
 
     /// Known broadcast contents of a scratch row.
     pub fn scratch_value(&self, idx: usize) -> Option<u64> {
         self.scratch.get(idx).copied().flatten()
+    }
+
+    /// Known masked contents of a record slot (`None` = never written
+    /// through the serving layer; the physical cell holds 0).
+    pub fn record_value(&self, slot: usize) -> Option<u64> {
+        self.records.get(slot).copied().flatten()
+    }
+
+    /// Scratch rows this state has observed broadcasts for (the replay
+    /// path walks `0..scratch_len()`).
+    pub fn scratch_len(&self) -> usize {
+        self.scratch.len()
     }
 
     /// Monotone fingerprint of a record range: the max slot version.
@@ -104,6 +127,99 @@ impl TableState {
             .copied()
             .max()
             .unwrap_or(0)
+    }
+
+    /// Arm the WAL journal: subsequent content-changing writes are
+    /// recorded for [`take_journal`](Self::take_journal).
+    pub fn enable_journal(&mut self) {
+        if self.journal.is_none() {
+            self.journal = Some(Vec::new());
+        }
+    }
+
+    /// Drain the journaled writes accumulated since the last call
+    /// (empty when journaling is off).
+    pub fn take_journal(&mut self) -> Vec<WalOp> {
+        match &mut self.journal {
+            Some(j) => std::mem::take(j),
+            None => Vec::new(),
+        }
+    }
+
+    /// Serializable image of this state (the durable store's snapshot
+    /// payload).
+    pub fn image(&self) -> TableImage {
+        TableImage {
+            n_records: self.n_records as u64,
+            word_mask: self.word_mask,
+            epoch: self.epoch,
+            invalidating_writes: self.invalidating_writes,
+            records: self.records.clone(),
+            versions: self.versions.clone(),
+            scratch: self.scratch.clone(),
+        }
+    }
+
+    /// Rebuild a state from a recovered image (fresh-start recovery:
+    /// versions, epoch, and contents come back exactly as checkpointed).
+    pub fn from_image(img: &TableImage) -> Self {
+        Self {
+            n_records: img.n_records as usize,
+            word_mask: img.word_mask,
+            records: img.records.clone(),
+            versions: img.versions.clone(),
+            scratch: img.scratch.clone(),
+            epoch: img.epoch,
+            invalidating_writes: img.invalidating_writes,
+            journal: None,
+        }
+    }
+
+    /// Apply one recovered WAL record.  Record writes carry the version
+    /// assigned at write time and are skipped when the snapshot already
+    /// covers them (`version <= epoch`), so replaying a WAL that
+    /// overlaps the snapshot is idempotent and versions reproduce the
+    /// fault-free run exactly.  Replay never journals.
+    pub fn apply_wal(&mut self, op: &WalOp) {
+        match *op {
+            WalOp::Record { slot, value, version } => {
+                let slot = slot as usize;
+                if version <= self.epoch || slot >= self.n_records {
+                    return;
+                }
+                self.records[slot] = Some(value & self.word_mask);
+                self.versions[slot] = version;
+                self.epoch = version;
+                self.invalidating_writes += 1;
+            }
+            WalOp::Scratch { idx, value } => {
+                let idx = idx as usize;
+                if self.scratch.len() <= idx {
+                    self.scratch.resize(idx + 1, None);
+                }
+                self.scratch[idx] = Some(value & self.word_mask);
+            }
+        }
+    }
+
+    /// Restore checkpointed contents INTO a live state (REPL `restore`).
+    ///
+    /// Contents and versions come from the image, but the epoch
+    /// CONTINUES from `max(live, image)`: cached results were keyed at
+    /// fingerprints up to the live epoch, so post-restore writes must
+    /// version strictly above every fingerprint ever handed out —
+    /// otherwise a pre-restore cached result could alias a post-restore
+    /// write (the `ResultCache` staleness bug this PR pins).  Entries
+    /// whose fingerprints match restored versions are CORRECT to serve:
+    /// identical versions imply identical contents.
+    pub fn restore_into(&mut self, img: &TableImage) {
+        let epoch = self.epoch.max(img.epoch);
+        let invalidating = self.invalidating_writes.max(img.invalidating_writes);
+        let journal = self.journal.take();
+        *self = Self::from_image(img);
+        self.epoch = epoch;
+        self.invalidating_writes = invalidating;
+        self.journal = journal.map(|_| Vec::new());
     }
 }
 
@@ -607,6 +723,89 @@ mod tests {
         misses += 1;
         assert_eq!((c.hits, c.misses, c.negative_hits), (hits, misses, neg_hits));
         assert!(c.negative_hits <= c.hits, "negative hits are a subset of hits");
+    }
+
+    #[test]
+    fn journal_captures_changes_and_replays_idempotently() {
+        let mut s1 = TableState::new(&cfg(), 8);
+        s1.enable_journal();
+        assert!(!s1.record_write(0, 5));
+        assert!(s1.record_write(0, 5), "redundant write must not journal");
+        assert!(!s1.scratch_write(1, 7));
+        assert!(!s1.record_write(2, 8));
+        let wal = s1.take_journal();
+        assert_eq!(
+            wal,
+            vec![
+                crate::store::WalOp::Record { slot: 0, value: 5, version: 1 },
+                crate::store::WalOp::Scratch { idx: 1, value: 7 },
+                crate::store::WalOp::Record { slot: 2, value: 8, version: 2 },
+            ]
+        );
+        assert!(s1.take_journal().is_empty(), "journal drains");
+
+        // replay into a fresh state reproduces versions bit-for-bit
+        let mut s2 = TableState::new(&cfg(), 8);
+        for op in &wal {
+            s2.apply_wal(op);
+        }
+        assert_eq!(s1.image(), s2.image());
+
+        // replay over an already-covered state is a no-op (the
+        // checkpoint-race window: snapshot written, WAL not truncated)
+        for op in &wal {
+            s2.apply_wal(op);
+        }
+        assert_eq!(s1.image(), s2.image(), "overlap replay must be idempotent");
+    }
+
+    #[test]
+    fn image_round_trips_through_from_image() {
+        let mut s = TableState::new(&cfg(), 6);
+        s.record_write(1, 3);
+        s.scratch_write(0, 9);
+        s.record_write(4, 250);
+        let img = s.image();
+        let back = TableState::from_image(&img);
+        assert_eq!(back.image(), img);
+        assert_eq!(
+            back.range_fingerprint(RecordRange::new(0, 6)),
+            s.range_fingerprint(RecordRange::new(0, 6))
+        );
+    }
+
+    /// Satellite regression: a snapshot+restore round-trip must never
+    /// let the cache serve a pre-restore result for a post-restore
+    /// write.  Epoch continuation (`restore_into`) guarantees every
+    /// post-restore version exceeds every fingerprint ever handed out.
+    #[test]
+    fn restore_cannot_serve_pre_restore_results_for_post_restore_writes() {
+        let mut s = TableState::new(&cfg(), 8);
+        let mut c = ResultCache::new(8);
+        let range = RecordRange::new(0, 8);
+
+        s.record_write(3, 1); // write A (epoch 1)
+        let snapshot = s.image();
+        let a_key = scan_key(&s, 0, 8);
+        c.insert(a_key, StepOutput::Words(vec![(3, 1)]), &s);
+
+        s.record_write(3, 2); // write B (epoch 2)
+        let b_key = scan_key(&s, 0, 8);
+        c.insert(b_key, StepOutput::Words(vec![(3, 2)]), &s);
+
+        s.restore_into(&snapshot); // back to A-contents
+        // restored fingerprints match the A-era key: serving the A-era
+        // entry is CORRECT (identical versions imply identical contents)
+        assert_eq!(s.range_fingerprint(range), 1);
+        assert_eq!(c.lookup(&scan_key(&s, 0, 8)), Some(StepOutput::Words(vec![(3, 1)])));
+
+        s.record_write(3, 9); // write C, post-restore
+        let c_key = scan_key(&s, 0, 8);
+        assert_ne!(c_key, b_key, "post-restore version must exceed B's fingerprint");
+        assert!(
+            c.lookup(&c_key).is_none(),
+            "stale pre-restore result served for a post-restore write"
+        );
     }
 
     /// Model check: random lookup/insert/write traffic against a tiny

@@ -357,6 +357,9 @@ pub struct BatchController {
     pub grows: u64,
     pub shrinks: u64,
     pub holds: u64,
+    /// Latency spikes absorbed by multiplicative decrease (a subset of
+    /// `shrinks` rounds).
+    pub spikes: u64,
 }
 
 impl BatchController {
@@ -375,6 +378,7 @@ impl BatchController {
             grows: 0,
             shrinks: 0,
             holds: 0,
+            spikes: 0,
         }
     }
 
@@ -401,6 +405,15 @@ impl BatchController {
     /// ratchet the ceiling to 1 and pin it there, serializing every
     /// later burst), and growing an unsaturated ceiling would only
     /// inflate a bound nothing is hitting.
+    /// Instantaneous round wall beyond `SPIKE_FACTOR * target` is a load
+    /// cliff (fault-injected stall, tenant flood), not EWMA drift — the
+    /// one-step additive decrease would take `max_round - lo` saturated
+    /// rounds to react, serving the whole cliff at the stale ceiling.
+    /// The factor sits far above the additive band (shrink triggers at
+    /// `1x`, and the pinned additive trajectories feed up to `5x`), so
+    /// ordinary over-target rounds never take the multiplicative path.
+    pub const SPIKE_FACTOR: f64 = 8.0;
+
     pub fn observe(&mut self, round_wall: f64, occupancy: usize) {
         let e = match self.ewma {
             None => round_wall,
@@ -409,6 +422,15 @@ impl BatchController {
         self.ewma = Some(e);
         if !self.adaptive || occupancy < self.max_round {
             self.holds += 1;
+            return;
+        }
+        // multiplicative decrease on latency spikes: halve toward the
+        // floor on the INSTANTANEOUS observation (the EWMA is too slow
+        // for a cliff), recover by the ordinary additive grow path
+        if round_wall > Self::SPIKE_FACTOR * self.target && self.max_round > self.lo {
+            self.max_round = (self.max_round / 2).max(self.lo);
+            self.shrinks += 1;
+            self.spikes += 1;
             return;
         }
         if e > self.target && self.max_round > self.lo {
@@ -641,6 +663,95 @@ mod tests {
         assert_eq!(c.max_round(), 7);
         assert_eq!((c.grows, c.shrinks), (0, 0));
         assert_eq!(c.holds, 10);
+    }
+
+    /// A latency cliff (instantaneous wall far past target) halves the
+    /// ceiling instead of stepping down by one — reaching the floor in
+    /// O(log) rounds — while merely-over-target rounds keep the additive
+    /// path (the pinned `shrinks_to_floor` trajectory feeds 5x target
+    /// and must NOT halve).
+    #[test]
+    fn latency_spike_triggers_multiplicative_decrease() {
+        let mut c = BatchController::adaptive(64, 1e-3);
+        c.observe(20e-3, c.max_round()); // 20x target: spike
+        assert_eq!(c.max_round(), 32, "halved, not stepped");
+        assert_eq!((c.spikes, c.shrinks), (1, 1));
+        c.observe(20e-3, c.max_round());
+        c.observe(20e-3, c.max_round());
+        assert_eq!(c.max_round(), 8, "64 -> 32 -> 16 -> 8 in three rounds");
+        // merely over target (additive band): one step, no spike
+        c.observe(2e-3, c.max_round());
+        assert_eq!(c.max_round(), 7);
+        assert_eq!(c.spikes, 3);
+        // spikes respect the floor
+        let mut f = BatchController::adaptive(2, 1e-3);
+        f.observe(1.0, 2);
+        f.observe(1.0, f.max_round().max(1));
+        assert_eq!(f.max_round(), 1, "never below lo");
+    }
+
+    /// Unsaturated spikes still hold: a single stalled program does not
+    /// indict the ceiling (same reasoning as the additive ratchet trap).
+    #[test]
+    fn unsaturated_spikes_do_not_halve() {
+        let mut c = BatchController::adaptive(8, 1e-3);
+        for _ in 0..10 {
+            c.observe(1.0, 1);
+        }
+        assert_eq!(c.max_round(), 8);
+        assert_eq!(c.spikes, 0);
+    }
+
+    /// Property: under a `heavy_tenant_scenario`-style flood (sustained
+    /// saturated spikes of random magnitude), the controller collapses to
+    /// the floor within O(log hi) rounds, and once the flood clears it
+    /// recovers to the pre-flood ceiling in at most `hi` fast saturated
+    /// rounds — bounded recovery, no sticky collapse.
+    #[test]
+    fn prop_spike_collapse_and_recovery_are_bounded() {
+        #[derive(Clone, Debug)]
+        struct Flood {
+            hi: usize,
+            spike_factor: f64,
+            flood_rounds: usize,
+        }
+        impl Arbitrary for Flood {
+            fn generate(rng: &mut Rng) -> Self {
+                Flood {
+                    hi: 2 + rng.below(63) as usize,
+                    spike_factor: 9.0 + rng.below(100) as f64,
+                    flood_rounds: 1 + rng.below(12) as usize,
+                }
+            }
+        }
+
+        Quick::with_cases(60).check::<Flood, _>("spike collapse/recovery", |f| {
+            let target = 1e-3;
+            let mut c = BatchController::adaptive(f.hi, target);
+            // flood: every round saturated and spiking
+            for _ in 0..f.flood_rounds {
+                c.observe(f.spike_factor * target, c.max_round());
+            }
+            let collapse_budget = (f.hi as f64).log2().ceil() as usize + 1;
+            if f.flood_rounds >= collapse_budget && c.max_round() != 1 {
+                return false; // log-bounded collapse failed
+            }
+            // flood clears: fast saturated rounds (EWMA decays, then the
+            // additive grow path climbs one step per round)
+            let mut recovered_in = None;
+            for round in 0..(f.hi + 40) {
+                c.observe(0.1 * target, c.max_round());
+                if c.max_round() == f.hi {
+                    recovered_in = Some(round + 1);
+                    break;
+                }
+            }
+            match recovered_in {
+                // a few EWMA-decay rounds, then one grow per round
+                Some(n) => n <= f.hi + 40,
+                None => false,
+            }
+        });
     }
 
     #[test]

@@ -84,6 +84,23 @@ pub struct ServeMetrics {
     pub array_marginal_cols: u64,
     /// Digital-vs-analog cross-validation mismatches (must stay 0).
     pub array_xval_mismatches: u64,
+    /// Times the scheduler rebuilt serving state from the durable store
+    /// (startup WAL replay or an explicit `restore`).
+    pub recoveries: u64,
+    /// Route-error retries issued (respawn + replay + re-dispatch
+    /// attempts, successful or not).
+    pub route_retries: u64,
+    /// Shard batches that failed with a route error and were recovered
+    /// by the retry path within the same round.
+    pub recovered_shards: u64,
+    /// Hot-row migrations the wear-aware placement performed.
+    pub wear_migrations: u64,
+    /// Workers respawned after death (snapshot of the pool's counter).
+    pub worker_respawns: u64,
+    /// Controller multiplicative decreases triggered by latency spikes
+    /// (snapshot of the controller's counter; subset of
+    /// `controller_shrinks`).
+    pub spike_shrinks: u64,
     /// Submission-to-reply wall latency per tenant.
     pub tenant_latency: HashMap<usize, LatencyHistogram>,
     /// Cumulative modeled (calibrated) energy charged per tenant — the
@@ -177,6 +194,12 @@ impl ServeMetrics {
             ("adra.serve.controller_holds", "Adaptive max_round hold decisions.", self.controller_holds),
             ("adra.serve.cache_evictions", "Live cache entries evicted under pressure.", self.cache_evictions),
             ("adra.serve.cache_swept", "Stale cache entries reclaimed by the sweep.", self.cache_swept),
+            ("adra.serve.recoveries", "Serving-state rebuilds from the durable store.", self.recoveries),
+            ("adra.serve.route_retries", "Route-error retry attempts (respawn + replay).", self.route_retries),
+            ("adra.serve.recovered_shards", "Shard batches recovered by the retry path.", self.recovered_shards),
+            ("adra.serve.wear_migrations", "Hot-row migrations by wear-aware placement.", self.wear_migrations),
+            ("adra.serve.worker_respawns", "Workers respawned after death.", self.worker_respawns),
+            ("adra.serve.spike_shrinks", "Controller multiplicative decreases on latency spikes.", self.spike_shrinks),
         ] {
             reg.counter(name, help, &l).set_at_least(value);
         }
@@ -277,7 +300,9 @@ impl ServeMetrics {
              cache {} hits / {} misses ({:.1}% hit rate, {} negative hits, \
              {} evictions, {} swept), {} invalidating writes, \
              fairness {} quota hits / {} deferrals, \
-             controller max_round {} ({}+ {}- {}=), \
+             controller max_round {} ({}+ {}- {}= {}spike), \
+             robustness {} recoveries / {} respawns / {} retries \
+             ({} shards recovered, {} wear migrations), \
              tiered kernel {}/{} activations digital + {} masked \
              (det-col fraction {:.1}%, {} xval mismatches)",
             self.programs,
@@ -304,6 +329,12 @@ impl ServeMetrics {
             self.controller_grows,
             self.controller_shrinks,
             self.controller_holds,
+            self.spike_shrinks,
+            self.recoveries,
+            self.worker_respawns,
+            self.route_retries,
+            self.recovered_shards,
+            self.wear_migrations,
             self.array_digital_activations,
             self.array_dual_activations,
             self.array_masked_activations,
@@ -438,6 +469,9 @@ mod tests {
         };
         m.observe_round(2, &st, 1, 4);
         m.observe_controller(5, 2, 9, 16);
+        m.recoveries = 1;
+        m.worker_respawns = 2;
+        m.wear_migrations = 3;
         m.record_service(3, 2e-6, 1.5);
         m.record_service(3, 2e-6, 1.0);
         assert_eq!(m.tenant_latency[&3].count(), 2);
@@ -450,6 +484,9 @@ mod tests {
         assert!(text.contains("adra_serve_submitted_ops{queue=\"0\"} 10"), "{text}");
         assert!(text.contains("adra_serve_quota_hits{queue=\"0\"} 1"), "{text}");
         assert!(text.contains("adra_serve_controller_grows{queue=\"0\"} 5"), "{text}");
+        assert!(text.contains("adra_serve_recoveries{queue=\"0\"} 1"), "{text}");
+        assert!(text.contains("adra_serve_worker_respawns{queue=\"0\"} 2"), "{text}");
+        assert!(text.contains("adra_serve_wear_migrations{queue=\"0\"} 3"), "{text}");
         assert!(text.contains("adra_serve_current_max_round{queue=\"0\"} 16"), "{text}");
         assert!(text.contains("adra_serve_cache_hit_rate{queue=\"0\"} 0.75"), "{text}");
         assert!(text.contains("adra_serve_deferral_ratio{queue=\"0\"} 2"), "{text}");

@@ -30,6 +30,16 @@
 //! * [`metrics`] — [`ServeMetrics`]: queue depth / batch occupancy,
 //!   fused share, cache hit rate, and per-tenant latency histograms.
 //!
+//! With `ServeConfig::store_dir` set the scheduler is durable: every
+//! content-changing write is journaled to a checksummed WAL
+//! (`crate::store`), snapshots rotate on a round cadence, and a
+//! restarted queue replays snapshot + WAL back into both the
+//! `TableState` and the physical arrays before serving (bit-identical
+//! recovery — see `tests/durability.rs`).  The scheduler also retries
+//! route errors by respawning the dead worker and replaying its shard,
+//! and (with `wear_spare_rows > 0`) steers hot rows onto spare
+//! physical rows using the per-shard `WearTracker`.
+//!
 //! ```text
 //!   tenants --submit--> ServeQueue --place--> round of Placements
 //!                           |                      |

@@ -9,23 +9,26 @@
 //! the same backpressure-free design as `coordinator::pool`, one layer
 //! up.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::cim::{CimResult, EngineError};
+use crate::array::WearTracker;
+use crate::cim::{CimOp, CimResult, EngineError, WordAddr};
 use crate::config::SimConfig;
-use crate::coordinator::RouteError;
+use crate::coordinator::{Coordinator, RouteError};
 use crate::energy::OpCost;
 use crate::metrics::RunMetrics;
 use crate::observe::{self, Stage};
 use crate::planner::{
     calibrate, place_calibrated, planned_coordinator, CalibratedCostModel, CalibrationSample,
-    CalibrationStore, ExecError, Objective, PlanCostModel, PlanError, Placement, Program,
-    SharedCalibration, StepOutput,
+    CalibrationStore, ExecError, Layout, Objective, PlanCostModel, PlanError, Placement, Program,
+    ScratchRow, SharedCalibration, StepOutput,
 };
+use crate::store::{DurableState, DurableStore};
 
 use super::cache::{ResultCache, TableState};
 use super::coalesce::{coalesce_round, StepAction};
@@ -75,6 +78,27 @@ pub struct ServeConfig {
     /// into the process-global `planner::calibrate::shared()` cell
     /// instead (what the REPL's `calibration` commands read).
     pub calibration: Option<SharedCalibration>,
+    /// Durable-store directory (snapshot + WAL).  `Some` arms journaling
+    /// of every content-changing write, periodic checkpoints, and
+    /// recovery-on-start: the scheduler replays the recovered logical
+    /// contents into its fresh arrays before serving the first round.
+    /// `None` (the default) serves fully in-memory, as before this PR.
+    pub store_dir: Option<PathBuf>,
+    /// Checkpoint (snapshot + WAL truncate) every N rounds; `0` means
+    /// WAL-only between explicit `snapshot` requests.
+    pub checkpoint_every: u64,
+    /// On a shard `RouteError` (worker death), respawn + replay + retry
+    /// this many times before failing the round's programs.
+    pub route_retries: u32,
+    /// Base backoff between route retries (doubles per attempt).
+    pub retry_backoff_ms: u64,
+    /// Reserve this many top array rows per shard as wear-steering
+    /// spares: when a serving row's write wear exceeds the coldest
+    /// spare's by `wear_migrate_threshold`, its contents migrate there
+    /// and the row map redirects all later ops.  `0` disables steering.
+    pub wear_spare_rows: usize,
+    /// Wear-delta (writes) that triggers a migration.
+    pub wear_migrate_threshold: u64,
 }
 
 impl ServeConfig {
@@ -92,6 +116,12 @@ impl ServeConfig {
             calibrate_every: 1,
             calibration_path: None,
             calibration: None,
+            store_dir: None,
+            checkpoint_every: 32,
+            route_retries: 2,
+            retry_backoff_ms: 1,
+            wear_spare_rows: 0,
+            wear_migrate_threshold: 1024,
         }
     }
 }
@@ -105,6 +135,8 @@ pub enum ServeError {
     Route(RouteError),
     /// An engine failed mid-round (formatted op + error).
     Engine(String),
+    /// A durable-store operation (snapshot/restore) failed.
+    Store(String),
     ShuttingDown,
 }
 
@@ -117,6 +149,7 @@ impl std::fmt::Display for ServeError {
             ServeError::Plan(e) => write!(f, "planning: {e}"),
             ServeError::Route(e) => write!(f, "routing: {e}"),
             ServeError::Engine(s) => write!(f, "engine: {s}"),
+            ServeError::Store(s) => write!(f, "store: {s}"),
             ServeError::ShuttingDown => write!(f, "serve queue is shutting down"),
         }
     }
@@ -153,6 +186,16 @@ struct Admission {
     reply: Sender<Result<ServeReport, ServeError>>,
 }
 
+/// Everything the scheduler thread receives: tenant admissions plus the
+/// durability control plane (REPL `snapshot`/`restore`).  Control
+/// messages are handled between rounds, on the scheduler thread, where
+/// the coordinator and table state are exclusively owned.
+enum QueueMsg {
+    Admit(Admission),
+    Snapshot { dir: PathBuf, reply: Sender<Result<(), String>> },
+    Restore { dir: PathBuf, reply: Sender<Result<(), String>> },
+}
+
 /// Handle to an admitted program.
 pub struct Ticket {
     rx: Receiver<Result<ServeReport, ServeError>>,
@@ -173,7 +216,7 @@ static QUEUE_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// The serving front door.  `Send + Sync`: submit from any thread.
 pub struct ServeQueue {
-    tx: Option<Sender<Admission>>,
+    tx: Option<Sender<QueueMsg>>,
     handle: Option<JoinHandle<()>>,
     metrics: Arc<Mutex<ServeMetrics>>,
     n_records: usize,
@@ -183,7 +226,7 @@ pub struct ServeQueue {
 impl ServeQueue {
     /// Spawn the scheduler thread and its coordinator pool.
     pub fn start(config: ServeConfig) -> Self {
-        let (tx, rx) = channel::<Admission>();
+        let (tx, rx) = channel::<QueueMsg>();
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let m2 = metrics.clone();
         let n_records = config.n_records;
@@ -213,9 +256,40 @@ impl ServeQueue {
         self.tx
             .as_ref()
             .ok_or(ServeError::ShuttingDown)?
-            .send(adm)
+            .send(QueueMsg::Admit(adm))
             .map_err(|_| ServeError::ShuttingDown)?;
         Ok(Ticket { rx })
+    }
+
+    /// Checkpoint the queue's durable state (table contents, wear
+    /// counters, calibration store) into `dir`, synchronously.  Works
+    /// with or without a configured `store_dir`; when `dir` IS the live
+    /// store, the live WAL is truncated too.
+    pub fn snapshot_to(&self, dir: impl Into<PathBuf>) -> Result<(), ServeError> {
+        self.control(|reply| QueueMsg::Snapshot { dir: dir.into(), reply })
+    }
+
+    /// Replace the serving state with the checkpoint recovered from
+    /// `dir` (snapshot + WAL replay): all workers respawn on fresh
+    /// arrays and the restored contents are replayed into them.  Cached
+    /// results stay correct across the swap — the table epoch continues
+    /// from `max(live, restored)`, so post-restore writes can never
+    /// alias a pre-restore fingerprint.
+    pub fn restore_from(&self, dir: impl Into<PathBuf>) -> Result<(), ServeError> {
+        self.control(|reply| QueueMsg::Restore { dir: dir.into(), reply })
+    }
+
+    fn control<F>(&self, make: F) -> Result<(), ServeError>
+    where
+        F: FnOnce(Sender<Result<(), String>>) -> QueueMsg,
+    {
+        let (reply, rx) = channel();
+        self.tx
+            .as_ref()
+            .ok_or(ServeError::ShuttingDown)?
+            .send(make(reply))
+            .map_err(|_| ServeError::ShuttingDown)?;
+        rx.recv().map_err(|_| ServeError::ShuttingDown)?.map_err(ServeError::Store)
     }
 
     /// Snapshot of the serve-layer metrics.
@@ -233,9 +307,13 @@ impl Drop for ServeQueue {
     }
 }
 
+/// Device endurance budget the serve-side wear trackers assume (HZO
+/// mid-range, paper §II.B cites 1e5–1e11 cycles).
+const WEAR_ENDURANCE: u64 = 100_000_000;
+
 fn scheduler(
     config: ServeConfig,
-    rx: Receiver<Admission>,
+    rx: Receiver<QueueMsg>,
     metrics: Arc<Mutex<ServeMetrics>>,
     queue_id: u64,
 ) {
@@ -252,8 +330,14 @@ fn scheduler(
         calibrate_every,
         calibration_path,
         calibration,
+        store_dir,
+        checkpoint_every,
+        route_retries,
+        retry_backoff_ms,
+        wear_spare_rows,
+        wear_migrate_threshold,
     } = config;
-    let coord = planned_coordinator(&cfg, shards, objective);
+    let mut coord = planned_coordinator(&cfg, shards, objective);
     // the calibrated cost model: analytic tables wrapped by the runtime
     // correction store — seeded from the shared handle (a warm daemon)
     // when it has content, else from the persisted snapshot, else empty
@@ -264,6 +348,7 @@ fn scheduler(
         .filter(|s| !s.is_empty())
         .or_else(|| calibration_path.as_deref().map(CalibrationStore::load))
         .unwrap_or_default();
+    let cal_preseeded = !seed_store.is_empty();
     let mut cal =
         CalibratedCostModel::with_store(PlanCostModel::new(&cfg, objective), shards, seed_store);
     // restored routing pins must reach the workers before the first round
@@ -271,6 +356,69 @@ fn scheduler(
     let mut service_window = ServiceWindow::new();
     let mut state = TableState::new(&cfg, n_records);
     let mut cache = ResultCache::new(cache_capacity);
+    // per-shard wear accounting + the wear-steering row maps (logical →
+    // physical; identity until a migration redirects a hot row onto one
+    // of the reserved spare rows)
+    let mut wear: Vec<WearTracker> =
+        (0..shards).map(|_| WearTracker::new(cfg.rows, WEAR_ENDURANCE)).collect();
+    let mut row_maps: Vec<Vec<usize>> = (0..shards).map(|_| (0..cfg.rows).collect()).collect();
+    let spare_base = cfg.rows.saturating_sub(wear_spare_rows);
+    // steering disarms per shard if a program ever addresses a reserved
+    // row directly (the reserve was sized too small for the workload)
+    let mut steer_ok: Vec<bool> =
+        vec![wear_spare_rows > 0 && spare_base > 0; shards];
+
+    // durable store: recover, seed state/wear/calibration, replay the
+    // recovered logical contents into the fresh arrays, then arm the WAL
+    // journal — everything before the first admission is drained
+    let mut store: Option<DurableStore> = None;
+    if let Some(dir) = &store_dir {
+        if let Ok((s, rec)) = DurableStore::open(dir) {
+            // a WAL with no snapshot (checkpoint_every = 0, or a crash
+            // before the first checkpoint) still recovers: replay onto
+            // the fresh table
+            if rec.state.is_some() || !rec.wal.is_empty() {
+                let mut recovered = match &rec.state {
+                    Some(ds) => TableState::from_image(&ds.table),
+                    None => TableState::new(&cfg, n_records),
+                };
+                for op in &rec.wal {
+                    recovered.apply_wal(op);
+                }
+                if recovered.n_records() == n_records {
+                    state = recovered;
+                    if let Some(ds) = &rec.state {
+                        for (t, counts) in wear.iter_mut().zip(&ds.wear) {
+                            t.seed_counts(counts);
+                        }
+                        // the durable calibration snapshot is the weakest
+                        // seed: an explicit handle or path wins
+                        if !cal_preseeded {
+                            if let Some(cs) = CalibrationStore::from_json(&ds.calibration_json) {
+                                if !cs.is_empty() {
+                                    cal = CalibratedCostModel::with_store(
+                                        PlanCostModel::new(&cfg, objective),
+                                        shards,
+                                        cs,
+                                    );
+                                    cal.sync_routing(&coord);
+                                }
+                            }
+                        }
+                    }
+                    for shard in 0..shards {
+                        let ops = shard_replay_ops(&cfg, n_records, shards, shard, &state);
+                        if !ops.is_empty() {
+                            let _ = coord.call_batch(shard, &ops);
+                        }
+                    }
+                    metrics.lock().expect("metrics lock").recoveries += 1;
+                }
+            }
+            store = Some(s);
+        }
+        state.enable_journal();
+    }
     let mut controller = match batch {
         BatchPolicy::Static => BatchController::fixed(max_round),
         BatchPolicy::Adaptive { target_p95 } => BatchController::adaptive(max_round, target_p95),
@@ -302,12 +450,29 @@ fn scheduler(
 
     while open || !backlog.is_empty() {
         // batch window: block for work only when the backlog is dry,
-        // then sweep in everything already queued
+        // then sweep in everything already queued.  Control messages
+        // (snapshot/restore) run here, between rounds, where everything
+        // is exclusively owned.
         if backlog.is_empty() {
             match rx.recv() {
-                Ok(a) => {
+                Ok(QueueMsg::Admit(a)) => {
                     let t = a.tenant;
                     backlog.push(t, a);
+                }
+                Ok(QueueMsg::Snapshot { dir, reply }) => {
+                    let _ = reply.send(do_snapshot(&dir, &mut store, &state, &wear, &cal));
+                    continue;
+                }
+                Ok(QueueMsg::Restore { dir, reply }) => {
+                    let r = do_restore(
+                        &dir, &cfg, n_records, shards, objective, &mut coord, &mut state,
+                        &mut wear, &mut row_maps, &mut cal, &mut store,
+                    );
+                    if r.is_ok() {
+                        metrics.lock().expect("metrics lock").recoveries += 1;
+                    }
+                    let _ = reply.send(r);
+                    continue;
                 }
                 Err(_) => {
                     open = false;
@@ -317,9 +482,22 @@ fn scheduler(
         }
         while open {
             match rx.try_recv() {
-                Ok(a) => {
+                Ok(QueueMsg::Admit(a)) => {
                     let t = a.tenant;
                     backlog.push(t, a);
+                }
+                Ok(QueueMsg::Snapshot { dir, reply }) => {
+                    let _ = reply.send(do_snapshot(&dir, &mut store, &state, &wear, &cal));
+                }
+                Ok(QueueMsg::Restore { dir, reply }) => {
+                    let r = do_restore(
+                        &dir, &cfg, n_records, shards, objective, &mut coord, &mut state,
+                        &mut wear, &mut row_maps, &mut cal, &mut store,
+                    );
+                    if r.is_ok() {
+                        metrics.lock().expect("metrics lock").recoveries += 1;
+                    }
+                    let _ = reply.send(r);
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => open = false,
@@ -381,7 +559,7 @@ fn scheduler(
         let fuse = cal.fuse_dual_on_adra();
         let placements: Vec<&Placement> = round.iter().map(|(_, p)| p).collect();
         let coalesce_start = Instant::now();
-        let coalesced = coalesce_round(&placements, &mut state, &mut cache, fuse);
+        let mut coalesced = coalesce_round(&placements, &mut state, &mut cache, fuse);
         rec.record_span(
             round_no,
             None,
@@ -393,6 +571,33 @@ fn scheduler(
         // shard batches; its span is an annotation carrying the forecast
         // activation count
         rec.record_span(round_no, None, Stage::Fuse, 0, coalesced.stats.activations);
+
+        // durability: this round's content-changing writes hit the WAL
+        // BEFORE execution (write-ahead), so any crash from here on
+        // replays them on restart
+        if let Some(st) = store.as_mut() {
+            let _ = st.append(&state.take_journal());
+        }
+
+        // wear steering: route each shard batch through its row map
+        // (identity until a migration redirects a hot row onto a spare).
+        // A program addressing a reserved row directly means the reserve
+        // was sized too small — steering disarms for that shard.
+        if wear_spare_rows > 0 {
+            for b in &mut coalesced.shard_batches {
+                let Some(ok) = steer_ok.get_mut(b.shard) else { continue };
+                if !*ok {
+                    continue;
+                }
+                if b.ops.iter().any(|op| op_touches_reserved(op, spare_base)) {
+                    *ok = false;
+                } else if !is_identity(&row_maps[b.shard]) {
+                    for op in &mut b.ops {
+                        *op = remap_op(op, &row_maps[b.shard]);
+                    }
+                }
+            }
+        }
 
         // execute every shard batch in parallel, fused when routing allows
         let execute_start = Instant::now();
@@ -425,6 +630,52 @@ fn scheduler(
             coalesced.shard_batches.iter().map(|b| b.ops.len() as u64).sum(),
         );
 
+        // fault recovery: a failed shard means its worker died mid-round
+        // (injected or real).  Respawn it with a fresh engine, replay the
+        // durable logical contents — which already include this round's
+        // writes, so re-execution is idempotent: writes rewrite the same
+        // values and queries recompute against identical contents — and
+        // re-issue the shard's batch, with bounded exponential backoff.
+        let mut shard_results = shard_results;
+        let mut retries_this_round = 0u64;
+        let mut recovered_shards = 0u64;
+        for (i, r) in shard_results.iter_mut().enumerate() {
+            if r.is_ok() {
+                continue;
+            }
+            let b = &coalesced.shard_batches[i];
+            for attempt in 0..route_retries {
+                std::thread::sleep(Duration::from_millis(
+                    retry_backoff_ms.saturating_mul(1 << attempt.min(16)),
+                ));
+                if coord.respawn(b.shard).is_err() {
+                    break;
+                }
+                retries_this_round += 1;
+                let mut replay = shard_replay_ops(&cfg, n_records, shards, b.shard, &state);
+                if steer_ok.get(b.shard).copied().unwrap_or(false)
+                    && !is_identity(&row_maps[b.shard])
+                {
+                    for op in &mut replay {
+                        *op = remap_op(op, &row_maps[b.shard]);
+                    }
+                }
+                if !replay.is_empty() && coord.call_batch(b.shard, &replay).is_err() {
+                    continue;
+                }
+                let res = if fuse {
+                    coord.call_batch_fused(b.shard, &b.ops)
+                } else {
+                    coord.call_batch(b.shard, &b.ops)
+                };
+                if res.is_ok() {
+                    *r = res;
+                    recovered_shards += 1;
+                    break;
+                }
+            }
+        }
+
         let mut results: Vec<Vec<Result<CimResult, EngineError>>> =
             Vec::with_capacity(shard_results.len());
         let mut route_err = None;
@@ -438,6 +689,11 @@ fn scheduler(
             }
         }
         if let Some(e) = route_err {
+            {
+                let mut m = metrics.lock().expect("metrics lock");
+                m.route_retries = m.route_retries.saturating_add(retries_this_round);
+                m.worker_respawns = coord.respawns();
+            }
             for (a, _) in round {
                 let _ = a.reply.send(Err(ServeError::Route(e.clone())));
             }
@@ -462,6 +718,44 @@ fn scheduler(
         controller.observe(round_wall_s, occupancy);
         round_wall.record(round_wall_s * 1e9);
 
+        // endurance accounting: charge every executed write to its
+        // physical row; the fault injector's endurance-drift hook
+        // multiplies the charge to compress soak time
+        let wf = crate::faults::wear_factor();
+        for b in &coalesced.shard_batches {
+            if let Some(t) = wear.get_mut(b.shard) {
+                for op in &b.ops {
+                    if let CimOp::Write { addr, .. } = op {
+                        if addr.row < t.rows() {
+                            t.note_writes(addr.row, wf);
+                        }
+                    }
+                }
+            }
+        }
+
+        // wear steering: when a serving row runs hot, copy its contents
+        // to the coldest spare and redirect the row map (one migration
+        // per shard per round bounds the overhead)
+        let mut migrations_this_round = 0u64;
+        if wear_spare_rows > 0 {
+            for s in 0..shards {
+                if !steer_ok.get(s).copied().unwrap_or(false) {
+                    continue;
+                }
+                if let Some((hot, cold)) =
+                    plan_migration(&wear[s], &row_maps[s], spare_base, wear_migrate_threshold)
+                {
+                    let ops = row_copy_ops(&cfg, n_records, shards, s, hot, cold, &state);
+                    if ops.is_empty() || coord.call_batch(s, &ops).is_ok() {
+                        row_maps[s][hot] = cold;
+                        wear[s].note_writes(cold, (ops.len() as u64).saturating_mul(wf));
+                        migrations_this_round += 1;
+                    }
+                }
+            }
+        }
+
         let coord_metrics: RunMetrics = coord.metrics();
         {
             let mut m = metrics.lock().expect("metrics lock");
@@ -476,6 +770,11 @@ fn scheduler(
             // engine-level per-tier activation split (pool snapshot, not
             // a per-round delta)
             m.observe_array(&coord_metrics.array);
+            m.route_retries = m.route_retries.saturating_add(retries_this_round);
+            m.recovered_shards = m.recovered_shards.saturating_add(recovered_shards);
+            m.wear_migrations = m.wear_migrations.saturating_add(migrations_this_round);
+            m.worker_respawns = coord.respawns();
+            m.spike_shrinks = controller.spikes;
         }
 
         // assemble per program, splice cached outputs, memoize fresh ones
@@ -556,19 +855,269 @@ fn scheduler(
             m.publish(reg, &qlabel);
         }
         coord_metrics.publish(reg, &[("queue", &qlabel)]);
+        // durable checkpoint cadence + store health counters (the
+        // `adra.store.*` families the durability CI job asserts on)
+        if let Some(st) = store.as_mut() {
+            if checkpoint_every > 0 && round_no % checkpoint_every == 0 {
+                let _ = st.checkpoint(&durable_state_of(&state, &wear, &cal));
+            }
+            st.publish(reg, &qlabel);
+        }
         // time-series sampling + health evaluation at the configured
         // cadence: the published state above becomes one point per
         // series, and rule transitions alert into the recorder
         if sample_every > 0 && round_no % sample_every == 0 {
-            let store = observe::series();
-            store.sample(reg);
+            // per-shard endurance state feeds the `array_wear_rate` rule
+            for (s, t) in wear.iter().enumerate() {
+                let shard_label = format!("{queue_id}.{s}");
+                t.publish(reg, &shard_label);
+            }
+            let series = observe::series();
+            series.sample(reg);
             observe::health()
                 .lock()
                 .expect("health lock")
-                .evaluate(store, reg, rec);
+                .evaluate(series, reg, rec);
         }
         observe_overhead.record(observe_start.elapsed().as_nanos() as f64);
     }
+}
+
+/// Everything one durable checkpoint captures, assembled from the
+/// scheduler's live state.
+fn durable_state_of(
+    state: &TableState,
+    wear: &[WearTracker],
+    cal: &CalibratedCostModel,
+) -> DurableState {
+    DurableState {
+        table: state.image(),
+        wear: wear.iter().map(|t| t.counts().to_vec()).collect(),
+        calibration_json: cal.store().to_json(),
+    }
+}
+
+/// Record-slot range one shard owns under the placement partition
+/// (`planner::place_with`'s contiguous chunking — must stay in sync).
+fn shard_slice(n_records: usize, shards: usize, shard: usize) -> (usize, usize) {
+    let chunk = n_records.div_ceil(shards.max(1));
+    let lo = (shard * chunk).min(n_records);
+    let hi = ((shard + 1) * chunk).min(n_records);
+    (lo, hi)
+}
+
+/// Writes that rebuild one shard's physical array from the logical table
+/// state: every known record slot plus every known scratch-row broadcast
+/// (replicated per shard, exactly as placement replicates them).
+/// Unknown words are skipped — a fresh array already holds 0, and
+/// `FefetArray::write_bit` is drift-free, so replay is bit-identical to
+/// the original write history (see `FefetArray::state_digest` tests).
+fn shard_replay_ops(
+    cfg: &SimConfig,
+    n_records: usize,
+    shards: usize,
+    shard: usize,
+    state: &TableState,
+) -> Vec<CimOp> {
+    let (lo, hi) = shard_slice(n_records, shards, shard);
+    if lo >= hi {
+        return Vec::new();
+    }
+    let layout = Layout::of(cfg, hi - lo);
+    let mut ops = Vec::new();
+    for slot in lo..hi {
+        if let Some(v) = state.record_value(slot) {
+            ops.push(CimOp::Write { addr: layout.record_addr(slot - lo), value: v });
+        }
+    }
+    for idx in 0..state.scratch_len() {
+        if let Some(v) = state.scratch_value(idx) {
+            let row = layout.scratch_row(ScratchRow(idx));
+            for word in 0..layout.words_per_row {
+                ops.push(CimOp::Write { addr: WordAddr { row, word }, value: v });
+            }
+        }
+    }
+    ops
+}
+
+fn is_identity(map: &[usize]) -> bool {
+    map.iter().enumerate().all(|(i, &p)| i == p)
+}
+
+/// Does this op address a reserved spare row directly?
+fn op_touches_reserved(op: &CimOp, spare_base: usize) -> bool {
+    let (a, b) = op.rows();
+    a >= spare_base || b.map_or(false, |r| r >= spare_base)
+}
+
+/// Rewrite an op's row references through a shard's logical→physical
+/// wear-steering map.  Word indices and values are untouched, so
+/// results are bit-identical — only WHERE the bits live changes.
+fn remap_op(op: &CimOp, map: &[usize]) -> CimOp {
+    let m = |r: usize| map.get(r).copied().unwrap_or(r);
+    match *op {
+        CimOp::Read(a) => CimOp::Read(WordAddr { row: m(a.row), word: a.word }),
+        CimOp::Write { addr, value } => {
+            CimOp::Write { addr: WordAddr { row: m(addr.row), word: addr.word }, value }
+        }
+        CimOp::Read2 { row_a, row_b, word } => {
+            CimOp::Read2 { row_a: m(row_a), row_b: m(row_b), word }
+        }
+        CimOp::Bool { f, row_a, row_b, word } => {
+            CimOp::Bool { f, row_a: m(row_a), row_b: m(row_b), word }
+        }
+        CimOp::Add { row_a, row_b, word } => CimOp::Add { row_a: m(row_a), row_b: m(row_b), word },
+        CimOp::Sub { row_a, row_b, word } => CimOp::Sub { row_a: m(row_a), row_b: m(row_b), word },
+        CimOp::Compare { row_a, row_b, word } => {
+            CimOp::Compare { row_a: m(row_a), row_b: m(row_b), word }
+        }
+    }
+}
+
+/// Pick a wear migration for one shard: the hottest serving physical row
+/// vs the coldest unmapped spare; `Some((logical_row, cold_physical))`
+/// when the wear delta exceeds the threshold.
+fn plan_migration(
+    t: &WearTracker,
+    map: &[usize],
+    spare_base: usize,
+    threshold: u64,
+) -> Option<(usize, usize)> {
+    let hot_logical = (0..spare_base.min(map.len())).max_by_key(|&r| t.writes(map[r]))?;
+    let hot_writes = t.writes(map[hot_logical]);
+    let serving = &map[..spare_base.min(map.len())];
+    let cold = t.coldest_of((spare_base..t.rows()).filter(|r| !serving.contains(r)))?;
+    (hot_writes >= t.writes(cold).saturating_add(threshold)).then_some((hot_logical, cold))
+}
+
+/// Writes that copy one logical row's known contents onto a new physical
+/// row (a migration's data move).  Unknown words write 0: the source
+/// cell was never written through the serving layer, so it still holds
+/// the reset value — the copy must reproduce it on a possibly-dirty
+/// spare.
+fn row_copy_ops(
+    cfg: &SimConfig,
+    n_records: usize,
+    shards: usize,
+    shard: usize,
+    logical_row: usize,
+    to_phys: usize,
+    state: &TableState,
+) -> Vec<CimOp> {
+    let (lo, hi) = shard_slice(n_records, shards, shard);
+    if lo >= hi {
+        return Vec::new();
+    }
+    let layout = Layout::of(cfg, hi - lo);
+    let wpr = layout.words_per_row.max(1);
+    let mut ops = Vec::with_capacity(wpr);
+    if logical_row < layout.scratch_base {
+        for word in 0..wpr {
+            let local = logical_row * wpr + word;
+            if local >= hi - lo {
+                break;
+            }
+            let v = state.record_value(lo + local).unwrap_or(0);
+            ops.push(CimOp::Write { addr: WordAddr { row: to_phys, word }, value: v });
+        }
+    } else {
+        let v = state.scratch_value(logical_row - layout.scratch_base).unwrap_or(0);
+        for word in 0..wpr {
+            ops.push(CimOp::Write { addr: WordAddr { row: to_phys, word }, value: v });
+        }
+    }
+    ops
+}
+
+/// Checkpoint the live state into `dir` — through the live store (WAL
+/// truncates too) when `dir` IS its directory, through a transient store
+/// otherwise.
+fn do_snapshot(
+    dir: &std::path::Path,
+    live: &mut Option<DurableStore>,
+    state: &TableState,
+    wear: &[WearTracker],
+    cal: &CalibratedCostModel,
+) -> Result<(), String> {
+    let ds = durable_state_of(state, wear, cal);
+    match live.as_mut().filter(|s| s.dir() == dir) {
+        Some(s) => s.checkpoint(&ds).map_err(|e| e.to_string()),
+        None => {
+            let (mut s, _) = DurableStore::open(dir).map_err(|e| e.to_string())?;
+            s.checkpoint(&ds).map_err(|e| e.to_string())
+        }
+    }
+}
+
+/// Swap the serving state for the checkpoint recovered from `dir`:
+/// respawn every worker onto a fresh array, replay the restored logical
+/// contents, and re-checkpoint into the live store.  The table epoch
+/// CONTINUES across the swap (`TableState::restore_into`), so cached
+/// results from before the restore can never alias post-restore writes.
+#[allow(clippy::too_many_arguments)]
+fn do_restore(
+    dir: &std::path::Path,
+    cfg: &SimConfig,
+    n_records: usize,
+    shards: usize,
+    objective: Objective,
+    coord: &mut Coordinator,
+    state: &mut TableState,
+    wear: &mut [WearTracker],
+    row_maps: &mut [Vec<usize>],
+    cal: &mut CalibratedCostModel,
+    live: &mut Option<DurableStore>,
+) -> Result<(), String> {
+    let (_probe, rec) = DurableStore::open(dir).map_err(|e| e.to_string())?;
+    let ds = rec
+        .state
+        .ok_or_else(|| format!("no usable checkpoint in {}", dir.display()))?;
+    let mut recovered = TableState::from_image(&ds.table);
+    for op in &rec.wal {
+        recovered.apply_wal(op);
+    }
+    if recovered.n_records() != n_records {
+        return Err(format!(
+            "checkpoint has {} records, serve table has {n_records}",
+            recovered.n_records()
+        ));
+    }
+    // fresh arrays: the restore must erase live contents the checkpoint
+    // does not know about, or stale physical words would leak into
+    // post-restore query results
+    for shard in 0..shards {
+        coord.respawn(shard).map_err(|e| format!("respawn shard {shard}: {e}"))?;
+    }
+    state.restore_into(&recovered.image());
+    for (t, counts) in wear.iter_mut().zip(&ds.wear) {
+        t.seed_counts(counts);
+    }
+    for m in row_maps.iter_mut() {
+        for (i, p) in m.iter_mut().enumerate() {
+            *p = i;
+        }
+    }
+    if let Some(cs) = CalibrationStore::from_json(&ds.calibration_json) {
+        if !cs.is_empty() {
+            *cal = CalibratedCostModel::with_store(PlanCostModel::new(cfg, objective), shards, cs);
+        }
+    }
+    cal.sync_routing(coord);
+    for shard in 0..shards {
+        let ops = shard_replay_ops(cfg, n_records, shards, shard, state);
+        if !ops.is_empty() {
+            coord
+                .call_batch(shard, &ops)
+                .map_err(|e| format!("replay shard {shard}: {e}"))?;
+        }
+    }
+    // the restored contents were never journaled — make them durable now
+    if let Some(st) = live.as_mut() {
+        let _ = state.take_journal();
+        st.checkpoint(&durable_state_of(state, wear, cal)).map_err(|e| e.to_string())?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -677,6 +1226,12 @@ mod tests {
             calibrate_every: 1,
             calibration_path: None,
             calibration: None,
+            store_dir: None,
+            checkpoint_every: 32,
+            route_retries: 2,
+            retry_backoff_ms: 1,
+            wear_spare_rows: 0,
+            wear_migrate_threshold: 1024,
         });
         let rep = q.submit(0, s.program.clone()).unwrap().wait().unwrap();
         assert_eq!(rep.outputs, naive.outputs);
@@ -692,6 +1247,74 @@ mod tests {
         let m = q.metrics();
         assert_eq!(m.activations, 0, "fusion must be disabled under baseline routing");
         assert_eq!(m.fused_followers, 0);
+    }
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("adra_queue_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// A queue with a durable store journals its writes, checkpoints,
+    /// and a RESTARTED queue over the same directory recovers contents
+    /// and serves bit-identical results without re-loading the table.
+    #[test]
+    fn durable_queue_recovers_contents_across_restart() {
+        let cfg = cfg();
+        let dir = tmpdir("recover");
+        let s = analytics_scenario(&cfg, 48, 11);
+        let mut config = ServeConfig::new(cfg.clone(), 2, 48);
+        config.store_dir = Some(dir.clone());
+        config.checkpoint_every = 0; // WAL-only: recovery must replay it
+        let first = {
+            let q = ServeQueue::start(config.clone());
+            q.submit(0, s.program.clone()).unwrap().wait().unwrap()
+        }; // drop = clean shutdown; WAL holds the load's writes
+
+        // restart over the same directory: recovery replays the WAL into
+        // fresh arrays, so a query-only program (no Load step) sees the
+        // table
+        let q2 = ServeQueue::start(config);
+        let mut query_only = s.program.clone();
+        query_only.ops.remove(0); // drop the Load; broadcast + queries stay
+        let rep = q2.submit(0, query_only).unwrap().wait().unwrap();
+        assert_eq!(rep.outputs[s.filter_step - 1], first.outputs[s.filter_step]);
+        let m = q2.metrics();
+        assert_eq!(m.recoveries, 1, "startup recovery must be counted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `snapshot_to` + `restore_from` round-trips the serving state, and
+    /// results served after the restore are bit-identical to before it.
+    #[test]
+    fn snapshot_restore_round_trips_serving_state() {
+        let cfg = cfg();
+        let dir = tmpdir("snaproll");
+        let s = analytics_scenario(&cfg, 48, 12);
+        let q = queue(48);
+        let before = q.submit(0, s.program.clone()).unwrap().wait().unwrap();
+        q.snapshot_to(&dir).unwrap();
+
+        // clobber the table with different contents...
+        let mut changed = s.program.clone();
+        let new_values: Vec<u64> = s.values.iter().map(|v| 127 - v).collect();
+        changed.ops[0] = crate::planner::IrOp::Load { start: 0, values: new_values };
+        let clobbered = q.submit(0, changed).unwrap().wait().unwrap();
+        assert_ne!(clobbered.outputs[s.filter_step], before.outputs[s.filter_step]);
+
+        // ...then restore: the snapshot's contents come back exactly,
+        // and NO stale cache entry leaks across the swap
+        q.restore_from(&dir).unwrap();
+        let mut query_only = s.program.clone();
+        query_only.ops.remove(0);
+        let after = q.submit(0, query_only).unwrap().wait().unwrap();
+        assert_eq!(after.outputs[s.filter_step - 1], before.outputs[s.filter_step]);
+        assert!(matches!(
+            q.restore_from(tmpdir("snaproll_empty")),
+            Err(ServeError::Store(_))
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

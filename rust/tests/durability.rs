@@ -1,0 +1,653 @@
+//! Chaos + durability suite: the only place fault specs are INSTALLED.
+//!
+//! The injector (`adra::faults`) is process-global, so arming it from a
+//! lib unit test would perturb unrelated tests sharing the process.
+//! This binary runs as its own process and serializes every test behind
+//! [`adra::faults::test_lock`], which makes installed specs safe:
+//!
+//! * schedule determinism/boundedness of the seeded death/spike hooks,
+//! * injected WAL/snapshot corruption: detected by checksum, recovered
+//!   by prefix replay and `.prev` fallback,
+//! * the crash-point sweep: for EVERY byte-truncation of the WAL the
+//!   store recovers exactly the durable record prefix, bit-identical to
+//!   the fault-free array state at that point,
+//! * worker death mid-round: coordinator respawn at the pool level, and
+//!   respawn + replay + retry inside a serving flood,
+//! * wear-drift acceleration driving live row migrations without
+//!   changing any answer,
+//! * latency spikes driving the batch controller's multiplicative
+//!   decrease while the flood stays bit-identical,
+//! * restart recovery and snapshot/restore cache-staleness pinning with
+//!   chaos compiled in and armed.
+
+use std::path::PathBuf;
+
+use adra::config::{SensingScheme, SimConfig};
+use adra::coordinator::Coordinator;
+use adra::faults::{self, FaultSpec, WorkerFault};
+use adra::planner::{Layout, Predicate, Program, ScratchRow, StepOutput};
+use adra::serve::{BatchPolicy, ServeConfig, ServeQueue, TableState};
+use adra::store::{DurableState, DurableStore, WalOp};
+use adra::util::quick::Quick;
+use adra::util::rng::Rng;
+use adra::workload::heavy_tenant_scenario;
+use adra::workload::programs::analytics_scenario;
+
+mod common;
+use common::Seed;
+
+const N_RECORDS: usize = 48;
+const SHARDS: usize = 3;
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::square(64, SensingScheme::Current);
+    c.word_bits = 8;
+    c.max_batch = 16;
+    c
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("adra_durability_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Serving config tuned for the chaos tests: deterministic static rounds
+/// and no sampling/calibration noise unless a test opts back in.
+fn serve_cfg(cfg: &SimConfig) -> ServeConfig {
+    let mut c = ServeConfig::new(cfg.clone(), SHARDS, N_RECORDS);
+    c.max_round = 6;
+    c.cache_capacity = 512;
+    c.batch = BatchPolicy::Static;
+    c.sample_every = 0;
+    c.calibrate_every = 0;
+    c
+}
+
+/// Installs a spec on construction, guarantees `clear` on drop (even on
+/// assertion failure), so no test leaks an armed injector.
+struct Chaos;
+
+impl Chaos {
+    fn install(spec: &str) -> Self {
+        faults::clear();
+        faults::install(FaultSpec::parse(spec).expect("valid spec"));
+        Chaos
+    }
+}
+
+impl Drop for Chaos {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+/// Encoded WAL record size: u32 length prefix + body + u64 checksum.
+fn wal_record_len(op: &WalOp) -> usize {
+    let body = match op {
+        WalOp::Record { .. } => 1 + 8 + 8 + 8,
+        WalOp::Scratch { .. } => 1 + 8 + 8,
+    };
+    4 + body + 8
+}
+
+/// The longest fully-durable record prefix within `cut` bytes of WAL.
+fn durable_prefix(ops: &[WalOp], cut: usize) -> &[WalOp] {
+    let mut at = 0usize;
+    let mut k = 0usize;
+    for op in ops {
+        at += wal_record_len(op);
+        if at > cut {
+            break;
+        }
+        k += 1;
+    }
+    &ops[..k]
+}
+
+// ---- hook schedules --------------------------------------------------
+
+#[test]
+fn death_and_spike_schedules_are_deterministic_and_bounded() {
+    let _g = faults::test_lock();
+
+    // deaths fire on the every-5th-op cadence, capped at death-max
+    let schedule = |spec: &str| -> Vec<(usize, WorkerFault)> {
+        let _c = Chaos::install(spec);
+        (1..=20).map(|n| (n, faults::on_worker_op(0))).collect()
+    };
+    let a = schedule("seed=7 death=5 death-max=2");
+    let deaths: Vec<usize> =
+        a.iter().filter(|(_, f)| *f == WorkerFault::Die).map(|(n, _)| *n).collect();
+    assert_eq!(deaths, vec![5, 10], "every-5th cadence, bounded at 2: {a:?}");
+    assert!(
+        a.iter().all(|(n, f)| deaths.contains(n) || *f == WorkerFault::None),
+        "no other fault fires: {a:?}"
+    );
+    // reinstalling the same spec reproduces the schedule exactly
+    assert_eq!(a, schedule("seed=7 death=5 death-max=2"), "seeded schedule is deterministic");
+
+    // spikes fire on their own cadence with the configured stall
+    let _c = Chaos::install("spike=4 spike-ns=7");
+    for n in 1..=12 {
+        let want = if n % 4 == 0 { WorkerFault::Delay(7) } else { WorkerFault::None };
+        assert_eq!(faults::on_worker_op(1), want, "op {n}");
+    }
+}
+
+#[test]
+fn corruption_flips_are_seed_deterministic() {
+    let _g = faults::test_lock();
+    let flip = || {
+        let _c = Chaos::install("seed=5 corrupt-wal=1");
+        let mut buf = vec![0u8; 32];
+        assert!(faults::corrupt_wal(&mut buf), "every-1st record is flipped");
+        buf
+    };
+    let a = flip();
+    assert_eq!(a, flip(), "same seed, same flip position");
+    assert_eq!(a.iter().filter(|&&b| b != 0).count(), 1, "exactly one byte flipped");
+}
+
+// ---- store corruption + crash points ---------------------------------
+
+#[test]
+fn injected_wal_corruption_is_detected_and_prefix_recovered() {
+    let _g = faults::test_lock();
+    let dir = tmpdir("wal_corrupt");
+    let ops: Vec<WalOp> = (0..6)
+        .map(|i| WalOp::Record { slot: i, value: 10 + i, version: i + 1 })
+        .collect();
+    {
+        let _c = Chaos::install("seed=3 corrupt-wal=2");
+        let (mut st, _) = DurableStore::open(&dir).expect("open");
+        st.append(&ops).expect("append");
+        // the injector flipped a byte in every 2nd record AFTER its
+        // checksum was computed, so the damage is detectable
+    }
+    let (st, rec) = DurableStore::open(&dir).expect("reopen");
+    assert_eq!(rec.wal, &ops[..1], "replay stops at the first bad record");
+    assert_eq!(rec.corruptions, 1, "the bad record is counted, not silently skipped");
+    assert!(rec.state.is_none() && !rec.used_fallback);
+    assert_eq!(st.corruptions_detected, 1, "the handle carries the count into adra.store.*");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_snapshot_corruption_falls_back_to_prev_checkpoint() {
+    let _g = faults::test_lock();
+    let dir = tmpdir("snap_corrupt");
+    let mut cfg = cfg();
+    cfg.word_bits = 8;
+    let mut good = TableState::new(&cfg, 8);
+    for slot in 0..8 {
+        good.record_write(slot, slot as u64 + 1);
+    }
+    let good_state =
+        DurableState { table: good.image(), wear: Vec::new(), calibration_json: String::new() };
+    let mut clobbered = TableState::new(&cfg, 8);
+    for slot in 0..8 {
+        clobbered.record_write(slot, 99);
+    }
+    let bad_state = DurableState {
+        table: clobbered.image(),
+        wear: Vec::new(),
+        calibration_json: String::new(),
+    };
+    {
+        let (mut st, _) = DurableStore::open(&dir).expect("open");
+        st.checkpoint(&good_state).expect("good checkpoint");
+        let _c = Chaos::install("seed=11 corrupt-snapshot");
+        st.checkpoint(&bad_state).expect("corrupted checkpoint still writes");
+    }
+    let (_, rec) = DurableStore::open(&dir).expect("reopen");
+    assert!(rec.used_fallback, "snapshot.bin failed its checksum; .prev was used");
+    assert!(rec.corruptions >= 1);
+    assert_eq!(
+        rec.state.expect("fallback recovers the previous checkpoint").table,
+        good_state.table,
+        "recovery falls back to the last GOOD state, not the torn one"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The crash-point sweep: for EVERY byte-truncation of the WAL, recovery
+/// yields exactly the longest fully-durable record prefix — never an
+/// error, never a spurious corruption (a torn tail is the normal crash
+/// artifact), never a partial record.
+#[test]
+fn wal_crash_point_sweep_recovers_exact_durable_prefix() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let dir = tmpdir("sweep_src");
+    let ops = vec![
+        WalOp::Scratch { idx: 0, value: 5 },
+        WalOp::Record { slot: 0, value: 17, version: 1 },
+        WalOp::Record { slot: 3, value: 251, version: 2 },
+        WalOp::Scratch { idx: 1, value: 42 },
+        WalOp::Record { slot: 0, value: 9, version: 3 },
+        WalOp::Record { slot: 7, value: 128, version: 4 },
+        WalOp::Scratch { idx: 0, value: 6 },
+        WalOp::Record { slot: 5, value: 1, version: 5 },
+    ];
+    {
+        let (mut st, _) = DurableStore::open(&dir).expect("open");
+        st.append(&ops).expect("append");
+    }
+    let bytes = std::fs::read(dir.join("wal.bin")).expect("read wal");
+    assert_eq!(
+        bytes.len(),
+        ops.iter().map(wal_record_len).sum::<usize>(),
+        "framing matches the documented record layout"
+    );
+
+    let crash = tmpdir("sweep_crash");
+    for cut in 0..=bytes.len() {
+        let _ = std::fs::remove_dir_all(&crash);
+        std::fs::create_dir_all(&crash).expect("mkdir");
+        std::fs::write(crash.join("wal.bin"), &bytes[..cut]).expect("write truncated wal");
+        let (_, rec) = DurableStore::open(&crash).expect("crash-point recovery never errors");
+        assert_eq!(rec.wal, durable_prefix(&ops, cut), "crash at byte {cut}");
+        assert_eq!(rec.corruptions, 0, "a torn tail is not corruption (byte {cut})");
+        assert!(rec.state.is_none() && !rec.used_fallback);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&crash);
+}
+
+/// Any random op sequence, any random crash point: recovery is exactly
+/// the durable prefix (the property behind the deterministic sweep).
+#[test]
+fn prop_random_wal_truncation_recovers_a_prefix() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let dir = tmpdir("prop_src");
+    let crash = tmpdir("prop_crash");
+    Quick::with_cases(16).check::<Seed, _>("wal prefix recovery", |seed| {
+        let mut rng = Rng::new(seed.0);
+        let n_ops = 5 + rng.below(20) as usize;
+        let ops: Vec<WalOp> = (0..n_ops)
+            .map(|i| {
+                if rng.bool() {
+                    WalOp::Record {
+                        slot: rng.below(64),
+                        value: rng.below(256),
+                        version: i as u64 + 1,
+                    }
+                } else {
+                    WalOp::Scratch { idx: rng.below(4), value: rng.below(256) }
+                }
+            })
+            .collect();
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let (mut st, _) = DurableStore::open(&dir).expect("open");
+            st.append(&ops).expect("append");
+        }
+        let bytes = std::fs::read(dir.join("wal.bin")).expect("read wal");
+        let cut = rng.below(bytes.len() as u64 + 1) as usize;
+        let _ = std::fs::remove_dir_all(&crash);
+        std::fs::create_dir_all(&crash).expect("mkdir");
+        std::fs::write(crash.join("wal.bin"), &bytes[..cut]).expect("truncate");
+        let (_, rec) = DurableStore::open(&crash).expect("recover");
+        rec.corruptions == 0 && rec.wal == durable_prefix(&ops, cut)
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&crash);
+}
+
+/// Snapshot + WAL overlap replays idempotently AND the recovered logical
+/// state rebuilds a physical array bit-identical to the pre-crash one
+/// (`FefetArray::state_digest` over the replayed writes).
+#[test]
+fn recovered_replay_is_bit_identical_to_pre_crash_array() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let cfg = cfg();
+    let n_records = 16;
+    let layout = Layout::of(&cfg, n_records);
+    let dir = tmpdir("bit_identity");
+    let (mut st, _) = DurableStore::open(&dir).expect("open");
+
+    // live writes journal into the WAL while mirroring onto an array,
+    // with a mid-sequence checkpoint so replay must skip the covered
+    // (version-stamped) WAL prefix
+    let mut state = TableState::new(&cfg, n_records);
+    state.enable_journal();
+    let mut live = adra::array::FefetArray::new(&cfg);
+    let mut apply = |state: &mut TableState, arr: &mut adra::array::FefetArray, i: usize| {
+        if i % 3 == 0 {
+            let v = (i as u64 * 7 + 1) & 0xFF;
+            state.scratch_write(i % 2, v);
+            let row = layout.scratch_row(ScratchRow(i % 2));
+            for word in 0..layout.words_per_row {
+                arr.write_word(row, word, v);
+            }
+        } else {
+            let slot = (i * 5) % n_records;
+            let v = (i as u64 * 13 + 3) & 0xFF;
+            if !state.record_write(slot, v) {
+                let a = layout.record_addr(slot);
+                arr.write_word(a.row, a.word, v);
+            }
+        }
+    };
+    for i in 0..7 {
+        apply(&mut state, &mut live, i);
+    }
+    st.append(&state.take_journal()).expect("append first half");
+    st.checkpoint(&DurableState {
+        table: state.image(),
+        wear: Vec::new(),
+        calibration_json: String::new(),
+    })
+    .expect("mid-sequence checkpoint");
+    for i in 7..16 {
+        apply(&mut state, &mut live, i);
+    }
+    st.append(&state.take_journal()).expect("append second half");
+    drop(st); // crash after the last append
+
+    let (_, rec) = DurableStore::open(&dir).expect("recover");
+    let ds = rec.state.expect("checkpoint recovered");
+    let mut recovered = TableState::from_image(&ds.table);
+    for op in &rec.wal {
+        recovered.apply_wal(op);
+    }
+    assert_eq!(recovered.image(), state.image(), "logical state is bit-identical");
+
+    // replaying the recovered contents slot-by-slot rebuilds the exact
+    // physical array the original write ORDER produced
+    let mut replayed = adra::array::FefetArray::new(&cfg);
+    for slot in 0..n_records {
+        if let Some(v) = recovered.record_value(slot) {
+            let a = layout.record_addr(slot);
+            replayed.write_word(a.row, a.word, v);
+        }
+    }
+    for idx in 0..recovered.scratch_len() {
+        if let Some(v) = recovered.scratch_value(idx) {
+            let row = layout.scratch_row(ScratchRow(idx));
+            for word in 0..layout.words_per_row {
+                replayed.write_word(row, word, v);
+            }
+        }
+    }
+    assert_eq!(
+        replayed.state_digest(),
+        live.state_digest(),
+        "replay-by-content == original write history"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- pool-level death + respawn --------------------------------------
+
+#[test]
+fn injected_worker_death_is_respawned_at_the_pool() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let mut coord = Coordinator::adra(&cfg, 2);
+    use adra::cim::{CimOp, WordAddr};
+    let ops: Vec<CimOp> = (0..3)
+        .map(|w| CimOp::Write { addr: WordAddr { row: 0, word: w }, value: 7 })
+        .collect();
+
+    let _c = Chaos::install("seed=2 death=4 death-max=1");
+    assert!(coord.call_batch(0, &ops).is_ok(), "ops 1-3 precede the death point");
+    assert!(
+        coord.call_batch(0, &ops).is_err(),
+        "op 4 kills the worker; the batch dies un-replied"
+    );
+    assert!(coord.call_batch(1, &ops).is_ok(), "the other shard is untouched");
+    coord.respawn(0).expect("respawn installs a fresh worker");
+    assert_eq!(coord.respawns(), 1);
+    assert!(coord.call_batch(0, &ops).is_ok(), "death-max=1 is exhausted; shard 0 serves again");
+    let got = coord
+        .call(0, CimOp::Read(WordAddr { row: 0, word: 0 }))
+        .expect("read after respawn");
+    assert_eq!(got.value, adra::cim::CimValue::Word(7), "re-written contents are visible");
+}
+
+// ---- serving under chaos ---------------------------------------------
+
+#[test]
+fn serve_flood_survives_worker_deaths_with_identical_answers() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let s = heavy_tenant_scenario(&cfg, N_RECORDS, 123, 12, 3);
+    let mut sc = serve_cfg(&cfg);
+    sc.route_retries = 3;
+    let queue = ServeQueue::start(sc);
+
+    let _c = Chaos::install("seed=40 death=40 death-max=2");
+    let tickets: Vec<_> = s
+        .submissions
+        .iter()
+        .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+        .collect();
+    let reports: Vec<_> = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("every program is answered despite worker deaths"))
+        .collect();
+    for (i, (rep, want)) in reports.iter().zip(&s.expected_matches).enumerate() {
+        assert_eq!(
+            rep.outputs[s.filter_step],
+            StepOutput::Matches(want.clone()),
+            "submission {i} diverged from ground truth"
+        );
+    }
+    let m = queue.metrics();
+    assert!(m.worker_respawns >= 1, "at least one injected death hit a round: {m:?}");
+    assert!(m.recovered_shards >= 1, "the retry loop recovered the shard: {m:?}");
+    assert!(m.route_retries >= m.recovered_shards);
+}
+
+#[test]
+fn wear_acceleration_migrates_hot_rows_without_changing_answers() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let mut sc = serve_cfg(&cfg);
+    sc.wear_spare_rows = 4;
+    sc.wear_migrate_threshold = 64;
+    let queue = ServeQueue::start(sc);
+
+    {
+        // 1000x endurance drift: one serving wave is enough soak to push
+        // the hottest row past the migration threshold
+        let _c = Chaos::install("seed=9 wear=1000");
+        for wave in 0..3u64 {
+            let s = heavy_tenant_scenario(&cfg, N_RECORDS, 700 + wave, 4, 2);
+            let tickets: Vec<_> = s
+                .submissions
+                .iter()
+                .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+                .collect();
+            for (i, t) in tickets.into_iter().enumerate() {
+                let rep = t.wait().expect("served");
+                assert_eq!(
+                    rep.outputs[s.filter_step],
+                    StepOutput::Matches(s.expected_matches[i].clone()),
+                    "wave {wave} submission {i} diverged after migration"
+                );
+            }
+        }
+    }
+    let m = queue.metrics();
+    assert!(m.wear_migrations >= 1, "accelerated wear must trigger a migration: {m:?}");
+
+    // with the accelerant cleared, steered serving stays bit-identical
+    let s = heavy_tenant_scenario(&cfg, N_RECORDS, 7103, 4, 2);
+    let tickets: Vec<_> = s
+        .submissions
+        .iter()
+        .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let rep = t.wait().expect("served post-chaos");
+        assert_eq!(rep.outputs[s.filter_step], StepOutput::Matches(s.expected_matches[i].clone()));
+    }
+}
+
+#[test]
+fn latency_spikes_shrink_the_batch_and_the_flood_stays_identical() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let mut sc = serve_cfg(&cfg);
+    sc.batch = BatchPolicy::Adaptive { target_p95: 1e-3 };
+    let queue = ServeQueue::start(sc);
+
+    {
+        // a 30ms stall every 50th op dwarfs the 1ms target: the
+        // controller must halve max_round (multiplicative decrease)
+        let _c = Chaos::install("seed=17 spike=50 spike-ns=30000000");
+        let s = heavy_tenant_scenario(&cfg, N_RECORDS, 555, 12, 3);
+        let tickets: Vec<_> = s
+            .submissions
+            .iter()
+            .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let rep = t.wait().expect("served under spikes");
+            assert_eq!(
+                rep.outputs[s.filter_step],
+                StepOutput::Matches(s.expected_matches[i].clone()),
+                "spikes may slow submission {i}, never corrupt it"
+            );
+        }
+    }
+    let m = queue.metrics();
+    assert!(m.spike_shrinks >= 1, "the spike cut max_round: {m:?}");
+
+    // recovery: with the injector disarmed the queue keeps serving
+    // correctly (and the controller is free to grow the round back)
+    let s = heavy_tenant_scenario(&cfg, N_RECORDS, 556, 6, 2);
+    let tickets: Vec<_> = s
+        .submissions
+        .iter()
+        .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let rep = t.wait().expect("served after recovery");
+        assert_eq!(rep.outputs[s.filter_step], StepOutput::Matches(s.expected_matches[i].clone()));
+    }
+}
+
+#[test]
+fn serve_restart_recovers_under_benign_chaos() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let dir = tmpdir("serve_restart_chaos");
+    let s = analytics_scenario(&cfg, N_RECORDS, 31_337);
+
+    let _c = Chaos::install("seed=23 spike=25 spike-ns=100000 wear=7");
+    let first = {
+        let mut sc = serve_cfg(&cfg);
+        sc.store_dir = Some(dir.clone());
+        sc.checkpoint_every = 0; // WAL-only: recovery must replay the log
+        let q1 = ServeQueue::start(sc);
+        q1.submit(0, s.program.clone()).expect("admit").wait().expect("serve")
+    };
+    assert_eq!(first.outputs[s.filter_step], StepOutput::Matches(s.expected_matches.clone()));
+
+    // restart: a fresh queue over the same directory replays the WAL
+    // into fresh arrays before its first round
+    let mut sc = serve_cfg(&cfg);
+    sc.store_dir = Some(dir.clone());
+    sc.checkpoint_every = 0;
+    let q2 = ServeQueue::start(sc);
+    let mut query_only = s.program.clone();
+    query_only.ops.remove(0); // drop the Load; recovered contents answer
+    let rep = q2.submit(0, query_only).expect("admit").wait().expect("serve after restart");
+    assert_eq!(
+        rep.outputs[s.filter_step - 1],
+        first.outputs[s.filter_step],
+        "recovered array answers exactly like the pre-crash one"
+    );
+    assert_eq!(q2.metrics().recoveries, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_wal_restart_serves_fresh_programs_and_counts_corruption() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let dir = tmpdir("serve_restart_corrupt");
+    {
+        let _c = Chaos::install("seed=29 corrupt-wal=5");
+        let mut sc = serve_cfg(&cfg);
+        sc.store_dir = Some(dir.clone());
+        sc.checkpoint_every = 0;
+        let q1 = ServeQueue::start(sc);
+        let s = analytics_scenario(&cfg, N_RECORDS, 61);
+        let rep = q1.submit(0, s.program.clone()).expect("admit").wait().expect("serve");
+        assert_eq!(rep.outputs[s.filter_step], StepOutput::Matches(s.expected_matches.clone()));
+    }
+    // the WAL on disk now holds detectably-corrupt records; a restarted
+    // queue recovers the good prefix and keeps serving self-contained
+    // programs correctly
+    let mut sc = serve_cfg(&cfg);
+    sc.store_dir = Some(dir.clone());
+    sc.checkpoint_every = 0;
+    let q2 = ServeQueue::start(sc);
+    let s2 = analytics_scenario(&cfg, N_RECORDS, 62);
+    let rep = q2.submit(0, s2.program.clone()).expect("admit").wait().expect("serve");
+    assert_eq!(rep.outputs[s2.filter_step], StepOutput::Matches(s2.expected_matches.clone()));
+    let scrape = adra::observe::expose_text(adra::observe::global());
+    assert!(
+        scrape.contains("adra_store_corruptions_detected"),
+        "detected corruption reaches the adra.store.* families:\n{scrape}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The ResultCache staleness pin (satellite 1): after a `restore` the
+/// table epoch CONTINUES, so new writes version strictly above every
+/// fingerprint ever handed out — a cached pre-restore result can never
+/// alias a post-restore query over different contents.
+#[test]
+fn restore_then_rewrite_never_serves_a_stale_cached_result() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let cfg = cfg();
+    let dir = tmpdir("restore_stale");
+    let queue = ServeQueue::start(serve_cfg(&cfg));
+
+    let filter_prog = |values: &[u64], thr: u64| -> Program {
+        let mut p = Program::new(N_RECORDS);
+        let s0 = p.scratch();
+        let all = p.all();
+        p.load(0, values.to_vec());
+        p.broadcast(s0, thr);
+        p.filter(all, s0, Predicate::Lt);
+        p
+    };
+    let matches_of = |values: &[u64], thr: u64| -> Vec<usize> {
+        values.iter().enumerate().filter(|(_, &v)| v < thr).map(|(i, _)| i).collect()
+    };
+    let v1: Vec<u64> = (0..N_RECORDS as u64).map(|i| (i * 3) % 100).collect();
+    let v2: Vec<u64> = (0..N_RECORDS as u64).map(|i| (i * 5 + 1) % 100).collect();
+    let v3: Vec<u64> = (0..N_RECORDS as u64).map(|i| (i * 11 + 2) % 100).collect();
+
+    let r1 = queue.submit(0, filter_prog(&v1, 50)).expect("admit").wait().expect("v1");
+    assert_eq!(r1.outputs[2], StepOutput::Matches(matches_of(&v1, 50)));
+    queue.snapshot_to(&dir).expect("snapshot the v1 state");
+
+    // clobber with v2 (its filter result lands in the cache), then roll
+    // back to the v1 snapshot
+    let r2 = queue.submit(0, filter_prog(&v2, 50)).expect("admit").wait().expect("v2");
+    assert_eq!(r2.outputs[2], StepOutput::Matches(matches_of(&v2, 50)));
+    queue.restore_from(&dir).expect("restore");
+
+    // post-restore, a THIRD contents must be answered fresh: if the
+    // epoch had reset, v3's fingerprints could collide with the cached
+    // v2 entry and serve v2's matches
+    let r3 = queue.submit(0, filter_prog(&v3, 50)).expect("admit").wait().expect("v3");
+    assert_eq!(
+        r3.outputs[2],
+        StepOutput::Matches(matches_of(&v3, 50)),
+        "post-restore rewrite must not alias the pre-restore cache entry"
+    );
+    assert_eq!(queue.metrics().recoveries, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}

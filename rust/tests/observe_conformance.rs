@@ -239,6 +239,12 @@ fn served_workload_populates_global_registry_and_recorder() {
         calibrate_every: 1,
         calibration_path: None,
         calibration: None,
+        store_dir: None,
+        checkpoint_every: 32,
+        route_retries: 2,
+        retry_backoff_ms: 1,
+        wear_spare_rows: 0,
+        wear_migrate_threshold: 1024,
     });
     let qid = queue.instance().to_string();
     let s = analytics_scenario(&cfg, 48, 3);

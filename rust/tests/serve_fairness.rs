@@ -57,6 +57,12 @@ fn prop_heavy_flood_cannot_starve_light_tenants() {
             calibrate_every: 1,
             calibration_path: None,
             calibration: None,
+            store_dir: None,
+            checkpoint_every: 32,
+            route_retries: 2,
+            retry_backoff_ms: 1,
+            wear_spare_rows: 0,
+            wear_migrate_threshold: 1024,
         });
         // submit the whole adversarial pattern before waiting on anything
         let tickets: Vec<_> = s
@@ -133,6 +139,12 @@ fn prop_single_tenant_stream_identical_under_eviction_pressure() {
             calibrate_every: 1,
             calibration_path: None,
             calibration: None,
+            store_dir: None,
+            checkpoint_every: 32,
+            route_retries: 2,
+            retry_backoff_ms: 1,
+            wear_spare_rows: 0,
+            wear_migrate_threshold: 1024,
         });
         let tickets: Vec<_> = programs
             .iter()
@@ -209,6 +221,12 @@ fn fifo_static_policies_remain_available_and_correct() {
         calibrate_every: 1,
         calibration_path: None,
         calibration: None,
+        store_dir: None,
+        checkpoint_every: 32,
+        route_retries: 2,
+        retry_backoff_ms: 1,
+        wear_spare_rows: 0,
+        wear_migrate_threshold: 1024,
     });
     let tickets: Vec<_> = programs
         .iter()

@@ -18,7 +18,12 @@ target/metrics_scrape1.prom / target/metrics_scrape2.prom):
      but must never vanish or decrease) — histogram `_count`/`_bucket`
      series are cumulative and held to the same bar.
 
-Usage: check_metrics.py SCRAPE1 SCRAPE2
+Usage: check_metrics.py SCRAPE1 SCRAPE2 [EXTRA_FAMILY...]
+
+Any EXTRA_FAMILY arguments are required in BOTH scrapes on top of the
+baseline set — the durability CI job passes the `adra_store_*` and
+robustness `adra_serve_*` families this way, so callers whose examples
+do not arm the durable store are not forced to expose them.
 
 Exit 0 on success, 1 with a list of violations otherwise.
 """
@@ -147,17 +152,18 @@ def check_histograms(path, types, samples, errors):
 
 
 def main():
-    if len(sys.argv) != 3:
+    if len(sys.argv) < 3:
         print(__doc__)
         return 2
     errors = []
+    required = REQUIRED_FAMILIES + sys.argv[3:]
     types1, samples1 = parse(sys.argv[1], errors)
     types2, samples2 = parse(sys.argv[2], errors)
 
     for path, types, samples in ((sys.argv[1], types1, samples1), (sys.argv[2], types2, samples2)):
         if not samples:
             errors.append(f"{path}: scrape has no samples at all")
-        for family in REQUIRED_FAMILIES:
+        for family in required:
             if family not in types:
                 errors.append(f"{path}: required family {family} missing")
         check_histograms(path, types, samples, errors)
