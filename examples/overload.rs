@@ -1,0 +1,285 @@
+//! End-to-end overload-survival demo (DESIGN.md §15): the serve queue
+//! is pushed past capacity and through injected faults, and proves the
+//! four survival mechanisms one by one —
+//!
+//!   1. deadlines + cancellation: an expired program is swept BEFORE
+//!      placement and never drives the array; a tenant-wide cancel
+//!      dooms a queued backlog in one sweep,
+//!   2. load shedding: a burst past the per-tenant backlog bound
+//!      answers `Rejected(Overloaded)` immediately instead of queueing
+//!      to time out — and every answered program stays bit-identical,
+//!   3. circuit breaking: a dead shard opens its breaker after the
+//!      retry budget is spent, placements fail fast with
+//!      `Rejected(ShardDown)`, and a half-open respawn-and-replay probe
+//!      heals the shard,
+//!   4. brownout: sustained SLO burn steps the degrade ladder up
+//!      (pinned routing -> tighter cache -> reduced sampling -> shed);
+//!      clearing the overload walks it back to normal.
+//!
+//! Artifacts (CI's `overload-smoke` job consumes all three):
+//!   target/overload_scrape1.prom   scrape at peak overload
+//!   target/overload_scrape2.prom   scrape after recovery
+//!   target/overload_trace.jsonl    flight-recorder tail incl. alerts
+//!
+//!     cargo run --release --example overload
+
+use std::time::Duration;
+
+use adra::config::{SensingScheme, SimConfig};
+use adra::faults::{self, FaultSpec};
+use adra::planner::StepOutput;
+use adra::serve::{
+    BatchPolicy, RejectReason, ServeConfig, ServeError, ServeQueue, SubmitOptions,
+};
+use adra::workload::heavy_tenant_scenario;
+use adra::workload::programs::analytics_scenario;
+
+const N_RECORDS: usize = 48;
+const SHARDS: usize = 2;
+
+fn base_cfg() -> SimConfig {
+    let mut c = SimConfig::square(64, SensingScheme::Current);
+    c.word_bits = 8;
+    c.max_batch = 16;
+    c
+}
+
+fn serve_cfg(cfg: &SimConfig, shards: usize) -> ServeConfig {
+    let mut sc = ServeConfig::new(cfg.clone(), shards, N_RECORDS);
+    sc.max_round = 4;
+    sc.cache_capacity = 512;
+    sc.batch = BatchPolicy::Static;
+    sc.sample_every = 0;
+    sc.calibrate_every = 0;
+    sc
+}
+
+/// Write one Prometheus scrape of the global registry and sanity-check
+/// the families the overload pipeline must expose.
+fn write_scrape(path: &str, families: &[&str]) -> String {
+    let text = adra::observe::expose_text(adra::observe::global());
+    for family in families {
+        assert!(text.contains(family), "scrape is missing family {family}:\n{text}");
+    }
+    std::fs::create_dir_all("target").expect("create target/");
+    std::fs::write(path, &text).expect("write scrape");
+    text
+}
+
+fn main() {
+    let cfg = base_cfg();
+
+    // ---- act 1: deadlines + cancellation --------------------------------
+    println!("=== act 1: deadlines + tenant cancellation ===");
+    let queue = ServeQueue::start(serve_cfg(&cfg, SHARDS));
+    let s = analytics_scenario(&cfg, N_RECORDS, 11);
+    let (ticket, _h) = queue
+        .submit_with(0, s.program.clone(), SubmitOptions { deadline: Some(Duration::ZERO) })
+        .expect("admit");
+    assert!(matches!(ticket.wait(), Err(ServeError::DeadlineExceeded)));
+    let m = queue.metrics();
+    assert_eq!((m.deadline_expired, m.rounds), (1, 0), "expired program never ran: {m:?}");
+    println!("zero-deadline program swept before placement (0 rounds executed)");
+
+    // under multi-ms spiked rounds a tenant-wide cancel lands while the
+    // backlog is still deep, and the sweep dooms what remains queued
+    faults::install(FaultSpec::parse("seed=5 spike=8 spike-ns=2000000").expect("spec"));
+    let sc = heavy_tenant_scenario(&cfg, N_RECORDS, 404, 12, 3);
+    let tickets: Vec<_> = sc
+        .submissions
+        .iter()
+        .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+        .collect();
+    let swept = queue.cancel_tenant(sc.heavy_tenant).expect("queue alive");
+    let mut cancelled = 0usize;
+    for (i, ((tenant, _), ticket)) in sc.submissions.iter().zip(tickets).enumerate() {
+        match ticket.wait() {
+            Ok(rep) => assert_eq!(
+                rep.outputs[sc.filter_step],
+                StepOutput::Matches(sc.expected_matches[i].clone()),
+                "survivors answer bit-identically"
+            ),
+            Err(ServeError::Cancelled) => {
+                assert_eq!(*tenant, sc.heavy_tenant);
+                cancelled += 1;
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    faults::clear();
+    assert_eq!(cancelled, swept);
+    assert!(swept >= 1, "the sweep must land before a spiked backlog drains");
+    println!("cancel_tenant swept {swept}/12 heavy programs; every survivor exact\n");
+    drop(queue);
+
+    // ---- act 2: load shedding -------------------------------------------
+    println!("=== act 2: bounded backlog load shedding ===");
+    let mut sc2 = serve_cfg(&cfg, SHARDS);
+    sc2.max_tenant_backlog = 2;
+    let queue = ServeQueue::start(sc2);
+    faults::install(FaultSpec::parse("seed=8 spike=8 spike-ns=2000000").expect("spec"));
+    let s2 = heavy_tenant_scenario(&cfg, N_RECORDS, 2024, 20, 0);
+    let tickets: Vec<_> = s2
+        .submissions
+        .iter()
+        .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+        .collect();
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        match ticket.wait() {
+            Ok(rep) => {
+                assert_eq!(
+                    rep.outputs[s2.filter_step],
+                    StepOutput::Matches(s2.expected_matches[i].clone())
+                );
+                ok += 1;
+            }
+            Err(ServeError::Rejected(RejectReason::Overloaded)) => shed += 1,
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    faults::clear();
+    assert_eq!(ok + shed, 20);
+    assert!(ok >= 1 && shed >= 1, "a 20-deep burst against a 2-deep bound splits");
+    println!("burst of 20 against backlog bound 2: {ok} served exactly, {shed} shed\n");
+    drop(queue);
+
+    // ---- act 3: circuit breaker -----------------------------------------
+    println!("=== act 3: per-shard circuit breaker ===");
+    let mut sc3 = serve_cfg(&cfg, 1);
+    sc3.route_retries = 0;
+    sc3.breaker_threshold = 1;
+    sc3.breaker_probe_after = 2;
+    let queue = ServeQueue::start(sc3);
+    faults::install(FaultSpec::parse("seed=2 death=1 death-max=1").expect("spec"));
+    let s3 = analytics_scenario(&cfg, N_RECORDS, 31);
+
+    let r1 = queue.submit(0, s3.program.clone()).expect("admit").wait();
+    assert!(matches!(r1, Err(ServeError::Route(_))), "{r1:?}");
+    assert_eq!(queue.lifecycle().expect("alive").breaker, vec!["open"]);
+    println!("injected worker death exhausted the retry loop: breaker OPEN");
+
+    let r2 = queue.submit(0, s3.program.clone()).expect("admit").wait();
+    assert!(matches!(r2, Err(ServeError::Rejected(RejectReason::ShardDown))), "{r2:?}");
+    println!("while open, placements fail fast: Rejected(ShardDown)");
+
+    let rep = queue.submit(0, s3.program.clone()).expect("admit").wait().expect("healed");
+    assert_eq!(rep.outputs[s3.filter_step], StepOutput::Matches(s3.expected_matches.clone()));
+    let lc = queue.lifecycle().expect("alive");
+    assert_eq!(lc.breaker, vec!["closed"]);
+    assert_eq!((lc.breaker_opens, lc.breaker_closes), (1, 1));
+    faults::clear();
+    println!("half-open respawn-and-replay probe healed the shard; answer exact\n");
+    drop(queue);
+
+    // ---- act 4: brownout ladder -----------------------------------------
+    println!("=== act 4: brownout ladder under SLO burn ===");
+    let mut sc4 = serve_cfg(&cfg, SHARDS);
+    sc4.brownout = true;
+    sc4.sample_every = 1;
+    let queue = ServeQueue::start(sc4);
+
+    faults::install(FaultSpec::parse("seed=6 spike=8 spike-ns=3000000").expect("spec"));
+    let mut stepped = false;
+    'flood: for wave in 0..40u64 {
+        let s = heavy_tenant_scenario(&cfg, N_RECORDS, 9000 + wave, 4, 0);
+        let tickets: Vec<_> = s
+            .submissions
+            .iter()
+            .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            match t.wait() {
+                Ok(rep) => assert_eq!(
+                    rep.outputs[s.filter_step],
+                    StepOutput::Matches(s.expected_matches[i].clone()),
+                    "browned-out service still answers exactly"
+                ),
+                Err(ServeError::Rejected(RejectReason::Overloaded)) => {}
+                other => panic!("wave {wave}: unexpected outcome {other:?}"),
+            }
+        }
+        let lc = queue.lifecycle().expect("alive");
+        if lc.degrade_level >= 1 {
+            println!("wave {wave}: ladder stepped up to {} (level {})", lc.degrade, lc.degrade_level);
+            stepped = true;
+            break 'flood;
+        }
+    }
+    assert!(stepped, "sustained 3ms rounds against a 2ms SLO must step the ladder");
+    faults::clear();
+
+    // scrape 1: peak overload — every survival family is live
+    let scrape1 = write_scrape(
+        "target/overload_scrape1.prom",
+        &[
+            "adra_serve_shed",
+            "adra_serve_deadline_expired",
+            "adra_serve_cancelled",
+            "adra_serve_breaker_rejected",
+            "adra_serve_breaker_opens",
+            "adra_serve_breaker_closes",
+            "adra_serve_breaker_state",
+            "adra_serve_degrade_level",
+            "adra_serve_degrade_step_ups",
+        ],
+    );
+    println!(
+        "scrape 1 (peak overload) -> target/overload_scrape1.prom ({} lines)",
+        scrape1.lines().count()
+    );
+
+    // recovery: chaos cleared, light traffic; the slow burn window
+    // drains and every Ok health evaluation walks the ladder back down
+    let mut recovered = false;
+    for wave in 0..400u64 {
+        let s = analytics_scenario(&cfg, N_RECORDS, 20_000 + wave);
+        match queue.submit(0, s.program.clone()).expect("admit").wait() {
+            Ok(rep) => assert_eq!(
+                rep.outputs[s.filter_step],
+                StepOutput::Matches(s.expected_matches.clone())
+            ),
+            Err(ServeError::Rejected(RejectReason::Overloaded)) => {}
+            other => panic!("recovery wave {wave}: unexpected outcome {other:?}"),
+        }
+        if queue.lifecycle().expect("alive").degrade_level == 0 {
+            println!("recovery wave {wave}: ladder walked back to normal");
+            recovered = true;
+            break;
+        }
+    }
+    assert!(recovered, "clearing the burn must walk the ladder back");
+    let m = queue.metrics();
+    assert!(m.degrade_step_ups >= 1 && m.degrade_step_downs >= 1, "{m:?}");
+    println!("brownout trajectory: {} step-ups, {} walk-backs\n", m.degrade_step_ups, m.degrade_step_downs);
+
+    let scrape2 = write_scrape(
+        "target/overload_scrape2.prom",
+        &[
+            "adra_serve_shed",
+            "adra_serve_deadline_expired",
+            "adra_serve_cancelled",
+            "adra_serve_breaker_state",
+            "adra_serve_degrade_level",
+            "adra_serve_degrade_step_downs",
+        ],
+    );
+    println!(
+        "scrape 2 (post-recovery) -> target/overload_scrape2.prom ({} lines)",
+        scrape2.lines().count()
+    );
+
+    // ---- the alert-trace artifact ---------------------------------------
+    let trace = adra::observe::recorder().to_jsonl();
+    for needle in ["\"kind\":\"alert\"", "serve_cancel", "serve_deadline", "serve_shed", "shard_breaker", "brownout"] {
+        assert!(trace.contains(needle), "trace must hold {needle}:\n{trace}");
+    }
+    std::fs::write("target/overload_trace.jsonl", &trace).expect("write trace");
+    println!(
+        "trace tail -> target/overload_trace.jsonl ({} events, {} alerts)",
+        trace.lines().count(),
+        trace.matches("\"kind\":\"alert\"").count()
+    );
+
+    println!("\nOVERLOAD VALIDATION PASSED");
+}

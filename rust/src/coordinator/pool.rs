@@ -5,7 +5,7 @@
 //! serializes all ops touching a shard and makes writes linearizable —
 //! and replies through per-request channels.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -25,6 +25,18 @@ enum WorkerMsg {
     /// operand pair share one activation.  Falls back to sequential
     /// execution on engines without fusion support.
     FusedBatch(Vec<Request>, Sender<Vec<Response>>),
+    /// `Batch`/`FusedBatch` with a cooperative abandon flag: the worker
+    /// re-checks the flag when it DEQUEUES the group (i.e. between
+    /// batches in the drain loop).  Set by then → the group is
+    /// acknowledged with an empty reply and the engine is never touched
+    /// — how a cancelled program's in-flight work is dropped without
+    /// blocking the queue behind it.
+    Guarded {
+        reqs: Vec<Request>,
+        tx: Sender<Vec<Response>>,
+        fused: bool,
+        abandon: Arc<AtomicBool>,
+    },
     /// Collect a metrics snapshot.
     Stats(Sender<RunMetrics>),
     /// Override the engine's per-op-class routing (`Engine::set_routing`)
@@ -230,6 +242,51 @@ impl Coordinator {
         Ok(resps.into_iter().map(|r| r.result).collect())
     }
 
+    /// `call_batch`/`call_batch_fused` with a cooperative abandon flag:
+    /// the worker re-checks the flag when it dequeues the group — if set
+    /// by then the group is abandoned (engine untouched) and `Ok(None)`
+    /// comes back.  The batch is sent as ONE group like the fused path;
+    /// the caller owns repairing shard state if sibling shards of the
+    /// same logical round already executed (the serve scheduler replays
+    /// from its durable `TableState`).
+    pub fn call_batch_abandonable(
+        &self,
+        array_id: usize,
+        ops: &[CimOp],
+        fused: bool,
+        abandon: &Arc<AtomicBool>,
+    ) -> Result<Option<Vec<Result<CimResult, EngineError>>>, RouteError> {
+        let worker = self
+            .workers
+            .get(array_id)
+            .ok_or(RouteError::UnknownArray(array_id))?;
+        if ops.is_empty() {
+            return Ok(Some(Vec::new()));
+        }
+        if abandon.load(Ordering::Relaxed) {
+            return Ok(None);
+        }
+        let reqs: Vec<Request> = ops
+            .iter()
+            .map(|op| Request {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                array_id,
+                op: *op,
+            })
+            .collect();
+        let (tx, rx) = channel();
+        worker
+            .tx
+            .send(WorkerMsg::Guarded { reqs, tx, fused, abandon: abandon.clone() })
+            .map_err(|_| RouteError::ShuttingDown)?;
+        let resps = rx.recv().map_err(|_| RouteError::ShuttingDown)?;
+        if resps.is_empty() {
+            return Ok(None); // abandoned at dequeue (ops is non-empty here)
+        }
+        debug_assert_eq!(resps.len(), ops.len());
+        Ok(Some(resps.into_iter().map(|r| r.result).collect()))
+    }
+
     /// Push a per-op-class routing override to one shard's engine
     /// (`Engine::set_routing`).  Fire-and-forget: the per-worker channel
     /// is FIFO, so the override is applied before any batch submitted
@@ -422,6 +479,13 @@ fn worker_loop(shard: usize, mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg
             Ok(WorkerMsg::Work(req, tx)) => batch.push((req, tx)),
             Ok(WorkerMsg::Batch(reqs, tx)) => group_reply = Some((reqs, tx, false)),
             Ok(WorkerMsg::FusedBatch(reqs, tx)) => group_reply = Some((reqs, tx, true)),
+            Ok(WorkerMsg::Guarded { reqs, tx, fused, abandon }) => {
+                if abandon.load(Ordering::Relaxed) {
+                    let _ = tx.send(Vec::new()); // abandoned: ack, engine untouched
+                    continue;
+                }
+                group_reply = Some((reqs, tx, fused));
+            }
             Ok(WorkerMsg::SetRouting(forced)) => {
                 engine.set_routing(forced);
                 continue;
@@ -452,7 +516,9 @@ fn worker_loop(shard: usize, mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg
                     }
                     engine.set_routing(forced);
                 }
-                Ok(msg @ WorkerMsg::Batch(..)) | Ok(msg @ WorkerMsg::FusedBatch(..)) => {
+                Ok(msg @ WorkerMsg::Batch(..))
+                | Ok(msg @ WorkerMsg::FusedBatch(..))
+                | Ok(msg @ WorkerMsg::Guarded { .. }) => {
                     // execute inline to preserve arrival order: first
                     // flush the singles gathered so far, then the group
                     if !flush_singles(shard, &mut *engine, &mut metrics, &mut batch) {
@@ -461,6 +527,13 @@ fn worker_loop(shard: usize, mut engine: Box<dyn Engine>, rx: Receiver<WorkerMsg
                     let (reqs, tx, fused) = match msg {
                         WorkerMsg::Batch(reqs, tx) => (reqs, tx, false),
                         WorkerMsg::FusedBatch(reqs, tx) => (reqs, tx, true),
+                        WorkerMsg::Guarded { reqs, tx, fused, abandon } => {
+                            if abandon.load(Ordering::Relaxed) {
+                                let _ = tx.send(Vec::new());
+                                continue;
+                            }
+                            (reqs, tx, fused)
+                        }
                         _ => unreachable!(),
                     };
                     match run_group(shard, &mut *engine, reqs, fused, &mut metrics) {
@@ -556,6 +629,38 @@ mod tests {
                 (g, w) => panic!("divergence on {op:?}: {g:?} vs {w:?}"),
             }
         }
+    }
+
+    #[test]
+    fn guarded_batch_runs_when_flag_clear_and_abandons_when_set() {
+        let cfg = cfg();
+        let coord = Coordinator::adra(&cfg, 1);
+        let ops: Vec<CimOp> = (0..4)
+            .map(|w| CimOp::Write { addr: WordAddr { row: 0, word: w }, value: 3 + w as u64 })
+            .collect();
+
+        // clear flag: behaves exactly like call_batch
+        let clear = Arc::new(AtomicBool::new(false));
+        let res = coord
+            .call_batch_abandonable(0, &ops, false, &clear)
+            .expect("route ok")
+            .expect("flag clear: executed");
+        assert_eq!(res.len(), ops.len());
+        let before = coord.metrics().ops;
+
+        // set flag: the group is acknowledged without touching the engine
+        let set = Arc::new(AtomicBool::new(true));
+        let res = coord.call_batch_abandonable(0, &ops, true, &set).expect("route ok");
+        assert!(res.is_none(), "abandoned group returns None");
+        assert_eq!(coord.metrics().ops, before, "engine never saw the abandoned ops");
+
+        // empty op list is not an abandonment
+        let res = coord.call_batch_abandonable(0, &[], false, &set).expect("route ok");
+        assert!(matches!(res, Some(v) if v.is_empty()));
+
+        // the shard keeps serving afterwards
+        let got = coord.call(0, CimOp::Read(WordAddr { row: 0, word: 0 })).expect("read");
+        assert_eq!(got.value, CimValue::Word(3));
     }
 
     #[test]

@@ -20,6 +20,9 @@
 //! faults [<spec> | off]
 //! snapshot <dir>
 //! restore <dir>
+//! breaker
+//! degrade
+//! cancel <tenant>
 //! quit
 //! ```
 //!
@@ -42,7 +45,10 @@
 //! death-max=2 spike=16 spike-ns=500000`).  `snapshot <dir>` and
 //! `restore <dir>` drive the attached serving layer's durable store
 //! (see [`serve_with_queue`]); without an attached queue they report
-//! `err`.
+//! `err`.  `breaker` (per-shard circuit-breaker states), `degrade`
+//! (brownout-ladder level), and `cancel <tenant>` (sweep a tenant's
+//! queued programs) drive the overload-survival layer and likewise
+//! need an attached queue.
 
 use std::io::{BufRead, Write};
 
@@ -309,6 +315,60 @@ fn serve_session<R: BufRead, W: Write, F: Fn() -> Option<String>>(
             }
             continue;
         }
+        if trimmed == "breaker" {
+            match queue {
+                None => writeln!(output, "err breaker: no serving layer attached")?,
+                Some(q) => match q.lifecycle() {
+                    Ok(r) => {
+                        let states: Vec<String> = r
+                            .breaker
+                            .iter()
+                            .enumerate()
+                            .map(|(s, st)| format!("{s}:{st}"))
+                            .collect();
+                        writeln!(
+                            output,
+                            "ok {} ({} opens / {} closes)",
+                            states.join(" "),
+                            r.breaker_opens,
+                            r.breaker_closes
+                        )?;
+                    }
+                    Err(e) => writeln!(output, "err breaker: {e}")?,
+                },
+            }
+            continue;
+        }
+        if trimmed == "degrade" {
+            match queue {
+                None => writeln!(output, "err degrade: no serving layer attached")?,
+                Some(q) => match q.lifecycle() {
+                    Ok(r) => writeln!(
+                        output,
+                        "ok {} (level {}, brownout {})",
+                        r.degrade,
+                        r.degrade_level,
+                        if r.brownout_armed { "armed" } else { "off" }
+                    )?,
+                    Err(e) => writeln!(output, "err degrade: {e}")?,
+                },
+            }
+            continue;
+        }
+        if trimmed == "cancel" || trimmed.starts_with("cancel ") {
+            let arg = trimmed.strip_prefix("cancel").unwrap_or("").trim();
+            match arg.parse::<usize>() {
+                Err(_) => writeln!(output, "err cancel: expected <tenant>")?,
+                Ok(tenant) => match queue {
+                    None => writeln!(output, "err cancel: no serving layer attached")?,
+                    Some(q) => match q.cancel_tenant(tenant) {
+                        Ok(n) => writeln!(output, "ok {n}")?,
+                        Err(e) => writeln!(output, "err cancel: {e}")?,
+                    },
+                },
+            }
+            continue;
+        }
         match parse_line(trimmed) {
             Ok(None) => break,
             Ok(Some((shard, op))) => {
@@ -422,6 +482,12 @@ quit
             retry_backoff_ms: 1,
             wear_spare_rows: 0,
             wear_migrate_threshold: 1024,
+            default_deadline: None,
+            max_tenant_backlog: 0,
+            retry_budget_ms: 50,
+            breaker_threshold: 3,
+            breaker_probe_after: 2,
+            brownout: false,
         });
         let s = analytics_scenario(&cfg, 24, 1);
         queue.submit(0, s.program).unwrap().wait().unwrap();
@@ -517,7 +583,7 @@ quit
     #[test]
     fn faults_and_store_commands_reject_bad_input() {
         let c = coord();
-        let script = "faults death=zero\nsnapshot\nrestore\nsnapshot /tmp/x\nrestore /tmp/x\nquit\n";
+        let script = "faults death=zero\nsnapshot\nrestore\nsnapshot /tmp/x\nrestore /tmp/x\nbreaker\ndegrade\ncancel 0\ncancel x\nquit\n";
         let mut out = Vec::new();
         serve(&c, script.as_bytes(), &mut out).unwrap();
         let text = String::from_utf8(out).unwrap();
@@ -528,6 +594,10 @@ quit
         // no serving layer attached on the plain serve() entry point
         assert!(lines[3].starts_with("err snapshot: no serving layer"), "{}", lines[3]);
         assert!(lines[4].starts_with("err restore: no serving layer"), "{}", lines[4]);
+        assert!(lines[5].starts_with("err breaker: no serving layer"), "{}", lines[5]);
+        assert!(lines[6].starts_with("err degrade: no serving layer"), "{}", lines[6]);
+        assert!(lines[7].starts_with("err cancel: no serving layer"), "{}", lines[7]);
+        assert!(lines[8].starts_with("err cancel: expected <tenant>"), "{}", lines[8]);
     }
 
     #[test]
@@ -557,6 +627,12 @@ quit
             retry_backoff_ms: 1,
             wear_spare_rows: 0,
             wear_migrate_threshold: 1024,
+            default_deadline: None,
+            max_tenant_backlog: 0,
+            retry_budget_ms: 50,
+            breaker_threshold: 3,
+            breaker_probe_after: 2,
+            brownout: false,
         });
         let s = analytics_scenario(&cfg, 24, 7);
         queue.submit(0, s.program).unwrap().wait().unwrap();
@@ -565,13 +641,18 @@ quit
         let _ = std::fs::remove_dir_all(&dir);
         let dir_s = dir.to_string_lossy().into_owned();
         let c = coord();
-        let script = format!("snapshot {dir_s}\nrestore {dir_s}\nquit\n");
+        let script =
+            format!("snapshot {dir_s}\nrestore {dir_s}\nbreaker\ndegrade\ncancel 9\nquit\n");
         let mut out = Vec::new();
         serve_with_queue(&c, script.as_bytes(), &mut out, || None, &queue).unwrap();
         let text = String::from_utf8(out).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines[0], format!("ok {dir_s}"), "{text}");
         assert_eq!(lines[1], format!("ok {dir_s}"), "{text}");
+        // lifecycle commands against a healthy idle queue
+        assert_eq!(lines[2], "ok 0:closed 1:closed (0 opens / 0 closes)", "{text}");
+        assert_eq!(lines[3], "ok normal (level 0, brownout off)", "{text}");
+        assert_eq!(lines[4], "ok 0", "tenant 9 has nothing queued: {text}");
         assert_eq!(queue.metrics().recoveries, 1, "restore counts as a recovery");
         let _ = std::fs::remove_dir_all(&dir);
     }

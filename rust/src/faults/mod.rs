@@ -75,8 +75,14 @@ impl FaultSpec {
     /// command).  Keys: `seed=N`, `death=N` (every Nth op),
     /// `death-max=N`, `spike=N` (every Nth op), `spike-ns=N`, `wear=N`
     /// (factor), `corrupt-wal=N`, `corrupt-snapshot`.
+    ///
+    /// The parser is strict, and every error names the offending key: a
+    /// typoed key (`spkie=16`), a stray value on a flag key
+    /// (`corrupt-snapshot=5`), or a duplicated key all fail the whole
+    /// spec rather than silently disarming part of the chaos plan.
     pub fn parse(text: &str) -> Result<Self, String> {
         let mut spec = Self::default();
+        let mut seen: Vec<&str> = Vec::new();
         for tok in text.split_whitespace() {
             let (key, val) = match tok.split_once('=') {
                 Some((k, v)) => (k, Some(v)),
@@ -95,9 +101,18 @@ impl FaultSpec {
                 "spike-ns" => spec.spike_ns = num()?,
                 "wear" => spec.wear_factor = num()?.max(1),
                 "corrupt-wal" => spec.corrupt_wal_every = Some(num()?.max(1)),
-                "corrupt-snapshot" => spec.corrupt_snapshot = true,
+                "corrupt-snapshot" => {
+                    if val.is_some() {
+                        return Err(format!("{key}: takes no value"));
+                    }
+                    spec.corrupt_snapshot = true;
+                }
                 other => return Err(format!("unknown fault key {other:?}")),
             }
+            if seen.contains(&key) {
+                return Err(format!("duplicate fault key {key:?}"));
+            }
+            seen.push(key);
         }
         Ok(spec)
     }
@@ -315,6 +330,26 @@ mod tests {
         assert!(rendered.contains("death=64"), "{rendered}");
         assert!(FaultSpec::parse("frob=1").is_err());
         assert!(FaultSpec::parse("death").is_err());
+    }
+
+    /// The regression the overload PR hardens: a typoed key must fail the
+    /// whole spec (naming the bad key), never silently disarm the chaos
+    /// plan — `spkie=16` quietly parsing as "no spikes" is how a soak run
+    /// ends up testing nothing.
+    #[test]
+    fn parse_errors_name_the_offending_key() {
+        let err = FaultSpec::parse("seed=9 spkie=16").unwrap_err();
+        assert!(err.contains("spkie"), "typo must be named: {err}");
+
+        let err = FaultSpec::parse("corrupt-snapshot=5").unwrap_err();
+        assert!(err.contains("corrupt-snapshot"), "{err}");
+        assert!(err.contains("takes no value"), "{err}");
+
+        let err = FaultSpec::parse("death=4 spike=2 death=8").unwrap_err();
+        assert!(err.contains("duplicate") && err.contains("death"), "{err}");
+
+        let err = FaultSpec::parse("spike-ns=fast").unwrap_err();
+        assert!(err.contains("spike-ns"), "{err}");
     }
 
     // Schedule/corruption behavior under an INSTALLED spec is covered by

@@ -322,6 +322,9 @@ pub struct ResultCache {
     map: HashMap<CacheKey, Entry>,
     /// Slot budget (see struct docs).
     budget: usize,
+    /// Entry-cap multiplier (normally [`ENTRY_CAP_FACTOR`]); the brownout
+    /// ladder widens it so negative entries absorb overload polling.
+    cap_factor: usize,
     /// Slots currently charged by live entries.
     used: usize,
     /// Monotone LRU clock.
@@ -349,6 +352,7 @@ impl ResultCache {
         Self {
             map: HashMap::new(),
             budget: budget.max(1),
+            cap_factor: ENTRY_CAP_FACTOR,
             used: 0,
             tick: 0,
             hits: 0,
@@ -370,6 +374,19 @@ impl ResultCache {
     /// Slot budget this cache evicts toward.
     pub fn budget(&self) -> usize {
         self.budget
+    }
+
+    /// Current entry-cap multiplier (total entries are capped at
+    /// `budget * entry_cap_factor`).
+    pub fn entry_cap_factor(&self) -> usize {
+        self.cap_factor
+    }
+
+    /// Retune the entry cap (floored at 1).  Widening is instant;
+    /// narrowing takes effect lazily on the next insert's `make_room`,
+    /// so walking a brownout back never mass-evicts mid-round.
+    pub fn set_entry_cap_factor(&mut self, factor: usize) {
+        self.cap_factor = factor.max(1);
     }
 
     /// Slots currently charged (invariant: `used <= budget` except for a
@@ -407,7 +424,7 @@ impl ResultCache {
             self.used -= old.weight;
         }
         if self.used + weight > self.budget
-            || self.map.len() + 1 > self.budget * ENTRY_CAP_FACTOR
+            || self.map.len() + 1 > self.budget * self.cap_factor
         {
             self.make_room(weight, state);
         }
@@ -433,7 +450,7 @@ impl ResultCache {
         self.swept += (before - self.map.len()) as u64;
         self.used -= freed;
 
-        let entry_cap = self.budget * ENTRY_CAP_FACTOR;
+        let entry_cap = self.budget * self.cap_factor;
         loop {
             let over_slots = self.used + incoming > self.budget;
             let over_entries = self.map.len() + 1 > entry_cap;

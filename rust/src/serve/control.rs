@@ -30,10 +30,20 @@
 //!   Unsaturated rounds always hold — their wall is set by the programs
 //!   themselves, and moving a ceiling nothing hits would let one slow
 //!   program ratchet `max_round` to 1 and serialize every later burst.
+//! * [`DegradeController`] — the health-driven brownout ladder (DESIGN.md
+//!   §15).  Committed `round_wall_slo_burn` transitions step service
+//!   through pin-routing → widen-cache → reduce-sampling → shed and walk
+//!   back on recovery; hysteresis is inherited from the `HealthEngine`'s
+//!   sustain streaks.
+//! * [`CircuitBreaker`] — per-shard fail-fast over the serve retry loop:
+//!   consecutive `RouteError` retry exhaustions open a shard, open shards
+//!   reject placements immediately (`Rejected(ShardDown)`), and a
+//!   half-open respawn-and-replay probe closes them again.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use crate::metrics::LatencyHistogram;
+use crate::observe::RuleState;
 
 /// How the scheduler picks a round from the backlog.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -334,6 +344,288 @@ impl<T> FairScheduler<T> {
             }
         }
         RoundAdmission { admitted, quota_hits, deferred: self.len as u64 }
+    }
+
+    /// Queued (not yet scheduled) programs currently held by `tenant`.
+    /// Admission control's per-tenant backlog bound reads this.
+    pub fn tenant_backlog(&self, tenant: usize) -> usize {
+        self.pending.get(&tenant).map_or(0, |q| q.len())
+    }
+
+    /// Tenants with at least one queued program.
+    pub fn active_tenants(&self) -> usize {
+        self.pending.values().filter(|q| !q.is_empty()).count()
+    }
+
+    /// Remove every queued item `doomed` selects (the lifecycle sweep:
+    /// deadline expiry, cancellation, tenant-wide cancel).  The relative
+    /// order of survivors is untouched, so per-tenant FIFO — and with it
+    /// bit-identity of the *answered* results — is preserved.  Returns
+    /// the removed items with their tenants so the caller can answer
+    /// each one exactly once.
+    pub fn sweep<F: FnMut(usize, &T) -> bool>(&mut self, mut doomed: F) -> Vec<(usize, T)> {
+        let mut removed = Vec::new();
+        for (&t, q) in self.pending.iter_mut() {
+            let mut kept = VecDeque::with_capacity(q.len());
+            for (seq, item) in q.drain(..) {
+                if doomed(t, &item) {
+                    removed.push((t, item));
+                } else {
+                    kept.push_back((seq, item));
+                }
+            }
+            *q = kept;
+        }
+        self.len -= removed.len();
+        removed
+    }
+}
+
+/// Brownout ladder steps, mildest first.  Each level implies every
+/// milder one; the numeric order is what [`DegradeController`] walks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradeLevel {
+    /// Full service.
+    Normal = 0,
+    /// Pin the calibrated energy-optimal routing: stop absorbing new
+    /// calibration samples so overload noise cannot churn executor
+    /// choices mid-incident.
+    PinRouting = 1,
+    /// Widen the result cache's entry cap so cheap negative entries
+    /// absorb repeated empty-result polling without touching the array.
+    WidenCache = 2,
+    /// Stretch the observability sampling cadence (`sample_every`).
+    ReduceSampling = 3,
+    /// Shed over-quota admissions outright (`Rejected(Overloaded)`).
+    Shed = 4,
+}
+
+impl DegradeLevel {
+    const LADDER: [DegradeLevel; 5] = [
+        DegradeLevel::Normal,
+        DegradeLevel::PinRouting,
+        DegradeLevel::WidenCache,
+        DegradeLevel::ReduceSampling,
+        DegradeLevel::Shed,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DegradeLevel::Normal => "normal",
+            DegradeLevel::PinRouting => "pin-routing",
+            DegradeLevel::WidenCache => "widen-cache",
+            DegradeLevel::ReduceSampling => "reduce-sampling",
+            DegradeLevel::Shed => "shed",
+        }
+    }
+
+    pub fn as_gauge(self) -> u64 {
+        self as u64
+    }
+}
+
+/// The health-driven brownout ladder.  Fed one COMMITTED state of the
+/// watched health rule per evaluation cadence: critical climbs one step,
+/// ok walks one step back, warn holds.  Flap damping comes for free from
+/// the `HealthEngine`'s sustain-streak hysteresis — this controller can
+/// never move faster than the rule commits.
+#[derive(Debug, Default)]
+pub struct DegradeController {
+    level: usize,
+    pub step_ups: u64,
+    pub step_downs: u64,
+}
+
+impl DegradeController {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn level(&self) -> DegradeLevel {
+        DegradeLevel::LADDER[self.level]
+    }
+
+    /// Fold one committed health evaluation; returns the transition when
+    /// the level moved.
+    pub fn on_health(&mut self, state: RuleState) -> Option<(DegradeLevel, DegradeLevel)> {
+        let from = self.level;
+        match state {
+            RuleState::Critical if self.level + 1 < DegradeLevel::LADDER.len() => {
+                self.level += 1;
+                self.step_ups += 1;
+            }
+            RuleState::Ok if self.level > 0 => {
+                self.level -= 1;
+                self.step_downs += 1;
+            }
+            _ => {}
+        }
+        (from != self.level)
+            .then(|| (DegradeLevel::LADDER[from], DegradeLevel::LADDER[self.level]))
+    }
+
+    /// ≥ [`DegradeLevel::PinRouting`]: the scheduler skips calibration
+    /// absorption, freezing the current routing.
+    pub fn pin_routing(&self) -> bool {
+        self.level() >= DegradeLevel::PinRouting
+    }
+
+    /// Entry-cap factor for the result cache: the configured baseline
+    /// below [`DegradeLevel::WidenCache`], 4x it at or above.
+    pub fn cache_cap_factor(&self) -> usize {
+        if self.level() >= DegradeLevel::WidenCache {
+            super::cache::ENTRY_CAP_FACTOR * 4
+        } else {
+            super::cache::ENTRY_CAP_FACTOR
+        }
+    }
+
+    /// Multiplier on the `sample_every` observability cadence.
+    pub fn sample_stride(&self) -> u64 {
+        if self.level() >= DegradeLevel::ReduceSampling {
+            4
+        } else {
+            1
+        }
+    }
+
+    /// At the top of the ladder: admission sheds over-quota programs.
+    pub fn shedding(&self) -> bool {
+        self.level() >= DegradeLevel::Shed
+    }
+}
+
+/// Per-shard circuit breaker states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: placements flow.
+    Closed,
+    /// Tripped: placements touching the shard fail fast with
+    /// `Rejected(ShardDown)` instead of queueing into a dead retry loop.
+    Open,
+    /// Probe in flight: one respawn-and-replay attempt decides whether
+    /// the breaker closes or re-opens.
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+
+    pub fn as_gauge(self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct ShardBreaker {
+    state: BreakerState,
+    /// Consecutive retry-loop exhaustions (reset on any success).
+    consecutive: u32,
+    /// Scheduling passes waited while open.
+    waited: u64,
+}
+
+/// Per-shard circuit breaker over the serve retry loop.  `threshold`
+/// consecutive retry-loop exhaustions open a shard's breaker; an open
+/// breaker waits `probe_after` SCHEDULING PASSES (not rounds — when every
+/// admission is rejected pre-round the round number never advances, and a
+/// round-based cadence would hold the breaker open forever) and then goes
+/// half-open, owing the caller one respawn-and-replay probe.
+/// [`CircuitBreaker::record_success`] closes it, `record_failure`
+/// re-opens it.  `threshold == 0` disables the breaker entirely.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    probe_after: u64,
+    shards: Vec<ShardBreaker>,
+    pub opens: u64,
+    pub closes: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(shards: usize, threshold: u32, probe_after: u64) -> Self {
+        let shards = (0..shards)
+            .map(|_| ShardBreaker { state: BreakerState::Closed, consecutive: 0, waited: 0 })
+            .collect();
+        Self { threshold, probe_after, shards, opens: 0, closes: 0 }
+    }
+
+    /// Out-of-range shards read as closed (never block a placement).
+    pub fn state(&self, shard: usize) -> BreakerState {
+        self.shards.get(shard).map_or(BreakerState::Closed, |b| b.state)
+    }
+
+    pub fn is_open(&self, shard: usize) -> bool {
+        self.state(shard) == BreakerState::Open
+    }
+
+    /// One retry-loop exhaustion (or failed probe) on `shard`.  Returns
+    /// the transition when the breaker state changed.
+    pub fn record_failure(&mut self, shard: usize) -> Option<(BreakerState, BreakerState)> {
+        if self.threshold == 0 {
+            return None;
+        }
+        let b = self.shards.get_mut(shard)?;
+        b.consecutive = b.consecutive.saturating_add(1);
+        let open = match b.state {
+            BreakerState::Closed => b.consecutive >= self.threshold,
+            BreakerState::HalfOpen => true, // failed probe re-opens
+            BreakerState::Open => false,
+        };
+        if !open {
+            return None;
+        }
+        let from = b.state;
+        b.state = BreakerState::Open;
+        b.waited = 0;
+        self.opens += 1;
+        Some((from, BreakerState::Open))
+    }
+
+    /// A successful batch (or probe) on `shard`: resets the consecutive
+    /// failure count and closes a non-closed breaker.
+    pub fn record_success(&mut self, shard: usize) -> Option<(BreakerState, BreakerState)> {
+        let b = self.shards.get_mut(shard)?;
+        b.consecutive = 0;
+        match b.state {
+            BreakerState::Closed => None,
+            from => {
+                b.state = BreakerState::Closed;
+                self.closes += 1;
+                Some((from, BreakerState::Closed))
+            }
+        }
+    }
+
+    /// Advance every open shard's probe wait by one scheduling pass;
+    /// shards whose wait reached `probe_after` flip to half-open and are
+    /// returned — each owes the caller one probe.
+    pub fn due_probes(&mut self) -> Vec<usize> {
+        let mut due = Vec::new();
+        for (s, b) in self.shards.iter_mut().enumerate() {
+            if b.state == BreakerState::Open {
+                b.waited += 1;
+                if b.waited >= self.probe_after {
+                    b.state = BreakerState::HalfOpen;
+                    due.push(s);
+                }
+            }
+        }
+        due
+    }
+
+    pub fn any_open(&self) -> bool {
+        self.shards.iter().any(|b| b.state == BreakerState::Open)
     }
 }
 
@@ -836,5 +1128,137 @@ mod tests {
         // without the energy signal the same counts are perfectly fair
         let w = service_weights(&mut ServiceWindow::new(), &lat, &HashMap::new());
         assert_eq!((w[&0], w[&1]), (1.0, 1.0));
+    }
+
+    // ---- lifecycle sweep -------------------------------------------------
+
+    #[test]
+    fn sweep_removes_matches_and_preserves_survivor_order() {
+        let mut s = FairScheduler::new(AdmissionPolicy::Fair);
+        for i in 0..6 {
+            s.push(i % 2, i);
+        }
+        assert_eq!(s.tenant_backlog(0), 3);
+        assert_eq!(s.tenant_backlog(1), 3);
+        assert_eq!(s.active_tenants(), 2);
+
+        let removed = s.sweep(|tenant, &item| tenant == 1 || item == 2);
+        let mut gone: Vec<(usize, i32)> = removed;
+        gone.sort();
+        assert_eq!(gone, vec![(0, 2), (1, 1), (1, 3), (1, 5)]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.tenant_backlog(1), 0);
+        assert_eq!(s.active_tenants(), 1);
+
+        // survivors drain in their original FIFO order
+        let round = s.next_round(8, |_| 1.0);
+        assert_eq!(round.admitted, vec![0, 4]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn sweep_of_nothing_is_a_noop() {
+        let mut s = FairScheduler::new(AdmissionPolicy::Fifo);
+        s.push(0, "a");
+        s.push(0, "b");
+        assert!(s.sweep(|_, _| false).is_empty());
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.next_round(4, |_| 1.0).admitted, vec!["a", "b"]);
+    }
+
+    // ---- brownout ladder -------------------------------------------------
+
+    #[test]
+    fn degrade_ladder_steps_up_on_critical_and_walks_back_on_ok() {
+        let mut d = DegradeController::new();
+        assert_eq!(d.level(), DegradeLevel::Normal);
+        assert!(!d.pin_routing() && d.sample_stride() == 1 && !d.shedding());
+        assert_eq!(d.cache_cap_factor(), super::super::cache::ENTRY_CAP_FACTOR);
+
+        // each committed critical climbs exactly one step
+        let up: Vec<_> = (0..6).filter_map(|_| d.on_health(RuleState::Critical)).collect();
+        assert_eq!(
+            up,
+            vec![
+                (DegradeLevel::Normal, DegradeLevel::PinRouting),
+                (DegradeLevel::PinRouting, DegradeLevel::WidenCache),
+                (DegradeLevel::WidenCache, DegradeLevel::ReduceSampling),
+                (DegradeLevel::ReduceSampling, DegradeLevel::Shed),
+            ],
+            "the ladder saturates at Shed"
+        );
+        assert_eq!(d.step_ups, 4);
+        assert!(d.pin_routing() && d.shedding());
+        assert_eq!(d.sample_stride(), 4);
+        assert_eq!(d.cache_cap_factor(), super::super::cache::ENTRY_CAP_FACTOR * 4);
+
+        // warn holds the current level (hysteresis band)
+        assert_eq!(d.on_health(RuleState::Warn), None);
+        assert_eq!(d.level(), DegradeLevel::Shed);
+
+        // each committed ok walks exactly one step back down
+        let down: Vec<_> = (0..6).filter_map(|_| d.on_health(RuleState::Ok)).collect();
+        assert_eq!(down.len(), 4, "walk-back retraces the ladder: {down:?}");
+        assert_eq!(down[3], (DegradeLevel::PinRouting, DegradeLevel::Normal));
+        assert_eq!(d.step_downs, 4);
+        assert_eq!(d.level(), DegradeLevel::Normal);
+        assert!(!d.pin_routing());
+    }
+
+    // ---- circuit breaker -------------------------------------------------
+
+    #[test]
+    fn breaker_open_half_open_close_trajectory() {
+        let mut b = CircuitBreaker::new(2, 3, 2);
+        assert_eq!(b.state(0), BreakerState::Closed);
+        assert!(!b.any_open());
+
+        // two failures stay under threshold; a success resets the streak
+        assert_eq!(b.record_failure(0), None);
+        assert_eq!(b.record_failure(0), None);
+        assert_eq!(b.record_success(0), None, "closed stays closed");
+        assert_eq!(b.record_failure(0), None);
+        assert_eq!(b.record_failure(0), None);
+        // third CONSECUTIVE failure trips the breaker
+        assert_eq!(b.record_failure(0), Some((BreakerState::Closed, BreakerState::Open)));
+        assert!(b.is_open(0) && b.any_open());
+        assert_eq!(b.opens, 1);
+        assert_eq!(b.state(1), BreakerState::Closed, "other shards are untouched");
+
+        // probe cadence counts scheduling passes, not rounds
+        assert_eq!(b.due_probes(), Vec::<usize>::new(), "pass 1 of 2: still open");
+        assert!(b.is_open(0));
+        assert_eq!(b.due_probes(), vec![0], "pass 2: half-open, probe owed");
+        assert_eq!(b.state(0), BreakerState::HalfOpen);
+        assert!(!b.is_open(0), "half-open admits the probe, not a rejection");
+
+        // failed probe re-opens; the next successful one closes
+        assert_eq!(b.record_failure(0), Some((BreakerState::HalfOpen, BreakerState::Open)));
+        assert_eq!(b.opens, 2);
+        assert_eq!(b.due_probes(), Vec::<usize>::new());
+        assert_eq!(b.due_probes(), vec![0]);
+        assert_eq!(b.record_success(0), Some((BreakerState::HalfOpen, BreakerState::Closed)));
+        assert_eq!(b.closes, 1);
+        assert_eq!(b.state(0), BreakerState::Closed);
+        assert!(!b.any_open());
+    }
+
+    #[test]
+    fn breaker_threshold_zero_disables_it() {
+        let mut b = CircuitBreaker::new(1, 0, 1);
+        for _ in 0..10 {
+            assert_eq!(b.record_failure(0), None);
+        }
+        assert_eq!(b.state(0), BreakerState::Closed);
+        assert_eq!(b.opens, 0);
+    }
+
+    #[test]
+    fn breaker_out_of_range_shard_reads_closed() {
+        let mut b = CircuitBreaker::new(1, 1, 1);
+        assert_eq!(b.state(7), BreakerState::Closed);
+        assert!(!b.is_open(7));
+        assert_eq!(b.record_failure(7), None);
+        assert_eq!(b.record_success(7), None);
     }
 }

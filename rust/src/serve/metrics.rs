@@ -101,6 +101,28 @@ pub struct ServeMetrics {
     /// (snapshot of the controller's counter; subset of
     /// `controller_shrinks`).
     pub spike_shrinks: u64,
+    /// Admissions rejected outright by load shedding (backlog bound or
+    /// the brownout ladder's shed step) — `Rejected(Overloaded)`.
+    pub shed: u64,
+    /// Programs answered `DeadlineExceeded` by the lifecycle sweep; none
+    /// of them reached the array.
+    pub deadline_expired: u64,
+    /// Programs answered `Cancelled` (swept while queued, or abandoned
+    /// cooperatively in flight).
+    pub cancelled: u64,
+    /// Placements refused because a needed shard's circuit breaker was
+    /// open — `Rejected(ShardDown)`.
+    pub breaker_rejected: u64,
+    /// Circuit-breaker open transitions (snapshot of the breaker).
+    pub breaker_opens: u64,
+    /// Circuit-breaker close transitions (snapshot of the breaker).
+    pub breaker_closes: u64,
+    /// Brownout ladder step-ups / walk-backs (snapshots of the
+    /// `DegradeController`).
+    pub degrade_step_ups: u64,
+    pub degrade_step_downs: u64,
+    /// Current brownout level (0 normal … 4 shed; gauge snapshot).
+    pub degrade_level: u64,
     /// Submission-to-reply wall latency per tenant.
     pub tenant_latency: HashMap<usize, LatencyHistogram>,
     /// Cumulative modeled (calibrated) energy charged per tenant — the
@@ -200,6 +222,14 @@ impl ServeMetrics {
             ("adra.serve.wear_migrations", "Hot-row migrations by wear-aware placement.", self.wear_migrations),
             ("adra.serve.worker_respawns", "Workers respawned after death.", self.worker_respawns),
             ("adra.serve.spike_shrinks", "Controller multiplicative decreases on latency spikes.", self.spike_shrinks),
+            ("adra.serve.shed", "Admissions rejected outright by load shedding.", self.shed),
+            ("adra.serve.deadline_expired", "Programs answered DeadlineExceeded before execution.", self.deadline_expired),
+            ("adra.serve.cancelled", "Programs answered Cancelled (swept or abandoned in flight).", self.cancelled),
+            ("adra.serve.breaker_rejected", "Placements refused on an open circuit breaker.", self.breaker_rejected),
+            ("adra.serve.breaker_opens", "Circuit-breaker open transitions.", self.breaker_opens),
+            ("adra.serve.breaker_closes", "Circuit-breaker close transitions.", self.breaker_closes),
+            ("adra.serve.degrade_step_ups", "Brownout ladder step-ups.", self.degrade_step_ups),
+            ("adra.serve.degrade_step_downs", "Brownout ladder walk-backs.", self.degrade_step_downs),
         ] {
             reg.counter(name, help, &l).set_at_least(value);
         }
@@ -217,6 +247,7 @@ impl ServeMetrics {
             ("adra.serve.cache_hit_rate", "Fraction of query steps answered from the cache.", self.cache_hit_rate()),
             ("adra.serve.fused_share", "Fraction of shipped dual ops served as followers.", self.fused_share()),
             ("adra.serve.deferral_ratio", "Deferred programs per admitted program (quota starvation signal).", self.deferral_ratio()),
+            ("adra.serve.degrade_level", "Current brownout level (0 normal .. 4 shed).", self.degrade_level as f64),
         ] {
             reg.gauge(name, help, &l).set(value);
         }
@@ -303,6 +334,9 @@ impl ServeMetrics {
              controller max_round {} ({}+ {}- {}= {}spike), \
              robustness {} recoveries / {} respawns / {} retries \
              ({} shards recovered, {} wear migrations), \
+             lifecycle {} shed / {} expired / {} cancelled, \
+             breaker {} opens / {} closes ({} rejected), \
+             degrade level {} ({}^ {}v), \
              tiered kernel {}/{} activations digital + {} masked \
              (det-col fraction {:.1}%, {} xval mismatches)",
             self.programs,
@@ -335,6 +369,15 @@ impl ServeMetrics {
             self.route_retries,
             self.recovered_shards,
             self.wear_migrations,
+            self.shed,
+            self.deadline_expired,
+            self.cancelled,
+            self.breaker_opens,
+            self.breaker_closes,
+            self.breaker_rejected,
+            self.degrade_level,
+            self.degrade_step_ups,
+            self.degrade_step_downs,
             self.array_digital_activations,
             self.array_dual_activations,
             self.array_masked_activations,
@@ -503,6 +546,33 @@ mod tests {
             text.contains("adra_serve_tenant_energy{queue=\"0\",tenant=\"3\"} 2.5"),
             "{text}"
         );
+    }
+
+    #[test]
+    fn lifecycle_counters_reach_report_and_registry() {
+        let reg = crate::observe::Registry::new();
+        let mut m = ServeMetrics::default();
+        m.shed = 4;
+        m.deadline_expired = 3;
+        m.cancelled = 2;
+        m.breaker_rejected = 5;
+        m.breaker_opens = 2;
+        m.breaker_closes = 1;
+        m.degrade_level = 3;
+        m.degrade_step_ups = 3;
+        m.degrade_step_downs = 1;
+        let r = m.report("serve");
+        assert!(r.contains("lifecycle 4 shed / 3 expired / 2 cancelled"), "{r}");
+        assert!(r.contains("breaker 2 opens / 1 closes (5 rejected)"), "{r}");
+        assert!(r.contains("degrade level 3 (3^ 1v)"), "{r}");
+        m.publish(&reg, "0");
+        let text = crate::observe::expose_text(&reg);
+        assert!(text.contains("adra_serve_shed{queue=\"0\"} 4"), "{text}");
+        assert!(text.contains("adra_serve_deadline_expired{queue=\"0\"} 3"), "{text}");
+        assert!(text.contains("adra_serve_cancelled{queue=\"0\"} 2"), "{text}");
+        assert!(text.contains("adra_serve_breaker_rejected{queue=\"0\"} 5"), "{text}");
+        assert!(text.contains("adra_serve_breaker_opens{queue=\"0\"} 2"), "{text}");
+        assert!(text.contains("adra_serve_degrade_level{queue=\"0\"} 3"), "{text}");
     }
 
     #[test]

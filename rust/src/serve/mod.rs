@@ -40,6 +40,16 @@
 //! and (with `wear_spare_rows > 0`) steers hot rows onto spare
 //! physical rows using the per-shard `WearTracker`.
 //!
+//! The overload-survival layer (DESIGN.md §15) keeps the queue useful
+//! when demand or faults exceed capacity: per-program deadlines and
+//! tenant [`CancelHandle`]s (doomed programs are swept BEFORE placement
+//! and never touch the array), bounded per-tenant backlogs with load
+//! shedding (`Rejected(Overloaded)`), per-shard [`CircuitBreaker`]s
+//! that fail fast (`Rejected(ShardDown)`) while a shard is down and
+//! heal through half-open respawn-and-replay probes, and — when
+//! `ServeConfig::brownout` arms it — a [`DegradeController`] brownout
+//! ladder stepped by the committed `round_wall_slo_burn` health state.
+//!
 //! ```text
 //!   tenants --submit--> ServeQueue --place--> round of Placements
 //!                           |                      |
@@ -61,8 +71,12 @@ pub mod queue;
 pub use cache::{key_for, CacheKey, QueryKind, ResultCache, TableState};
 pub use coalesce::{coalesce_round, CoalescedRound, ProgramActions, RoundStats, ShardBatch, StepAction};
 pub use control::{
-    service_weights, AdmissionPolicy, BatchController, BatchPolicy, FairScheduler,
-    RoundAdmission, ServiceWindow,
+    service_weights, AdmissionPolicy, BatchController, BatchPolicy, BreakerState,
+    CircuitBreaker, DegradeController, DegradeLevel, FairScheduler, RoundAdmission,
+    ServiceWindow,
 };
 pub use metrics::ServeMetrics;
-pub use queue::{ServeConfig, ServeError, ServeQueue, ServeReport, Ticket};
+pub use queue::{
+    CancelHandle, LifecycleReport, RejectReason, ServeConfig, ServeError, ServeQueue,
+    ServeReport, SubmitOptions, Ticket,
+};

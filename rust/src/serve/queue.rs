@@ -10,7 +10,7 @@
 //! up.
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -22,7 +22,7 @@ use crate::config::SimConfig;
 use crate::coordinator::{Coordinator, RouteError};
 use crate::energy::OpCost;
 use crate::metrics::RunMetrics;
-use crate::observe::{self, Stage};
+use crate::observe::{self, RuleState, Stage};
 use crate::planner::{
     calibrate, place_calibrated, planned_coordinator, CalibratedCostModel, CalibrationSample,
     CalibrationStore, ExecError, Layout, Objective, PlanCostModel, PlanError, Placement, Program,
@@ -33,7 +33,8 @@ use crate::store::{DurableState, DurableStore};
 use super::cache::{ResultCache, TableState};
 use super::coalesce::{coalesce_round, StepAction};
 use super::control::{
-    service_weights, AdmissionPolicy, BatchController, BatchPolicy, FairScheduler, ServiceWindow,
+    service_weights, AdmissionPolicy, BatchController, BatchPolicy, CircuitBreaker,
+    DegradeController, FairScheduler, ServiceWindow,
 };
 use super::metrics::ServeMetrics;
 
@@ -99,6 +100,34 @@ pub struct ServeConfig {
     pub wear_spare_rows: usize,
     /// Wear-delta (writes) that triggers a migration.
     pub wear_migrate_threshold: u64,
+    /// Deadline applied at admission when the submission carries none
+    /// ([`SubmitOptions::deadline`] wins).  `None` (the default): programs
+    /// wait indefinitely, the pre-overload-layer behavior.
+    pub default_deadline: Option<Duration>,
+    /// Hard bound on one tenant's queued (not yet scheduled) programs:
+    /// an admission beyond it answers `Rejected(Overloaded)` immediately
+    /// instead of queueing to time out.  `0` = unbounded.
+    pub max_tenant_backlog: usize,
+    /// Total sleep budget (ms) for the route-retry backoff loop per
+    /// round — one dead shard must not stall co-scheduled tenants past
+    /// the round-wall target; on exhaustion the shard is handed to the
+    /// circuit breaker.  `0` = unbounded (pre-overload-layer behavior).
+    pub retry_budget_ms: u64,
+    /// Consecutive retry-loop exhaustions that open a shard's circuit
+    /// breaker (placements touching it then fail fast with
+    /// `Rejected(ShardDown)` until a half-open probe heals it).  `0`
+    /// disables the breaker.
+    pub breaker_threshold: u32,
+    /// Scheduling passes an open breaker waits before its half-open
+    /// respawn-and-replay probe.
+    pub breaker_probe_after: u64,
+    /// Arm the health-driven brownout ladder (`DegradeController`):
+    /// committed `round_wall_slo_burn` transitions step service through
+    /// pinned routing → widened negative cache → reduced sampling →
+    /// shed, walking back on recovery.  Off by default — the ladder
+    /// couples serving behavior to the PROCESS-GLOBAL health engine,
+    /// which a library embedder may share across queues.
+    pub brownout: bool,
 }
 
 impl ServeConfig {
@@ -122,8 +151,27 @@ impl ServeConfig {
             retry_backoff_ms: 1,
             wear_spare_rows: 0,
             wear_migrate_threshold: 1024,
+            default_deadline: None,
+            max_tenant_backlog: 0,
+            retry_budget_ms: 50,
+            breaker_threshold: 3,
+            breaker_probe_after: 2,
+            brownout: false,
         }
     }
+}
+
+/// Why admission control refused a program outright (fail fast, no
+/// queueing — the tenant can retry elsewhere or back off immediately).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Load shedding: the tenant's backlog hit its hard bound, or the
+    /// brownout ladder reached its shed step and the tenant is over its
+    /// fair-share quota.
+    Overloaded,
+    /// A shard the program's placement needs is behind an open circuit
+    /// breaker.
+    ShardDown,
 }
 
 /// Serving failure modes.
@@ -137,6 +185,14 @@ pub enum ServeError {
     Engine(String),
     /// A durable-store operation (snapshot/restore) failed.
     Store(String),
+    /// The program's deadline passed before it was scheduled; it never
+    /// reached the array (activation counters are pinned).
+    DeadlineExceeded,
+    /// The tenant cancelled the program (via its [`CancelHandle`] or a
+    /// tenant-wide cancel) before it produced a result.
+    Cancelled,
+    /// Admission control refused the program outright.
+    Rejected(RejectReason),
     ShuttingDown,
 }
 
@@ -150,6 +206,14 @@ impl std::fmt::Display for ServeError {
             ServeError::Route(e) => write!(f, "routing: {e}"),
             ServeError::Engine(s) => write!(f, "engine: {s}"),
             ServeError::Store(s) => write!(f, "store: {s}"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            ServeError::Cancelled => write!(f, "cancelled by tenant"),
+            ServeError::Rejected(RejectReason::Overloaded) => {
+                write!(f, "rejected: overloaded (load shed)")
+            }
+            ServeError::Rejected(RejectReason::ShardDown) => {
+                write!(f, "rejected: shard down (circuit breaker open)")
+            }
             ServeError::ShuttingDown => write!(f, "serve queue is shutting down"),
         }
     }
@@ -179,21 +243,104 @@ pub struct ServeReport {
     pub wall: f64,
 }
 
+/// Per-submission knobs (deadline today; room to grow without another
+/// `submit` signature change).
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOptions {
+    /// Relative deadline: if the program has not STARTED executing this
+    /// long after submission it is swept and answered
+    /// `DeadlineExceeded` without ever touching the array.  `None`
+    /// falls back to [`ServeConfig::default_deadline`].
+    pub deadline: Option<Duration>,
+}
+
+/// Tenant-facing cancellation token returned at admission.  Cheap to
+/// clone; `cancel()` is safe from any thread at any point in the
+/// program's life: queued programs are swept before scheduling, and
+/// in-flight single-program batches are abandoned at the next
+/// cooperative check between fused batches.
+#[derive(Clone)]
+pub struct CancelHandle {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelHandle {
+    /// Request cancellation.  Idempotent; the program answers
+    /// `Err(Cancelled)` unless it already completed.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time overload-survival posture, for the REPL's `breaker` /
+/// `degrade` commands and tests.
+#[derive(Clone, Debug)]
+pub struct LifecycleReport {
+    /// Per-shard breaker state names ("closed" / "open" / "half-open").
+    pub breaker: Vec<&'static str>,
+    pub breaker_opens: u64,
+    pub breaker_closes: u64,
+    /// Current brownout-ladder step name.
+    pub degrade: &'static str,
+    /// Numeric ladder level (0 normal .. 4 shed).
+    pub degrade_level: u64,
+    /// Whether `ServeConfig::brownout` armed the ladder.
+    pub brownout_armed: bool,
+}
+
 struct Admission {
     tenant: usize,
     program: Program,
     submitted: Instant,
+    /// Absolute expiry; swept (never executed) once passed.
+    deadline: Option<Instant>,
+    /// Shared with the tenant's [`CancelHandle`].
+    cancel: Arc<AtomicBool>,
     reply: Sender<Result<ServeReport, ServeError>>,
 }
 
+impl Admission {
+    fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Terminal error if this admission must not execute.  Cancel wins
+    /// over expiry: the tenant acted first, the clock merely ran.
+    fn lifecycle_error(&self, now: Instant) -> Option<ServeError> {
+        if self.cancelled() {
+            Some(ServeError::Cancelled)
+        } else if self.expired(now) {
+            Some(ServeError::DeadlineExceeded)
+        } else {
+            None
+        }
+    }
+}
+
 /// Everything the scheduler thread receives: tenant admissions plus the
-/// durability control plane (REPL `snapshot`/`restore`).  Control
-/// messages are handled between rounds, on the scheduler thread, where
-/// the coordinator and table state are exclusively owned.
+/// durability control plane (REPL `snapshot`/`restore`) and the
+/// overload-survival control plane (tenant-wide cancel, lifecycle
+/// introspection).  Control messages are handled between rounds, on the
+/// scheduler thread, where the coordinator and table state are
+/// exclusively owned.
 enum QueueMsg {
     Admit(Admission),
     Snapshot { dir: PathBuf, reply: Sender<Result<(), String>> },
     Restore { dir: PathBuf, reply: Sender<Result<(), String>> },
+    /// Cancel every queued program of one tenant; replies with how many
+    /// were swept.  (Control messages drain between rounds, so nothing
+    /// of the tenant's is mid-execution when this runs; programs already
+    /// holding a [`CancelHandle`] can also cancel mid-round through it.)
+    CancelTenant { tenant: usize, reply: Sender<usize> },
+    Lifecycle { reply: Sender<LifecycleReport> },
 }
 
 /// Handle to an admitted program.
@@ -220,6 +367,7 @@ pub struct ServeQueue {
     handle: Option<JoinHandle<()>>,
     metrics: Arc<Mutex<ServeMetrics>>,
     n_records: usize,
+    default_deadline: Option<Duration>,
     id: u64,
 }
 
@@ -230,12 +378,13 @@ impl ServeQueue {
         let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
         let m2 = metrics.clone();
         let n_records = config.n_records;
+        let default_deadline = config.default_deadline;
         let id = QUEUE_SEQ.fetch_add(1, Ordering::Relaxed);
         let handle = std::thread::Builder::new()
             .name("adra-serve".into())
             .spawn(move || scheduler(config, rx, m2, id))
             .expect("spawn serve scheduler");
-        Self { tx: Some(tx), handle: Some(handle), metrics, n_records, id }
+        Self { tx: Some(tx), handle: Some(handle), metrics, n_records, default_deadline, id }
     }
 
     /// This queue's `queue` label value in the observe registry.
@@ -245,6 +394,17 @@ impl ServeQueue {
 
     /// Admit a tenant's program; returns a ticket to wait on.
     pub fn submit(&self, tenant: usize, program: Program) -> Result<Ticket, ServeError> {
+        self.submit_with(tenant, program, SubmitOptions::default()).map(|(t, _)| t)
+    }
+
+    /// Admit with per-submission options; also returns the program's
+    /// cancellation token.
+    pub fn submit_with(
+        &self,
+        tenant: usize,
+        program: Program,
+        opts: SubmitOptions,
+    ) -> Result<(Ticket, CancelHandle), ServeError> {
         if program.n_records != self.n_records {
             return Err(ServeError::Geometry {
                 expected: self.n_records,
@@ -252,13 +412,41 @@ impl ServeQueue {
             });
         }
         let (reply, rx) = channel();
-        let adm = Admission { tenant, program, submitted: Instant::now(), reply };
+        let now = Instant::now();
+        let deadline = opts.deadline.or(self.default_deadline).map(|d| now + d);
+        let cancel = Arc::new(AtomicBool::new(false));
+        let handle = CancelHandle { flag: cancel.clone() };
+        let adm = Admission { tenant, program, submitted: now, deadline, cancel, reply };
         self.tx
             .as_ref()
             .ok_or(ServeError::ShuttingDown)?
             .send(QueueMsg::Admit(adm))
             .map_err(|_| ServeError::ShuttingDown)?;
-        Ok(Ticket { rx })
+        Ok((Ticket { rx }, handle))
+    }
+
+    /// Cancel every queued program of `tenant`; returns how many were
+    /// swept (each answers `Err(Cancelled)` on its ticket).
+    pub fn cancel_tenant(&self, tenant: usize) -> Result<usize, ServeError> {
+        let (reply, rx) = channel();
+        self.tx
+            .as_ref()
+            .ok_or(ServeError::ShuttingDown)?
+            .send(QueueMsg::CancelTenant { tenant, reply })
+            .map_err(|_| ServeError::ShuttingDown)?;
+        rx.recv().map_err(|_| ServeError::ShuttingDown)
+    }
+
+    /// Current breaker / brownout posture (synchronous round-trip to the
+    /// scheduler thread).
+    pub fn lifecycle(&self) -> Result<LifecycleReport, ServeError> {
+        let (reply, rx) = channel();
+        self.tx
+            .as_ref()
+            .ok_or(ServeError::ShuttingDown)?
+            .send(QueueMsg::Lifecycle { reply })
+            .map_err(|_| ServeError::ShuttingDown)?;
+        rx.recv().map_err(|_| ServeError::ShuttingDown)
     }
 
     /// Checkpoint the queue's durable state (table contents, wear
@@ -336,6 +524,12 @@ fn scheduler(
         retry_backoff_ms,
         wear_spare_rows,
         wear_migrate_threshold,
+        default_deadline: _,
+        max_tenant_backlog,
+        retry_budget_ms,
+        breaker_threshold,
+        breaker_probe_after,
+        brownout,
     } = config;
     let mut coord = planned_coordinator(&cfg, shards, objective);
     // the calibrated cost model: analytic tables wrapped by the runtime
@@ -426,6 +620,12 @@ fn scheduler(
     let mut backlog: FairScheduler<Admission> = FairScheduler::new(admission);
     let mut round_no: u64 = 0;
     let mut open = true;
+    // overload-survival state: per-shard circuit breakers (fail fast
+    // while a shard is down, heal through half-open probes) and the
+    // health-driven brownout ladder (steps only when `brownout` arms the
+    // `on_health` feed — the helpers are inert at level Normal)
+    let mut breaker = CircuitBreaker::new(shards, breaker_threshold, breaker_probe_after);
+    let mut degrade = DegradeController::new();
 
     // observability: every counter this scheduler maintains is mirrored
     // into the global registry under the queue label, and each pipeline
@@ -456,8 +656,14 @@ fn scheduler(
         if backlog.is_empty() {
             match rx.recv() {
                 Ok(QueueMsg::Admit(a)) => {
-                    let t = a.tenant;
-                    backlog.push(t, a);
+                    let quota = (controller.max_round() / backlog.active_tenants().max(1)).max(1);
+                    if let Err(a) = admit_or_shed(
+                        &mut backlog, a, max_tenant_backlog, degrade.shedding(), quota,
+                    ) {
+                        let _ = a.reply.send(Err(ServeError::Rejected(RejectReason::Overloaded)));
+                        metrics.lock().expect("metrics lock").shed += 1;
+                        rec.record_alert("serve_shed", "admitted", "rejected", 1.0);
+                    }
                 }
                 Ok(QueueMsg::Snapshot { dir, reply }) => {
                     let _ = reply.send(do_snapshot(&dir, &mut store, &state, &wear, &cal));
@@ -472,6 +678,15 @@ fn scheduler(
                         metrics.lock().expect("metrics lock").recoveries += 1;
                     }
                     let _ = reply.send(r);
+                    continue;
+                }
+                Ok(QueueMsg::CancelTenant { tenant, reply }) => {
+                    let n = cancel_tenant_queued(&mut backlog, tenant, &metrics, rec);
+                    let _ = reply.send(n);
+                    continue;
+                }
+                Ok(QueueMsg::Lifecycle { reply }) => {
+                    let _ = reply.send(lifecycle_report(&breaker, &degrade, brownout, shards));
                     continue;
                 }
                 Err(_) => {
@@ -483,8 +698,14 @@ fn scheduler(
         while open {
             match rx.try_recv() {
                 Ok(QueueMsg::Admit(a)) => {
-                    let t = a.tenant;
-                    backlog.push(t, a);
+                    let quota = (controller.max_round() / backlog.active_tenants().max(1)).max(1);
+                    if let Err(a) = admit_or_shed(
+                        &mut backlog, a, max_tenant_backlog, degrade.shedding(), quota,
+                    ) {
+                        let _ = a.reply.send(Err(ServeError::Rejected(RejectReason::Overloaded)));
+                        metrics.lock().expect("metrics lock").shed += 1;
+                        rec.record_alert("serve_shed", "admitted", "rejected", 1.0);
+                    }
                 }
                 Ok(QueueMsg::Snapshot { dir, reply }) => {
                     let _ = reply.send(do_snapshot(&dir, &mut store, &state, &wear, &cal));
@@ -499,8 +720,73 @@ fn scheduler(
                     }
                     let _ = reply.send(r);
                 }
+                Ok(QueueMsg::CancelTenant { tenant, reply }) => {
+                    let n = cancel_tenant_queued(&mut backlog, tenant, &metrics, rec);
+                    let _ = reply.send(n);
+                }
+                Ok(QueueMsg::Lifecycle { reply }) => {
+                    let _ = reply.send(lifecycle_report(&breaker, &degrade, brownout, shards));
+                }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => open = false,
+            }
+        }
+
+        // lifecycle sweep: doomed programs (cancelled, or deadline
+        // passed) answer their terminal error BEFORE placement —
+        // coalescing mutates the shared TableState, so exclusion must
+        // happen before any state is touched.  A swept program never
+        // reaches the array; its activation counters are pinned.
+        let now = Instant::now();
+        let doomed = backlog.sweep(|_, a: &Admission| a.cancelled() || a.expired(now));
+        if !doomed.is_empty() {
+            let (mut n_cancel, mut n_expire) = (0u64, 0u64);
+            for (_, a) in doomed {
+                let err = a.lifecycle_error(now).unwrap_or(ServeError::Cancelled);
+                match err {
+                    ServeError::Cancelled => n_cancel += 1,
+                    _ => n_expire += 1,
+                }
+                let _ = a.reply.send(Err(err));
+            }
+            {
+                let mut m = metrics.lock().expect("metrics lock");
+                m.cancelled += n_cancel;
+                m.deadline_expired += n_expire;
+            }
+            if n_cancel > 0 {
+                rec.record_alert("serve_cancel", "queued", "cancelled", n_cancel as f64);
+            }
+            if n_expire > 0 {
+                rec.record_alert("serve_deadline", "queued", "expired", n_expire as f64);
+            }
+        }
+
+        // half-open probes: open breakers age once per SCHEDULING PASS
+        // (not per round — with every admission rejected pre-round no
+        // rounds run, and round-based cadence would never heal the
+        // shard).  A due shard gets a respawn-and-replay probe; success
+        // closes the breaker, failure re-opens it.
+        for shard in breaker.due_probes() {
+            rec.record_alert("shard_breaker", "open", "half-open", shard as f64);
+            let mut probe_ok = coord.respawn(shard).is_ok();
+            if probe_ok {
+                let mut replay = shard_replay_ops(&cfg, n_records, shards, shard, &state);
+                if steer_ok.get(shard).copied().unwrap_or(false) && !is_identity(&row_maps[shard])
+                {
+                    for op in &mut replay {
+                        *op = remap_op(op, &row_maps[shard]);
+                    }
+                }
+                probe_ok = replay.is_empty() || coord.call_batch(shard, &replay).is_ok();
+            }
+            let transition = if probe_ok {
+                breaker.record_success(shard)
+            } else {
+                breaker.record_failure(shard)
+            };
+            if let Some((from, to)) = transition {
+                rec.record_alert("shard_breaker", from.name(), to.name(), shard as f64);
             }
         }
 
@@ -530,6 +816,19 @@ fn scheduler(
         // place each program; planning failures answer immediately
         let mut round: Vec<(Admission, Placement)> = Vec::with_capacity(admitted.len());
         for a in admitted {
+            // last-chance lifecycle check: cancel/expiry raced in
+            // between the sweep and selection
+            if let Some(err) = a.lifecycle_error(Instant::now()) {
+                {
+                    let mut m = metrics.lock().expect("metrics lock");
+                    match err {
+                        ServeError::Cancelled => m.cancelled += 1,
+                        _ => m.deadline_expired += 1,
+                    }
+                }
+                let _ = a.reply.send(Err(err));
+                continue;
+            }
             rec.record_span(
                 round_no,
                 Some(a.tenant as u64),
@@ -538,7 +837,20 @@ fn scheduler(
                 1,
             );
             match place_calibrated(&a.program, &cfg, shards, &cal) {
-                Ok(p) => round.push((a, p)),
+                Ok(p) => {
+                    // fail fast when the placement needs a shard behind
+                    // an open breaker — queueing it would only time out
+                    if breaker.any_open()
+                        && p.shards
+                            .iter()
+                            .any(|sp| !sp.lowered.ops.is_empty() && breaker.is_open(sp.shard))
+                    {
+                        let _ = a.reply.send(Err(ServeError::Rejected(RejectReason::ShardDown)));
+                        metrics.lock().expect("metrics lock").breaker_rejected += 1;
+                        continue;
+                    }
+                    round.push((a, p));
+                }
                 Err(e) => {
                     let _ = a.reply.send(Err(ServeError::Plan(e)));
                 }
@@ -599,21 +911,47 @@ fn scheduler(
             }
         }
 
+        // cooperative cancellation: a shard batch whose ops all belong
+        // to ONE program carries that program's cancel flag, checked by
+        // the worker between queued groups — `Ok(None)` means abandoned.
+        // Multi-program batches always run: one tenant's cancel must not
+        // void a neighbor's coalesced work.
+        let batch_flags: Vec<Option<Arc<AtomicBool>>> = coalesced
+            .shard_batches
+            .iter()
+            .map(|b| {
+                let mut owner: Option<usize> = None;
+                for &(pi, _, _) in &b.origins {
+                    match owner {
+                        None => owner = Some(pi),
+                        Some(o) if o == pi => {}
+                        _ => return None,
+                    }
+                }
+                owner.map(|pi| round[pi].0.cancel.clone())
+            })
+            .collect();
+
         // execute every shard batch in parallel, fused when routing allows
         let execute_start = Instant::now();
         let coord_ref = &coord;
-        let shard_results: Vec<Result<Vec<Result<CimResult, EngineError>>, RouteError>> =
+        let shard_results: Vec<Result<Option<Vec<Result<CimResult, EngineError>>>, RouteError>> =
             std::thread::scope(|s| {
                 let handles: Vec<_> = coalesced
                     .shard_batches
                     .iter()
-                    .map(|b| {
-                        s.spawn(move || {
-                            if fuse {
+                    .zip(&batch_flags)
+                    .map(|(b, flag)| {
+                        s.spawn(move || match flag {
+                            Some(f) => {
+                                coord_ref.call_batch_abandonable(b.shard, &b.ops, fuse, f)
+                            }
+                            None => if fuse {
                                 coord_ref.call_batch_fused(b.shard, &b.ops)
                             } else {
                                 coord_ref.call_batch(b.shard, &b.ops)
                             }
+                            .map(Some),
                         })
                     })
                     .collect();
@@ -639,15 +977,23 @@ fn scheduler(
         let mut shard_results = shard_results;
         let mut retries_this_round = 0u64;
         let mut recovered_shards = 0u64;
+        // total backoff sleep this round is capped: one dead shard must
+        // not stall every co-scheduled tenant past the round-wall
+        // target — on exhaustion the shard is handed to the breaker
+        let retry_deadline = (retry_budget_ms > 0)
+            .then(|| Instant::now() + Duration::from_millis(retry_budget_ms));
         for (i, r) in shard_results.iter_mut().enumerate() {
             if r.is_ok() {
                 continue;
             }
             let b = &coalesced.shard_batches[i];
             for attempt in 0..route_retries {
-                std::thread::sleep(Duration::from_millis(
-                    retry_backoff_ms.saturating_mul(1 << attempt.min(16)),
-                ));
+                let backoff =
+                    Duration::from_millis(retry_backoff_ms.saturating_mul(1 << attempt.min(16)));
+                if retry_deadline.is_some_and(|d| Instant::now() + backoff > d) {
+                    break;
+                }
+                std::thread::sleep(backoff);
                 if coord.respawn(b.shard).is_err() {
                     break;
                 }
@@ -668,15 +1014,28 @@ fn scheduler(
                 } else {
                     coord.call_batch(b.shard, &b.ops)
                 };
-                if res.is_ok() {
-                    *r = res;
+                if let Ok(v) = res {
+                    *r = Ok(Some(v));
                     recovered_shards += 1;
                     break;
                 }
             }
         }
 
-        let mut results: Vec<Vec<Result<CimResult, EngineError>>> =
+        // breaker accounting: an answering shard resets its failure
+        // streak; an exhausted retry loop counts one failure toward
+        // opening its breaker
+        for (b, r) in coalesced.shard_batches.iter().zip(&shard_results) {
+            let transition = match r {
+                Ok(_) => breaker.record_success(b.shard),
+                Err(_) => breaker.record_failure(b.shard),
+            };
+            if let Some((from, to)) = transition {
+                rec.record_alert("shard_breaker", from.name(), to.name(), b.shard as f64);
+            }
+        }
+
+        let mut results: Vec<Option<Vec<Result<CimResult, EngineError>>>> =
             Vec::with_capacity(shard_results.len());
         let mut route_err = None;
         for r in shard_results {
@@ -707,9 +1066,35 @@ fn scheduler(
                 p.shards.iter().map(|sp| vec![None; sp.lowered.ops.len()]).collect()
             })
             .collect();
+        // an abandoned batch (None) dooms its owner program; the shard's
+        // physical array is now behind the logical TableState (this
+        // round's writes were recorded during coalescing but never
+        // executed), so replay the shard before anything else runs on it
+        // — replay is idempotent and bit-identical, same as recovery
+        let mut abandoned: Vec<bool> = vec![false; round.len()];
         for (b, res) in coalesced.shard_batches.iter().zip(&results) {
-            for (i, &(pi, spi, oi)) in b.origins.iter().enumerate() {
-                slots[pi][spi][oi] = Some(res[i].clone());
+            match res {
+                Some(res) => {
+                    for (i, &(pi, spi, oi)) in b.origins.iter().enumerate() {
+                        slots[pi][spi][oi] = Some(res[i].clone());
+                    }
+                }
+                None => {
+                    for &(pi, _, _) in &b.origins {
+                        abandoned[pi] = true;
+                    }
+                    let mut replay = shard_replay_ops(&cfg, n_records, shards, b.shard, &state);
+                    if steer_ok.get(b.shard).copied().unwrap_or(false)
+                        && !is_identity(&row_maps[b.shard])
+                    {
+                        for op in &mut replay {
+                            *op = remap_op(op, &row_maps[b.shard]);
+                        }
+                    }
+                    if !replay.is_empty() {
+                        let _ = coord.call_batch(b.shard, &replay);
+                    }
+                }
             }
         }
 
@@ -722,7 +1107,10 @@ fn scheduler(
         // physical row; the fault injector's endurance-drift hook
         // multiplies the charge to compress soak time
         let wf = crate::faults::wear_factor();
-        for b in &coalesced.shard_batches {
+        for (b, res) in coalesced.shard_batches.iter().zip(&results) {
+            if res.is_none() {
+                continue; // abandoned batch: its ops never executed
+            }
             if let Some(t) = wear.get_mut(b.shard) {
                 for op in &b.ops {
                     if let CimOp::Write { addr, .. } = op {
@@ -775,14 +1163,27 @@ fn scheduler(
             m.wear_migrations = m.wear_migrations.saturating_add(migrations_this_round);
             m.worker_respawns = coord.respawns();
             m.spike_shrinks = controller.spikes;
+            m.breaker_opens = breaker.opens;
+            m.breaker_closes = breaker.closes;
+            m.degrade_step_ups = degrade.step_ups;
+            m.degrade_step_downs = degrade.step_downs;
+            m.degrade_level = degrade.level().as_gauge();
         }
 
         // assemble per program, splice cached outputs, memoize fresh ones
         let cache_start = Instant::now();
         let mut round_samples: Vec<CalibrationSample> = Vec::new();
-        for (((a, placement), per_shard), pa) in
-            round.into_iter().zip(slots).zip(&coalesced.programs)
+        for ((((a, placement), per_shard), pa), was_abandoned) in
+            round.into_iter().zip(slots).zip(&coalesced.programs).zip(abandoned)
         {
+            if was_abandoned {
+                // its batch was abandoned at the cooperative check; the
+                // program produced nothing (and its shard was replayed)
+                let _ = a.reply.send(Err(ServeError::Cancelled));
+                metrics.lock().expect("metrics lock").cancelled += 1;
+                rec.record_alert("serve_cancel", "in-flight", "cancelled", 1.0);
+                continue;
+            }
             let reply = match placement.assemble(per_shard, coord_metrics.clone()) {
                 Err(ExecError::Route(r)) => Err(ServeError::Route(r)),
                 Err(other) => Err(ServeError::Engine(other.to_string())),
@@ -830,7 +1231,13 @@ fn scheduler(
         // the store into the shared handle the REPL reads.  With exact
         // tables this is a no-op (factors stay 1.0) — see the
         // `exact_tables` invariance tests.
-        if calibrate_every > 0 && round_no % calibrate_every == 0 && !round_samples.is_empty() {
+        // brownout step 1 pins routing: under pressure the stable plan
+        // beats a potentially-flapping recalibration
+        if calibrate_every > 0
+            && round_no % calibrate_every == 0
+            && !round_samples.is_empty()
+            && !degrade.pin_routing()
+        {
             let flipped = cal.absorb(&round_samples);
             if flipped {
                 cal.sync_routing(&coord);
@@ -854,6 +1261,15 @@ fn scheduler(
             m.cache_swept = cache.swept;
             m.publish(reg, &qlabel);
         }
+        for s in 0..shards {
+            let shard_label = format!("{queue_id}.{s}");
+            reg.gauge(
+                "adra.serve.breaker_state",
+                "Per-shard circuit-breaker state (0 closed, 1 open, 2 half-open).",
+                &[("queue", &qlabel), ("shard", &shard_label)],
+            )
+            .set(breaker.state(s).as_gauge() as f64);
+        }
         coord_metrics.publish(reg, &[("queue", &qlabel)]);
         // durable checkpoint cadence + store health counters (the
         // `adra.store.*` families the durability CI job asserts on)
@@ -864,9 +1280,11 @@ fn scheduler(
             st.publish(reg, &qlabel);
         }
         // time-series sampling + health evaluation at the configured
-        // cadence: the published state above becomes one point per
-        // series, and rule transitions alert into the recorder
-        if sample_every > 0 && round_no % sample_every == 0 {
+        // cadence (stretched by brownout step 3 — observation is load
+        // too): the published state above becomes one point per series,
+        // and rule transitions alert into the recorder
+        let effective_sample = sample_every.saturating_mul(degrade.sample_stride());
+        if effective_sample > 0 && round_no % effective_sample == 0 {
             // per-shard endurance state feeds the `array_wear_rate` rule
             for (s, t) in wear.iter().enumerate() {
                 let shard_label = format!("{queue_id}.{s}");
@@ -874,12 +1292,84 @@ fn scheduler(
             }
             let series = observe::series();
             series.sample(reg);
-            observe::health()
-                .lock()
-                .expect("health lock")
-                .evaluate(series, reg, rec);
+            let slo = {
+                let mut h = observe::health().lock().expect("health lock");
+                h.evaluate(series, reg, rec);
+                h.state_of("round_wall_slo_burn")
+            };
+            // brownout ladder: committed SLO-burn transitions step
+            // degraded service up one rung, recovery walks it back down.
+            // Gated — the health engine is process-global, and an
+            // embedder sharing it across queues must opt in.
+            if brownout {
+                if let Some((from, to)) = degrade.on_health(slo.unwrap_or(RuleState::Ok)) {
+                    rec.record_alert("brownout", from.name(), to.name(), to.as_gauge() as f64);
+                    cache.set_entry_cap_factor(degrade.cache_cap_factor());
+                }
+            }
         }
         observe_overhead.record(observe_start.elapsed().as_nanos() as f64);
+    }
+}
+
+/// Admission control at the queue's front door: a hard per-tenant
+/// backlog bound plus brownout-driven fair-share shedding (over-quota
+/// tenants only — an idle tenant's first program is always admitted so
+/// shedding cannot starve anyone outright).  `Err` hands the admission
+/// back for an immediate `Rejected(Overloaded)` reply.
+fn admit_or_shed(
+    backlog: &mut FairScheduler<Admission>,
+    a: Admission,
+    max_tenant_backlog: usize,
+    shedding: bool,
+    quota: usize,
+) -> Result<(), Admission> {
+    let queued = backlog.tenant_backlog(a.tenant);
+    let hard = max_tenant_backlog > 0 && queued >= max_tenant_backlog;
+    let soft = shedding && queued >= quota;
+    if hard || soft {
+        return Err(a);
+    }
+    let t = a.tenant;
+    backlog.push(t, a);
+    Ok(())
+}
+
+/// Tenant-wide cancel: sweep the tenant's queued programs, answer each
+/// `Err(Cancelled)`, and set their flags so cloned [`CancelHandle`]s
+/// observe the cancellation too.
+fn cancel_tenant_queued(
+    backlog: &mut FairScheduler<Admission>,
+    tenant: usize,
+    metrics: &Arc<Mutex<ServeMetrics>>,
+    rec: &crate::observe::FlightRecorder,
+) -> usize {
+    let swept = backlog.sweep(|t, _| t == tenant);
+    let n = swept.len();
+    for (_, a) in swept {
+        a.cancel.store(true, Ordering::Relaxed);
+        let _ = a.reply.send(Err(ServeError::Cancelled));
+    }
+    if n > 0 {
+        metrics.lock().expect("metrics lock").cancelled += n as u64;
+        rec.record_alert("serve_cancel", "queued", "cancelled", n as f64);
+    }
+    n
+}
+
+fn lifecycle_report(
+    breaker: &CircuitBreaker,
+    degrade: &DegradeController,
+    brownout: bool,
+    shards: usize,
+) -> LifecycleReport {
+    LifecycleReport {
+        breaker: (0..shards).map(|s| breaker.state(s).name()).collect(),
+        breaker_opens: breaker.opens,
+        breaker_closes: breaker.closes,
+        degrade: degrade.level().name(),
+        degrade_level: degrade.level().as_gauge(),
+        brownout_armed: brownout,
     }
 }
 
@@ -1232,6 +1722,12 @@ mod tests {
             retry_backoff_ms: 1,
             wear_spare_rows: 0,
             wear_migrate_threshold: 1024,
+            default_deadline: None,
+            max_tenant_backlog: 0,
+            retry_budget_ms: 50,
+            breaker_threshold: 3,
+            breaker_probe_after: 2,
+            brownout: false,
         });
         let rep = q.submit(0, s.program.clone()).unwrap().wait().unwrap();
         assert_eq!(rep.outputs, naive.outputs);

@@ -1,0 +1,480 @@
+//! Overload-survival suite: deadlines, cancellation, load shedding,
+//! circuit breaking, and the health-driven brownout ladder
+//! (DESIGN.md §15), soaked under the PR 9 chaos injector.
+//!
+//! The invariants every test leans on:
+//!
+//! * answered results are BIT-IDENTICAL to solo execution — survival
+//!   machinery may drop work, never corrupt it,
+//! * every admitted program resolves to exactly one outcome (a report,
+//!   or one terminal `ServeError`),
+//! * a cancelled/expired program never reaches the array: doomed
+//!   programs are swept BEFORE placement + coalescing, so no round
+//!   executes (or even counts) on their behalf,
+//! * breaker and brownout transitions are deterministic under a seeded
+//!   fault schedule and visible in the alert trace.
+//!
+//! Like `durability.rs`, this binary installs fault specs, so every
+//! test serializes behind `faults::test_lock()`.
+
+use std::time::Duration;
+
+use adra::config::{SensingScheme, SimConfig};
+use adra::faults::{self, FaultSpec};
+use adra::planner::StepOutput;
+use adra::serve::{
+    BatchPolicy, RejectReason, ServeConfig, ServeError, ServeQueue, SubmitOptions,
+};
+use adra::util::quick::Quick;
+use adra::workload::heavy_tenant_scenario;
+use adra::workload::programs::analytics_scenario;
+
+mod common;
+use common::Seed;
+
+const N_RECORDS: usize = 48;
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::square(64, SensingScheme::Current);
+    c.word_bits = 8;
+    c.max_batch = 16;
+    c
+}
+
+/// Deterministic serving config: static rounds, no sampling/calibration
+/// noise unless a test opts back in.
+fn serve_cfg(cfg: &SimConfig, shards: usize) -> ServeConfig {
+    let mut c = ServeConfig::new(cfg.clone(), shards, N_RECORDS);
+    c.max_round = 6;
+    c.cache_capacity = 512;
+    c.batch = BatchPolicy::Static;
+    c.sample_every = 0;
+    c.calibrate_every = 0;
+    c
+}
+
+/// Installs a spec on construction, guarantees `clear` on drop (even on
+/// assertion failure), so no test leaks an armed injector.
+struct Chaos;
+
+impl Chaos {
+    fn install(spec: &str) -> Self {
+        faults::clear();
+        faults::install(FaultSpec::parse(spec).expect("valid spec"));
+        Chaos
+    }
+}
+
+impl Drop for Chaos {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+// ---- deadlines -------------------------------------------------------
+
+#[test]
+fn expired_deadline_is_swept_before_any_round_touches_the_array() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let queue = ServeQueue::start(serve_cfg(&cfg, 2));
+
+    // a zero deadline is expired the moment the sweep looks at it; the
+    // sweep runs before placement + coalescing on every scheduling
+    // pass, so the program can never execute
+    let s = analytics_scenario(&cfg, N_RECORDS, 11);
+    let (ticket, _h) = queue
+        .submit_with(0, s.program.clone(), SubmitOptions { deadline: Some(Duration::ZERO) })
+        .expect("admit");
+    let out = ticket.wait();
+    assert!(matches!(out, Err(ServeError::DeadlineExceeded)), "{out:?}");
+
+    // activation pin: the doomed program produced NO round and NO
+    // served program — the array was never driven on its behalf
+    let m = queue.metrics();
+    assert_eq!(m.deadline_expired, 1, "{m:?}");
+    assert_eq!(m.rounds, 0, "expired program must not start a round: {m:?}");
+    assert_eq!(m.programs, 0, "{m:?}");
+
+    // the table is untouched: a live submission still answers exactly
+    let rep = queue.submit(1, s.program.clone()).expect("admit").wait().expect("served");
+    assert_eq!(rep.outputs[s.filter_step], StepOutput::Matches(s.expected_matches.clone()));
+    let m = queue.metrics();
+    assert_eq!((m.rounds, m.programs), (1, 1), "{m:?}");
+}
+
+#[test]
+fn config_default_deadline_applies_when_submission_carries_none() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let mut sc = serve_cfg(&cfg, 2);
+    sc.default_deadline = Some(Duration::ZERO);
+    let queue = ServeQueue::start(sc);
+
+    let s = analytics_scenario(&cfg, N_RECORDS, 12);
+    // plain submit: inherits the config default (zero -> always expired)
+    let out = queue.submit(0, s.program.clone()).expect("admit").wait();
+    assert!(matches!(out, Err(ServeError::DeadlineExceeded)), "{out:?}");
+    // an explicit generous per-submission deadline overrides the default
+    let (t, _h) = queue
+        .submit_with(0, s.program.clone(), SubmitOptions { deadline: Some(Duration::from_secs(60)) })
+        .expect("admit");
+    let rep = t.wait().expect("served within its own deadline");
+    assert_eq!(rep.outputs[s.filter_step], StepOutput::Matches(s.expected_matches.clone()));
+}
+
+// ---- cancellation ----------------------------------------------------
+
+#[test]
+fn cancel_handle_dooms_a_queued_program() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let queue = ServeQueue::start(serve_cfg(&cfg, 2));
+    // spikes stretch every round to multiple ms, so a cancel issued
+    // nanoseconds after submission always lands before the program's
+    // scheduling pass
+    let _c = Chaos::install("seed=3 spike=8 spike-ns=2000000");
+
+    let s = analytics_scenario(&cfg, N_RECORDS, 21);
+    let mut cancelled = 0usize;
+    for _ in 0..10 {
+        let (ticket, handle) =
+            queue.submit_with(0, s.program.clone(), SubmitOptions::default()).expect("admit");
+        handle.cancel();
+        assert!(handle.is_cancelled());
+        match ticket.wait() {
+            Err(ServeError::Cancelled) => cancelled += 1,
+            Ok(rep) => {
+                // the scheduler won the race: the answer must be exact
+                assert_eq!(
+                    rep.outputs[s.filter_step],
+                    StepOutput::Matches(s.expected_matches.clone())
+                );
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    assert!(cancelled >= 1, "an immediate cancel practically always wins the race");
+    assert_eq!(queue.metrics().cancelled, cancelled as u64);
+}
+
+#[test]
+fn tenant_wide_cancel_sweeps_the_backlog_and_survivors_stay_identical() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let mut sc = serve_cfg(&cfg, 2);
+    sc.max_round = 1; // keep the backlog deep: one program per round
+    let queue = ServeQueue::start(sc);
+    let _c = Chaos::install("seed=5 spike=8 spike-ns=2000000");
+
+    let s = heavy_tenant_scenario(&cfg, N_RECORDS, 404, 12, 3);
+    let tickets: Vec<_> = s
+        .submissions
+        .iter()
+        .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+        .collect();
+    let swept = queue.cancel_tenant(s.heavy_tenant).expect("queue alive");
+
+    let mut heavy_ok = 0usize;
+    let mut heavy_cancelled = 0usize;
+    for (i, ((tenant, _), ticket)) in s.submissions.iter().zip(tickets).enumerate() {
+        match ticket.wait() {
+            Ok(rep) => {
+                assert_eq!(
+                    rep.outputs[s.filter_step],
+                    StepOutput::Matches(s.expected_matches[i].clone()),
+                    "submission {i} diverged"
+                );
+                if *tenant == s.heavy_tenant {
+                    heavy_ok += 1;
+                }
+            }
+            Err(ServeError::Cancelled) => {
+                assert_eq!(*tenant, s.heavy_tenant, "only the heavy tenant was cancelled");
+                heavy_cancelled += 1;
+            }
+            other => panic!("submission {i}: unexpected outcome {other:?}"),
+        }
+    }
+    // exactly-one-outcome conservation: every heavy program either
+    // completed before the sweep or was cancelled by it, nothing both,
+    // nothing lost
+    assert_eq!(heavy_ok + heavy_cancelled, 12);
+    assert_eq!(heavy_cancelled, swept, "the sweep count matches the cancelled tickets");
+    assert!(swept >= 1, "with multi-ms rounds the sweep lands before the backlog drains");
+    assert_eq!(queue.metrics().cancelled, swept as u64);
+}
+
+// ---- load shedding ---------------------------------------------------
+
+#[test]
+fn bounded_backlog_sheds_overflow_and_answers_stay_identical() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let mut sc = serve_cfg(&cfg, 2);
+    sc.max_tenant_backlog = 2;
+    let queue = ServeQueue::start(sc);
+    // slow rounds guarantee the burst outruns the scheduler, so the
+    // per-tenant bound actually engages
+    let _c = Chaos::install("seed=8 spike=8 spike-ns=2000000");
+
+    let s = heavy_tenant_scenario(&cfg, N_RECORDS, 2024, 20, 0);
+    let tickets: Vec<_> = s
+        .submissions
+        .iter()
+        .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+        .collect();
+
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        match ticket.wait() {
+            Ok(rep) => {
+                assert_eq!(
+                    rep.outputs[s.filter_step],
+                    StepOutput::Matches(s.expected_matches[i].clone()),
+                    "submission {i} diverged"
+                );
+                ok += 1;
+            }
+            Err(ServeError::Rejected(RejectReason::Overloaded)) => shed += 1,
+            other => panic!("submission {i}: unexpected outcome {other:?}"),
+        }
+    }
+    assert_eq!(ok + shed, 20, "exactly one outcome per submission");
+    assert!(ok >= 1, "an empty backlog always admits");
+    assert!(shed >= 1, "a 20-deep burst against a 2-deep bound must shed");
+    assert_eq!(queue.metrics().shed, shed as u64);
+
+    // shed rejections are visible in the alert trace
+    let trace = adra::observe::recorder().to_jsonl();
+    assert!(trace.contains("serve_shed"), "shed alerts recorded");
+}
+
+// ---- exactly-one-outcome property ------------------------------------
+
+#[test]
+fn every_submission_resolves_to_exactly_one_outcome() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let cfg = cfg();
+
+    Quick::with_cases(5).check("exactly one outcome", |seed: &Seed| {
+        let s = heavy_tenant_scenario(&cfg, N_RECORDS, seed.0, 6, 2);
+        let queue = ServeQueue::start(serve_cfg(&cfg, 2));
+
+        // every third submission carries an already-expired deadline —
+        // those can NEVER produce a report (swept, or caught by the
+        // last-chance check; both happen before coalescing)
+        let entries: Vec<_> = s
+            .submissions
+            .iter()
+            .enumerate()
+            .map(|(i, (t, p))| {
+                let opts = SubmitOptions {
+                    deadline: (i % 3 == 0).then_some(Duration::ZERO),
+                };
+                (i, *t, queue.submit_with(*t, p.clone(), opts).expect("admit").0)
+            })
+            .collect();
+        // and the heavy tenant gets a tenant-wide cancel mid-flight
+        let _ = queue.cancel_tenant(s.heavy_tenant).expect("queue alive");
+
+        let (mut ok, mut cancelled, mut expired) = (0usize, 0usize, 0usize);
+        for (i, tenant, ticket) in entries {
+            match ticket.wait() {
+                Ok(rep) => {
+                    if rep.outputs[s.filter_step]
+                        != StepOutput::Matches(s.expected_matches[i].clone())
+                    {
+                        return false; // answered but wrong
+                    }
+                    if i % 3 == 0 {
+                        return false; // expired-at-admission must never execute
+                    }
+                    ok += 1;
+                }
+                Err(ServeError::Cancelled) => {
+                    if tenant != s.heavy_tenant {
+                        return false; // only the heavy tenant was cancelled
+                    }
+                    cancelled += 1;
+                }
+                Err(ServeError::DeadlineExceeded) => {
+                    if i % 3 != 0 {
+                        return false; // nobody else carried a deadline
+                    }
+                    expired += 1;
+                }
+                Err(_) => return false, // no chaos: no other error is legal
+            }
+        }
+        let m = queue.metrics();
+        ok + cancelled + expired == 8
+            && m.cancelled == cancelled as u64
+            && m.deadline_expired == expired as u64
+    });
+}
+
+// ---- circuit breaker -------------------------------------------------
+
+#[test]
+fn breaker_opens_fails_fast_and_heals_through_a_half_open_probe() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let mut sc = serve_cfg(&cfg, 1); // one shard: every placement needs it
+    sc.route_retries = 0; // the first worker death exhausts the round
+    sc.breaker_threshold = 1;
+    sc.breaker_probe_after = 2;
+    let queue = ServeQueue::start(sc);
+
+    // exactly one injected death, on the first worker op
+    let _c = Chaos::install("seed=2 death=1 death-max=1");
+    let s = analytics_scenario(&cfg, N_RECORDS, 31);
+
+    // round 1: the worker dies, no retries -> Route error, breaker opens
+    let r1 = queue.submit(0, s.program.clone()).expect("admit").wait();
+    assert!(matches!(r1, Err(ServeError::Route(_))), "round 1 fails on the dead shard: {r1:?}");
+    let lc = queue.lifecycle().expect("queue alive");
+    assert_eq!(lc.breaker, vec!["open"], "one exhausted retry loop trips threshold 1");
+    assert_eq!(lc.breaker_opens, 1);
+
+    // pass 2 (probe age 1 < 2): placement fails fast, nothing queues
+    let r2 = queue.submit(0, s.program.clone()).expect("admit").wait();
+    assert!(
+        matches!(r2, Err(ServeError::Rejected(RejectReason::ShardDown))),
+        "breaker fails fast while open: {r2:?}"
+    );
+
+    // pass 3 (probe age 2): half-open respawn-and-replay probe heals the
+    // shard, and the round serves bit-identically — the death budget is
+    // spent, replay restored the table
+    let rep = queue.submit(0, s.program.clone()).expect("admit").wait().expect("healed");
+    assert_eq!(rep.outputs[s.filter_step], StepOutput::Matches(s.expected_matches.clone()));
+    let lc = queue.lifecycle().expect("queue alive");
+    assert_eq!(lc.breaker, vec!["closed"]);
+    assert_eq!((lc.breaker_opens, lc.breaker_closes), (1, 1));
+
+    let m = queue.metrics();
+    assert_eq!(m.breaker_rejected, 1, "{m:?}");
+    assert_eq!((m.breaker_opens, m.breaker_closes), (1, 1), "{m:?}");
+
+    // the full open -> half-open -> closed trajectory is in the trace
+    let trace = adra::observe::recorder().to_jsonl();
+    assert!(trace.contains("shard_breaker"), "breaker alerts recorded");
+    assert!(trace.contains("half-open"), "probe transition recorded");
+}
+
+#[test]
+fn retry_budget_caps_backoff_blocking_per_round() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let mut sc = serve_cfg(&cfg, 1);
+    // generous retry count but a 1 ms sleep budget against 64 ms+ of
+    // exponential backoff: the loop must give up almost immediately and
+    // hand the shard to the breaker instead of stalling the round
+    sc.route_retries = 8;
+    sc.retry_backoff_ms = 64;
+    sc.retry_budget_ms = 1;
+    sc.breaker_threshold = 1;
+    sc.breaker_probe_after = 1;
+    let queue = ServeQueue::start(sc);
+
+    let _c = Chaos::install("seed=4 death=1 death-max=1");
+    let s = analytics_scenario(&cfg, N_RECORDS, 41);
+    let started = std::time::Instant::now();
+    let r1 = queue.submit(0, s.program.clone()).expect("admit").wait();
+    assert!(matches!(r1, Err(ServeError::Route(_))), "{r1:?}");
+    assert!(
+        started.elapsed() < Duration::from_millis(64),
+        "the budget forbids even the first 64 ms backoff sleep"
+    );
+    assert_eq!(queue.lifecycle().expect("alive").breaker, vec!["open"]);
+    assert_eq!(queue.metrics().route_retries, 0, "no retry fit inside the budget");
+
+    // the shard still heals through the probe path afterwards
+    let r2 = queue.submit(0, s.program.clone()).expect("admit").wait();
+    let rep = match r2 {
+        Ok(rep) => rep,
+        // probe age may need one more pass depending on drain batching
+        Err(ServeError::Rejected(RejectReason::ShardDown)) => {
+            queue.submit(0, s.program.clone()).expect("admit").wait().expect("healed")
+        }
+        other => panic!("unexpected outcome {other:?}"),
+    };
+    assert_eq!(rep.outputs[s.filter_step], StepOutput::Matches(s.expected_matches.clone()));
+}
+
+// ---- brownout ladder -------------------------------------------------
+
+#[test]
+fn brownout_steps_up_under_slo_burn_and_walks_back_on_recovery() {
+    let _g = faults::test_lock();
+    let cfg = cfg();
+    let mut sc = serve_cfg(&cfg, 2);
+    sc.brownout = true;
+    sc.sample_every = 1; // evaluate health every round
+    sc.max_round = 4;
+    let queue = ServeQueue::start(sc);
+
+    // phase 1: sustained multi-ms rounds burn the 2 ms round-wall SLO;
+    // once the dual-window burn commits critical, each further sample
+    // climbs the ladder one rung
+    {
+        let _c = Chaos::install("seed=6 spike=8 spike-ns=3000000");
+        let mut stepped = false;
+        'flood: for wave in 0..40u64 {
+            let s = heavy_tenant_scenario(&cfg, N_RECORDS, 9000 + wave, 4, 0);
+            let tickets: Vec<_> = s
+                .submissions
+                .iter()
+                .map(|(t, p)| queue.submit(*t, p.clone()).expect("admit"))
+                .collect();
+            for (i, t) in tickets.into_iter().enumerate() {
+                match t.wait() {
+                    Ok(rep) => assert_eq!(
+                        rep.outputs[s.filter_step],
+                        StepOutput::Matches(s.expected_matches[i].clone()),
+                        "browned-out service still answers exactly"
+                    ),
+                    // at the shed rung over-quota admissions bounce
+                    Err(ServeError::Rejected(RejectReason::Overloaded)) => {}
+                    other => panic!("wave {wave}: unexpected outcome {other:?}"),
+                }
+            }
+            if queue.lifecycle().expect("alive").degrade_level >= 1 {
+                stepped = true;
+                break 'flood;
+            }
+        }
+        assert!(stepped, "sustained SLO burn must climb the ladder within 40 waves");
+    }
+
+    // phase 2: chaos cleared, light waves; the slow burn window drains,
+    // the rule recovers, and every Ok evaluation steps back down
+    let mut recovered = false;
+    for wave in 0..400u64 {
+        let s = analytics_scenario(&cfg, N_RECORDS, 20_000 + wave);
+        match queue.submit(0, s.program.clone()).expect("admit").wait() {
+            Ok(rep) => assert_eq!(
+                rep.outputs[s.filter_step],
+                StepOutput::Matches(s.expected_matches.clone())
+            ),
+            Err(ServeError::Rejected(RejectReason::Overloaded)) => {}
+            other => panic!("recovery wave {wave}: unexpected outcome {other:?}"),
+        }
+        if queue.lifecycle().expect("alive").degrade_level == 0 {
+            recovered = true;
+            break;
+        }
+    }
+    assert!(recovered, "the ladder walks back to normal once the burn clears");
+
+    let m = queue.metrics();
+    assert!(m.degrade_step_ups >= 1, "{m:?}");
+    assert!(m.degrade_step_downs >= 1, "{m:?}");
+    assert_eq!(m.degrade_level, 0, "{m:?}");
+
+    let trace = adra::observe::recorder().to_jsonl();
+    assert!(trace.contains("brownout"), "ladder transitions recorded as alerts");
+}

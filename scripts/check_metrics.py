@@ -43,6 +43,13 @@ REQUIRED_FAMILIES = [
     "adra_serve_round_wall_ns",
     "adra_observe_overhead_ns",
     "adra_health_status",
+    # overload-survival families: published on every round by every
+    # serve queue, so every scrape-producing example exposes them
+    "adra_serve_shed",
+    "adra_serve_deadline_expired",
+    "adra_serve_cancelled",
+    "adra_serve_degrade_level",
+    "adra_serve_breaker_state",
 ]
 
 
